@@ -1,0 +1,94 @@
+//! Serving driver: batched inference requests through the coordinator.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example accelerator_sim
+//! ```
+//!
+//! Submits a closed-loop request stream against the thread-pool server for
+//! each (tile size × mapping) configuration and reports throughput, latency
+//! percentiles, and the analog cost model (ADC conversions, sync barriers)
+//! — the paper's system-level trade-off (§I): small tiles cost conversions
+//! and synchronization; MDM's NF reduction is what lets tiles grow.
+
+use mdm_cim::config::ServerConfig;
+use mdm_cim::coordinator::{EngineConfig, ModelKind, Server};
+use mdm_cim::crossbar::TileGeometry;
+use mdm_cim::mdm::MappingConfig;
+use mdm_cim::runtime::ArtifactStore;
+
+const REQUESTS: usize = 96;
+const ROWS_PER_REQ: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let test = ArtifactStore::open(&artifacts)?.data("test")?;
+
+    println!(
+        "{:>5} {:>13} {:>9} {:>9} {:>9} {:>12} {:>10}",
+        "tile", "mapping", "req/s", "p50 ms", "p99 ms", "ADC/input", "sync/input"
+    );
+    let mut csv = Vec::new();
+    for tile in [16usize, 32, 64] {
+        for (label, mapping) in [
+            ("conventional", MappingConfig::conventional()),
+            ("mdm", MappingConfig::mdm()),
+        ] {
+            let engine_cfg = EngineConfig {
+                model: ModelKind::MiniResNet,
+                mapping,
+                eta_signed: -2e-3,
+                geometry: TileGeometry::new(tile, tile, 8)?,
+                fwd_batch: 16,
+            };
+            let server = Server::start(
+                &artifacts,
+                engine_cfg,
+                ServerConfig { workers: 2, max_batch: 16, batch_window_us: 200, queue_depth: 512 },
+            )?;
+            let t0 = std::time::Instant::now();
+            let mut receivers = Vec::new();
+            for i in 0..REQUESTS {
+                let (x, _) = test.batch(i * ROWS_PER_REQ, ROWS_PER_REQ);
+                receivers.push(server.submit(x)?);
+            }
+            let mut ok = 0usize;
+            for rx in receivers {
+                if rx.recv().is_ok() {
+                    ok += 1;
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let snap = server.metrics().snapshot();
+            server.shutdown();
+            let adc_per_input = snap.adc_conversions / snap.rows.max(1);
+            let sync_per_input = snap.sync_events / snap.rows.max(1);
+            println!(
+                "{:>5} {:>13} {:>9.1} {:>9.2} {:>9.2} {:>12} {:>10}",
+                tile,
+                label,
+                ok as f64 / dt,
+                snap.latency_p50_us as f64 / 1000.0,
+                snap.latency_p99_us as f64 / 1000.0,
+                adc_per_input,
+                sync_per_input
+            );
+            csv.push(vec![
+                tile.to_string(),
+                label.to_string(),
+                format!("{:.2}", ok as f64 / dt),
+                format!("{}", snap.latency_p50_us),
+                format!("{}", snap.latency_p99_us),
+                adc_per_input.to_string(),
+                sync_per_input.to_string(),
+            ]);
+        }
+    }
+    std::fs::create_dir_all("results")?;
+    mdm_cim::report::write_csv(
+        "results/accelerator_sim.csv",
+        &["tile", "mapping", "req_per_s", "p50_us", "p99_us", "adc_per_input", "sync_per_input"],
+        &csv,
+    )?;
+    println!("\ncsv: results/accelerator_sim.csv");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: map one weight matrix with MDM and see the NF drop.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! No artifacts needed — this exercises the pure-Rust mapping path:
+//! bell-shaped weights → sign split → bit-slice → MDM plan → Manhattan NF.
+
+use mdm_cim::mdm::{map_tile, MappingConfig};
+use mdm_cim::models::{generate_layer_weights, WeightProfile};
+use mdm_cim::nf::manhattan_nf_mean;
+use mdm_cim::quant::{BitSlicedMatrix, SignSplit};
+use mdm_cim::report;
+
+fn main() -> anyhow::Result<()> {
+    // A 64x8 layer slice with a realistic CNN weight distribution.
+    let w = generate_layer_weights(64, 8, &WeightProfile::cnn(), 42)?;
+    println!("weights: {:?}, {:.1}% exactly zero", w.shape(), 100.0 * w.sparsity());
+
+    // 1. Sign-split (differential columns) and bit-slice the positive part.
+    let split = SignSplit::of(&w);
+    let sliced = BitSlicedMatrix::slice(&split.pos, 8)?;
+    println!(
+        "bit-sliced: {}x{} cells, crossbar sparsity {:.1}%",
+        sliced.rows(),
+        sliced.cols(),
+        100.0 * sliced.sparsity()
+    );
+
+    // 2. Build the conventional and MDM mapping plans.
+    let conv = map_tile(&sliced.planes, MappingConfig::conventional());
+    let mdm = map_tile(&sliced.planes, MappingConfig::mdm());
+
+    // 3. Compare the Manhattan-model NF (unit parasitic ratio).
+    let nf_conv = manhattan_nf_mean(&conv.apply(&sliced.planes)?, 1.0);
+    let nf_mdm = manhattan_nf_mean(&mdm.apply(&sliced.planes)?, 1.0);
+    println!("\nNF (conventional) = {:.3}", nf_conv);
+    println!("NF (MDM)          = {:.3}", nf_mdm);
+    println!("reduction         = {:.1}%", 100.0 * (1.0 - nf_mdm / nf_conv));
+
+    // 4. Where did the active cells go? (darker = active)
+    println!("\nconventional layout:");
+    println!("{}", report::heatmap(&conv.apply(&sliced.planes)?));
+    println!("MDM layout (dense rows pulled toward the I/O corner):");
+    println!("{}", report::heatmap(&mdm.apply(&sliced.planes)?));
+
+    // 5. The invariant that makes MDM free: the product is unchanged.
+    let x = generate_layer_weights(1, 64, &WeightProfile::cnn(), 7)?;
+    let y_ref = x.matmul(&split.pos)?;
+    let y_mdm = mdm
+        .unapply_to_outputs(&mdm.apply_to_activations(&x)?.matmul(&mdm.apply(&split.pos)?)?)?;
+    let err: f32 = y_ref
+        .data()
+        .iter()
+        .zip(y_mdm.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    println!("max |x@W - mdm_roundtrip| = {err:.2e} (arithmetic preserved)");
+    Ok(())
+}

@@ -1,0 +1,217 @@
+"""AOT build: lower every L2 entry point to HLO text and export weights +
+data shards for the Rust runtime.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts``:  ``cd python && python -m compile.aot --outdir
+../artifacts``. Python never runs again after this.
+
+Artifacts:
+    miniresnet_fwd.hlo.txt       logits = fwd(x[B,256], w0..w3)  (pallas matmul)
+    tinyvit_fwd.hlo.txt          logits = fwd(x[B,256], w0..w9)  (pallas matmul)
+    train_step_miniresnet.hlo.txt  (w0..w3, x[Bt,256], y[Bt]) -> (w0..w3, loss)
+    noisy_tile_mvm_64x64.hlo.txt   the L1 kernel standalone (B=8 tile MVM)
+    bitslice_64x8.hlo.txt          the bit-slice kernel standalone
+    weights/{miniresnet,tinyvit}{,_init}.mdt   layer{i} tensors
+    data/{train,test}.mdt          synthetic dataset shards (x, y)
+    manifest.txt                   name, file, input shapes, output shapes
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset, mdt, model, train, vit
+from .kernels.bitslice import bitslice
+from .kernels.matmul import matmul as pallas_matmul
+from .kernels.noisy_mvm import noisy_tile_mvm
+
+# Fixed AOT batch sizes (the coordinator pads to these).
+FWD_BATCH = 16
+TRAIN_BATCH = 64
+KERNEL_BATCH = 8
+TILE = 64
+K_BITS = 8
+
+SEED = 42
+# noise 2.2 puts the trained models at ~94-97% test accuracy — high enough
+# to be "trained", low enough that PR distortion visibly degrades Fig. 6.
+N_TRAIN, N_TEST, NOISE = 2048, 512, 2.2
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (see module docstring).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big literals as ``constant({...})``, which the text parser then
+    silently reads back as zeros — any model with an embedded constant
+    (e.g. TinyViT's positional encoding) would run but compute garbage.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_entry(fn, specs):
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def export_model_weights(outdir: Path, name: str, params) -> None:
+    mdt.write_mdt(
+        outdir / "weights" / f"{name}.mdt",
+        {f"layer{i}": np.asarray(w) for i, w in enumerate(params)},
+    )
+
+
+def build(outdir: Path, *, train_steps: int, quick: bool) -> None:
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / "weights").mkdir(exist_ok=True)
+    (outdir / "data").mkdir(exist_ok=True)
+    manifest: list[str] = []
+
+    def emit(name: str, fn, specs, note: str = ""):
+        text = lower_entry(fn, specs)
+        path = outdir / f"{name}.hlo.txt"
+        path.write_text(text)
+        shapes = ";".join(str(tuple(s.shape)) for s in jax.tree.leaves(specs))
+        manifest.append(f"{name}\t{path.name}\t{shapes}\t{note}")
+        print(f"  wrote {path.name} ({len(text)} chars)")
+
+    # ---- dataset ----------------------------------------------------------
+    print("generating dataset shards ...")
+    xtr, ytr = dataset.generate(N_TRAIN, NOISE, SEED)
+    xte, yte = dataset.generate(N_TEST, NOISE, SEED + 1, proto_seed=SEED)
+    mdt.write_mdt(outdir / "data" / "train.mdt", {"x": xtr, "y": ytr})
+    mdt.write_mdt(outdir / "data" / "test.mdt", {"x": xte, "y": yte})
+
+    # ---- train the two models --------------------------------------------
+    print("training miniresnet ...")
+    p0 = model.init_params(SEED)
+    export_model_weights(outdir, "miniresnet_init", p0)
+    steps = train_steps if not quick else 50
+    p_mini, losses = train.train(
+        model.forward, p0, jnp.asarray(xtr), jnp.asarray(ytr),
+        lr=0.05, steps=steps, batch=TRAIN_BATCH, log_every=max(steps // 5, 1),
+    )
+    acc = train.accuracy(model.forward, p_mini, jnp.asarray(xte), jnp.asarray(yte))
+    print(f"  miniresnet test accuracy: {acc:.3f} (loss {losses[0]:.3f} -> {losses[-1]:.3f})")
+    export_model_weights(outdir, "miniresnet", p_mini)
+
+    print("training tinyvit ...")
+    v0 = vit.init_params(SEED)
+    export_model_weights(outdir, "tinyvit_init", v0)
+    p_vit, vlosses = train.train(
+        vit.forward, v0, jnp.asarray(xtr), jnp.asarray(ytr),
+        lr=0.08, steps=steps + steps // 2, batch=TRAIN_BATCH,
+        log_every=max(steps // 5, 1),
+    )
+    vacc = train.accuracy(vit.forward, p_vit, jnp.asarray(xte), jnp.asarray(yte))
+    print(f"  tinyvit test accuracy: {vacc:.3f} (loss {vlosses[0]:.3f} -> {vlosses[-1]:.3f})")
+    export_model_weights(outdir, "tinyvit", p_vit)
+
+    with open(outdir / "train_log.txt", "w") as f:
+        f.write(f"miniresnet steps={steps} acc={acc:.4f}\n")
+        for i, l in enumerate(losses):
+            f.write(f"mini {i} {l:.6f}\n")
+        f.write(f"tinyvit steps={steps} acc={vacc:.4f}\n")
+        for i, l in enumerate(vlosses):
+            f.write(f"vit {i} {l:.6f}\n")
+
+    # ---- forward graphs (weights as runtime inputs, pallas matmul) --------
+    print("lowering forward graphs ...")
+
+    def mini_fwd(x, *ws):
+        return (model.forward(list(ws), x, matmul=pallas_matmul),)
+
+    emit(
+        "miniresnet_fwd",
+        mini_fwd,
+        [_spec((FWD_BATCH, 256))] + [_spec(s) for s in model.LAYER_SHAPES],
+        "logits[B,10]",
+    )
+
+    def vit_fwd(x, *ws):
+        return (vit.forward(list(ws), x, matmul=pallas_matmul),)
+
+    emit(
+        "tinyvit_fwd",
+        vit_fwd,
+        [_spec((FWD_BATCH, 256))] + [_spec(s) for s in vit.LAYER_SHAPES],
+        "logits[B,10]",
+    )
+
+    # ---- train step (donated params; see DESIGN.md §Perf L2) --------------
+    def train_step(x, y, *ws):
+        step_params, loss = _train_step_impl(list(ws), x, y)
+        return tuple(step_params) + (loss,)
+
+    def _train_step_impl(params, x, y):
+        loss, grads = jax.value_and_grad(
+            lambda p: train.cross_entropy(model.forward(p, x), y)
+        )(params)
+        return [w - 0.05 * g for w, g in zip(params, grads)], loss
+
+    emit(
+        "train_step_miniresnet",
+        train_step,
+        [_spec((TRAIN_BATCH, 256)), _spec((TRAIN_BATCH,))]
+        + [_spec(s) for s in model.LAYER_SHAPES],
+        "(w0..w3, loss)",
+    )
+
+    # ---- L1 kernels standalone --------------------------------------------
+    print("lowering kernels ...")
+    emit(
+        "noisy_tile_mvm_64x64",
+        functools.partial(
+            lambda x, planes, d, s, eta: (
+                noisy_tile_mvm(x, planes, d, s, eta, k_bits=K_BITS),
+            )
+        ),
+        [
+            _spec((KERNEL_BATCH, TILE)),
+            _spec((TILE, TILE)),
+            _spec((TILE, TILE)),
+            _spec((TILE,)),
+            _spec((1, 1)),
+        ],
+        "y[B,8]",
+    )
+    emit(
+        "bitslice_64x8",
+        lambda levels: (bitslice(levels, k_bits=K_BITS),),
+        [_spec((TILE, TILE // K_BITS))],
+        "planes[64,64]",
+    )
+
+    (outdir / "manifest.txt").write_text("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} entries")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--quick", action="store_true", help="50 train steps (tests)")
+    args = ap.parse_args()
+    build(Path(args.outdir), train_steps=args.train_steps, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Synthetic dataset — exact Python port of ``rust/src/dataset.rs``.
+
+Both sides implement the same SplitMix64-seeded xoshiro256** generator and
+the same sampling order, so `generate(n, noise, seed)` here and
+``dataset::generate`` in Rust produce the same values (up to libm ulp
+differences in sin/cos/ln, i.e. identical to ~1e-6 after the f32 cast) —
+the cross-language integration test in ``rust/tests`` checks this against
+the shards `aot.py` exports.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+IMG_SIDE = 16
+N_FEATURES = IMG_SIDE * IMG_SIDE
+N_CLASSES = 10
+
+_MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Seeder for xoshiro (Steele/Lea/Flood 2014)."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+        return z ^ (z >> 31)
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & _MASK
+
+
+class Xoshiro256:
+    """xoshiro256** with the same distribution helpers as the Rust side."""
+
+    def __init__(self, seed: int):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+        self._gauss_cache: float | None = None
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[1] * 5) & _MASK, 7) * 9) & _MASK
+        t = (s[1] << 17) & _MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def uniform(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n: int) -> int:
+        """Lemire multiply-shift with rejection (matches Rust exactly)."""
+        threshold = (-n) % n if n else 0
+        while True:
+            r = self.next_u64()
+            wide = r * n
+            hi, lo = wide >> 64, wide & _MASK
+            if lo >= threshold:
+                return hi
+
+    def normal(self) -> float:
+        if self._gauss_cache is not None:
+            z, self._gauss_cache = self._gauss_cache, None
+            return z
+        u = self.uniform()
+        while u <= 2.2250738585072014e-308:
+            u = self.uniform()
+        v = self.uniform()
+        r = math.sqrt(-2.0 * math.log(u))
+        theta = 2.0 * math.pi * v
+        self._gauss_cache = r * math.sin(theta)
+        return r * math.cos(theta)
+
+
+def class_prototypes(seed: int) -> np.ndarray:
+    rng = Xoshiro256(seed)
+    data = np.array(
+        [rng.normal() for _ in range(N_CLASSES * N_FEATURES)], dtype=np.float32
+    )
+    return data.reshape(N_CLASSES, N_FEATURES)
+
+
+def generate(
+    n: int, noise: float, seed: int, proto_seed: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Same algorithm + sampling order as ``dataset::generate`` in Rust.
+
+    ``proto_seed`` pins the class prototypes independently of the sample
+    stream so train/test splits share classes (defaults to ``seed``).
+    """
+    protos = class_prototypes(seed if proto_seed is None else proto_seed)
+    rng = Xoshiro256(seed ^ 0xDA7A5E7)
+    x = np.zeros((n, N_FEATURES), dtype=np.float32)
+    y = np.zeros((n,), dtype=np.float32)
+    for i in range(n):
+        c = rng.below(N_CLASSES)
+        y[i] = c
+        proto = protos[c]
+        for f in range(N_FEATURES):
+            x[i, f] = proto[f] + np.float32(rng.normal() * noise)
+    return x, y

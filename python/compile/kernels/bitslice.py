@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: bit-slice integer magnitude levels into binary planes.
+
+Build-path companion of the MVM kernels: given per-weight quantization
+levels ``[J, N]`` (integers in ``[0, 2^K)`` stored as f32 — the analog
+programming granularity), emit the ``[J, N*K]`` binary planes with the
+MSB-first column convention shared with ``rust/src/quant``.
+
+No data-dependent control flow: the bit extraction is a broadcasted
+floor-divide/mod over a constant divisor vector, which vectorizes cleanly
+on VPU lanes (and in interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(levels_ref, o_ref, *, k_bits: int):
+    levels = levels_ref[...]
+    j, n = levels.shape
+    # Build the divisor vector with an in-kernel iota (a captured ndarray
+    # constant would be rejected by pallas_call).
+    e = jax.lax.broadcasted_iota(jnp.float32, (k_bits,), 0)
+    divisors = jnp.exp2(jnp.float32(k_bits - 1) - e)
+    bits = jnp.floor_divide(levels[..., None], divisors) % 2.0
+    o_ref[...] = bits.reshape(j, n * k_bits)
+
+
+def bitslice(
+    levels: jnp.ndarray,
+    *,
+    k_bits: int,
+    block_j: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Slice ``[J, N]`` levels into ``[J, N*k_bits]`` binary planes."""
+    j, n = levels.shape
+    if block_j is None:
+        block_j = j if j <= 512 else 256
+    if j % block_j != 0:
+        block_j = j  # fall back to a single row-block
+    grid = (j // block_j,)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_bits=k_bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_j, n), lambda jb: (jb, 0))],
+        out_specs=pl.BlockSpec((block_j, n * k_bits), lambda jb: (jb, 0)),
+        out_shape=jax.ShapeDtypeStruct((j, n * k_bits), jnp.float32),
+        interpret=interpret,
+    )(levels)

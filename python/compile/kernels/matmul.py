@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: blocked matmul used by the L2 forward graphs.
+
+A standard three-level blocked matmul (`grid = (M/bm, N/bn, K/bk)`, fp32
+accumulation in the output block) — the MXU-shaped workhorse every layer of
+the AOT'd forward passes lowers through. Falls back to single-block when a
+dimension is not divisible by its block size (model dims here are small;
+the head matrices have N = 10).
+
+Lowered with ``interpret=True`` so the CPU PJRT client can run it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pick(dim: int, want: int) -> int:
+    """Largest block <= want that divides dim."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Blocked ``x [M, K] @ w [K, N] -> [M, N]`` Pallas matmul."""
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"matmul inner-dim mismatch {x.shape} @ {w.shape}")
+    bm, bn, bk = _pick(m, bm), _pick(n, bn), _pick(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, jx, kx: (i, kx)),
+            pl.BlockSpec((bk, bn), lambda i, jx, kx: (kx, jx)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, jx, kx: (i, jx)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)

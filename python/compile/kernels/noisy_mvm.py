@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: crossbar-tile MVM under position-dependent PR
+distortion — the compute hot-spot of the whole stack.
+
+The kernel fuses three steps that a naive implementation would materialize
+separately:
+
+1. Eq.-17 effective weights: ``eff = planes * (1 + eta * dist) * scales``
+   (one fused multiply tree, no intermediate HBM traffic);
+2. the tile MVM ``part = x @ eff`` (MXU-shaped dot);
+3. the digital bit-column accumulation ``y[., w] = sum_b part[., w*K+b]``.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's "tile" is
+an analog crossbar; on TPU the same dataflow is a VMEM-resident block
+(`J×C` bit-planes + `B×J` activations) feeding the MXU. The grid iterates
+over the contraction (row) dimension in ``block_j`` chunks so arbitrarily
+tall tiles stream through VMEM — the BlockSpec plays the role the paper's
+row-chunk tiling plays on the crossbar.
+
+Must be lowered with ``interpret=True``: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, planes_ref, dist_ref, scales_ref, eta_ref, o_ref, *, k_bits: int):
+    """One grid step: accumulate a row-chunk's contribution into o_ref."""
+    jb = pl.program_id(0)
+
+    @pl.when(jb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    eta = eta_ref[0, 0]
+    # Fused Eq.-17 effective weight for this row-chunk.
+    eff = planes_ref[...] * (1.0 + eta * dist_ref[...]) * scales_ref[...]
+    part = jnp.dot(x_ref[...], eff, preferred_element_type=jnp.float32)
+    b, c = part.shape
+    o_ref[...] += part.reshape(b, c // k_bits, k_bits).sum(axis=-1)
+
+
+def noisy_tile_mvm(
+    x: jnp.ndarray,
+    planes: jnp.ndarray,
+    dist: jnp.ndarray,
+    col_scales: jnp.ndarray,
+    eta: jnp.ndarray,
+    *,
+    k_bits: int,
+    block_j: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Crossbar-tile MVM under PR distortion.
+
+    Args:
+      x: activations ``[B, J]`` (f32).
+      planes: binary bit-planes ``[J, C]``.
+      dist: per-cell Manhattan distances ``[J, C]`` (from the mapping plan).
+      col_scales: per-bit-column scales ``[C]``.
+      eta: signed noise coefficient as a ``[1, 1]`` array (an input, so one
+        compiled executable serves every operating point).
+      k_bits: fractional bits per weight; ``C % k_bits == 0``.
+      block_j: contraction-dimension block (default: whole ``J`` if it fits,
+        else 128). Must divide ``J``.
+      interpret: keep True anywhere the CPU PJRT client must run the HLO.
+
+    Returns:
+      ``[B, C // k_bits]`` partial products per logical weight column.
+    """
+    b, j = x.shape
+    j2, c = planes.shape
+    if j != j2:
+        raise ValueError(f"x {x.shape} vs planes {planes.shape}")
+    if c % k_bits != 0:
+        raise ValueError(f"C={c} not divisible by k_bits={k_bits}")
+    if block_j is None:
+        block_j = j if j <= 256 else 128
+    if j % block_j != 0:
+        raise ValueError(f"J={j} not divisible by block_j={block_j}")
+    n_weights = c // k_bits
+    grid = (j // block_j,)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_bits=k_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, block_j), lambda jb: (0, jb)),
+            pl.BlockSpec((block_j, c), lambda jb: (jb, 0)),
+            pl.BlockSpec((block_j, c), lambda jb: (jb, 0)),
+            pl.BlockSpec((c,), lambda jb: (0,)),
+            pl.BlockSpec((1, 1), lambda jb: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, n_weights), lambda jb: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_weights), jnp.float32),
+        interpret=interpret,
+    )(x, planes, dist, col_scales, eta)
+
+
+def vmem_footprint_bytes(b: int, j: int, c: int, k_bits: int, block_j: int) -> int:
+    """Estimated VMEM working set of one grid step, bytes (fp32).
+
+    Used by DESIGN.md §Perf to check the block shape stays well under the
+    ~16 MiB/core VMEM budget of current TPUs.
+    """
+    del k_bits
+    x_blk = b * block_j
+    planes_blk = block_j * c
+    dist_blk = block_j * c
+    scales = c
+    out = b * c  # part + out accumulator upper bound
+    return 4 * (x_blk + planes_blk + dist_blk + scales + out)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package has a reference implementation here written
+with plain `jax.numpy` ops only; pytest sweeps shapes/dtypes/coefficients
+(see ``python/tests/test_kernels.py``) and asserts allclose between kernel
+and oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain matrix multiply, fp32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def ref_effective_weights(
+    planes: jnp.ndarray,
+    dist: jnp.ndarray,
+    col_scales: jnp.ndarray,
+    eta: float,
+) -> jnp.ndarray:
+    """Eq. 17 effective per-cell weight of a bit-sliced crossbar tile.
+
+    ``planes``: binary ``[J, C]``; ``dist``: Manhattan distance of the
+    physical cell holding each logical entry ``[J, C]``; ``col_scales``:
+    per-column scale ``scale * 2^-(bit+1)`` of length ``C``; ``eta``: signed
+    noise coefficient (the paper's calibrated operating point corresponds to
+    ``-2e-3``).
+    """
+    return planes * (1.0 + eta * dist) * col_scales[None, :]
+
+
+def ref_noisy_tile_mvm(
+    x: jnp.ndarray,
+    planes: jnp.ndarray,
+    dist: jnp.ndarray,
+    col_scales: jnp.ndarray,
+    eta: float,
+    k_bits: int,
+) -> jnp.ndarray:
+    """Crossbar-tile MVM under PR distortion.
+
+    ``x``: activations ``[B, J]``; returns ``[B, C // k_bits]`` — partial
+    products of the tile's logical weight columns, digitally accumulated
+    over each weight's ``k_bits`` bit columns.
+    """
+    b, j = x.shape
+    j2, c = planes.shape
+    assert j == j2, (x.shape, planes.shape)
+    assert c % k_bits == 0
+    eff = ref_effective_weights(planes, dist, col_scales, eta)
+    part = jnp.matmul(x, eff, preferred_element_type=jnp.float32)  # [B, C]
+    return part.reshape(b, c // k_bits, k_bits).sum(axis=-1)
+
+
+def ref_bitslice(levels: jnp.ndarray, k_bits: int) -> jnp.ndarray:
+    """Bit-slice integer magnitude levels into binary planes.
+
+    ``levels``: ``[J, N]`` float tensor holding integers in
+    ``[0, 2^k_bits)``. Returns ``[J, N * k_bits]`` binary planes where local
+    bit 0 is the highest-order fractional bit (``2^-1``) — the same column
+    convention as ``rust/src/quant``.
+    """
+    j, n = levels.shape
+    # divisor for local bit b (0 = MSB): 2^(k_bits-1-b)
+    divisors = 2.0 ** jnp.arange(k_bits - 1, -1, -1, dtype=jnp.float32)
+    bits = jnp.floor_divide(levels[..., None], divisors) % 2.0  # [J, N, K]
+    return bits.reshape(j, n * k_bits)

@@ -1,0 +1,80 @@
+"""`.mdt` tensor container — the Python half of the format shared with the
+Rust runtime (`rust/src/tensor/io.rs`).
+
+Layout (little-endian):
+
+    magic   : 4 bytes  = b"MDT1"
+    count   : u32
+    entry*  :
+      name_len : u32
+      name     : utf-8
+      dtype    : u8 (0 = f32)
+      ndim     : u32
+      dims     : ndim x u64
+      data     : prod(dims) x f32, row-major
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"MDT1"
+DTYPE_F32 = 0
+
+
+def write_mdt(path: str | Path, tensors: dict[str, np.ndarray]) -> None:
+    """Write named tensors; keys are sorted for deterministic files."""
+    buf = bytearray()
+    buf += MAGIC
+    buf += struct.pack("<I", len(tensors))
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+        name_b = name.encode("utf-8")
+        buf += struct.pack("<I", len(name_b))
+        buf += name_b
+        buf += struct.pack("<B", DTYPE_F32)
+        buf += struct.pack("<I", arr.ndim)
+        for d in arr.shape:
+            buf += struct.pack("<Q", d)
+        buf += arr.tobytes(order="C")
+    tmp = Path(path).with_suffix(".mdt.tmp")
+    tmp.write_bytes(bytes(buf))
+    tmp.rename(path)
+
+
+def read_mdt(path: str | Path) -> dict[str, np.ndarray]:
+    """Read an `.mdt` file into name -> float32 ndarray."""
+    data = Path(path).read_bytes()
+    off = 0
+
+    def take(n: int) -> bytes:
+        nonlocal off
+        if off + n > len(data):
+            raise ValueError(f"truncated mdt file at offset {off}")
+        out = data[off : off + n]
+        off += n
+        return out
+
+    if take(4) != MAGIC:
+        raise ValueError("bad mdt magic")
+    (count,) = struct.unpack("<I", take(4))
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (name_len,) = struct.unpack("<I", take(4))
+        if name_len > 4096:
+            raise ValueError(f"unreasonable name length {name_len}")
+        name = take(name_len).decode("utf-8")
+        (dtype,) = struct.unpack("<B", take(1))
+        if dtype != DTYPE_F32:
+            raise ValueError(f"unsupported dtype {dtype}")
+        (ndim,) = struct.unpack("<I", take(4))
+        if ndim > 8:
+            raise ValueError(f"unreasonable ndim {ndim}")
+        dims = [struct.unpack("<Q", take(8))[0] for _ in range(ndim)]
+        n = int(np.prod(dims)) if dims else 1
+        arr = np.frombuffer(take(4 * n), dtype="<f4").reshape(dims)
+        out[name] = arr.copy()
+    return out

@@ -1,0 +1,44 @@
+"""L2: MiniResNet — the residual MLP-CNN trained on the synthetic task.
+
+Bias-free (every parameter is a weight matrix that maps onto crossbar
+tiles; see ``rust/src/models/zoo.rs::miniresnet`` for the matching layer
+descriptors). The forward pass is parameterized over the matmul
+implementation so the AOT'd inference graph routes every layer through the
+L1 Pallas kernel while training uses plain ``jnp.matmul`` (autodiff through
+interpret-mode pallas is possible but needlessly slow at build time).
+
+Architecture (16x16 synthetic images, 10 classes):
+
+    x [B, 256] -> relu(x @ W0)            stem    256 -> 128
+               -> h + relu(h @ W1)        block1  128 -> 128
+               -> h + relu(h @ W2)        block2  128 -> 128
+               -> h @ W3                  head    128 -> 10
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: (fan_in, fan_out) of each weight, export order = layer{i} in the .mdt.
+LAYER_SHAPES = [(256, 128), (128, 128), (128, 128), (128, 10)]
+
+
+def init_params(seed: int) -> list[jnp.ndarray]:
+    """He-style init, deterministic in ``seed``."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for fan_in, fan_out in LAYER_SHAPES:
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (fan_in, fan_out), jnp.float32)
+        params.append(w * jnp.sqrt(2.0 / fan_in))
+    return params
+
+
+def forward(params, x, matmul=jnp.matmul):
+    """Logits ``[B, 10]`` for inputs ``[B, 256]``."""
+    w0, w1, w2, w3 = params
+    h = jax.nn.relu(matmul(x, w0))
+    h = h + jax.nn.relu(matmul(h, w1))
+    h = h + jax.nn.relu(matmul(h, w2))
+    return matmul(h, w3)

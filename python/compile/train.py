@@ -1,0 +1,62 @@
+"""L2: training — cross-entropy SGD for MiniResNet / TinyViT.
+
+Runs once at build time inside ``aot.py`` (the trained weights are exported
+to ``artifacts/weights/``) and is itself AOT-lowered as ``train_step`` so
+the Rust end-to-end example (`examples/e2e_train_map_eval.rs`) can train
+the model from the coordinator without any Python on the path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy; ``labels`` are integer class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1).mean()
+
+
+def make_train_step(forward, lr: float):
+    """Plain-SGD train step: ``(params, x, y) -> (new_params, loss)``.
+
+    ``y`` is float (class index) because the `.mdt` interchange format is
+    f32-only; it is cast to int inside.
+    """
+
+    def loss_fn(params, x, y):
+        return cross_entropy(forward(params, x), y)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def step(params, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_params = [w - lr * g for w, g in zip(params, grads)]
+        return new_params, loss
+
+    return step
+
+
+def accuracy(forward, params, x: jnp.ndarray, y: jnp.ndarray) -> float:
+    """Top-1 accuracy."""
+    pred = jnp.argmax(forward(params, x), axis=-1)
+    return float((pred == y.astype(jnp.int32)).mean())
+
+
+def train(forward, params, x, y, *, lr: float, steps: int, batch: int, log_every: int = 0):
+    """Minibatch SGD over a fixed split (wrapping batches, matching the
+    deterministic schedule the Rust e2e driver replays)."""
+    step = make_train_step(forward, lr)
+    n = x.shape[0]
+    losses = []
+    for i in range(steps):
+        lo = (i * batch) % n
+        idx = jnp.asarray([(lo + j) % n for j in range(batch)], dtype=jnp.int32)
+        xb, yb = x[idx], y[idx]
+        params, loss = step(params, xb, yb)
+        losses.append(float(loss))
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  step {i + 1:4d}  loss {float(loss):.4f}")
+    return params, losses

@@ -1,0 +1,103 @@
+"""L2: TinyViT — a two-block single-head vision transformer on the
+synthetic task.
+
+Bias-free and scale-free (RMS normalization without learned gain) so that
+*every* parameter is a plain weight matrix mappable to crossbar tiles; the
+layer export order matches ``rust/src/models/zoo.rs::tinyvit``.
+
+Architecture (16x16 images as 16 patches of 4x4 = 16 dims, d = 64):
+
+    patch embed   16 -> 64
+    2 x [ single-head attention (qkv 64->192, proj 64->64)
+          + MLP (64 -> 256 -> 64) ], pre-RMS-norm, residual
+    mean-pool -> head 64 -> 10
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+N_PATCHES = 16
+PATCH_DIM = 16
+DIM = 64
+
+
+def _positional_encoding() -> jnp.ndarray:
+    """Fixed sinusoidal positional encoding ``[N_PATCHES, DIM]`` —
+    parameter-free so the crossbar-mapped weight set stays pure matrices."""
+    import numpy as np
+
+    pos = np.zeros((N_PATCHES, DIM), np.float32)
+    for p in range(N_PATCHES):
+        for i in range(DIM // 2):
+            ang = p / (10000.0 ** (2 * i / DIM))
+            pos[p, 2 * i] = np.sin(ang)
+            pos[p, 2 * i + 1] = np.cos(ang)
+    return jnp.asarray(pos)
+
+
+_POS = _positional_encoding()
+
+#: (fan_in, fan_out) per weight, export order = layer{i}.
+LAYER_SHAPES = [
+    (PATCH_DIM, DIM),  # patch embed
+    (DIM, 3 * DIM),    # block 1 qkv
+    (DIM, DIM),        # block 1 proj
+    (DIM, 4 * DIM),    # block 1 mlp up
+    (4 * DIM, DIM),    # block 1 mlp down
+    (DIM, 3 * DIM),    # block 2 qkv
+    (DIM, DIM),        # block 2 proj
+    (DIM, 4 * DIM),    # block 2 mlp up
+    (4 * DIM, DIM),    # block 2 mlp down
+    (DIM, 10),         # head
+]
+
+
+def init_params(seed: int) -> list[jnp.ndarray]:
+    """Xavier-style init, deterministic in ``seed``."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for fan_in, fan_out in LAYER_SHAPES:
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (fan_in, fan_out), jnp.float32)
+        params.append(w * jnp.sqrt(1.0 / fan_in))
+    return params
+
+
+def _rms_norm(h):
+    return h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + 1e-6)
+
+
+def _block(h, w_qkv, w_proj, w_up, w_down, matmul):
+    """Pre-norm single-head attention + MLP, both residual."""
+    b, p, d = h.shape
+
+    def mm(a, w):
+        # Collapse the patch axis so the (pallas) matmul stays 2-D.
+        return matmul(a.reshape(b * p, -1), w).reshape(b, p, -1)
+
+    n = _rms_norm(h)
+    qkv = mm(n, w_qkv)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    att = jnp.einsum("bpd,bqd->bpq", q, k) / jnp.sqrt(jnp.float32(d))
+    att = jax.nn.softmax(att, axis=-1)
+    h = h + mm(jnp.einsum("bpq,bqd->bpd", att, v), w_proj)
+
+    n = _rms_norm(h)
+    h = h + mm(jax.nn.relu(mm(n, w_up)), w_down)
+    return h
+
+
+def forward(params, x, matmul=jnp.matmul):
+    """Logits ``[B, 10]`` for inputs ``[B, 256]``."""
+    (w_embed, q1, p1, u1, d1, q2, p2, u2, d2, w_head) = params
+    b = x.shape[0]
+    patches = x.reshape(b, 4, 4, 4, 4).transpose(0, 1, 3, 2, 4).reshape(
+        b * N_PATCHES, PATCH_DIM
+    )
+    h = matmul(patches, w_embed).reshape(b, N_PATCHES, DIM) + _POS
+    h = _block(h, q1, p1, u1, d1, matmul)
+    h = _block(h, q2, p2, u2, d2, matmul)
+    pooled = _rms_norm(h.mean(axis=1))
+    return matmul(pooled, w_head)

@@ -1,0 +1,9 @@
+"""pytest configuration: make `compile` importable when running from the
+`python/` directory or the repo root."""
+
+import sys
+from pathlib import Path
+
+PYTHON_DIR = Path(__file__).resolve().parent.parent
+if str(PYTHON_DIR) not in sys.path:
+    sys.path.insert(0, str(PYTHON_DIR))

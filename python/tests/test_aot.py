@@ -1,0 +1,85 @@
+"""AOT lowering tests: every entry point lowers to parseable HLO text with
+the expected entry computation layout (no full artifact build here — that
+is `make artifacts`; these tests exercise the lowering path itself)."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels.noisy_mvm import noisy_tile_mvm
+
+
+def test_to_hlo_text_simple_fn():
+    def fn(a, b):
+        return (a @ b + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert text.startswith("HloModule")
+    assert "entry_computation_layout" in text
+    assert "f32[4,4]" in text
+
+
+def test_fwd_entry_lowers_with_pallas():
+    from compile.kernels.matmul import matmul as pallas_matmul
+
+    def mini_fwd(x, *ws):
+        return (model.forward(list(ws), x, matmul=pallas_matmul),)
+
+    specs = [jax.ShapeDtypeStruct((aot.FWD_BATCH, 256), jnp.float32)] + [
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in model.LAYER_SHAPES
+    ]
+    text = aot.lower_entry(mini_fwd, specs)
+    assert text.startswith("HloModule")
+    # Output is a 1-tuple of [B, 10] logits.
+    assert f"f32[{aot.FWD_BATCH},10]" in text
+    # interpret-mode pallas lowers to plain HLO: no custom-call opcodes.
+    assert "custom-call" not in text
+
+
+def test_large_constants_not_elided():
+    """Regression: the default HLO printer elides big literals as
+    ``constant({...})`` which the 0.5.1 text parser reads back as zeros
+    (this silently zeroed TinyViT's positional encoding). ``to_hlo_text``
+    must print the full constant."""
+    import jax.numpy as jnp
+
+    big = jnp.arange(1024, dtype=jnp.float32).reshape(16, 64)
+
+    def fn(x):
+        return (x + big,)
+
+    text = aot.lower_entry(fn, [jax.ShapeDtypeStruct((16, 64), jnp.float32)])
+    assert "{...}" not in text, "elided constant in HLO text"
+    assert "1023" in text  # the last literal value is present
+
+
+def test_tinyvit_fwd_contains_positional_constant():
+    from compile import vit
+    from compile.kernels.matmul import matmul as pallas_matmul
+
+    def vit_fwd(x, *ws):
+        return (vit.forward(list(ws), x, matmul=pallas_matmul),)
+
+    specs = [jax.ShapeDtypeStruct((aot.FWD_BATCH, 256), jnp.float32)] + [
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in vit.LAYER_SHAPES
+    ]
+    text = aot.lower_entry(vit_fwd, specs)
+    assert "{...}" not in text
+
+
+def test_noisy_kernel_entry_lowers():
+    specs = [
+        jax.ShapeDtypeStruct((aot.KERNEL_BATCH, aot.TILE), jnp.float32),
+        jax.ShapeDtypeStruct((aot.TILE, aot.TILE), jnp.float32),
+        jax.ShapeDtypeStruct((aot.TILE, aot.TILE), jnp.float32),
+        jax.ShapeDtypeStruct((aot.TILE,), jnp.float32),
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),
+    ]
+    text = aot.lower_entry(
+        lambda x, p, d, s, e: (noisy_tile_mvm(x, p, d, s, e, k_bits=aot.K_BITS),),
+        specs,
+    )
+    assert text.startswith("HloModule")
+    assert "custom-call" not in text
+    assert f"f32[{aot.KERNEL_BATCH},{aot.TILE // aot.K_BITS}]" in text

@@ -1,0 +1,132 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle, swept over
+shapes / blockings / noise coefficients with hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.bitslice import bitslice
+from compile.kernels.matmul import matmul
+from compile.kernels.noisy_mvm import noisy_tile_mvm, vmem_footprint_bytes
+
+hypothesis.settings.register_profile(
+    "build", settings(max_examples=25, deadline=None)
+)
+hypothesis.settings.load_profile("build")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- noisy mvm
+@given(
+    b=st.sampled_from([1, 4, 8]),
+    j=st.sampled_from([16, 64, 128]),
+    n_weights=st.sampled_from([2, 8]),
+    k_bits=st.sampled_from([4, 8]),
+    eta=st.sampled_from([0.0, -2e-3, 2e-3, -1e-2]),
+    block_div=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_noisy_tile_mvm_matches_ref(b, j, n_weights, k_bits, eta, block_div, seed):
+    rng = np.random.default_rng(seed)
+    c = n_weights * k_bits
+    x = _rand(rng, b, j)
+    planes = jnp.asarray(rng.integers(0, 2, size=(j, c)), jnp.float32)
+    # Arbitrary (plan-dependent) distance tensor, not just j+k.
+    dist = jnp.asarray(rng.integers(0, j + c, size=(j, c)), jnp.float32)
+    scales = jnp.asarray(0.5 ** (rng.integers(1, k_bits + 1, size=c)), jnp.float32)
+    y = noisy_tile_mvm(
+        x, planes, dist, scales, jnp.full((1, 1), eta, jnp.float32),
+        k_bits=k_bits, block_j=j // block_div,
+    )
+    y_ref = ref.ref_noisy_tile_mvm(x, planes, dist, scales, eta, k_bits)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_noisy_tile_mvm_rejects_bad_shapes():
+    x = jnp.zeros((2, 16))
+    planes = jnp.zeros((8, 16))  # J mismatch
+    dist = jnp.zeros((8, 16))
+    scales = jnp.zeros((16,))
+    eta = jnp.zeros((1, 1))
+    with pytest.raises(ValueError):
+        noisy_tile_mvm(x, planes, dist, scales, eta, k_bits=8)
+    with pytest.raises(ValueError):
+        noisy_tile_mvm(jnp.zeros((2, 8)), planes, dist, scales, eta, k_bits=3)
+    with pytest.raises(ValueError):
+        noisy_tile_mvm(jnp.zeros((2, 8)), planes, dist, scales, eta, k_bits=8, block_j=3)
+
+
+def test_noisy_mvm_zero_eta_equals_clean_matmul():
+    rng = np.random.default_rng(7)
+    x = _rand(rng, 4, 64)
+    planes = jnp.asarray(rng.integers(0, 2, size=(64, 64)), jnp.float32)
+    dist = jnp.asarray(rng.integers(0, 128, size=(64, 64)), jnp.float32)
+    scales = jnp.asarray(0.5 ** (np.arange(64) % 8 + 1), jnp.float32)
+    y = noisy_tile_mvm(
+        x, planes, dist, scales, jnp.zeros((1, 1), jnp.float32), k_bits=8
+    )
+    eff = np.asarray(planes) * np.asarray(scales)[None, :]
+    part = np.asarray(x) @ eff
+    y_ref = part.reshape(4, 8, 8).sum(-1)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_footprint_reasonable():
+    # 64x64 tile, B=8, block_j=64: must sit far below 16 MiB VMEM.
+    assert vmem_footprint_bytes(8, 64, 64, 8, 64) < 1 << 20
+
+
+# ------------------------------------------------------------------- matmul
+@given(
+    m=st.sampled_from([1, 10, 16, 64]),
+    k=st.sampled_from([16, 48, 256]),
+    n=st.sampled_from([10, 64, 192]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k)
+    w = _rand(rng, k, n)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w)),
+        np.asarray(ref.ref_matmul(x, w)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_matmul_dim_mismatch():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+# ----------------------------------------------------------------- bitslice
+@given(
+    j=st.sampled_from([1, 32, 64]),
+    n=st.sampled_from([1, 8]),
+    k_bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitslice_matches_ref(j, n, k_bits, seed):
+    rng = np.random.default_rng(seed)
+    levels = jnp.asarray(rng.integers(0, 2**k_bits, size=(j, n)), jnp.float32)
+    got = np.asarray(bitslice(levels, k_bits=k_bits))
+    want = np.asarray(ref.ref_bitslice(levels, k_bits))
+    np.testing.assert_array_equal(got, want)
+    # And the planes must reconstruct the levels.
+    weights = (2.0 ** np.arange(k_bits - 1, -1, -1))[None, None, :]
+    recon = (got.reshape(j, n, k_bits) * weights).sum(-1)
+    np.testing.assert_array_equal(recon, np.asarray(levels))
+
+
+def test_bitslice_msb_first_convention():
+    # Level 0b1010 = 10 -> planes [1, 0, 1, 0] with local bit 0 = MSB (2^-1).
+    out = np.asarray(bitslice(jnp.asarray([[10.0]]), k_bits=4))
+    np.testing.assert_array_equal(out, [[1.0, 0.0, 1.0, 0.0]])

@@ -1,0 +1,75 @@
+"""mdt container and dataset generator tests (Python side)."""
+
+import numpy as np
+import pytest
+
+from compile import dataset, mdt
+
+
+def test_mdt_roundtrip(tmp_path):
+    p = tmp_path / "t.mdt"
+    tensors = {
+        "w": np.arange(12, dtype=np.float32).reshape(3, 4) - 5.5,
+        "b": np.asarray([1.0, -2.0], dtype=np.float32),
+        "scalar3d": np.zeros((2, 1, 2), dtype=np.float32),
+    }
+    mdt.write_mdt(p, tensors)
+    back = mdt.read_mdt(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_mdt_rejects_garbage(tmp_path):
+    p = tmp_path / "bad.mdt"
+    p.write_bytes(b"XXXX\x00\x00\x00\x00")
+    with pytest.raises(ValueError):
+        mdt.read_mdt(p)
+
+
+def test_mdt_truncation_detected(tmp_path):
+    p = tmp_path / "t.mdt"
+    mdt.write_mdt(p, {"w": np.zeros((8, 8), dtype=np.float32)})
+    data = p.read_bytes()
+    p.write_bytes(data[:-5])
+    with pytest.raises(ValueError):
+        mdt.read_mdt(p)
+
+
+def test_dataset_deterministic():
+    x1, y1 = dataset.generate(32, 1.0, 9)
+    x2, y2 = dataset.generate(32, 1.0, 9)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_dataset_proto_seed_shares_classes():
+    # Same proto_seed -> same prototypes -> a nearest-prototype classifier
+    # trained on split A classifies split B.
+    xa, ya = dataset.generate(400, 0.5, 11)
+    xb, yb = dataset.generate(400, 0.5, 12, proto_seed=11)
+    protos = dataset.class_prototypes(11)
+    pred = np.argmin(
+        ((xb[:, None, :] - protos[None, :, :]) ** 2).sum(-1), axis=1
+    )
+    assert (pred == yb).mean() > 0.95
+    # Different proto seed -> different classes.
+    xc, yc = dataset.generate(400, 0.5, 12)
+    pred_c = np.argmin(
+        ((xc[:, None, :] - protos[None, :, :]) ** 2).sum(-1), axis=1
+    )
+    assert (pred_c == yc).mean() < 0.5
+
+
+def test_xoshiro_below_in_range():
+    rng = dataset.Xoshiro256(3)
+    vals = [rng.below(10) for _ in range(1000)]
+    assert min(vals) >= 0 and max(vals) <= 9
+    assert len(set(vals)) == 10
+
+
+def test_xoshiro_normal_moments():
+    rng = dataset.Xoshiro256(4)
+    xs = np.asarray([rng.normal() for _ in range(20000)])
+    assert abs(xs.mean()) < 0.03
+    assert abs(xs.std() - 1.0) < 0.03

@@ -1,0 +1,74 @@
+"""L2 model tests: shapes, training dynamics, pallas-matmul equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dataset, model, train, vit
+from compile.kernels.matmul import matmul as pallas_matmul
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y = dataset.generate(512, 2.2, 42)
+    xt, yt = dataset.generate(128, 2.2, 43, proto_seed=42)
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(xt), jnp.asarray(yt)
+
+
+def test_miniresnet_shapes():
+    p = model.init_params(0)
+    assert [tuple(w.shape) for w in p] == model.LAYER_SHAPES
+    logits = model.forward(p, jnp.zeros((3, 256)))
+    assert logits.shape == (3, 10)
+
+
+def test_tinyvit_shapes():
+    p = vit.init_params(0)
+    assert [tuple(w.shape) for w in p] == vit.LAYER_SHAPES
+    logits = vit.forward(p, jnp.zeros((3, 256)))
+    assert logits.shape == (3, 10)
+
+
+def test_forward_pallas_equals_jnp_miniresnet(data):
+    x, *_ = data
+    p = model.init_params(1)
+    a = model.forward(p, x[:8])
+    b = model.forward(p, x[:8], matmul=pallas_matmul)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_forward_pallas_equals_jnp_tinyvit(data):
+    x, *_ = data
+    p = vit.init_params(1)
+    a = vit.forward(p, x[:8])
+    b = vit.forward(p, x[:8], matmul=pallas_matmul)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_train_step_decreases_loss(data):
+    x, y, _, _ = data
+    p = model.init_params(2)
+    p, losses = train.train(model.forward, p, x, y, lr=0.05, steps=60, batch=64)
+    assert losses[-1] < losses[0] * 0.5, (losses[0], losses[-1])
+
+
+def test_training_reaches_good_accuracy(data):
+    x, y, xt, yt = data
+    p = model.init_params(3)
+    p, _ = train.train(model.forward, p, x, y, lr=0.05, steps=150, batch=64)
+    acc = train.accuracy(model.forward, p, xt, yt)
+    assert acc > 0.85, acc
+
+
+def test_untrained_accuracy_near_chance(data):
+    _, _, xt, yt = data
+    acc = train.accuracy(model.forward, model.init_params(4), xt, yt)
+    assert acc < 0.35, acc
+
+
+def test_cross_entropy_sane():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0]])
+    y = jnp.asarray([0.0, 1.0])
+    assert float(train.cross_entropy(logits, y)) < 1e-3
+    y_bad = jnp.asarray([1.0, 0.0])
+    assert float(train.cross_entropy(logits, y_bad)) > 5.0

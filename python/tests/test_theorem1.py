@@ -1,0 +1,73 @@
+"""Empirical validation of Theorem 1 (bit-level structured sparsity).
+
+For a non-negative random variable with continuous, strictly decreasing
+density f on [0, inf) and f(0) < inf:
+
+    |p_k - 1/2| <= f(0) / 2^(2+k)    and    p_k < 1/2 for every k,
+
+where p_k is the probability the k-th fractional bit (value 2^-k) of W is
+set. We check the bound for exponential and half-gaussian magnitudes
+(the magnitude distributions of Laplace / Gaussian weights) using the exact
+bit indicator of the theorem's proof (no quantization — quantization
+round-to-nearest perturbs only the lowest bit).
+"""
+
+import numpy as np
+import pytest
+
+
+def exact_bit(w: np.ndarray, k: int) -> np.ndarray:
+    """b_k(w): 1 on [mL + L/2, (m+1)L) with L = 2^-k."""
+    L = 2.0 ** (-k)
+    frac = np.mod(w, L) / L
+    return (frac >= 0.5).astype(np.float64)
+
+
+CASES = [
+    # (name, sampler(rng, n), f(0))
+    ("exponential(4)", lambda rng, n: rng.exponential(1 / 4.0, n), 4.0),
+    ("exponential(1)", lambda rng, n: rng.exponential(1.0, n), 1.0),
+    (
+        "half-gaussian(0.5)",
+        lambda rng, n: np.abs(rng.normal(0, 0.5, n)),
+        2.0 / (0.5 * np.sqrt(2 * np.pi)),
+    ),
+]
+
+
+@pytest.mark.parametrize("name,sampler,f0", CASES, ids=[c[0] for c in CASES])
+def test_theorem1_bound_holds(name, sampler, f0):
+    rng = np.random.default_rng(1234)
+    n = 400_000
+    w = sampler(rng, n)
+    se = 3.0 / np.sqrt(n)  # 3-sigma sampling slack on p_k
+    for k in range(1, 9):
+        p_k = exact_bit(w, k).mean()
+        bound = f0 / 2.0 ** (2 + k)
+        assert abs(p_k - 0.5) <= bound + se, (
+            f"{name}: k={k} p_k={p_k:.5f} violates |p-1/2|<={bound:.5f}"
+        )
+        # p_k < 1/2 strictly (up to sampling noise).
+        assert p_k < 0.5 + se, f"{name}: k={k} p_k={p_k:.5f} not below 1/2"
+
+
+def test_pk_converges_to_half():
+    rng = np.random.default_rng(5)
+    w = rng.exponential(0.25, 400_000)
+    p1 = exact_bit(w, 1).mean()
+    p8 = exact_bit(w, 8).mean()
+    assert abs(p8 - 0.5) < abs(p1 - 0.5)
+    assert abs(p8 - 0.5) < 0.01
+
+
+def test_high_order_bits_sparser_after_quantization():
+    """The consequence MDM uses: in an 8-bit sliced tile of bell-shaped
+    weights, high-order columns are much sparser than low-order ones."""
+    rng = np.random.default_rng(7)
+    w = np.abs(rng.laplace(0, 0.05, 100_000))
+    scale = w.max() * (1 + 1e-6)
+    levels = np.clip(np.round(w / scale * 256), 0, 255).astype(np.int64)
+    density = [(levels >> (8 - 1 - b) & 1).mean() for b in range(8)]
+    assert density[0] < 0.05  # top bit almost never set
+    assert density[6] > 0.3
+    assert density[0] < density[3] < density[6]

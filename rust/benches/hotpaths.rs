@@ -1,0 +1,148 @@
+//! `cargo bench` — micro-benchmarks of the L3 hot paths, used by the
+//! EXPERIMENTS.md §Perf iteration loop.
+//!
+//!   solver:   banded Cholesky factor+solve, CG, Sherman–Morrison toggles
+//!   mapping:  bit-slicing, row scoring, plan application
+//!   noise:    Eq.-17 effective-weight computation
+//!   tensor:   the blocked matmul under the tiled fallback path
+//!   runtime:  PJRT kernel dispatch (needs artifacts)
+//!   serving:  engine inference end-to-end (needs artifacts)
+
+use mdm_cim::circuit::CrossbarCircuit;
+use mdm_cim::coordinator::{Engine, EngineConfig, ModelKind};
+use mdm_cim::crossbar::TileGeometry;
+use mdm_cim::eval::random_planes;
+use mdm_cim::mdm::{map_tile, MappingConfig};
+use mdm_cim::noise::distorted_weights;
+use mdm_cim::quant::BitSlicedMatrix;
+use mdm_cim::report::write_csv;
+use mdm_cim::rng::Xoshiro256;
+use mdm_cim::runtime::ArtifactStore;
+use mdm_cim::tensor::Tensor;
+use mdm_cim::testsupport::bench;
+use mdm_cim::CrossbarPhysics;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let out = Path::new("results/bench");
+    std::fs::create_dir_all(out)?;
+    let mut timing: Vec<Vec<String>> = Vec::new();
+    let mut record = |name: &str, s: mdm_cim::testsupport::BenchStats| {
+        timing.push(vec![
+            name.to_string(),
+            format!("{:.6}", s.mean_s),
+            format!("{:.6}", s.std_s),
+            format!("{:.6}", s.min_s),
+        ]);
+    };
+    let physics = CrossbarPhysics::default();
+    let mut rng = Xoshiro256::seeded(1);
+
+    println!("== circuit solver =========================================================");
+    let planes64 = random_planes(64, 64, 0.2, &mut rng);
+    let c64 = CrossbarCircuit::from_planes(&planes64, physics)?;
+    let s = bench("solve_cholesky_64x64", 1, 5, || {
+        c64.solve().unwrap();
+    });
+    record("solve_cholesky_64x64", s);
+    let s = bench("solve_cg_64x64", 1, 3, || {
+        c64.solve_cg(1e-10).unwrap();
+    });
+    record("solve_cg_64x64", s);
+    let solver = c64.factorize()?;
+    let s = bench("sherman_morrison_toggle_64x64", 2, 20, || {
+        solver.solve_with_toggle(31, 17, true).unwrap();
+    });
+    record("sherman_morrison_toggle_64x64", s);
+    let planes128 = random_planes(128, 128, 0.2, &mut rng);
+    let c128 = CrossbarCircuit::from_planes(&planes128, physics)?;
+    let s = bench("solve_cholesky_128x128", 0, 2, || {
+        c128.solve().unwrap();
+    });
+    record("solve_cholesky_128x128", s);
+
+    println!("\n== mapping pipeline =======================================================");
+    let wdata: Vec<f32> = (0..512 * 64).map(|_| rng.laplace(0.2).abs() as f32).collect();
+    let w = Tensor::new(&[512, 64], wdata)?;
+    let s = bench("bitslice_512x64_k8", 1, 10, || {
+        BitSlicedMatrix::slice(&w, 8).unwrap();
+    });
+    record("bitslice_512x64_k8", s);
+    let sliced = BitSlicedMatrix::slice(&w, 8)?;
+    let s = bench("mdm_map_tile_512x512", 1, 10, || {
+        map_tile(&sliced.planes, MappingConfig::mdm());
+    });
+    record("mdm_map_tile_512x512", s);
+    let plan = map_tile(&sliced.planes, MappingConfig::mdm());
+    let s = bench("plan_apply_512x512", 1, 10, || {
+        plan.apply(&sliced.planes).unwrap();
+    });
+    record("plan_apply_512x512", s);
+    let s = bench("eq17_distorted_weights_512x512", 1, 10, || {
+        distorted_weights(&sliced, &plan, -2e-3).unwrap();
+    });
+    record("eq17_distorted_weights_512x512", s);
+
+    println!("\n== tensor core ============================================================");
+    let a_data: Vec<f32> = (0..64 * 512).map(|_| rng.uniform() as f32).collect();
+    let a = Tensor::new(&[64, 512], a_data)?;
+    let b_data: Vec<f32> = (0..512 * 512).map(|_| rng.uniform() as f32).collect();
+    let b = Tensor::new(&[512, 512], b_data)?;
+    let s = bench("matmul_64x512x512", 1, 5, || {
+        a.matmul(&b).unwrap();
+    });
+    record("matmul_64x512x512", s);
+
+    if Path::new("artifacts/manifest.txt").exists() {
+        println!("\n== runtime + serving (PJRT) ===============================================");
+        let store = ArtifactStore::open("artifacts")?;
+        let kernel = store.load("noisy_tile_mvm_64x64")?;
+        let x = Tensor::new(&[8, 64], (0..512).map(|i| i as f32 / 512.0).collect())?;
+        let dist = mdm_cim::nf::distance_matrix(64, 64);
+        let scales = Tensor::from_vec(sliced.col_scales()[..64].to_vec());
+        let planes_t = random_planes(64, 64, 0.2, &mut rng);
+        let eta = Tensor::new(&[1, 1], vec![-2e-3])?;
+        let s = bench("pjrt_noisy_kernel_dispatch", 2, 20, || {
+            kernel.run1(&[&x, &planes_t, &dist, &scales, &eta]).unwrap();
+        });
+        record("pjrt_noisy_kernel_dispatch", s);
+        drop(store);
+
+        let engine = Engine::program(
+            "artifacts",
+            EngineConfig {
+                model: ModelKind::MiniResNet,
+                mapping: MappingConfig::mdm(),
+                eta_signed: -2e-3,
+                geometry: TileGeometry::paper_eval(),
+                fwd_batch: 16,
+            },
+        )?;
+        let test = ArtifactStore::open("artifacts")?.data("test")?;
+        let (xb, _) = test.batch(0, 16);
+        let s = bench("engine_infer_batch16", 2, 20, || {
+            engine.infer(&xb).unwrap();
+        });
+        record("engine_infer_batch16", s);
+        let s = bench("engine_program_miniresnet", 0, 2, || {
+            Engine::program(
+                "artifacts",
+                EngineConfig {
+                    model: ModelKind::MiniResNet,
+                    mapping: MappingConfig::mdm(),
+                    eta_signed: -2e-3,
+                    geometry: TileGeometry::paper_eval(),
+                    fwd_batch: 16,
+                },
+            )
+            .unwrap();
+        });
+        record("engine_program_miniresnet", s);
+    } else {
+        println!("\n(runtime/serving benches skipped: run `make artifacts`)");
+    }
+
+    write_csv(out.join("hotpath_timings.csv"), &["bench", "mean_s", "std_s", "min_s"], &timing)?;
+    println!("\ntimings: results/bench/hotpath_timings.csv");
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! `cargo bench` — regenerates every figure of the paper's evaluation and
+//! times the regeneration (hand-rolled harness; criterion unavailable
+//! offline, see DESIGN.md §5).
+//!
+//! One section per figure:
+//!   Fig. 2 — single-cell NF heatmap (circuit solver, Sherman–Morrison)
+//!   Fig. 4 — Manhattan-Hypothesis fit on random tiles
+//!   Fig. 5 — NF reduction across the model zoo
+//!   Fig. 6 — accuracy under PR noise via the PJRT forward path
+//!   A1–A3 + roworder — the ablations
+//!
+//! Results (both the measured figures and the timings) land under
+//! `results/bench/`.
+
+use mdm_cim::coordinator::ModelKind;
+use mdm_cim::crossbar::TileGeometry;
+use mdm_cim::eval;
+use mdm_cim::report::write_csv;
+use mdm_cim::testsupport::bench;
+use mdm_cim::CrossbarPhysics;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let out = Path::new("results/bench");
+    std::fs::create_dir_all(out)?;
+    let mut timing: Vec<Vec<String>> = Vec::new();
+    let mut record = |name: &str, s: mdm_cim::testsupport::BenchStats| {
+        timing.push(vec![
+            name.to_string(),
+            format!("{:.6}", s.mean_s),
+            format!("{:.6}", s.std_s),
+            format!("{:.6}", s.min_s),
+        ]);
+    };
+
+    println!("== Fig. 2: single-cell NF heatmap =========================================");
+    let mut fig2 = None;
+    let s = bench("fig2_heatmap_32x32", 0, 3, || {
+        fig2 = Some(eval::fig2::run(32, CrossbarPhysics::default(), out).unwrap());
+    });
+    record("fig2_heatmap_32x32", s);
+    let f2 = fig2.unwrap();
+    println!(
+        "  -> asymmetry {:.2e}, slope {:.3e} (theory {:.3e}), r2 {:.5}",
+        f2.max_asymmetry, f2.linear_fit.slope, f2.theory_slope, f2.linear_fit.r2
+    );
+    let s = bench("fig2_heatmap_64x64", 0, 1, || {
+        eval::fig2::run(64, CrossbarPhysics::default(), out).unwrap();
+    });
+    record("fig2_heatmap_64x64", s);
+
+    println!("\n== Fig. 4: Manhattan-Hypothesis fit =======================================");
+    let mut fig4 = None;
+    let cfg4 = eval::fig4::Fig4Config { n_tiles: 100, tile: 64, ..Default::default() };
+    let s = bench("fig4_fit_100x64x64", 0, 1, || {
+        fig4 = Some(eval::fig4::run(cfg4, out).unwrap());
+    });
+    record("fig4_fit_100x64x64", s);
+    let f4 = fig4.unwrap();
+    println!(
+        "  -> r2 {:.4}, error mu {:.3}% sigma {:.3}%  (paper: -0.126%, 11.2%)",
+        f4.fit.fit.r2, f4.fit.error_summary.mean, f4.fit.error_summary.std
+    );
+
+    println!("\n== Fig. 5: NF reduction across the zoo ====================================");
+    let mut fig5 = None;
+    let cfg5 = eval::fig5::Fig5Config {
+        tiles_per_layer: 16,
+        artifacts_dir: Some("artifacts".into()),
+        ..Default::default()
+    };
+    let s = bench("fig5_nf_zoo", 0, 1, || {
+        fig5 = Some(eval::fig5::run(&cfg5, out).unwrap());
+    });
+    record("fig5_nf_zoo", s);
+    for r in fig5.as_ref().unwrap() {
+        println!(
+            "  -> {:<12} mdm@conv {:>5.1}%  mdm@rev {:>5.1}%  full {:>5.1}%",
+            r.model,
+            r.reduction_conventional(),
+            r.reduction_reversed(),
+            r.reduction_full()
+        );
+    }
+
+    println!("\n== Fig. 6: accuracy under PR noise (PJRT path) ============================");
+    if Path::new("artifacts/manifest.txt").exists() {
+        let mut fig6 = None;
+        let s = bench("fig6_accuracy_both_models", 0, 1, || {
+            fig6 = Some(
+                eval::fig6::run(
+                    "artifacts",
+                    &[ModelKind::MiniResNet, ModelKind::TinyViT],
+                    -2e-3,
+                    TileGeometry::paper_eval(),
+                    out,
+                )
+                .unwrap(),
+            );
+        });
+        record("fig6_accuracy_both_models", s);
+        for r in fig6.as_ref().unwrap() {
+            println!("  -> {:<12} {:<22} {:.2}%", r.model, r.config, 100.0 * r.accuracy);
+        }
+    } else {
+        println!("  (skipped: run `make artifacts` first)");
+    }
+
+    println!("\n== Ablations ==============================================================");
+    let s = bench("ablation_tilesize", 0, 1, || {
+        eval::ablations::tile_size_sweep(&[16, 32, 64, 128], 8, 42, out).unwrap();
+    });
+    record("ablation_tilesize", s);
+    let s = bench("ablation_sparsity", 0, 1, || {
+        eval::ablations::sparsity_sweep(&[0.5, 0.7, 0.8, 0.9, 0.95], 64, 12, 42, out).unwrap();
+    });
+    record("ablation_sparsity", s);
+    let s = bench("ablation_ratio", 0, 1, || {
+        eval::ablations::ratio_sweep(&[0.5, 2.5, 10.0], 32, 24, 42, out).unwrap();
+    });
+    record("ablation_ratio", s);
+    let s = bench("ablation_roworder", 0, 1, || {
+        eval::ablations::roworder_compare(64, 8, 12, 42, out).unwrap();
+    });
+    record("ablation_roworder", s);
+    let s = bench("eta_calibration", 0, 1, || {
+        eval::calibrate::run(40, 32, 0.8, CrossbarPhysics::default(), 42, out).unwrap();
+    });
+    record("eta_calibration", s);
+    let s = bench("ablation_global_sort", 0, 1, || {
+        eval::ablations::global_sort_compare(512, 64, 8, 42, out).unwrap();
+    });
+    record("ablation_global_sort", s);
+    let s = bench("ablation_variation", 0, 1, || {
+        eval::ablations::variation_sweep(&[0.1, 0.3], 16, 8, 42, out).unwrap();
+    });
+    record("ablation_variation", s);
+    let s = bench("ablation_faults", 0, 1, || {
+        eval::ablations::fault_sweep(&[0.01, 0.05, 0.1], 64, 8, 6, 42, out).unwrap();
+    });
+    record("ablation_faults", s);
+
+    write_csv(out.join("bench_timings.csv"), &["bench", "mean_s", "std_s", "min_s"], &timing)?;
+    println!("\ntimings: results/bench/bench_timings.csv");
+    Ok(())
+}

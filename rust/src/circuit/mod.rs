@@ -1,0 +1,677 @@
+//! Circuit-level crossbar simulation — the SPICE substitute.
+//!
+//! The paper's Figs. 2 and 4 come from SPICE runs on a 1R memristive
+//! crossbar with wire parasitic resistance. A linear resistive network is
+//! exactly a sparse SPD linear system (modified nodal analysis), so this
+//! module solves the *same* equations SPICE would, without the netlist
+//! frontend: we assemble the conductance matrix of the full R-mesh and solve
+//! it with banded Cholesky (cross-checked by conjugate gradient). A SPICE
+//! `.cir` exporter ([`netlist`]) is provided so any external simulator can
+//! verify our numbers.
+//!
+//! ## Mesh model
+//!
+//! For a `J×K` crossbar (row index `j` = segments from the **output/sense**
+//! rail, column index `k` = segments from the **input** rail, so the I/O
+//! corner is `(0,0)` and `d_M(j,k) = j + k`):
+//!
+//! * each crosspoint has a top (row-wire) node `T[j,k]` and a bottom
+//!   (column-wire) node `B[j,k]`;
+//! * row wires: `T[j,0]` is driven at `V_in` (ideal driver), and
+//!   `T[j,k] —r— T[j,k+1]`;
+//! * column wires: `B[0,k]` is a virtual ground (sense amplifier), and
+//!   `B[j,k] —r— B[j+1,k]`;
+//! * the device at `(j,k)` is a resistor `R_on` (active) or `R_off`
+//!   (inactive; may be infinite) between `T[j,k]` and `B[j,k]`.
+//!
+//! Column output currents are read at the `B[0,k]` grounds; the ideal
+//! (`r = 0`) currents follow in closed form, and the nonideality factor is
+//! `NF = |Δi / i₀|` (Eq. 1).
+
+pub mod netlist;
+pub mod solver;
+
+use crate::tensor::Tensor;
+use crate::CrossbarPhysics;
+use anyhow::{ensure, Context, Result};
+use solver::{conjugate_gradient, BandedCholesky, BandedSpd, Csr};
+
+/// Maps mesh nodes to unknown indices (fixed nodes have none).
+#[derive(Debug, Clone)]
+struct NodeMap {
+    k_cols: usize,
+    /// Unknown index of `T[j,k]` (None when fixed: k == 0).
+    t_idx: Vec<Option<usize>>,
+    /// Unknown index of `B[j,k]` (None when fixed: j == 0).
+    b_idx: Vec<Option<usize>>,
+    n_unknowns: usize,
+}
+
+impl NodeMap {
+    fn build(j_rows: usize, k_cols: usize) -> Self {
+        let mut t_idx = vec![None; j_rows * k_cols];
+        let mut b_idx = vec![None; j_rows * k_cols];
+        let mut n = 0;
+        // j-outer, k-inner interleaved ordering keeps the half-bandwidth at
+        // ~2K + 2 (see DESIGN.md §Perf / solver.rs).
+        for j in 0..j_rows {
+            for k in 0..k_cols {
+                if k >= 1 {
+                    t_idx[j * k_cols + k] = Some(n);
+                    n += 1;
+                }
+                if j >= 1 {
+                    b_idx[j * k_cols + k] = Some(n);
+                    n += 1;
+                }
+            }
+        }
+        Self { k_cols, t_idx, b_idx, n_unknowns: n }
+    }
+
+    #[inline]
+    fn t(&self, j: usize, k: usize) -> Option<usize> {
+        self.t_idx[j * self.k_cols + k]
+    }
+
+    #[inline]
+    fn b(&self, j: usize, k: usize) -> Option<usize> {
+        self.b_idx[j * self.k_cols + k]
+    }
+}
+
+/// Solution of one crossbar solve.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Output current of each column, sensed at the `B[0,k]` ground.
+    pub col_currents: Vec<f64>,
+    /// Ideal (`r = 0`) output current of each column.
+    pub ideal_currents: Vec<f64>,
+}
+
+impl Solution {
+    /// Aggregate nonideality factor `|Σ Δi| / Σ i₀` (Eq. 1 over the tile).
+    pub fn nf(&self) -> f64 {
+        let i0: f64 = self.ideal_currents.iter().sum();
+        if i0 == 0.0 {
+            return 0.0;
+        }
+        let di: f64 = self
+            .col_currents
+            .iter()
+            .zip(&self.ideal_currents)
+            .map(|(i, i0)| i - i0)
+            .sum();
+        (di / i0).abs()
+    }
+
+    /// Per-column NF `|Δi_k / i₀_k|` (0 where the ideal current is 0).
+    pub fn nf_per_col(&self) -> Vec<f64> {
+        self.col_currents
+            .iter()
+            .zip(&self.ideal_currents)
+            .map(|(i, i0)| if *i0 == 0.0 { 0.0 } else { ((i - i0) / i0).abs() })
+            .collect()
+    }
+}
+
+/// A `J×K` crossbar circuit with per-cell device states.
+#[derive(Debug, Clone)]
+pub struct CrossbarCircuit {
+    j_rows: usize,
+    k_cols: usize,
+    physics: CrossbarPhysics,
+    /// Active (LRS) indicator per cell, row-major `[j * K + k]`.
+    active: Vec<bool>,
+}
+
+impl CrossbarCircuit {
+    /// New all-off crossbar.
+    pub fn new(j_rows: usize, k_cols: usize, physics: CrossbarPhysics) -> Result<Self> {
+        ensure!(j_rows >= 1 && k_cols >= 1, "crossbar must be at least 1x1");
+        ensure!(physics.r_wire > 0.0 && physics.r_on > 0.0, "resistances must be positive");
+        Ok(Self { j_rows, k_cols, physics, active: vec![false; j_rows * k_cols] })
+    }
+
+    /// Build from a binary plane tensor `[J, K]` (nonzero = active).
+    pub fn from_planes(planes: &Tensor, physics: CrossbarPhysics) -> Result<Self> {
+        ensure!(planes.ndim() == 2, "planes must be 2-D");
+        let mut c = Self::new(planes.rows(), planes.cols(), physics)?;
+        for j in 0..c.j_rows {
+            for k in 0..c.k_cols {
+                c.active[j * c.k_cols + k] = planes.at2(j, k) != 0.0;
+            }
+        }
+        Ok(c)
+    }
+
+    /// Rows `J`.
+    pub fn rows(&self) -> usize {
+        self.j_rows
+    }
+
+    /// Columns `K`.
+    pub fn cols(&self) -> usize {
+        self.k_cols
+    }
+
+    /// Set one device state.
+    pub fn set_active(&mut self, j: usize, k: usize, on: bool) {
+        self.active[j * self.k_cols + k] = on;
+    }
+
+    /// Device state.
+    pub fn is_active(&self, j: usize, k: usize) -> bool {
+        self.active[j * self.k_cols + k]
+    }
+
+    /// Number of active cells.
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Device conductance at `(j,k)`.
+    fn g_dev(&self, j: usize, k: usize) -> f64 {
+        if self.active[j * self.k_cols + k] {
+            1.0 / self.physics.r_on
+        } else if self.physics.r_off.is_finite() {
+            1.0 / self.physics.r_off
+        } else {
+            0.0
+        }
+    }
+
+    /// Ideal (`r = 0`) output current of each column: `i₀_k = V_in Σ_j g_jk`.
+    pub fn ideal_col_currents(&self) -> Vec<f64> {
+        (0..self.k_cols)
+            .map(|k| {
+                (0..self.j_rows).map(|j| self.g_dev(j, k)).sum::<f64>() * self.physics.v_in
+            })
+            .collect()
+    }
+
+    /// Assemble the SPD system `A·v = b` over the unknown node voltages.
+    fn assemble(&self) -> (NodeMap, BandedSpd, Vec<f64>) {
+        assemble_mesh(
+            self.j_rows,
+            self.k_cols,
+            |j, k| self.g_dev(j, k),
+            1.0 / self.physics.r_wire,
+            self.physics.v_in,
+        )
+    }
+
+    /// Recover per-column output currents from the solved node voltages.
+    fn currents_from_solution(&self, map: &NodeMap, v: &[f64]) -> Vec<f64> {
+        let gw = 1.0 / self.physics.r_wire;
+        let vin = self.physics.v_in;
+        let vt = |j: usize, k: usize| -> f64 {
+            match map.t(j, k) {
+                Some(i) => v[i],
+                None => vin,
+            }
+        };
+        let vb = |j: usize, k: usize| -> f64 {
+            match map.b(j, k) {
+                Some(i) => v[i],
+                None => 0.0,
+            }
+        };
+        (0..self.k_cols)
+            .map(|k| {
+                // Current into the B[0,k] ground: from the device at (0,k)
+                // plus the column-wire segment from B[1,k].
+                let mut i = self.g_dev(0, k) * (vt(0, k) - 0.0);
+                if self.j_rows >= 2 {
+                    i += gw * (vb(1, k) - 0.0);
+                }
+                i
+            })
+            .collect()
+    }
+
+    /// Solve the crossbar with the banded-Cholesky direct solver.
+    pub fn solve(&self) -> Result<Solution> {
+        let (map, a, rhs) = self.assemble();
+        let v = if map.n_unknowns == 0 {
+            Vec::new()
+        } else {
+            let f = a.cholesky().context("crossbar conductance matrix factorization")?;
+            f.solve(&rhs)
+        };
+        Ok(Solution {
+            col_currents: self.currents_from_solution(&map, &v),
+            ideal_currents: self.ideal_col_currents(),
+        })
+    }
+
+    /// Solve with Jacobi-preconditioned CG (cross-check / huge meshes).
+    pub fn solve_cg(&self, tol: f64) -> Result<Solution> {
+        let (map, a, rhs) = self.assemble();
+        let v = if map.n_unknowns == 0 {
+            Vec::new()
+        } else {
+            let n = map.n_unknowns;
+            let mut trip = Vec::new();
+            for i in 0..n {
+                for j in i.saturating_sub(a.bandwidth())..=(i + a.bandwidth()).min(n - 1) {
+                    let val = a.get(i, j);
+                    if val != 0.0 {
+                        trip.push((i, j, val));
+                    }
+                }
+            }
+            let csr = Csr::from_triplets(n, &trip);
+            conjugate_gradient(&csr, &rhs, tol, 200 * n)?.0
+        };
+        Ok(Solution {
+            col_currents: self.currents_from_solution(&map, &v),
+            ideal_currents: self.ideal_col_currents(),
+        })
+    }
+
+    /// Pre-factorized context for many single-device perturbations of this
+    /// crossbar (Sherman–Morrison fast path; see [`SingleToggleSolver`]).
+    pub fn factorize(&self) -> Result<SingleToggleSolver> {
+        let (map, a, rhs) = self.assemble();
+        ensure!(map.n_unknowns > 0, "degenerate 1x1 crossbar has no unknowns");
+        let factor = a.cholesky().context("base factorization")?;
+        let base_solution = factor.solve(&rhs);
+        Ok(SingleToggleSolver { circuit: self.clone(), map, factor, rhs, base_solution })
+    }
+}
+
+/// Generic mesh assembly over an arbitrary per-cell device-conductance
+/// function — shared by [`CrossbarCircuit`] (two-level devices) and the
+/// Monte-Carlo [`crate::variation`] path (per-cell varied resistances).
+fn assemble_mesh(
+    j_rows: usize,
+    k_cols: usize,
+    g_dev: impl Fn(usize, usize) -> f64,
+    gw: f64,
+    vin: f64,
+) -> (NodeMap, BandedSpd, Vec<f64>) {
+    let map = NodeMap::build(j_rows, k_cols);
+
+    // First pass: collect couplings to find the exact bandwidth.
+    // (Couplings are structural; the bound is ~2K + 2.)
+    let mut bw = 0usize;
+    let mut consider = |a: Option<usize>, b: Option<usize>| {
+        if let (Some(i), Some(j)) = (a, b) {
+            bw = bw.max(i.abs_diff(j));
+        }
+    };
+    for j in 0..j_rows {
+        for k in 0..k_cols {
+            if k + 1 < k_cols {
+                consider(map.t(j, k), map.t(j, k + 1));
+            }
+            if j + 1 < j_rows {
+                consider(map.b(j, k), map.b(j + 1, k));
+            }
+            consider(map.t(j, k), map.b(j, k));
+        }
+    }
+
+    let mut a = BandedSpd::zeros(map.n_unknowns, bw);
+    let mut rhs = vec![0.0; map.n_unknowns];
+
+    // Generic two-terminal conductance stamp between nodes with optional
+    // fixed voltages.
+    let mut stamp = |na: Option<usize>, va: f64, nb: Option<usize>, vb: f64, g: f64| {
+        if g == 0.0 {
+            return;
+        }
+        match (na, nb) {
+            (Some(i), Some(jn)) => {
+                a.add(i, i, g);
+                a.add(jn, jn, g);
+                a.add(i, jn, -g);
+            }
+            (Some(i), None) => {
+                a.add(i, i, g);
+                rhs[i] += g * vb;
+            }
+            (None, Some(jn)) => {
+                a.add(jn, jn, g);
+                rhs[jn] += g * va;
+            }
+            (None, None) => {}
+        }
+    };
+
+    for j in 0..j_rows {
+        for k in 0..k_cols {
+            // Row-wire segment to the right neighbor.
+            if k + 1 < k_cols {
+                stamp(map.t(j, k), vin, map.t(j, k + 1), vin, gw);
+            }
+            // Column-wire segment to the next row away from the sense rail.
+            if j + 1 < j_rows {
+                stamp(map.b(j, k), 0.0, map.b(j + 1, k), 0.0, gw);
+            }
+            // Device.
+            stamp(map.t(j, k), vin, map.b(j, k), 0.0, g_dev(j, k));
+        }
+    }
+    (map, a, rhs)
+}
+
+/// Solve a mesh whose per-cell resistances are given explicitly (the
+/// device-variation Monte-Carlo path) and return the aggregate NF against
+/// the varied-ideal (`r_wire -> 0`) currents.
+pub fn solve_varied_mesh(
+    j_rows: usize,
+    k_cols: usize,
+    r_cell: &[f64],
+    r_wire: f64,
+    vin: f64,
+) -> Result<f64> {
+    ensure!(r_cell.len() == j_rows * k_cols, "r_cell length mismatch");
+    let g = |j: usize, k: usize| -> f64 {
+        let r = r_cell[j * k_cols + k];
+        if r.is_finite() {
+            1.0 / r
+        } else {
+            0.0
+        }
+    };
+    let (map, a, rhs) = assemble_mesh(j_rows, k_cols, &g, 1.0 / r_wire, vin);
+    let v = if map.n_unknowns == 0 {
+        Vec::new()
+    } else {
+        a.cholesky().context("varied mesh factorization")?.solve(&rhs)
+    };
+    let gw = 1.0 / r_wire;
+    let vt = |j: usize, k: usize| -> f64 {
+        match map.t(j, k) {
+            Some(i) => v[i],
+            None => vin,
+        }
+    };
+    let vb = |j: usize, k: usize| -> f64 {
+        match map.b(j, k) {
+            Some(i) => v[i],
+            None => 0.0,
+        }
+    };
+    let mut di = 0.0f64;
+    let mut i0_total = 0.0f64;
+    for k in 0..k_cols {
+        let mut i = g(0, k) * vt(0, k);
+        if j_rows >= 2 {
+            i += gw * vb(1, k);
+        }
+        let i0: f64 = (0..j_rows).map(|j| g(j, k)).sum::<f64>() * vin;
+        di += i - i0;
+        i0_total += i0;
+    }
+    if i0_total == 0.0 {
+        return Ok(0.0);
+    }
+    Ok((di / i0_total).abs())
+}
+
+/// Sherman–Morrison solver: factor the all-base crossbar once, then evaluate
+/// single-device toggles with O(n·bw) triangular solves instead of a full
+/// refactorization. This is what makes the Fig. 2 heatmap (one solve per
+/// cell position) fast.
+pub struct SingleToggleSolver {
+    circuit: CrossbarCircuit,
+    map: NodeMap,
+    factor: BandedCholesky,
+    rhs: Vec<f64>,
+    base_solution: Vec<f64>,
+}
+
+impl SingleToggleSolver {
+    /// Solution with the device at `(j,k)` toggled to `on`, all other
+    /// devices in their base state.
+    pub fn solve_with_toggle(&self, j: usize, k: usize, on: bool) -> Result<Solution> {
+        let mut toggled = self.circuit.clone();
+        toggled.set_active(j, k, on);
+        let g_new = toggled.g_dev(j, k);
+        let g_old = self.circuit.g_dev(j, k);
+        let dg = g_new - g_old;
+        if dg == 0.0 {
+            return Ok(Solution {
+                col_currents: self.circuit.currents_from_solution(&self.map, &self.base_solution),
+                ideal_currents: self.circuit.ideal_col_currents(),
+            });
+        }
+        let vin = self.circuit.physics.v_in;
+        let n = self.rhs.len();
+        let ti = self.map.t(j, k);
+        let bi = self.map.b(j, k);
+
+        // Update vector u of the rank-1 change A' = A + dg·u·uᵀ, and the rhs
+        // change (nonzero when one endpoint is a fixed-voltage node).
+        let mut u = vec![0.0; n];
+        let mut b_new = self.rhs.clone();
+        match (ti, bi) {
+            (Some(t), Some(b)) => {
+                u[t] = 1.0;
+                u[b] = -1.0;
+            }
+            (None, Some(b)) => {
+                // T fixed at vin: diagonal bump at B and rhs change.
+                u[b] = 1.0;
+                b_new[b] += dg * vin;
+            }
+            (Some(t), None) => {
+                // B fixed at ground.
+                u[t] = 1.0;
+            }
+            (None, None) => {
+                // Both endpoints fixed: no system change, only the sensed
+                // current differs.
+                return Ok(Solution {
+                    col_currents: toggled.currents_from_solution(&self.map, &self.base_solution),
+                    ideal_currents: toggled.ideal_col_currents(),
+                });
+            }
+        }
+
+        let w = self.factor.solve(&u);
+        // x0 = A⁻¹ b'. b' differs from the base rhs only along u (scaled), so
+        // reuse the base solution plus one already-computed solve.
+        let x0: Vec<f64> = if b_new == self.rhs {
+            self.base_solution.clone()
+        } else {
+            // b' = b + dg·vin·e_B and u = e_B here, so A⁻¹b' = base + dg·vin·w.
+            self.base_solution.iter().zip(&w).map(|(x, wi)| x + dg * vin * wi).collect()
+        };
+        let utx0: f64 = u.iter().zip(&x0).map(|(a, b)| a * b).sum();
+        let utw: f64 = u.iter().zip(&w).map(|(a, b)| a * b).sum();
+        let denom = 1.0 + dg * utw;
+        ensure!(denom.abs() > 1e-300, "Sherman–Morrison breakdown");
+        let coef = dg * utx0 / denom;
+        let v: Vec<f64> = x0.iter().zip(&w).map(|(x, wi)| x - coef * wi).collect();
+
+        Ok(Solution {
+            col_currents: toggled.currents_from_solution(&self.map, &v),
+            ideal_currents: toggled.ideal_col_currents(),
+        })
+    }
+}
+
+/// NF of every single-cell position: `out[j][k]` = aggregate NF of the
+/// crossbar with only cell `(j,k)` active (others in `base` state, normally
+/// all off). This is the Fig. 2 experiment.
+pub fn single_cell_nf_map(
+    j_rows: usize,
+    k_cols: usize,
+    physics: CrossbarPhysics,
+) -> Result<Tensor> {
+    let base = CrossbarCircuit::new(j_rows, k_cols, physics)?;
+    let solver = base.factorize()?;
+    let mut out = vec![0.0f32; j_rows * k_cols];
+    for j in 0..j_rows {
+        for k in 0..k_cols {
+            let sol = solver.solve_with_toggle(j, k, true)?;
+            out[j * k_cols + k] = sol.nf() as f32;
+        }
+    }
+    Tensor::new(&[j_rows, k_cols], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phys() -> CrossbarPhysics {
+        CrossbarPhysics::default()
+    }
+
+    /// Physics with open (infinite) off devices — isolates PR from leakage.
+    fn phys_open() -> CrossbarPhysics {
+        CrossbarPhysics { r_off: f64::INFINITY, ..CrossbarPhysics::default() }
+    }
+
+    #[test]
+    fn single_cell_at_corner_has_zero_nf() {
+        // Cell (0,0) touches both rails directly: no parasitic path.
+        let mut c = CrossbarCircuit::new(4, 4, phys_open()).unwrap();
+        c.set_active(0, 0, true);
+        let s = c.solve().unwrap();
+        assert!(s.nf() < 1e-12, "nf = {}", s.nf());
+        let i = s.col_currents[0];
+        let i0 = phys().v_in / phys().r_on;
+        assert!((i - i0).abs() / i0 < 1e-12);
+    }
+
+    #[test]
+    fn single_cell_nf_matches_first_order_formula() {
+        // Eq. 14: NF ≈ ℓ r / R_on for one active cell ℓ segments out.
+        let p = phys_open();
+        for (j, k) in [(0usize, 3usize), (3, 0), (2, 2), (3, 3)] {
+            let mut c = CrossbarCircuit::new(4, 4, p).unwrap();
+            c.set_active(j, k, true);
+            let s = c.solve().unwrap();
+            let expect = (j + k) as f64 * p.parasitic_ratio();
+            let got = s.nf();
+            // First-order approximation; r/R_on ~ 1e-5 so it is very tight.
+            assert!(
+                (got - expect).abs() <= expect * 1e-3 + 1e-12,
+                "cell ({j},{k}): got {got}, expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn anti_diagonal_symmetry() {
+        // The Manhattan Hypothesis implies NF(j,k) == NF(k,j) for square
+        // crossbars (Fig. 2's anti-diagonal symmetry).
+        let map = single_cell_nf_map(6, 6, phys_open()).unwrap();
+        for j in 0..6 {
+            for k in 0..6 {
+                let a = map.at2(j, k) as f64;
+                let b = map.at2(k, j) as f64;
+                assert!(
+                    (a - b).abs() <= 1e-9 + a.abs() * 1e-6,
+                    "asymmetry at ({j},{k}): {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nf_monotone_in_manhattan_distance() {
+        let map = single_cell_nf_map(5, 5, phys_open()).unwrap();
+        // Along the diagonal, NF strictly increases with distance.
+        for d in 1..5 {
+            assert!(
+                map.at2(d, d) > map.at2(d - 1, d - 1),
+                "NF not increasing at d = {d}"
+            );
+        }
+    }
+
+    #[test]
+    fn sherman_morrison_matches_full_solve() {
+        let p = phys();
+        let mut base = CrossbarCircuit::new(8, 8, p).unwrap();
+        // Non-trivial base pattern.
+        for (j, k) in [(1, 2), (3, 3), (7, 0), (5, 6)] {
+            base.set_active(j, k, true);
+        }
+        let solver = base.factorize().unwrap();
+        for (j, k) in [(0usize, 0usize), (0, 5), (4, 0), (6, 7), (3, 3)] {
+            let fast = solver.solve_with_toggle(j, k, !base.is_active(j, k)).unwrap();
+            let mut slow_c = base.clone();
+            slow_c.set_active(j, k, !base.is_active(j, k));
+            let slow = slow_c.solve().unwrap();
+            for (a, b) in fast.col_currents.iter().zip(&slow.col_currents) {
+                assert!((a - b).abs() <= 1e-12 + a.abs() * 1e-9, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn cg_agrees_with_cholesky() {
+        let mut c = CrossbarCircuit::new(6, 6, phys()).unwrap();
+        for (j, k) in [(0, 1), (2, 3), (5, 5), (4, 0), (1, 4)] {
+            c.set_active(j, k, true);
+        }
+        let a = c.solve().unwrap();
+        let b = c.solve_cg(1e-13).unwrap();
+        for (x, y) in a.col_currents.iter().zip(&b.col_currents) {
+            assert!((x - y).abs() <= 1e-10 + x.abs() * 1e-7, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn denser_crossbar_higher_nf() {
+        // More active cells farther out => larger aggregate NF.
+        let p = phys_open();
+        let mut sparse = CrossbarCircuit::new(8, 8, p).unwrap();
+        sparse.set_active(1, 1, true);
+        let mut dense = CrossbarCircuit::new(8, 8, p).unwrap();
+        for j in 0..8 {
+            for k in 0..8 {
+                dense.set_active(j, k, true);
+            }
+        }
+        assert!(dense.solve().unwrap().nf() > sparse.solve().unwrap().nf());
+    }
+
+    #[test]
+    fn from_planes_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1., 0., 1., 0., 1., 0.]).unwrap();
+        let c = CrossbarCircuit::from_planes(&t, phys()).unwrap();
+        assert!(c.is_active(0, 0));
+        assert!(!c.is_active(0, 1));
+        assert!(c.is_active(1, 1));
+        assert_eq!(c.active_count(), 3);
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        // 1xK and Jx1 crossbars must still solve.
+        let mut c = CrossbarCircuit::new(1, 4, phys_open()).unwrap();
+        c.set_active(0, 3, true);
+        let s = c.solve().unwrap();
+        let expect = 3.0 * phys().parasitic_ratio();
+        assert!((s.nf() - expect).abs() < expect * 1e-3 + 1e-12);
+
+        let mut c = CrossbarCircuit::new(4, 1, phys_open()).unwrap();
+        c.set_active(3, 0, true);
+        let s = c.solve().unwrap();
+        let expect = 3.0 * phys().parasitic_ratio();
+        assert!((s.nf() - expect).abs() < expect * 1e-3 + 1e-12);
+    }
+
+    #[test]
+    fn all_off_with_finite_roff_has_leakage_currents() {
+        let c = CrossbarCircuit::new(4, 4, phys()).unwrap();
+        let s = c.solve().unwrap();
+        // Off devices still conduct: ideal per-column current = J·Vin/Roff.
+        let expect = 4.0 * 1.0 / 3e6;
+        for &i0 in &s.ideal_currents {
+            assert!((i0 - expect).abs() < 1e-12);
+        }
+        // Currents positive, NF small but nonzero.
+        assert!(s.col_currents.iter().all(|&i| i > 0.0));
+        assert!(s.nf() > 0.0 && s.nf() < 1e-2);
+    }
+}

@@ -1,0 +1,95 @@
+//! SPICE netlist export.
+//!
+//! Our solver computes the exact DC operating point of the crossbar R-mesh;
+//! this module writes the equivalent SPICE deck (`.cir`) so the numbers can
+//! be verified with ngspice/LTspice (`.op` analysis, column currents through
+//! the zero-volt sense sources `Vsense_k`).
+
+use super::CrossbarCircuit;
+use crate::CrossbarPhysics;
+use std::fmt::Write as _;
+
+/// Render the crossbar as a SPICE deck.
+///
+/// Node naming: `t_{j}_{k}` (row wires), `b_{j}_{k}` (column wires),
+/// `in_{j}` (row drivers), ground `0`. Column currents are measured through
+/// 0 V sources `Vsense{k}` between `b_{0}_{k}` and ground, matching the
+/// virtual-ground sense model of the solver.
+pub fn to_spice(c: &CrossbarCircuit, physics: &CrossbarPhysics) -> String {
+    let (j_rows, k_cols) = (c.rows(), c.cols());
+    let mut s = String::new();
+    let _ = writeln!(s, "* mdm-cim crossbar {j_rows}x{k_cols}");
+    let _ = writeln!(
+        s,
+        "* r_wire={} R_on={} R_off={} V_in={}",
+        physics.r_wire, physics.r_on, physics.r_off, physics.v_in
+    );
+    // Row drivers: ideal sources at the input rail, directly on t_{j}_0.
+    for j in 0..j_rows {
+        let _ = writeln!(s, "Vin{j} t_{j}_0 0 DC {}", physics.v_in);
+    }
+    // Row-wire segments.
+    for j in 0..j_rows {
+        for k in 0..k_cols.saturating_sub(1) {
+            let k1 = k + 1;
+            let _ = writeln!(s, "Rrow_{j}_{k} t_{j}_{k} t_{j}_{k1} {}", physics.r_wire);
+        }
+    }
+    // Column-wire segments.
+    for k in 0..k_cols {
+        for j in 0..j_rows.saturating_sub(1) {
+            let j1 = j + 1;
+            let _ = writeln!(s, "Rcol_{j}_{k} b_{j}_{k} b_{j1}_{k} {}", physics.r_wire);
+        }
+    }
+    // Sense sources (0 V) at the output rail.
+    for k in 0..k_cols {
+        let _ = writeln!(s, "Vsense{k} b_0_{k} 0 DC 0");
+    }
+    // Devices.
+    for j in 0..j_rows {
+        for k in 0..k_cols {
+            let r = if c.is_active(j, k) { physics.r_on } else { physics.r_off };
+            if r.is_finite() {
+                let _ = writeln!(s, "Rdev_{j}_{k} t_{j}_{k} b_{j}_{k} {r}");
+            } else {
+                let _ = writeln!(s, "* Rdev_{j}_{k} open (R_off = inf)");
+            }
+        }
+    }
+    let _ = writeln!(s, ".op");
+    let _ = writeln!(s, ".end");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn netlist_has_expected_components() {
+        let p = CrossbarPhysics::default();
+        let mut c = CrossbarCircuit::new(3, 4, p).unwrap();
+        c.set_active(1, 2, true);
+        let deck = to_spice(&c, &p);
+        // 3 drivers, 4 sense sources.
+        assert_eq!(deck.matches("Vin").count(), 3);
+        assert_eq!(deck.matches("Vsense").count(), 4);
+        // Row segments: 3*(4-1) = 9; column segments: 4*(3-1) = 8.
+        assert_eq!(deck.matches("Rrow_").count(), 9);
+        assert_eq!(deck.matches("Rcol_").count(), 8);
+        // One device per crosspoint.
+        assert_eq!(deck.matches("Rdev_").count(), 12);
+        // Active device uses R_on.
+        assert!(deck.contains("Rdev_1_2 t_1_2 b_1_2 300000"));
+        assert!(deck.ends_with(".end\n"));
+    }
+
+    #[test]
+    fn infinite_roff_renders_open() {
+        let p = CrossbarPhysics { r_off: f64::INFINITY, ..Default::default() };
+        let c = CrossbarCircuit::new(2, 2, p).unwrap();
+        let deck = to_spice(&c, &p);
+        assert!(deck.contains("open (R_off = inf)"));
+    }
+}

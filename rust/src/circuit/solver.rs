@@ -1,0 +1,434 @@
+//! Linear solvers for the crossbar conductance system.
+//!
+//! The nodal-analysis matrix of a resistive mesh is symmetric positive
+//! definite, so we use:
+//!
+//! * [`BandedSpd`] + banded **Cholesky** — the exact direct solver used on
+//!   the hot path (node ordering in `mesh.rs` keeps the half-bandwidth at
+//!   `2·K + 2` for a `J×K` crossbar);
+//! * [`Csr`] + Jacobi-preconditioned **conjugate gradient** — an independent
+//!   iterative solver used to cross-check the direct factorization in tests
+//!   and for very large meshes where the band cost dominates.
+
+use anyhow::{bail, ensure, Result};
+
+/// Symmetric positive-definite matrix stored in lower-band layout:
+/// `band[j·(bw+1) + r] = A[j + r, j]` for `r = 0..=bw`, `j + r < n`.
+///
+/// The storage is **column-major per band column**: each matrix column's
+/// sub-diagonal band is contiguous, which makes the right-looking Cholesky
+/// factorization and both triangular solves stream linearly through memory
+/// (the original row-band layout cost ~6× in cache misses — see
+/// EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct BandedSpd {
+    n: usize,
+    bw: usize,
+    /// `n × (bw + 1)` column-band storage.
+    band: Vec<f64>,
+}
+
+impl BandedSpd {
+    /// Zero matrix with dimension `n` and half-bandwidth `bw`.
+    pub fn zeros(n: usize, bw: usize) -> Self {
+        Self { n, bw, band: vec![0.0; (bw + 1) * n] }
+    }
+
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Half-bandwidth.
+    pub fn bandwidth(&self) -> usize {
+        self.bw
+    }
+
+    #[inline]
+    fn idx(&self, r: usize, j: usize) -> usize {
+        j * (self.bw + 1) + r
+    }
+
+    /// Add `v` to `A[i, j]` (and symmetrically `A[j, i]`). Panics if the
+    /// entry falls outside the band.
+    #[inline]
+    pub fn add(&mut self, i: usize, j: usize, v: f64) {
+        let (hi, lo) = if i >= j { (i, j) } else { (j, i) };
+        let r = hi - lo;
+        assert!(r <= self.bw, "entry ({i},{j}) outside bandwidth {}", self.bw);
+        let k = self.idx(r, lo);
+        self.band[k] += v;
+    }
+
+    /// Read `A[i, j]` (0 outside the band).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (hi, lo) = if i >= j { (i, j) } else { (j, i) };
+        let r = hi - lo;
+        if r > self.bw {
+            return 0.0;
+        }
+        self.band[self.idx(r, lo)]
+    }
+
+    /// Dense matvec `y = A·x` (test helper; O(n·bw)).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0; self.n];
+        for i in 0..self.n {
+            y[i] += self.band[self.idx(0, i)] * x[i];
+            let rmax = self.bw.min(self.n - 1 - i);
+            for r in 1..=rmax {
+                let a = self.band[self.idx(r, i)];
+                if a != 0.0 {
+                    y[i + r] += a * x[i];
+                    y[i] += a * x[i + r];
+                }
+            }
+        }
+        y
+    }
+
+    /// In-place banded Cholesky factorization `A = L·Lᵀ` (right-looking /
+    /// outer-product form: after scaling column `j`, its rank-1 update is
+    /// pushed into the trailing band columns with contiguous inner loops).
+    ///
+    /// Returns the factor; fails if the matrix is not positive definite
+    /// (which for a conductance matrix indicates a floating node).
+    pub fn cholesky(mut self) -> Result<BandedCholesky> {
+        let (n, bw) = (self.n, self.bw);
+        let w = bw + 1;
+        let band = &mut self.band;
+        for j in 0..n {
+            let cj = j * w;
+            let d = band[cj];
+            if d <= 0.0 || !d.is_finite() {
+                bail!("matrix not positive definite at column {j} (d = {d})");
+            }
+            let dj = d.sqrt();
+            band[cj] = dj;
+            let m = bw.min(n - 1 - j);
+            let inv = 1.0 / dj;
+            for r in 1..=m {
+                band[cj + r] *= inv;
+            }
+            // Rank-1 trailing update: A[j+c .. j+m, j+c] -= L[j+c,j] * L[..,j].
+            for c in 1..=m {
+                let l_c = band[cj + c];
+                if l_c != 0.0 {
+                    let ct = (j + c) * w;
+                    // split_at_mut to borrow source (col j) and dest (col j+c).
+                    let (src_part, dst_part) = band.split_at_mut(ct);
+                    let src = &src_part[cj + c..cj + m + 1];
+                    let dst = &mut dst_part[..m - c + 1];
+                    for (dv, sv) in dst.iter_mut().zip(src.iter()) {
+                        *dv -= l_c * sv;
+                    }
+                }
+            }
+        }
+        Ok(BandedCholesky { n, bw, band: self.band })
+    }
+}
+
+/// A banded Cholesky factor `L` (same band layout as [`BandedSpd`]).
+#[derive(Debug, Clone)]
+pub struct BandedCholesky {
+    n: usize,
+    bw: usize,
+    band: Vec<f64>,
+}
+
+impl BandedCholesky {
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Solve `A·x = b` via forward + backward substitution. Both passes
+    /// stream each band column contiguously.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        let (n, bw) = (self.n, self.bw);
+        let w = bw + 1;
+        // Forward: L y = b. With a sparse rhs (the Sherman–Morrison update
+        // vectors are 1–2 nonzeros) y stays zero before the first nonzero,
+        // so start there.
+        let mut y = b.to_vec();
+        let start = y.iter().position(|&v| v != 0.0).unwrap_or(n);
+        for j in start..n {
+            let cj = j * w;
+            let yj = y[j] / self.band[cj];
+            y[j] = yj;
+            if yj != 0.0 {
+                let m = bw.min(n - 1 - j);
+                let col = &self.band[cj + 1..cj + m + 1];
+                let dst = &mut y[j + 1..j + m + 1];
+                for (dv, lv) in dst.iter_mut().zip(col.iter()) {
+                    *dv -= lv * yj;
+                }
+            }
+        }
+        // Backward: L^T x = y.
+        let mut x = y;
+        for j in (0..n).rev() {
+            let cj = j * w;
+            let m = bw.min(n - 1 - j);
+            let mut s = x[j];
+            let col = &self.band[cj + 1..cj + m + 1];
+            let xs = &x[j + 1..j + m + 1];
+            for (lv, xv) in col.iter().zip(xs.iter()) {
+                s -= lv * xv;
+            }
+            x[j] = s / self.band[cj];
+        }
+        x
+    }
+}
+
+/// Compressed-sparse-row symmetric matrix (full storage) for the CG solver.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    n: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from (i, j, v) triplets; duplicate entries are summed and the
+    /// matrix is assumed to already contain both (i,j) and (j,i) or be
+    /// assembled symmetrically by the caller.
+    pub fn from_triplets(n: usize, triplets: &[(usize, usize, f64)]) -> Self {
+        let mut counts = vec![0usize; n + 1];
+        for &(i, _, _) in triplets {
+            counts[i + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let mut col_idx = vec![0usize; triplets.len()];
+        let mut vals = vec![0.0; triplets.len()];
+        let mut cursor = counts.clone();
+        for &(i, j, v) in triplets {
+            let p = cursor[i];
+            col_idx[p] = j;
+            vals[p] = v;
+            cursor[i] += 1;
+        }
+        // Merge duplicates within each row.
+        let mut new_ptr = vec![0usize; n + 1];
+        let mut new_cols = Vec::with_capacity(col_idx.len());
+        let mut new_vals = Vec::with_capacity(vals.len());
+        for i in 0..n {
+            let lo = counts[i];
+            let hi = counts[i + 1];
+            let mut entries: Vec<(usize, f64)> =
+                col_idx[lo..hi].iter().cloned().zip(vals[lo..hi].iter().cloned()).collect();
+            entries.sort_by_key(|e| e.0);
+            let mut merged: Vec<(usize, f64)> = Vec::with_capacity(entries.len());
+            for (c, v) in entries {
+                if let Some(last) = merged.last_mut() {
+                    if last.0 == c {
+                        last.1 += v;
+                        continue;
+                    }
+                }
+                merged.push((c, v));
+            }
+            for (c, v) in merged {
+                new_cols.push(c);
+                new_vals.push(v);
+            }
+            new_ptr[i + 1] = new_cols.len();
+        }
+        Self { n, row_ptr: new_ptr, col_idx: new_cols, vals: new_vals }
+    }
+
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// `y = A·x`.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        for i in 0..self.n {
+            let mut s = 0.0;
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                s += self.vals[p] * x[self.col_idx[p]];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// Diagonal entries (for the Jacobi preconditioner).
+    pub fn diagonal(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.n];
+        for i in 0..self.n {
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                if self.col_idx[p] == i {
+                    d[i] = self.vals[p];
+                }
+            }
+        }
+        d
+    }
+}
+
+/// Jacobi-preconditioned conjugate gradient. Returns `(x, iterations)`.
+pub fn conjugate_gradient(
+    a: &Csr,
+    b: &[f64],
+    tol: f64,
+    max_iter: usize,
+) -> Result<(Vec<f64>, usize)> {
+    ensure!(b.len() == a.n(), "rhs length mismatch");
+    let n = a.n();
+    let diag = a.diagonal();
+    let minv: Vec<f64> =
+        diag.iter().map(|&d| if d != 0.0 { 1.0 / d } else { 0.0 }).collect();
+    let bnorm = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if bnorm == 0.0 {
+        return Ok((vec![0.0; n], 0));
+    }
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut z: Vec<f64> = r.iter().zip(&minv).map(|(ri, mi)| ri * mi).collect();
+    let mut p = z.clone();
+    let mut rz: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+    let mut ap = vec![0.0; n];
+    for it in 0..max_iter {
+        a.matvec(&p, &mut ap);
+        let pap: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        if pap <= 0.0 {
+            bail!("CG breakdown: p^T A p = {pap} (matrix not SPD?)");
+        }
+        let alpha = rz / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rnorm = r.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if rnorm <= tol * bnorm {
+            return Ok((x, it + 1));
+        }
+        for i in 0..n {
+            z[i] = r[i] * minv[i];
+        }
+        let rz_new: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    bail!("CG did not converge in {max_iter} iterations")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    /// Random SPD banded matrix: diagonally dominant.
+    fn random_banded(n: usize, bw: usize, seed: u64) -> BandedSpd {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut a = BandedSpd::zeros(n, bw);
+        for i in 0..n {
+            for r in 1..=bw.min(n - 1 - i) {
+                let v = rng.uniform_range(-1.0, 1.0);
+                a.add(i, i + r, v);
+            }
+        }
+        // Make diagonally dominant => SPD.
+        for i in 0..n {
+            let mut rowsum = 0.0;
+            for j in 0..n {
+                if j != i {
+                    rowsum += a.get(i, j).abs();
+                }
+            }
+            a.add(i, i, rowsum + 1.0);
+        }
+        a
+    }
+
+    #[test]
+    fn banded_add_get_symmetric() {
+        let mut a = BandedSpd::zeros(5, 2);
+        a.add(1, 3, 2.5);
+        assert_eq!(a.get(1, 3), 2.5);
+        assert_eq!(a.get(3, 1), 2.5);
+        assert_eq!(a.get(0, 4), 0.0); // outside band reads zero
+    }
+
+    #[test]
+    #[should_panic]
+    fn banded_add_outside_band_panics() {
+        let mut a = BandedSpd::zeros(5, 1);
+        a.add(0, 3, 1.0);
+    }
+
+    #[test]
+    fn cholesky_solves_random_systems() {
+        for (n, bw, seed) in [(8, 2, 1u64), (40, 5, 2), (100, 13, 3)] {
+            let a = random_banded(n, bw, seed);
+            let mut rng = Xoshiro256::seeded(seed + 100);
+            let xtrue: Vec<f64> = (0..n).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+            let b = a.matvec(&xtrue);
+            let f = a.clone().cholesky().unwrap();
+            let x = f.solve(&b);
+            for (xi, ti) in x.iter().zip(&xtrue) {
+                assert!((xi - ti).abs() < 1e-9, "{xi} vs {ti}");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = BandedSpd::zeros(2, 1);
+        a.add(0, 0, 1.0);
+        a.add(1, 1, -1.0);
+        assert!(a.cholesky().is_err());
+    }
+
+    #[test]
+    fn cg_matches_cholesky() {
+        let a = random_banded(60, 4, 7);
+        let mut rng = Xoshiro256::seeded(8);
+        let b: Vec<f64> = (0..60).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let xd = a.clone().cholesky().unwrap().solve(&b);
+        // Build CSR from the banded matrix.
+        let mut trip = Vec::new();
+        for i in 0..60 {
+            for j in 0..60 {
+                let v = a.get(i, j);
+                if v != 0.0 {
+                    trip.push((i, j, v));
+                }
+            }
+        }
+        let csr = Csr::from_triplets(60, &trip);
+        let (xi, iters) = conjugate_gradient(&csr, &b, 1e-12, 10_000).unwrap();
+        assert!(iters > 0);
+        for (a, b) in xd.iter().zip(&xi) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cg_zero_rhs() {
+        let csr = Csr::from_triplets(3, &[(0, 0, 1.0), (1, 1, 1.0), (2, 2, 1.0)]);
+        let (x, iters) = conjugate_gradient(&csr, &[0.0; 3], 1e-12, 10).unwrap();
+        assert_eq!(iters, 0);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn csr_merges_duplicates() {
+        let csr = Csr::from_triplets(2, &[(0, 0, 1.0), (0, 0, 2.0), (1, 1, 1.0)]);
+        let mut y = vec![0.0; 2];
+        csr.matvec(&[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 1.0]);
+        assert_eq!(csr.diagonal(), vec![3.0, 1.0]);
+    }
+}

@@ -1,0 +1,299 @@
+//! Configuration system: a minimal TOML-subset parser plus the typed
+//! experiment/server configurations (no `serde`/`toml` offline —
+//! DESIGN.md §5).
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! (`"..."`), integer, float, and boolean values, `#` comments, blank
+//! lines. This covers every config file the repo ships.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    /// As a string.
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    /// As an integer (accepts Int only).
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    /// As a float (accepts Int or Float).
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    /// As a bool.
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// Parsed config: `section.key -> value`; top-level keys use section `""`.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<(String, String), Value>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: malformed section header {raw:?}", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got {raw:?}", lineno + 1);
+            };
+            let key = key.trim().to_string();
+            let val = parse_value(val.trim())
+                .with_context(|| format!("line {}: value for {key:?}", lineno + 1))?;
+            values.insert((section.clone(), key), val);
+        }
+        Ok(Self { values })
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Fetch a value (`section` may be `""` for top level).
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// String with default.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str().ok().map(str::to_string))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Integer with default.
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int().ok()).unwrap_or(default)
+    }
+
+    /// Float with default.
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_float().ok()).unwrap_or(default)
+    }
+
+    /// Bool with default.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string {s:?}");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Typed experiment configuration (defaults = the paper's operating point).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Tile rows/cols (square tiles).
+    pub tile_size: usize,
+    /// Fractional bits per weight.
+    pub k_bits: usize,
+    /// Signed Eq.-17 noise coefficient.
+    pub eta_signed: f64,
+    /// Seed for all randomized pieces.
+    pub seed: u64,
+    /// Output directory for CSVs.
+    pub results_dir: String,
+    /// Artifacts directory (HLO + weights).
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            tile_size: 64,
+            k_bits: 8,
+            eta_signed: -2e-3,
+            seed: 42,
+            results_dir: "results".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Build from a parsed [`Config`] (`[experiment]` section), falling back
+    /// to defaults.
+    pub fn from_config(c: &Config) -> Self {
+        let d = Self::default();
+        Self {
+            tile_size: c.int_or("experiment", "tile_size", d.tile_size as i64) as usize,
+            k_bits: c.int_or("experiment", "k_bits", d.k_bits as i64) as usize,
+            eta_signed: c.float_or("experiment", "eta_signed", d.eta_signed),
+            seed: c.int_or("experiment", "seed", d.seed as i64) as u64,
+            results_dir: c.str_or("experiment", "results_dir", &d.results_dir),
+            artifacts_dir: c.str_or("experiment", "artifacts_dir", &d.artifacts_dir),
+        }
+    }
+}
+
+/// Typed server (coordinator) configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Number of crossbar-unit worker threads.
+    pub workers: usize,
+    /// Maximum dynamic batch size.
+    pub max_batch: usize,
+    /// Batching window in microseconds.
+    pub batch_window_us: u64,
+    /// Bounded queue depth (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { workers: 4, max_batch: 16, batch_window_us: 200, queue_depth: 256 }
+    }
+}
+
+impl ServerConfig {
+    /// Build from `[server]` section with defaults.
+    pub fn from_config(c: &Config) -> Self {
+        let d = Self::default();
+        Self {
+            workers: c.int_or("server", "workers", d.workers as i64) as usize,
+            max_batch: c.int_or("server", "max_batch", d.max_batch as i64) as usize,
+            batch_window_us: c.int_or("server", "batch_window_us", d.batch_window_us as i64)
+                as u64,
+            queue_depth: c.int_or("server", "queue_depth", d.queue_depth as i64) as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(
+            r#"
+# top-level
+name = "mdm"   # trailing comment
+[experiment]
+tile_size = 128
+eta_signed = -0.002
+verbose = true
+label = "a # not a comment"
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.get("", "name").unwrap().as_str().unwrap(), "mdm");
+        assert_eq!(c.int_or("experiment", "tile_size", 0), 128);
+        assert!((c.float_or("experiment", "eta_signed", 0.0) + 0.002).abs() < 1e-12);
+        assert!(c.bool_or("experiment", "verbose", false));
+        assert_eq!(
+            c.get("experiment", "label").unwrap().as_str().unwrap(),
+            "a # not a comment"
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = \"unterminated").is_err());
+        assert!(Config::parse("x = what").is_err());
+    }
+
+    #[test]
+    fn int_usable_as_float_but_not_reverse() {
+        let c = Config::parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(c.get("", "a").unwrap().as_float().unwrap(), 3.0);
+        assert!(c.get("", "b").unwrap().as_int().is_err());
+    }
+
+    #[test]
+    fn experiment_defaults_match_paper() {
+        let e = ExperimentConfig::default();
+        assert_eq!(e.tile_size, 64);
+        assert_eq!(e.k_bits, 8);
+        assert!((e.eta_signed + 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn typed_configs_from_text() {
+        let c = Config::parse("[experiment]\ntile_size = 32\n[server]\nworkers = 8").unwrap();
+        assert_eq!(ExperimentConfig::from_config(&c).tile_size, 32);
+        assert_eq!(ServerConfig::from_config(&c).workers, 8);
+        // Unspecified keys fall back.
+        assert_eq!(ServerConfig::from_config(&c).max_batch, 16);
+    }
+}

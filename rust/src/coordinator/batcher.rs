@@ -1,0 +1,130 @@
+//! Dynamic batching: coalesce queued requests into worker batches.
+//!
+//! The batcher drains the bounded request queue, packing requests until
+//! either `max_batch` input rows are collected or `batch_window_us` has
+//! elapsed since the first request of the batch — the standard
+//! serving-system latency/throughput knob (vLLM-style continuous batching
+//! degenerates to this under our per-request row granularity).
+
+use super::InferenceRequest;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// A batch of requests plus their row extents.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<InferenceRequest>,
+    /// Total rows across the requests.
+    pub rows: usize,
+}
+
+/// Collect the next batch from `rx`.
+///
+/// Blocks for the first request (or returns `None` when the channel is
+/// closed and drained), then keeps packing until `max_rows` or the window
+/// closes.
+pub fn next_batch(
+    rx: &mpsc::Receiver<InferenceRequest>,
+    max_rows: usize,
+    window: Duration,
+) -> Option<Batch> {
+    let first = rx.recv().ok()?;
+    let mut rows = first.x.rows();
+    let mut requests = vec![first];
+    let deadline = Instant::now() + window;
+    while rows < max_rows {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => {
+                rows += req.x.rows();
+                requests.push(req);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => break,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(Batch { requests, rows })
+}
+
+/// Concatenate the requests' inputs into one `[rows, f]` tensor.
+pub fn concat_inputs(batch: &Batch) -> crate::tensor::Tensor {
+    let f = batch.requests[0].x.cols();
+    let mut data = Vec::with_capacity(batch.rows * f);
+    for req in &batch.requests {
+        data.extend_from_slice(req.x.data());
+    }
+    crate::tensor::Tensor::new(&[batch.rows, f], data).expect("consistent rows")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use std::time::Instant;
+
+    fn req(id: u64, rows: usize) -> (InferenceRequest, mpsc::Receiver<super::super::InferenceResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            InferenceRequest {
+                id,
+                x: Tensor::full(&[rows, 4], id as f32),
+                submitted: Instant::now(),
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_up_to_max_rows() {
+        let (tx, rx) = mpsc::channel();
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, h) = req(i, 2);
+            tx.send(r).unwrap();
+            keep.push(h);
+        }
+        let b = next_batch(&rx, 6, Duration::from_millis(50)).unwrap();
+        assert_eq!(b.requests.len(), 3);
+        assert_eq!(b.rows, 6);
+        // Remaining two still queued.
+        let b2 = next_batch(&rx, 6, Duration::from_millis(1)).unwrap();
+        assert_eq!(b2.rows, 4);
+    }
+
+    #[test]
+    fn window_closes_batch() {
+        let (tx, rx) = mpsc::channel();
+        let (r, _h) = req(1, 1);
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        let b = next_batch(&rx, 100, Duration::from_millis(20)).unwrap();
+        assert_eq!(b.rows, 1);
+        assert!(t0.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn closed_empty_channel_returns_none() {
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        drop(tx);
+        assert!(next_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn concat_preserves_order() {
+        let (tx, rx) = mpsc::channel();
+        let (r1, _h1) = req(7, 1);
+        let (r2, _h2) = req(9, 2);
+        tx.send(r1).unwrap();
+        tx.send(r2).unwrap();
+        let b = next_batch(&rx, 10, Duration::from_millis(5)).unwrap();
+        let x = concat_inputs(&b);
+        assert_eq!(x.shape(), &[3, 4]);
+        assert_eq!(x.at2(0, 0), 7.0);
+        assert_eq!(x.at2(1, 0), 9.0);
+        assert_eq!(x.at2(2, 0), 9.0);
+    }
+}

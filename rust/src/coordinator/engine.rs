@@ -1,0 +1,225 @@
+//! Per-worker inference engine: one simulated crossbar accelerator.
+//!
+//! At construction the engine "programs its crossbars": it loads the
+//! trained weights, sign-splits and tiles every layer, builds the mapping
+//! plan (conventional / MDM / ...), applies the Eq.-17 PR distortion to get
+//! the effective weight matrices, and compiles the model's AOT forward
+//! graph on its own PJRT runtime. Serving then feeds activations through
+//! the compiled graph with the distorted weights as inputs — the L1 Pallas
+//! kernel does the per-layer matmuls inside the HLO.
+
+use crate::crossbar::{CostModel, LayerTiling, TileCost, TileGeometry};
+use crate::mdm::MappingConfig;
+use crate::noise::distorted_weights;
+use crate::quant::SignSplit;
+use crate::runtime::{ArtifactStore, CompiledModule};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+
+/// Which trained model the engine serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    MiniResNet,
+    TinyViT,
+}
+
+impl ModelKind {
+    /// Manifest name of the forward graph.
+    pub fn fwd_artifact(&self) -> &'static str {
+        match self {
+            ModelKind::MiniResNet => "miniresnet_fwd",
+            ModelKind::TinyViT => "tinyvit_fwd",
+        }
+    }
+
+    /// Weights file under `artifacts/weights/`.
+    pub fn weights_name(&self) -> &'static str {
+        match self {
+            ModelKind::MiniResNet => "miniresnet",
+            ModelKind::TinyViT => "tinyvit",
+        }
+    }
+
+    /// Zoo model name (layer descriptors).
+    pub fn zoo_name(&self) -> &'static str {
+        self.weights_name()
+    }
+
+    /// Parse from CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "miniresnet" => Ok(ModelKind::MiniResNet),
+            "tinyvit" => Ok(ModelKind::TinyViT),
+            other => anyhow::bail!("unknown trained model {other:?} (miniresnet|tinyvit)"),
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub model: ModelKind,
+    pub mapping: MappingConfig,
+    /// Signed Eq.-17 coefficient; 0.0 = ideal (no distortion).
+    pub eta_signed: f64,
+    pub geometry: TileGeometry,
+    /// AOT forward batch (the graph's fixed leading dimension).
+    pub fwd_batch: usize,
+}
+
+impl EngineConfig {
+    /// Ideal (distortion-free) configuration.
+    pub fn ideal(model: ModelKind) -> Self {
+        Self {
+            model,
+            mapping: MappingConfig::conventional(),
+            eta_signed: 0.0,
+            geometry: TileGeometry::paper_eval(),
+            fwd_batch: 16,
+        }
+    }
+}
+
+/// Compute the effective (distorted, quantized) weight matrix of one signed
+/// layer under a mapping config — the "programmed crossbar" contents.
+///
+/// Sign-split → per-part tiling → per-tile plan + Eq.-17 distortion →
+/// reassembly → `pos − neg`.
+pub fn program_layer(
+    w_signed: &Tensor,
+    geometry: TileGeometry,
+    mapping: MappingConfig,
+    eta_signed: f64,
+) -> Result<Tensor> {
+    let split = SignSplit::of(w_signed);
+    let pos = program_nonneg(&split.pos, geometry, mapping, eta_signed)?;
+    let neg = program_nonneg(&split.neg, geometry, mapping, eta_signed)?;
+    pos.zip(&neg, |p, n| p - n)
+}
+
+fn program_nonneg(
+    w: &Tensor,
+    geometry: TileGeometry,
+    mapping: MappingConfig,
+    eta_signed: f64,
+) -> Result<Tensor> {
+    let tiling = LayerTiling::partition(w, geometry)?;
+    let mut out = Tensor::zeros(&[tiling.fan_in, tiling.fan_out]);
+    for tile in &tiling.tiles {
+        let plan = tile.plan(mapping);
+        let wt = distorted_weights(&tile.sliced, &plan, eta_signed)?;
+        for r in 0..wt.rows() {
+            let src = wt.row(r).to_vec();
+            let dst = out.row_mut(tile.row_start + r);
+            dst[tile.col_start..tile.col_start + src.len()].copy_from_slice(&src);
+        }
+    }
+    Ok(out)
+}
+
+/// A ready-to-serve engine.
+pub struct Engine {
+    config: EngineConfig,
+    fwd: Arc<CompiledModule>,
+    /// Programmed (distorted) layer matrices, in forward-graph input order.
+    programmed: Vec<Tensor>,
+    /// Per-layer tilings of the positive part (for the cost model).
+    cost: TileCost,
+}
+
+impl Engine {
+    /// Program the crossbars and compile the forward graph.
+    ///
+    /// Each engine opens its own [`ArtifactStore`] (and thus its own PJRT
+    /// client) so worker threads are fully independent.
+    pub fn program(artifacts_dir: &str, config: EngineConfig) -> Result<Self> {
+        let store = ArtifactStore::open(artifacts_dir)
+            .context("opening artifacts (run `make artifacts`)")?;
+        let fwd = store.load(config.model.fwd_artifact())?;
+        let weights = store.weights(config.model.weights_name())?;
+        let desc = crate::models::model_by_name(config.model.zoo_name())?;
+
+        let mut programmed = Vec::with_capacity(desc.layers.len());
+        let mut cost = TileCost::default();
+        let cost_model = CostModel::default();
+        for (i, l) in desc.layers.iter().enumerate() {
+            let w = weights.get(&format!("layer{i}"))?;
+            ensure!(
+                w.shape() == [l.fan_in, l.fan_out],
+                "layer {i} shape {:?} != zoo [{}, {}]",
+                w.shape(),
+                l.fan_in,
+                l.fan_out
+            );
+            let eff = if config.eta_signed == 0.0 {
+                // Ideal path: exact fp32 weights (no quantization error
+                // either — the "digital baseline" of Fig. 6).
+                w.clone()
+            } else {
+                program_layer(w, config.geometry, config.mapping, config.eta_signed)?
+            };
+            programmed.push(eff);
+            // Cost accounting over the positive-part tiling (pos/neg are
+            // symmetric in size; double it).
+            let split = SignSplit::of(w);
+            let tiling = LayerTiling::partition(&split.pos, config.geometry)?;
+            let mut c = cost_model.layer_cost(&tiling, 1);
+            c.add(&cost_model.layer_cost(&tiling, 1)); // neg part
+            cost.add(&c);
+        }
+        Ok(Self { config, fwd, programmed, cost })
+    }
+
+    /// The engine's configuration.
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// Per-single-input analog cost of the programmed model.
+    pub fn unit_cost(&self) -> &TileCost {
+        &self.cost
+    }
+
+    /// Run a batch of inputs `[n, 256]` (padded/chunked internally to the
+    /// AOT batch size). Returns `[n, 10]` logits.
+    pub fn infer(&self, x: &Tensor) -> Result<Tensor> {
+        ensure!(x.ndim() == 2, "inputs must be [n, features]");
+        let n = x.rows();
+        let b = self.config.fwd_batch;
+        let f = x.cols();
+        let mut logits = Tensor::zeros(&[n, 10]);
+        let mut start = 0usize;
+        while start < n {
+            let take = (n - start).min(b);
+            // Pad the chunk to the fixed AOT batch.
+            let mut chunk = Tensor::zeros(&[b, f]);
+            for r in 0..take {
+                chunk.row_mut(r).copy_from_slice(x.row(start + r));
+            }
+            let mut inputs: Vec<&Tensor> = Vec::with_capacity(1 + self.programmed.len());
+            inputs.push(&chunk);
+            inputs.extend(self.programmed.iter());
+            let out = self.fwd.run1(&inputs)?;
+            ensure!(
+                out.rows() == b && out.cols() == 10,
+                "forward output shape {:?}",
+                out.shape()
+            );
+            for r in 0..take {
+                logits.row_mut(start + r).copy_from_slice(out.row(r));
+            }
+            start += take;
+        }
+        Ok(logits)
+    }
+
+    /// Top-1 accuracy over a dataset.
+    pub fn accuracy(&self, ds: &crate::dataset::Dataset) -> Result<f64> {
+        let logits = self.infer(&ds.x)?;
+        let pred = logits.argmax_rows();
+        let correct =
+            pred.iter().enumerate().filter(|(i, &p)| p == ds.label(*i)).count();
+        Ok(correct as f64 / ds.len() as f64)
+    }
+}

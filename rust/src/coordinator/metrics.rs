@@ -1,0 +1,140 @@
+//! Serving metrics: counters + latency distribution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Latency recorder with percentile queries (stores microsecond samples).
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    samples_us: Mutex<Vec<u64>>,
+}
+
+impl LatencyRecorder {
+    /// Record one latency sample.
+    pub fn record(&self, us: u64) {
+        self.samples_us.lock().expect("latency lock").push(us);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples_us.lock().expect("latency lock").len()
+    }
+
+    /// p-th percentile in microseconds (0 when empty).
+    pub fn percentile(&self, p: f64) -> u64 {
+        let samples = self.samples_us.lock().expect("latency lock");
+        if samples.is_empty() {
+            return 0;
+        }
+        let mut s = samples.clone();
+        drop(samples);
+        s.sort_unstable();
+        let rank = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean(&self) -> f64 {
+        let s = self.samples_us.lock().expect("latency lock");
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.iter().sum::<u64>() as f64 / s.len() as f64
+    }
+}
+
+/// Aggregated serving metrics (all thread-safe).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted into the queue.
+    pub requests: AtomicU64,
+    /// Requests rejected by backpressure (queue full).
+    pub rejected: AtomicU64,
+    /// Completed requests.
+    pub completed: AtomicU64,
+    /// Batches dispatched to workers.
+    pub batches: AtomicU64,
+    /// Total input rows (images) processed.
+    pub rows: AtomicU64,
+    /// Analog-model ADC conversions (from the engines' cost model).
+    pub adc_conversions: AtomicU64,
+    /// Digital partial-sum sync events.
+    pub sync_events: AtomicU64,
+    /// End-to-end request latency.
+    pub latency: LatencyRecorder,
+}
+
+impl Metrics {
+    /// Increment a counter.
+    pub fn bump(counter: &AtomicU64, by: u64) {
+        counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            adc_conversions: self.adc_conversions.load(Ordering::Relaxed),
+            sync_events: self.sync_events.load(Ordering::Relaxed),
+            latency_p50_us: self.latency.percentile(50.0),
+            latency_p99_us: self.latency.percentile(99.0),
+            latency_mean_us: self.latency.mean(),
+        }
+    }
+}
+
+/// Point-in-time copy of the metrics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub rows: u64,
+    pub adc_conversions: u64,
+    pub sync_events: u64,
+    pub latency_p50_us: u64,
+    pub latency_p99_us: u64,
+    pub latency_mean_us: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let r = LatencyRecorder::default();
+        for v in [10, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            r.record(v);
+        }
+        assert_eq!(r.count(), 10);
+        assert_eq!(r.percentile(0.0), 10);
+        assert_eq!(r.percentile(100.0), 100);
+        assert_eq!(r.percentile(50.0), 60); // round(0.5*9)=5 -> 60
+        assert!((r.mean() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder() {
+        let r = LatencyRecorder::default();
+        assert_eq!(r.percentile(99.0), 0);
+        assert_eq!(r.mean(), 0.0);
+    }
+
+    #[test]
+    fn metrics_snapshot() {
+        let m = Metrics::default();
+        Metrics::bump(&m.requests, 3);
+        Metrics::bump(&m.completed, 2);
+        m.latency.record(100);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.latency_p50_us, 100);
+    }
+}

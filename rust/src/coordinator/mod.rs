@@ -1,0 +1,53 @@
+//! L3 coordinator — the request-path system around the crossbar simulator.
+//!
+//! Python never runs here: inference goes through the AOT-compiled forward
+//! graphs (whose matmuls are the L1 Pallas kernel) via PJRT, with the
+//! crossbar programming (bit-slicing, MDM mapping, PR distortion) computed
+//! by the coordinator ahead of time — exactly like programming a real CIM
+//! chip once and serving from it.
+//!
+//! Pieces:
+//!
+//! * [`engine`] — per-worker inference engine: owns its own PJRT runtime
+//!   and executable (one "crossbar accelerator" per worker), plus the
+//!   distorted weight set for the configured mapping.
+//! * [`batcher`] — dynamic batching: requests are coalesced up to
+//!   `max_batch` rows or until `batch_window_us` elapses.
+//! * [`server`] — the thread topology: clients → bounded queue → batcher →
+//!   worker pool → responses; with [`metrics`] counters throughout.
+//! * [`metrics`] — throughput/latency/ADC accounting.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig, ModelKind};
+pub use metrics::{LatencyRecorder, Metrics};
+pub use server::{Server, ServerHandle};
+
+use crate::tensor::Tensor;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One inference request: a batch of flattened images.
+#[derive(Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// `[n, 256]` inputs.
+    pub x: Tensor,
+    /// Submission timestamp (for end-to-end latency).
+    pub submitted: Instant,
+    /// Channel the response is delivered on.
+    pub resp: mpsc::Sender<InferenceResponse>,
+}
+
+/// The response to one request.
+#[derive(Debug)]
+pub struct InferenceResponse {
+    pub id: u64,
+    /// `[n, 10]` logits.
+    pub logits: Tensor,
+    /// End-to-end latency in microseconds.
+    pub latency_us: u64,
+}

@@ -1,0 +1,225 @@
+//! The serving topology: bounded ingress queue → batcher → worker pool.
+//!
+//! ```text
+//!   clients --submit()--> [bounded mpsc] --batcher--> [work queue]
+//!                                                    /     |     \
+//!                                              worker0  worker1  ...   (each
+//!                                              owns an Engine = its own PJRT
+//!                                              runtime + programmed weights)
+//!                                                    \     |     /
+//!                                                  per-request response chans
+//! ```
+//!
+//! Backpressure: `submit` fails fast when the ingress queue holds
+//! `queue_depth` outstanding requests (the client sees the rejection, as in
+//! any production serving stack).
+
+use super::batcher::{concat_inputs, next_batch};
+use super::engine::{Engine, EngineConfig};
+use super::metrics::Metrics;
+use super::{InferenceRequest, InferenceResponse};
+use crate::config::ServerConfig;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A running server; dropping the handle shuts it down.
+pub struct Server {
+    ingress: mpsc::SyncSender<InferenceRequest>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    stopping: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable client handle.
+pub struct ServerHandle {
+    ingress: mpsc::SyncSender<InferenceRequest>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Start the server: spawns the batcher and `cfg.workers` worker
+    /// threads, each programming its own [`Engine`].
+    pub fn start(
+        artifacts_dir: &str,
+        engine_cfg: EngineConfig,
+        cfg: ServerConfig,
+    ) -> Result<Self> {
+        ensure!(cfg.workers >= 1, "need at least one worker");
+        let metrics = Arc::new(Metrics::default());
+        let stopping = Arc::new(AtomicBool::new(false));
+        let (ingress_tx, ingress_rx) = mpsc::sync_channel::<InferenceRequest>(cfg.queue_depth);
+        // Work queue: batches fan out to workers through a shared receiver.
+        let (work_tx, work_rx) = mpsc::channel::<super::batcher::Batch>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let mut threads = Vec::new();
+
+        // Batcher thread.
+        {
+            let metrics = metrics.clone();
+            let max_batch = cfg.max_batch;
+            let window = Duration::from_micros(cfg.batch_window_us);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("mdm-batcher".into())
+                    .spawn(move || {
+                        while let Some(batch) = next_batch(&ingress_rx, max_batch, window) {
+                            Metrics::bump(&metrics.batches, 1);
+                            if work_tx.send(batch).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                    .context("spawning batcher")?,
+            );
+        }
+
+        // Worker threads. Engines program PJRT runtimes concurrently.
+        for w in 0..cfg.workers {
+            let work_rx = work_rx.clone();
+            let metrics = metrics.clone();
+            let dir = artifacts_dir.to_string();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("mdm-worker{w}"))
+                    .spawn(move || {
+                        let engine = match Engine::program(&dir, engine_cfg) {
+                            Ok(e) => e,
+                            Err(err) => {
+                                eprintln!("worker{w}: engine init failed: {err:#}");
+                                return;
+                            }
+                        };
+                        let unit_cost = *engine.unit_cost();
+                        loop {
+                            let batch = {
+                                let rx = work_rx.lock().expect("work queue lock");
+                                match rx.recv() {
+                                    Ok(b) => b,
+                                    Err(_) => break,
+                                }
+                            };
+                            let x = concat_inputs(&batch);
+                            match engine.infer(&x) {
+                                Ok(logits) => {
+                                    Metrics::bump(&metrics.rows, batch.rows as u64);
+                                    Metrics::bump(
+                                        &metrics.adc_conversions,
+                                        unit_cost.adc_conversions * batch.rows as u64,
+                                    );
+                                    Metrics::bump(
+                                        &metrics.sync_events,
+                                        unit_cost.sync_events * batch.rows as u64,
+                                    );
+                                    let mut row = 0usize;
+                                    for req in batch.requests {
+                                        let n = req.x.rows();
+                                        let rows: Vec<usize> = (row..row + n).collect();
+                                        let part = logits
+                                            .permute_rows(&rows)
+                                            .expect("rows in range");
+                                        row += n;
+                                        let latency_us =
+                                            req.submitted.elapsed().as_micros() as u64;
+                                        metrics.latency.record(latency_us);
+                                        Metrics::bump(&metrics.completed, 1);
+                                        // Client may have gone away; ignore.
+                                        let _ = req.resp.send(InferenceResponse {
+                                            id: req.id,
+                                            logits: part,
+                                            latency_us,
+                                        });
+                                    }
+                                }
+                                Err(err) => {
+                                    eprintln!("worker{w}: inference failed: {err:#}");
+                                }
+                            }
+                        }
+                    })
+                    .context("spawning worker")?,
+            );
+        }
+
+        Ok(Self {
+            ingress: ingress_tx,
+            metrics,
+            next_id: AtomicU64::new(0),
+            stopping,
+            threads,
+        })
+    }
+
+    /// Cloneable submission handle.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            ingress: self.ingress.clone(),
+            metrics: self.metrics.clone(),
+            next_id: Arc::new(AtomicU64::new(1_000_000)),
+        }
+    }
+
+    /// Serving metrics.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Submit a request; returns the response receiver. Fails fast when the
+    /// ingress queue is full (backpressure).
+    pub fn submit(&self, x: Tensor) -> Result<mpsc::Receiver<InferenceResponse>> {
+        submit_via(&self.ingress, &self.metrics, &self.next_id, x)
+    }
+
+    /// Graceful shutdown: stop accepting, drain, join workers.
+    pub fn shutdown(mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        // Closing the ingress lets the batcher finish, whose exit closes the
+        // work queue, which stops the workers.
+        drop(std::mem::replace(&mut self.ingress, {
+            let (tx, _rx) = mpsc::sync_channel(1);
+            tx
+        }));
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Submit a request through the handle.
+    pub fn submit(&self, x: Tensor) -> Result<mpsc::Receiver<InferenceResponse>> {
+        submit_via(&self.ingress, &self.metrics, &self.next_id, x)
+    }
+}
+
+fn submit_via(
+    ingress: &mpsc::SyncSender<InferenceRequest>,
+    metrics: &Metrics,
+    next_id: &AtomicU64,
+    x: Tensor,
+) -> Result<mpsc::Receiver<InferenceResponse>> {
+    ensure!(x.ndim() == 2 && x.rows() >= 1, "request must be [n>=1, features]");
+    let (tx, rx) = mpsc::channel();
+    let req = InferenceRequest {
+        id: next_id.fetch_add(1, Ordering::Relaxed),
+        x,
+        submitted: Instant::now(),
+        resp: tx,
+    };
+    match ingress.try_send(req) {
+        Ok(()) => {
+            Metrics::bump(&metrics.requests, 1);
+            Ok(rx)
+        }
+        Err(mpsc::TrySendError::Full(_)) => {
+            Metrics::bump(&metrics.rejected, 1);
+            anyhow::bail!("server overloaded (queue full)")
+        }
+        Err(mpsc::TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
+    }
+}

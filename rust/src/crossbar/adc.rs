@@ -1,0 +1,129 @@
+//! ADC transfer function — the analog→digital boundary of every tile.
+//!
+//! The cost model (`cost.rs`) counts conversions; this module models what a
+//! conversion *does*: a column's analog partial sum is clipped to the ADC
+//! input range and uniformly quantized to `bits` codes. ISAAC-class designs
+//! share one SAR ADC per crossbar, column-multiplexed, with the range set
+//! per tile from the worst-case column sum.
+//!
+//! The `ablation adc` harness uses [`quantize_partials`] to measure how
+//! ADC resolution interacts with PR distortion and MDM: quantization noise
+//! adds to (and at low resolution masks) the parasitic error.
+
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// One ADC's transfer characteristics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdcTransfer {
+    /// Resolution in bits (codes = 2^bits).
+    pub bits: u32,
+    /// Full-scale input (the maximum representable partial sum).
+    pub full_scale: f32,
+}
+
+impl AdcTransfer {
+    /// Build with a range fitted to the observed partials: full scale =
+    /// max|p| with 10% headroom (per-tile auto-ranging, as in ISAAC's
+    /// configurable sample-and-hold).
+    pub fn fit(bits: u32, partials: &Tensor) -> Result<Self> {
+        ensure!((2..=16).contains(&bits), "ADC bits {} out of range", bits);
+        let m = partials.max_abs();
+        let full_scale = if m == 0.0 { 1.0 } else { m * 1.1 };
+        Ok(Self { bits, full_scale })
+    }
+
+    /// Number of codes.
+    pub fn codes(&self) -> u32 {
+        1u32 << self.bits
+    }
+
+    /// Quantize one analog value: clip to ±full_scale, round to the nearest
+    /// of `2^bits` uniformly spaced codes (mid-tread, signed).
+    pub fn convert(&self, v: f32) -> f32 {
+        let half_codes = (self.codes() / 2) as f32;
+        let lsb = self.full_scale / half_codes;
+        let clipped = v.clamp(-self.full_scale, self.full_scale);
+        (clipped / lsb).round().clamp(-half_codes, half_codes - 1.0) * lsb
+    }
+
+    /// The quantization step.
+    pub fn lsb(&self) -> f32 {
+        self.full_scale / (self.codes() / 2) as f32
+    }
+}
+
+/// Quantize a whole tensor of per-column partial sums through one ADC.
+pub fn quantize_partials(adc: &AdcTransfer, partials: &Tensor) -> Tensor {
+    partials.map(|v| adc.convert(v))
+}
+
+/// Max absolute quantization error introduced on a tensor of partials.
+pub fn max_quantization_error(adc: &AdcTransfer, partials: &Tensor) -> f32 {
+    partials
+        .data()
+        .iter()
+        .map(|&v| (adc.convert(v) - v).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn partials(seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seeded(seed);
+        Tensor::from_vec((0..256).map(|_| rng.uniform_range(-3.0, 3.0) as f32).collect())
+    }
+
+    #[test]
+    fn fit_covers_range() {
+        let p = partials(1);
+        let adc = AdcTransfer::fit(8, &p).unwrap();
+        assert!(adc.full_scale >= p.max_abs());
+        assert!(AdcTransfer::fit(1, &p).is_err());
+        assert!(AdcTransfer::fit(17, &p).is_err());
+    }
+
+    #[test]
+    fn error_bounded_by_half_lsb_in_range() {
+        let p = partials(2);
+        let adc = AdcTransfer::fit(8, &p).unwrap();
+        let err = max_quantization_error(&adc, &p);
+        assert!(err <= adc.lsb() * 0.5 + 1e-6, "err {err} lsb {}", adc.lsb());
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let p = partials(3);
+        let e4 = max_quantization_error(&AdcTransfer::fit(4, &p).unwrap(), &p);
+        let e8 = max_quantization_error(&AdcTransfer::fit(8, &p).unwrap(), &p);
+        let e12 = max_quantization_error(&AdcTransfer::fit(12, &p).unwrap(), &p);
+        assert!(e8 < e4);
+        assert!(e12 < e8);
+    }
+
+    #[test]
+    fn clipping_saturates() {
+        let adc = AdcTransfer { bits: 8, full_scale: 1.0 };
+        assert_eq!(adc.convert(10.0), 1.0 - adc.lsb()); // top code
+        assert_eq!(adc.convert(-10.0), -1.0);
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let adc = AdcTransfer { bits: 8, full_scale: 2.0 };
+        assert_eq!(adc.convert(0.0), 0.0);
+    }
+
+    #[test]
+    fn quantize_partials_elementwise() {
+        let adc = AdcTransfer { bits: 4, full_scale: 1.0 };
+        let t = Tensor::from_vec(vec![0.1, -0.6, 0.9]);
+        let q = quantize_partials(&adc, &t);
+        for (a, b) in t.data().iter().zip(q.data()) {
+            assert!((a - b).abs() <= adc.lsb() * 0.5 + 1e-7);
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! System-level cost model: ADC conversions, digital synchronization,
+//! I/O traffic, latency and energy per tiled layer execution.
+//!
+//! Constants follow the ISAAC-class CIM accelerator literature (refs
+//! [24, 31] of the paper): SAR ADC energy ~2 pJ/conversion at 8 bits,
+//! ~1 GS/s shared across a tile's columns, ~100 ns analog MVM settle per
+//! tile activation. Absolute numbers are indicative; the *relative* effect
+//! of tile size — the paper's scalability argument — is what the harness
+//! reports.
+
+use super::tiling::LayerTiling;
+
+/// ADC characteristics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdcModel {
+    /// Resolution in bits.
+    pub bits: u32,
+    /// Energy per conversion, picojoules.
+    pub energy_per_conv_pj: f64,
+    /// Time per conversion, nanoseconds (one ADC shared per tile, column-
+    /// multiplexed, as in ISAAC).
+    pub time_per_conv_ns: f64,
+}
+
+impl Default for AdcModel {
+    fn default() -> Self {
+        Self { bits: 8, energy_per_conv_pj: 2.0, time_per_conv_ns: 1.0 }
+    }
+}
+
+/// Full cost model for tiled execution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    pub adc: AdcModel,
+    /// Analog MVM settle time per tile activation, nanoseconds.
+    pub tile_settle_ns: f64,
+    /// Digital accumulate + synchronization overhead per partial-sum merge,
+    /// nanoseconds.
+    pub sync_ns: f64,
+    /// Bytes moved per activation element into a tile (input DAC buffer).
+    pub bytes_per_input: f64,
+    /// Bytes moved per ADC output sample back to the digital side.
+    pub bytes_per_output: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            adc: AdcModel::default(),
+            tile_settle_ns: 100.0,
+            sync_ns: 20.0,
+            bytes_per_input: 1.0,
+            bytes_per_output: 2.0,
+        }
+    }
+}
+
+/// Cost of executing one layer tiling for a batch of activations.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TileCost {
+    /// Total analog-to-digital conversions.
+    pub adc_conversions: u64,
+    /// Partial-sum synchronization/merge events.
+    pub sync_events: u64,
+    /// Total I/O bytes (activations in + ADC samples out).
+    pub io_bytes: u64,
+    /// Estimated latency in nanoseconds (tiles within a row-chunk run in
+    /// parallel; row-chunks of the same output must merge sequentially).
+    pub latency_ns: f64,
+    /// Estimated energy in picojoules.
+    pub energy_pj: f64,
+}
+
+impl TileCost {
+    /// Accumulate another cost (e.g. across layers).
+    pub fn add(&mut self, other: &TileCost) {
+        self.adc_conversions += other.adc_conversions;
+        self.sync_events += other.sync_events;
+        self.io_bytes += other.io_bytes;
+        self.latency_ns += other.latency_ns;
+        self.energy_pj += other.energy_pj;
+    }
+}
+
+impl CostModel {
+    /// Cost of running `batch` activation vectors through a tiled layer.
+    ///
+    /// Per tile and per activation vector: every (bit-)column is converted
+    /// once by the shared ADC (`cols` conversions, serialized), the tile
+    /// settles once, inputs/outputs move over I/O. Partial sums across the
+    /// `grid.0` row-chunks of each output column group must be merged:
+    /// `grid.0 − 1` sync events per output chunk per vector.
+    pub fn layer_cost(&self, tiling: &LayerTiling, batch: usize) -> TileCost {
+        let b = batch as u64;
+        let (grid_rows, grid_cols) = tiling.grid;
+        let mut adc = 0u64;
+        let mut io = 0u64;
+        let mut tile_serial_ns = 0.0f64;
+        for tile in &tiling.tiles {
+            let cols = (tile.n_weights() * tiling.geometry.k_bits) as u64;
+            adc += cols * b;
+            io += (tile.rows() as f64 * self.bytes_per_input) as u64 * b
+                + (cols as f64 * self.bytes_per_output) as u64 * b;
+            // Column-multiplexed ADC: conversions serialize within a tile.
+            tile_serial_ns = tile_serial_ns
+                .max(self.tile_settle_ns + cols as f64 * self.adc.time_per_conv_ns);
+        }
+        let sync = (grid_rows.saturating_sub(1) * grid_cols) as u64 * b;
+        // Tiles run in parallel across the grid; row-chunk merges serialize.
+        let latency = (tile_serial_ns + grid_rows.saturating_sub(1) as f64 * self.sync_ns)
+            * batch as f64;
+        let energy = adc as f64 * self.adc.energy_per_conv_pj;
+        TileCost {
+            adc_conversions: adc,
+            sync_events: sync,
+            io_bytes: io,
+            latency_ns: latency,
+            energy_pj: energy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::TileGeometry;
+    use crate::rng::Xoshiro256;
+    use crate::tensor::Tensor;
+
+    fn tiling(fan_in: usize, fan_out: usize, tile: usize) -> LayerTiling {
+        let mut rng = Xoshiro256::seeded(1);
+        let data: Vec<f32> =
+            (0..fan_in * fan_out).map(|_| rng.uniform() as f32).collect();
+        let w = Tensor::new(&[fan_in, fan_out], data).unwrap();
+        LayerTiling::partition(&w, TileGeometry::new(tile, tile, 8).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn smaller_tiles_cost_more_sync_and_conversions() {
+        let big = tiling(256, 64, 64); // 4 row-chunks x 8 col-chunks
+        let small = tiling(256, 64, 16); // 16 row-chunks x 32 col-chunks
+        let m = CostModel::default();
+        let cb = m.layer_cost(&big, 1);
+        let cs = m.layer_cost(&small, 1);
+        assert!(cs.sync_events > cb.sync_events, "{cs:?} vs {cb:?}");
+        assert!(cs.adc_conversions >= cb.adc_conversions);
+        assert!(cs.io_bytes > cb.io_bytes);
+    }
+
+    #[test]
+    fn cost_scales_linearly_with_batch() {
+        let t = tiling(64, 32, 32);
+        let m = CostModel::default();
+        let c1 = m.layer_cost(&t, 1);
+        let c4 = m.layer_cost(&t, 4);
+        assert_eq!(c4.adc_conversions, 4 * c1.adc_conversions);
+        assert_eq!(c4.sync_events, 4 * c1.sync_events);
+        assert!((c4.latency_ns - 4.0 * c1.latency_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let t = tiling(64, 32, 32);
+        let m = CostModel::default();
+        let mut acc = TileCost::default();
+        acc.add(&m.layer_cost(&t, 1));
+        acc.add(&m.layer_cost(&t, 1));
+        let c2 = m.layer_cost(&t, 2);
+        assert_eq!(acc.adc_conversions, c2.adc_conversions);
+    }
+
+    #[test]
+    fn single_tile_layer_has_no_sync() {
+        let t = tiling(32, 4, 64);
+        assert_eq!(t.grid.0, 1);
+        let c = CostModel::default().layer_cost(&t, 3);
+        assert_eq!(c.sync_events, 0);
+    }
+}

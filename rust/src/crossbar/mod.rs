@@ -1,0 +1,90 @@
+//! Crossbar tile geometry, layer→tile partitioning, and the system-level
+//! cost model (ADC conversions, digital synchronization, latency/energy).
+//!
+//! The paper's system argument (§I): PR forces DNN matrices into small
+//! crossbar tiles; every tile boundary costs analog-to-digital conversions
+//! and digital synchronization, so reducing PR (via MDM) lets tiles grow
+//! and recovers CIM parallelism. This module implements the tiling and the
+//! cost model that the coordinator and the `ablation_tilesize` bench use to
+//! quantify that trade-off.
+
+mod adc;
+mod cost;
+mod tiling;
+
+pub use adc::{max_quantization_error, quantize_partials, AdcTransfer};
+pub use cost::{AdcModel, CostModel, TileCost};
+pub use tiling::{LayerTiling, Tile};
+
+use anyhow::{ensure, Result};
+
+/// Geometry of one crossbar tile.
+///
+/// In the paper's convention a 128-column crossbar with 16 multipliers
+/// stores `128/16 = 8` weights per row; equivalently, each logical weight
+/// occupies `k_bits` bit columns, so a tile holds
+/// `cols / k_bits` weight columns per row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGeometry {
+    /// Crossbar rows (fan-in per tile).
+    pub rows: usize,
+    /// Crossbar columns (bit columns).
+    pub cols: usize,
+    /// Fractional bits per weight.
+    pub k_bits: usize,
+}
+
+impl TileGeometry {
+    /// Construct and validate a geometry.
+    pub fn new(rows: usize, cols: usize, k_bits: usize) -> Result<Self> {
+        ensure!(rows >= 1 && cols >= 1, "degenerate tile {rows}x{cols}");
+        ensure!(k_bits >= 1, "k_bits must be >= 1");
+        ensure!(cols % k_bits == 0, "tile cols {cols} not divisible by k_bits {k_bits}");
+        Ok(Self { rows, cols, k_bits })
+    }
+
+    /// The paper's evaluation geometry: 64×64 tiles with 8-bit slices
+    /// (8 weights per row).
+    pub fn paper_eval() -> Self {
+        Self { rows: 64, cols: 64, k_bits: 8 }
+    }
+
+    /// Logical weight columns held per tile: `cols / k_bits`.
+    pub fn weights_per_row(&self) -> usize {
+        self.cols / self.k_bits
+    }
+
+    /// Worst-case aggregate Manhattan distance (all cells active):
+    /// `Σ_{j,k} (j+k) = J·K·(J+K−2)/2` — a normalization constant for NF
+    /// comparisons across tile sizes.
+    pub fn max_aggregate_manhattan(&self) -> f64 {
+        let (j, k) = (self.rows as f64, self.cols as f64);
+        j * k * (j + k - 2.0) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_validation() {
+        assert!(TileGeometry::new(64, 64, 8).is_ok());
+        assert!(TileGeometry::new(64, 60, 8).is_err()); // 60 % 8 != 0
+        assert!(TileGeometry::new(0, 64, 8).is_err());
+        assert!(TileGeometry::new(64, 64, 0).is_err());
+    }
+
+    #[test]
+    fn paper_eval_geometry() {
+        let g = TileGeometry::paper_eval();
+        assert_eq!(g.weights_per_row(), 8);
+    }
+
+    #[test]
+    fn max_aggregate_manhattan_small_case() {
+        // 2x2: distances 0,1,1,2 -> 4.
+        let g = TileGeometry::new(2, 2, 1).unwrap();
+        assert_eq!(g.max_aggregate_manhattan(), 4.0);
+    }
+}

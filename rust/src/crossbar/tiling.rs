@@ -1,0 +1,301 @@
+//! Partitioning a layer weight matrix into crossbar tiles.
+//!
+//! A layer matrix `W: [fan_in, fan_out]` (non-negative; sign-split happens
+//! one level up) is cut into a grid of tiles: each tile covers up to
+//! `geometry.rows` input rows and `geometry.weights_per_row()` output
+//! (weight) columns, bit-sliced into `geometry.cols` binary crossbar
+//! columns. All tiles of a layer share one per-layer quantizer so the
+//! digital accumulation across row-chunks is exact.
+
+use super::TileGeometry;
+use crate::mdm::{map_tile_with_magnitudes, MappingConfig, MappingPlan};
+use crate::noise::distorted_weights;
+use crate::quant::{BitSlicedMatrix, Quantizer};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// One crossbar tile of a layer.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    /// First input row (fan-in index) this tile covers.
+    pub row_start: usize,
+    /// First logical weight column (fan-out index) this tile covers.
+    pub col_start: usize,
+    /// Bit-sliced sub-matrix, `[rows, n_weights·k_bits]`.
+    pub sliced: BitSlicedMatrix,
+}
+
+impl Tile {
+    /// Rows of this tile (≤ geometry.rows; edge tiles may be smaller).
+    pub fn rows(&self) -> usize {
+        self.sliced.rows()
+    }
+
+    /// Logical weight columns of this tile.
+    pub fn n_weights(&self) -> usize {
+        self.sliced.n_weights
+    }
+
+    /// Build the mapping plan for this tile under a policy.
+    pub fn plan(&self, config: MappingConfig) -> MappingPlan {
+        // Per-row dequantized magnitudes are only needed by the
+        // MagnitudeDesc baseline; skip the dequantization otherwise (plan
+        // building is on the fig5/engine-programming hot path).
+        let mags: Option<Vec<f64>> =
+            if matches!(config.row_order, crate::mdm::RowOrder::MagnitudeDesc) {
+                let deq = self.sliced.dequantize().expect("dequantize");
+                Some(
+                    (0..deq.rows())
+                        .map(|j| deq.row(j).iter().map(|&x| x as f64).sum())
+                        .collect(),
+                )
+            } else {
+                None
+            };
+        map_tile_with_magnitudes(&self.sliced.planes, config, mags.as_deref())
+    }
+
+    /// Clean partial product: `x_sub [B, rows] @ dequant [rows, n_weights]`.
+    pub fn matvec_clean(&self, x_sub: &Tensor) -> Result<Tensor> {
+        x_sub.matmul(&self.sliced.dequantize()?)
+    }
+
+    /// Partial product under PR distortion for a given mapping plan and
+    /// signed noise coefficient (Eq. 17; see `noise`).
+    pub fn matvec_noisy(
+        &self,
+        x_sub: &Tensor,
+        plan: &MappingPlan,
+        eta_signed: f64,
+    ) -> Result<Tensor> {
+        let w = distorted_weights(&self.sliced, plan, eta_signed)?;
+        x_sub.matmul(&w)
+    }
+}
+
+/// A layer matrix partitioned into a tile grid.
+#[derive(Debug, Clone)]
+pub struct LayerTiling {
+    /// Tile geometry used for the partition.
+    pub geometry: TileGeometry,
+    /// Grid dimensions: (row-chunks, col-chunks).
+    pub grid: (usize, usize),
+    /// Row-major tile grid.
+    pub tiles: Vec<Tile>,
+    /// Layer fan-in.
+    pub fan_in: usize,
+    /// Layer fan-out.
+    pub fan_out: usize,
+    /// Shared per-layer quantizer.
+    pub quant: Quantizer,
+}
+
+impl LayerTiling {
+    /// Tile-grid dimensions of a `[fan_in, fan_out]` layer at a geometry,
+    /// without building anything.
+    pub fn grid_for(fan_in: usize, fan_out: usize, geometry: TileGeometry) -> (usize, usize) {
+        (fan_in.div_ceil(geometry.rows), fan_out.div_ceil(geometry.weights_per_row()))
+    }
+
+    /// Build a single tile `(gr, gc)` of the grid — the lazy path used when
+    /// only a sample of a huge layer's tiles is needed (NF statistics over
+    /// a VGG fc layer would otherwise bit-slice ~200k tiles to look at 32;
+    /// see EXPERIMENTS.md §Perf).
+    pub fn build_tile(
+        w: &Tensor,
+        geometry: TileGeometry,
+        quant: Quantizer,
+        gr: usize,
+        gc: usize,
+    ) -> Result<Tile> {
+        ensure!(w.ndim() == 2, "layer matrix must be 2-D");
+        let (fan_in, fan_out) = (w.rows(), w.cols());
+        let wpr = geometry.weights_per_row();
+        let r0 = gr * geometry.rows;
+        let c0 = gc * wpr;
+        ensure!(r0 < fan_in && c0 < fan_out, "tile ({gr},{gc}) out of grid");
+        let r1 = (r0 + geometry.rows).min(fan_in);
+        let c1 = (c0 + wpr).min(fan_out);
+        let mut sub = vec![0.0f32; (r1 - r0) * (c1 - c0)];
+        for (ri, r) in (r0..r1).enumerate() {
+            let src = &w.row(r)[c0..c1];
+            sub[ri * (c1 - c0)..(ri + 1) * (c1 - c0)].copy_from_slice(src);
+        }
+        let sub = Tensor::new(&[r1 - r0, c1 - c0], sub)?;
+        Ok(Tile { row_start: r0, col_start: c0, sliced: BitSlicedMatrix::slice_with(&sub, quant)? })
+    }
+
+    /// Partition a **non-negative** layer matrix `[fan_in, fan_out]`.
+    pub fn partition(w: &Tensor, geometry: TileGeometry) -> Result<Self> {
+        ensure!(w.ndim() == 2, "layer matrix must be 2-D");
+        let (fan_in, fan_out) = (w.rows(), w.cols());
+        let quant = Quantizer::fit(w, geometry.k_bits)?;
+        let (grid_rows, grid_cols) = Self::grid_for(fan_in, fan_out, geometry);
+        let mut tiles = Vec::with_capacity(grid_rows * grid_cols);
+        for gr in 0..grid_rows {
+            for gc in 0..grid_cols {
+                tiles.push(Self::build_tile(w, geometry, quant, gr, gc)?);
+            }
+        }
+        Ok(Self { geometry, grid: (grid_rows, grid_cols), tiles, fan_in, fan_out, quant })
+    }
+
+    /// Number of tiles.
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Full layer matvec with per-tile digital accumulation (the clean
+    /// reference path): `y [B, fan_out] = x [B, fan_in] @ Wq`.
+    pub fn matvec_clean(&self, x: &Tensor) -> Result<Tensor> {
+        self.matvec_with(x, |tile, x_sub| tile.matvec_clean(x_sub))
+    }
+
+    /// Full layer matvec under PR distortion with one mapping config for
+    /// every tile.
+    pub fn matvec_noisy(
+        &self,
+        x: &Tensor,
+        config: MappingConfig,
+        eta_signed: f64,
+    ) -> Result<Tensor> {
+        self.matvec_with(x, |tile, x_sub| {
+            let plan = tile.plan(config);
+            tile.matvec_noisy(x_sub, &plan, eta_signed)
+        })
+    }
+
+    /// Generic tiled matvec: `f` produces each tile's partial product from
+    /// the activation sub-block; partials are accumulated digitally.
+    pub fn matvec_with(
+        &self,
+        x: &Tensor,
+        f: impl Fn(&Tile, &Tensor) -> Result<Tensor>,
+    ) -> Result<Tensor> {
+        ensure!(
+            x.ndim() == 2 && x.cols() == self.fan_in,
+            "activations {:?} do not match fan_in {}",
+            x.shape(),
+            self.fan_in
+        );
+        let batch = x.rows();
+        let mut y = Tensor::zeros(&[batch, self.fan_out]);
+        for tile in &self.tiles {
+            // Slice x columns [row_start, row_start + tile.rows).
+            let cols: Vec<usize> = (tile.row_start..tile.row_start + tile.rows()).collect();
+            let x_sub = x.permute_cols(&cols)?;
+            let part = f(tile, &x_sub)?;
+            ensure!(
+                part.rows() == batch && part.cols() == tile.n_weights(),
+                "tile partial has shape {:?}",
+                part.shape()
+            );
+            for b in 0..batch {
+                let prow = part.row(b).to_vec();
+                let yrow = y.row_mut(b);
+                for (ci, v) in prow.iter().enumerate() {
+                    yrow[tile.col_start + ci] += v;
+                }
+            }
+        }
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn random_nonneg(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seeded(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.laplace(0.2).abs() as f32).collect();
+        Tensor::new(&[rows, cols], data).unwrap()
+    }
+
+    #[test]
+    fn partition_covers_matrix_exactly() {
+        let g = TileGeometry::new(16, 32, 8).unwrap(); // 4 weights/row
+        let w = random_nonneg(40, 10, 1); // 3 row-chunks x 3 col-chunks
+        let t = LayerTiling::partition(&w, g).unwrap();
+        assert_eq!(t.grid, (3, 3));
+        assert_eq!(t.n_tiles(), 9);
+        // Row/col coverage without overlap.
+        let mut covered = vec![vec![false; 10]; 40];
+        for tile in &t.tiles {
+            for r in tile.row_start..tile.row_start + tile.rows() {
+                for c in tile.col_start..tile.col_start + tile.n_weights() {
+                    assert!(!covered[r][c], "overlap at ({r},{c})");
+                    covered[r][c] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|row| row.iter().all(|&c| c)));
+    }
+
+    #[test]
+    fn tiled_matvec_matches_dense_quantized() {
+        let g = TileGeometry::new(8, 16, 8).unwrap(); // 2 weights/row
+        let w = random_nonneg(20, 5, 2);
+        let t = LayerTiling::partition(&w, g).unwrap();
+        let mut rng = Xoshiro256::seeded(3);
+        let xdata: Vec<f32> = (0..2 * 20).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let x = Tensor::new(&[2, 20], xdata).unwrap();
+
+        let y_tiled = t.matvec_clean(&x).unwrap();
+
+        // Dense reference with the same shared quantizer.
+        let wq = BitSlicedMatrix::slice_with(&w, t.quant).unwrap().dequantize().unwrap();
+        let y_ref = x.matmul(&wq).unwrap();
+        for (a, b) in y_tiled.data().iter().zip(y_ref.data()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn noisy_matvec_with_zero_eta_equals_clean() {
+        let g = TileGeometry::new(8, 16, 8).unwrap();
+        let w = random_nonneg(16, 4, 4);
+        let t = LayerTiling::partition(&w, g).unwrap();
+        let x = random_nonneg(3, 16, 5);
+        let clean = t.matvec_clean(&x).unwrap();
+        let noisy = t.matvec_noisy(&x, MappingConfig::mdm(), 0.0).unwrap();
+        for (a, b) in clean.data().iter().zip(noisy.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn noisy_matvec_mdm_closer_to_clean_than_conventional() {
+        let g = TileGeometry::paper_eval();
+        let w = random_nonneg(128, 16, 6);
+        let t = LayerTiling::partition(&w, g).unwrap();
+        let x = random_nonneg(4, 128, 7);
+        let clean = t.matvec_clean(&x).unwrap();
+        let eta = -2e-3;
+        let err = |y: &Tensor| -> f64 {
+            y.data()
+                .iter()
+                .zip(clean.data())
+                .map(|(a, b)| ((a - b).abs()) as f64)
+                .sum::<f64>()
+        };
+        let conv = t.matvec_noisy(&x, MappingConfig::conventional(), eta).unwrap();
+        let mdm = t.matvec_noisy(&x, MappingConfig::mdm(), eta).unwrap();
+        assert!(
+            err(&mdm) < err(&conv),
+            "MDM error {} vs conventional {}",
+            err(&mdm),
+            err(&conv)
+        );
+    }
+
+    #[test]
+    fn activation_shape_checked() {
+        let g = TileGeometry::new(8, 16, 8).unwrap();
+        let w = random_nonneg(16, 4, 8);
+        let t = LayerTiling::partition(&w, g).unwrap();
+        let x = Tensor::zeros(&[1, 17]);
+        assert!(t.matvec_clean(&x).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Synthetic classification dataset shared with the L2 build path.
+//!
+//! ImageNet-1k is not available offline (DESIGN.md §5), so training and
+//! accuracy experiments use a deterministic synthetic task: 16×16 grayscale
+//! "images" drawn from 10 class-conditional Gaussian pattern clusters. Each
+//! class has a fixed random prototype pattern; samples are
+//! `prototype + noise`. The task is hard enough that an untrained model
+//! sits at 10% accuracy while trained models reach high accuracy that then
+//! degrades measurably under PR noise — the property Fig. 6 needs.
+//!
+//! Python (`python/compile/dataset.py`) ports the same xoshiro256**
+//! generator and sampling order, so both sides produce the same data from
+//! the same seed (up to libm ulp differences, ≈1e-6 after the f32 cast);
+//! the cross-language integration test in `rust/tests/` compares the
+//! exported shards against local regeneration at that tolerance.
+
+use crate::rng::Xoshiro256;
+use crate::tensor::{read_mdt, MdtFile, Tensor};
+use anyhow::Result;
+use std::path::Path;
+
+/// Image side length.
+pub const IMG_SIDE: usize = 16;
+/// Flattened feature dimension.
+pub const N_FEATURES: usize = IMG_SIDE * IMG_SIDE;
+/// Number of classes.
+pub const N_CLASSES: usize = 10;
+/// Within-class noise used by the artifact build (`python/compile/aot.py`
+/// NOISE) — rust-side generation must match it to stay in-distribution.
+pub const TRAIN_NOISE: f64 = 2.2;
+/// Prototype seed of the artifact build (`aot.py` SEED).
+pub const PROTO_SEED: u64 = 42;
+
+/// A fresh in-distribution evaluation split of `n` samples (same class
+/// prototypes as the artifact-built train/test shards, distinct sample
+/// stream) — used when 512 test samples give too little statistical power
+/// for small accuracy deltas.
+pub fn fresh_eval_split(n: usize, seed: u64) -> Dataset {
+    generate_with_protos(n, TRAIN_NOISE, seed, PROTO_SEED)
+}
+
+/// A labelled dataset split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Features `[n, 256]`, roughly unit scale.
+    pub x: Tensor,
+    /// Labels `[n]` as f32 class indices (mdt only stores f32).
+    pub y: Tensor,
+}
+
+impl Dataset {
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Label of example `i`.
+    pub fn label(&self, i: usize) -> usize {
+        self.y.data()[i] as usize
+    }
+
+    /// One minibatch (wrapping) of `(x, y)` starting at `start`.
+    pub fn batch(&self, start: usize, size: usize) -> (Tensor, Vec<usize>) {
+        let n = self.len();
+        let rows: Vec<usize> = (0..size).map(|i| (start + i) % n).collect();
+        let x = self.x.permute_rows(&rows).expect("rows in range");
+        let y = rows.iter().map(|&r| self.label(r)).collect();
+        (x, y)
+    }
+}
+
+/// Class prototypes: `[N_CLASSES, N_FEATURES]`, deterministic in `seed`.
+pub fn class_prototypes(seed: u64) -> Tensor {
+    let mut rng = Xoshiro256::seeded(seed);
+    let data: Vec<f32> =
+        (0..N_CLASSES * N_FEATURES).map(|_| rng.normal() as f32).collect();
+    Tensor::new(&[N_CLASSES, N_FEATURES], data).expect("static shape")
+}
+
+/// Generate a split of `n` examples. `noise` is the within-class std
+/// (0.8 gives a task where linear models reach ~90% and degrade smoothly).
+/// Prototypes and samples both derive from `seed`; use
+/// [`generate_with_protos`] to share prototypes across splits.
+pub fn generate(n: usize, noise: f64, seed: u64) -> Dataset {
+    generate_with_protos(n, noise, seed, seed)
+}
+
+/// [`generate`] with the class prototypes pinned to `proto_seed` so
+/// train/test splits share classes while drawing distinct samples.
+pub fn generate_with_protos(n: usize, noise: f64, seed: u64, proto_seed: u64) -> Dataset {
+    let protos = class_prototypes(proto_seed);
+    let mut rng = Xoshiro256::seeded(seed ^ 0xDA7A_5E7);
+    let mut x = vec![0.0f32; n * N_FEATURES];
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let c = rng.below(N_CLASSES as u64) as usize;
+        y[i] = c as f32;
+        let proto = protos.row(c);
+        for (f, xi) in x[i * N_FEATURES..(i + 1) * N_FEATURES].iter_mut().enumerate() {
+            *xi = proto[f] + (rng.normal() * noise) as f32;
+        }
+    }
+    Dataset {
+        x: Tensor::new(&[n, N_FEATURES], x).expect("shape"),
+        y: Tensor::new(&[n], y).expect("shape"),
+    }
+}
+
+/// Load a split exported by `python/compile/dataset.py` (tensors `x`, `y`).
+pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+    let mdt = read_mdt(path)?;
+    Ok(Dataset { x: mdt.get("x")?.clone(), y: mdt.get("y")?.clone() })
+}
+
+/// Save a split in the same format Python writes.
+pub fn save(path: impl AsRef<Path>, ds: &Dataset) -> Result<()> {
+    let mut f = MdtFile::new();
+    f.insert("x", ds.x.clone());
+    f.insert("y", ds.y.clone());
+    crate::tensor::write_mdt(path, &f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = generate(32, 0.8, 1);
+        let b = generate(32, 0.8, 1);
+        let c = generate(32, 0.8, 2);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn labels_in_range_and_roughly_balanced() {
+        let ds = generate(2000, 0.8, 3);
+        let mut counts = [0usize; N_CLASSES];
+        for i in 0..ds.len() {
+            counts[ds.label(i)] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 120, "class count {c} too unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn nearest_prototype_classifier_beats_chance() {
+        // The task must be learnable: nearest-prototype gets >> 10%.
+        let ds = generate(500, 0.8, 4);
+        let protos = class_prototypes(4);
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let xi = ds.x.row(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..N_CLASSES {
+                let p = protos.row(c);
+                let d: f64 =
+                    xi.iter().zip(p).map(|(a, b)| ((a - b) * (a - b)) as f64).sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == ds.label(i) {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.len() as f64;
+        assert!(acc > 0.85, "nearest-prototype accuracy {acc}");
+    }
+
+    #[test]
+    fn batch_wraps() {
+        let ds = generate(10, 0.5, 5);
+        let (x, y) = ds.batch(8, 4);
+        assert_eq!(x.rows(), 4);
+        assert_eq!(y.len(), 4);
+        assert_eq!(y[2], ds.label(0)); // wrapped around
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ds_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("split.mdt");
+        let ds = generate(16, 0.8, 6);
+        save(&p, &ds).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,586 @@
+//! Ablations A1–A3 + row-order policy comparison (DESIGN.md §3).
+//!
+//! * A1 `tile_size_sweep` — NF vs tile size with MDM on/off, plus the
+//!   system-level cost (ADC conversions, sync events) at each size: the
+//!   paper's scalability argument quantified.
+//! * A2 `sparsity_sweep` — MDM's NF reduction vs cell sparsity.
+//! * A3 `ratio_sweep` — Manhattan-Hypothesis fit quality vs `r/R_on`.
+//! * `roworder_compare` — MDM's score policy vs the paper-literal
+//!   ascending-Manhattan score, random, and magnitude-sorted baselines.
+
+use super::random_planes;
+use crate::circuit::CrossbarCircuit;
+use crate::crossbar::{CostModel, LayerTiling, TileGeometry};
+use crate::mdm::{map_tile, Dataflow, MappingConfig, RowOrder};
+use crate::nf::{fit_hypothesis, manhattan_nf_mean};
+use crate::quant::SignSplit;
+use crate::report;
+use crate::rng::Xoshiro256;
+use crate::CrossbarPhysics;
+use anyhow::Result;
+use std::path::Path;
+
+/// A1 row: one tile size.
+#[derive(Debug, Clone)]
+pub struct TileSizeRow {
+    pub tile: usize,
+    pub nf_conventional: f64,
+    pub nf_mdm: f64,
+    pub adc_conversions: u64,
+    pub sync_events: u64,
+}
+
+/// A1: NF and system cost vs tile size for a fixed synthetic layer.
+pub fn tile_size_sweep(
+    sizes: &[usize],
+    k_bits: usize,
+    seed: u64,
+    results_dir: &Path,
+) -> Result<Vec<TileSizeRow>> {
+    // A 512x64 bell-shaped layer, fixed across sizes.
+    let profile = crate::models::WeightProfile::cnn();
+    let w = crate::models::generate_layer_weights(512, 64, &profile, seed)?;
+    let split = SignSplit::of(&w);
+    let cost_model = CostModel::default();
+    let mut rows = Vec::new();
+    for &tile in sizes {
+        let geom = TileGeometry::new(tile, tile, k_bits)?;
+        let mut nf = [0.0f64; 2];
+        let mut adc = 0u64;
+        let mut sync = 0u64;
+        for part in [&split.pos, &split.neg] {
+            let tiling = LayerTiling::partition(part, geom)?;
+            let c = cost_model.layer_cost(&tiling, 1);
+            adc += c.adc_conversions;
+            sync += c.sync_events;
+            for (i, cfg) in
+                [MappingConfig::conventional(), MappingConfig::mdm()].iter().enumerate()
+            {
+                let mut acc = 0.0;
+                for t in &tiling.tiles {
+                    let plan = t.plan(*cfg);
+                    acc += manhattan_nf_mean(&plan.apply(&t.sliced.planes)?, 1.0);
+                }
+                nf[i] += acc / tiling.n_tiles() as f64 / 2.0;
+            }
+        }
+        rows.push(TileSizeRow {
+            tile,
+            nf_conventional: nf[0],
+            nf_mdm: nf[1],
+            adc_conversions: adc,
+            sync_events: sync,
+        });
+    }
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.tile.to_string(),
+                format!("{:.4}", r.nf_conventional),
+                format!("{:.4}", r.nf_mdm),
+                r.adc_conversions.to_string(),
+                r.sync_events.to_string(),
+            ]
+        })
+        .collect();
+    report::write_csv(
+        results_dir.join("ablation_tilesize.csv"),
+        &["tile", "nf_conventional", "nf_mdm", "adc_conversions", "sync_events"],
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+/// A2 row: one sparsity level.
+#[derive(Debug, Clone)]
+pub struct SparsitySweepRow {
+    pub sparsity: f64,
+    pub nf_conventional: f64,
+    pub nf_mdm: f64,
+    pub reduction_pct: f64,
+}
+
+/// A2: MDM reduction vs cell sparsity on random tiles.
+pub fn sparsity_sweep(
+    levels: &[f64],
+    tile: usize,
+    n_tiles: usize,
+    seed: u64,
+    results_dir: &Path,
+) -> Result<Vec<SparsitySweepRow>> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut rows = Vec::new();
+    for &sp in levels {
+        let mut nf_conv = 0.0;
+        let mut nf_mdm = 0.0;
+        for _ in 0..n_tiles {
+            let planes = random_planes(tile, tile, 1.0 - sp, &mut rng);
+            let conv = map_tile(&planes, MappingConfig::conventional());
+            let mdm = map_tile(&planes, MappingConfig::mdm());
+            nf_conv += manhattan_nf_mean(&conv.apply(&planes)?, 1.0);
+            nf_mdm += manhattan_nf_mean(&mdm.apply(&planes)?, 1.0);
+        }
+        nf_conv /= n_tiles as f64;
+        nf_mdm /= n_tiles as f64;
+        rows.push(SparsitySweepRow {
+            sparsity: sp,
+            nf_conventional: nf_conv,
+            nf_mdm,
+            reduction_pct: 100.0 * (1.0 - nf_mdm / nf_conv.max(f64::MIN_POSITIVE)),
+        });
+    }
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.2}", r.sparsity),
+                format!("{:.4}", r.nf_conventional),
+                format!("{:.4}", r.nf_mdm),
+                format!("{:.2}", r.reduction_pct),
+            ]
+        })
+        .collect();
+    report::write_csv(
+        results_dir.join("ablation_sparsity.csv"),
+        &["sparsity", "nf_conventional", "nf_mdm", "reduction_pct"],
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+/// A3 row: one parasitic ratio.
+#[derive(Debug, Clone)]
+pub struct RatioRow {
+    pub r_wire: f64,
+    pub ratio: f64,
+    /// r² of the hypothesis fit at this ratio.
+    pub r2: f64,
+    /// Error σ (%) of the fit.
+    pub sigma_pct: f64,
+}
+
+/// A3: hypothesis fit quality vs `r/R_on` (fixed R_on, sweeping r).
+pub fn ratio_sweep(
+    r_values: &[f64],
+    tile: usize,
+    n_tiles: usize,
+    seed: u64,
+    results_dir: &Path,
+) -> Result<Vec<RatioRow>> {
+    let mut rows = Vec::new();
+    for &r_wire in r_values {
+        let physics = CrossbarPhysics { r_wire, ..CrossbarPhysics::default() };
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut calc = Vec::new();
+        let mut meas = Vec::new();
+        for _ in 0..n_tiles {
+            let planes = random_planes(tile, tile, 0.2, &mut rng);
+            calc.push(manhattan_nf_mean(&planes, physics.parasitic_ratio()));
+            meas.push(CrossbarCircuit::from_planes(&planes, physics)?.solve()?.nf());
+        }
+        let fit = fit_hypothesis(&calc, &meas);
+        rows.push(RatioRow {
+            r_wire,
+            ratio: physics.parasitic_ratio(),
+            r2: fit.fit.r2,
+            sigma_pct: fit.error_summary.std,
+        });
+    }
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.r_wire),
+                format!("{:.2e}", r.ratio),
+                format!("{:.4}", r.r2),
+                format!("{:.2}", r.sigma_pct),
+            ]
+        })
+        .collect();
+    report::write_csv(
+        results_dir.join("ablation_ratio.csv"),
+        &["r_wire", "ratio", "r2", "sigma_pct"],
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+/// Row-order policy comparison on random bell-shaped tiles.
+#[derive(Debug, Clone)]
+pub struct RowOrderRow {
+    pub policy: String,
+    pub nf_mean: f64,
+}
+
+/// Compare row-order policies at a fixed (reversed) dataflow.
+pub fn roworder_compare(
+    tile: usize,
+    k_bits: usize,
+    n_tiles: usize,
+    seed: u64,
+    results_dir: &Path,
+) -> Result<Vec<RowOrderRow>> {
+    let profile = crate::models::WeightProfile::cnn();
+    let policies: Vec<(&str, RowOrder)> = vec![
+        ("identity", RowOrder::Identity),
+        ("mdm_score", RowOrder::MdmScore),
+        ("manhattan_asc", RowOrder::ManhattanAsc),
+        ("random", RowOrder::Random { seed: 99 }),
+        ("magnitude_desc", RowOrder::MagnitudeDesc),
+    ];
+    let mut sums = vec![0.0f64; policies.len()];
+    for t in 0..n_tiles {
+        let w = crate::models::generate_layer_weights(
+            tile,
+            tile / k_bits,
+            &profile,
+            seed ^ t as u64,
+        )?;
+        let split = SignSplit::of(&w);
+        let sliced = crate::quant::BitSlicedMatrix::slice(&split.pos, k_bits)?;
+        let deq = sliced.dequantize()?;
+        let mags: Vec<f64> =
+            (0..deq.rows()).map(|j| deq.row(j).iter().map(|&x| x as f64).sum()).collect();
+        for (i, (_, policy)) in policies.iter().enumerate() {
+            let cfg = MappingConfig { dataflow: Dataflow::Reversed, row_order: *policy };
+            let plan = crate::mdm::map_tile_with_magnitudes(&sliced.planes, cfg, Some(&mags));
+            sums[i] += manhattan_nf_mean(&plan.apply(&sliced.planes)?, 1.0);
+        }
+    }
+    let rows: Vec<RowOrderRow> = policies
+        .iter()
+        .zip(&sums)
+        .map(|((name, _), s)| RowOrderRow {
+            policy: name.to_string(),
+            nf_mean: s / n_tiles as f64,
+        })
+        .collect();
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| vec![r.policy.clone(), format!("{:.4}", r.nf_mean)])
+        .collect();
+    report::write_csv(results_dir.join("ablation_roworder.csv"), &["policy", "nf_mean"], &csv)?;
+    Ok(rows)
+}
+
+/// A7 (extension): Manhattan-Hypothesis and MDM-ranking robustness under
+/// log-normal device variation (PVT Monte-Carlo, `variation::`).
+pub fn variation_sweep(
+    sigmas: &[f64],
+    tile: usize,
+    n_tiles: usize,
+    seed: u64,
+    results_dir: &Path,
+) -> Result<Vec<(f64, crate::variation::VariationReport)>> {
+    let mut out = Vec::new();
+    for &sigma in sigmas {
+        let model = crate::variation::VariationModel { sigma_on: sigma, sigma_off: 2.0 * sigma };
+        let rep = crate::variation::monte_carlo(
+            n_tiles,
+            tile,
+            0.2,
+            CrossbarPhysics::default(),
+            model,
+            seed,
+        )?;
+        out.push((sigma, rep));
+    }
+    let csv: Vec<Vec<String>> = out
+        .iter()
+        .map(|(s, r)| {
+            vec![
+                format!("{s}"),
+                format!("{:.4}", r.correlation),
+                format!("{:.6e}", r.measured.mean),
+                format!("{:.2}", r.mdm_win_rate),
+            ]
+        })
+        .collect();
+    report::write_csv(
+        results_dir.join("ablation_variation.csv"),
+        &["sigma_on", "hypothesis_correlation", "nf_mean", "mdm_win_rate"],
+        &csv,
+    )?;
+    Ok(out)
+}
+
+/// A8 (extension): stuck-at faults × mapping policy — weight-space error of
+/// {identity, MDM, fault-aware remap} under increasing fault rates.
+pub fn fault_sweep(
+    rates: &[f64],
+    tile: usize,
+    k_bits: usize,
+    n_tiles: usize,
+    seed: u64,
+    results_dir: &Path,
+) -> Result<Vec<(f64, f64, f64, f64)>> {
+    use crate::faults::{fault_aware_row_remap, weight_error, FaultMap};
+    use crate::mdm::MappingPlan;
+    let profile = crate::models::WeightProfile::cnn();
+    let mut out = Vec::new();
+    for &rate in rates {
+        let (mut e_id, mut e_mdm, mut e_aware) = (0.0f64, 0.0f64, 0.0f64);
+        for t in 0..n_tiles {
+            let w = crate::models::generate_layer_weights(
+                tile,
+                tile / k_bits,
+                &profile,
+                seed ^ (t as u64) << 8,
+            )?;
+            let split = SignSplit::of(&w);
+            let sliced = crate::quant::BitSlicedMatrix::slice(&split.pos, k_bits)?;
+            let faults = FaultMap::random(
+                tile,
+                tile,
+                rate * 0.7,
+                rate * 0.3,
+                seed ^ 0xFA017 ^ (t as u64),
+            );
+            let ident = MappingPlan::identity(tile, tile);
+            e_id += weight_error(&sliced, &ident, &faults)?;
+            let mdm = map_tile(&sliced.planes, MappingConfig::mdm());
+            e_mdm += weight_error(&sliced, &mdm, &faults)?;
+            let remap = fault_aware_row_remap(&sliced, &faults)?;
+            let aware = MappingPlan::new(remap, (0..tile).collect());
+            e_aware += weight_error(&sliced, &aware, &faults)?;
+        }
+        let n = n_tiles as f64;
+        out.push((rate, e_id / n, e_mdm / n, e_aware / n));
+    }
+    let csv: Vec<Vec<String>> = out
+        .iter()
+        .map(|(r, a, b, c)| {
+            vec![
+                format!("{r}"),
+                format!("{a:.6e}"),
+                format!("{b:.6e}"),
+                format!("{c:.6e}"),
+            ]
+        })
+        .collect();
+    report::write_csv(
+        results_dir.join("ablation_faults.csv"),
+        &["fault_rate", "err_identity", "err_mdm", "err_fault_aware"],
+        &csv,
+    )?;
+    Ok(out)
+}
+
+/// A9 (extension): ADC resolution × PR distortion — output error of a tiled
+/// layer matvec when the per-column partials pass through an ADC of
+/// `bits` resolution, with and without PR distortion and MDM.
+pub fn adc_sweep(
+    bits_list: &[u32],
+    tile: usize,
+    k_bits: usize,
+    seed: u64,
+    results_dir: &Path,
+) -> Result<Vec<(u32, f64, f64, f64)>> {
+    use crate::crossbar::{quantize_partials, AdcTransfer};
+    let profile = crate::models::WeightProfile::cnn();
+    let w = crate::models::generate_layer_weights(tile, tile / k_bits, &profile, seed)?;
+    let split = SignSplit::of(&w);
+    let tiling = LayerTiling::partition(&split.pos, TileGeometry::new(tile, tile, k_bits)?)?;
+    let mut rng = Xoshiro256::seeded(seed ^ 0xADC);
+    let xdata: Vec<f32> = (0..4 * tile).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+    let x = crate::tensor::Tensor::new(&[4, tile], xdata)?;
+    let clean = tiling.matvec_clean(&x)?;
+    let denom = clean.max_abs().max(f32::MIN_POSITIVE) as f64;
+    let err = |y: &crate::tensor::Tensor| -> f64 {
+        y.data()
+            .iter()
+            .zip(clean.data())
+            .map(|(a, b)| ((a - b).abs()) as f64)
+            .sum::<f64>()
+            / (y.len() as f64 * denom)
+    };
+    let eta = -2e-3;
+    let mut out = Vec::new();
+    for &bits in bits_list {
+        // Ideal analog, ADC only.
+        let adc = AdcTransfer::fit(bits, &clean)?;
+        let e_adc = err(&quantize_partials(&adc, &clean));
+        // PR distortion + ADC, conventional vs MDM mapping.
+        let conv = tiling.matvec_noisy(&x, MappingConfig::conventional(), eta)?;
+        let e_conv = err(&quantize_partials(&adc, &conv));
+        let mdm = tiling.matvec_noisy(&x, MappingConfig::mdm(), eta)?;
+        let e_mdm = err(&quantize_partials(&adc, &mdm));
+        out.push((bits, e_adc, e_conv, e_mdm));
+    }
+    let csv: Vec<Vec<String>> = out
+        .iter()
+        .map(|(b, a, c, m)| {
+            vec![
+                b.to_string(),
+                format!("{a:.6e}"),
+                format!("{c:.6e}"),
+                format!("{m:.6e}"),
+            ]
+        })
+        .collect();
+    report::write_csv(
+        results_dir.join("ablation_adc.csv"),
+        &["adc_bits", "err_adc_only", "err_pr_conventional", "err_pr_mdm"],
+        &csv,
+    )?;
+    Ok(out)
+}
+
+/// A6 (extension): per-tile MDM vs **global cross-tile MDM** on a layer.
+#[derive(Debug, Clone)]
+pub struct GlobalSortRow {
+    pub scheme: String,
+    pub nf_mean: f64,
+}
+
+/// Compare {identity, per-tile MDM, global MDM} mean tile NF on a
+/// bell-shaped synthetic layer (reversed dataflow throughout).
+pub fn global_sort_compare(
+    fan_in: usize,
+    tile: usize,
+    k_bits: usize,
+    seed: u64,
+    results_dir: &Path,
+) -> Result<Vec<GlobalSortRow>> {
+    use crate::mdm::{global_row_assignment, row_stats, Dataflow, MappingConfig, RowOrder};
+    let profile = crate::models::WeightProfile::cnn();
+    let w = crate::models::generate_layer_weights(fan_in, tile / k_bits, &profile, seed)?;
+    let split = SignSplit::of(&w);
+    let sliced = crate::quant::BitSlicedMatrix::slice(&split.pos, k_bits)?;
+    // Reversed dataflow applied to the full layer planes once.
+    let planes = sliced.planes.reverse_cols()?;
+    let n_chunks = fan_in.div_ceil(tile);
+
+    let chunk_nf = |planes: &crate::tensor::Tensor, sort_within: bool| -> Result<f64> {
+        let mut acc = 0.0;
+        for c in 0..n_chunks {
+            let rows: Vec<usize> =
+                (c * tile..((c + 1) * tile).min(fan_in)).collect();
+            let chunk = planes.permute_rows(&rows)?;
+            let placed = if sort_within {
+                let cfg = MappingConfig {
+                    dataflow: Dataflow::Conventional, // already reversed above
+                    row_order: RowOrder::MdmScore,
+                };
+                crate::mdm::map_tile(&chunk, cfg).apply(&chunk)?
+            } else {
+                chunk
+            };
+            acc += manhattan_nf_mean(&placed, 1.0);
+        }
+        Ok(acc / n_chunks as f64)
+    };
+
+    let nf_identity = chunk_nf(&planes, false)?;
+    let nf_per_tile = chunk_nf(&planes, true)?;
+    let counts = row_stats(&planes).count;
+    let global_perm = global_row_assignment(&counts, tile);
+    let globally = planes.permute_rows(&global_perm)?;
+    let nf_global = chunk_nf(&globally, false)?;
+
+    let rows = vec![
+        GlobalSortRow { scheme: "identity".into(), nf_mean: nf_identity },
+        GlobalSortRow { scheme: "per_tile_mdm".into(), nf_mean: nf_per_tile },
+        GlobalSortRow { scheme: "global_mdm".into(), nf_mean: nf_global },
+    ];
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| vec![r.scheme.clone(), format!("{:.4}", r.nf_mean)])
+        .collect();
+    report::write_csv(results_dir.join("ablation_global_sort.csv"), &["scheme", "nf_mean"], &csv)?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("abl_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn tile_size_sweep_shows_tradeoff() {
+        let dir = tmp("ts");
+        let rows = tile_size_sweep(&[16, 64], 8, 1, &dir).unwrap();
+        // Bigger tiles -> higher NF but fewer sync events.
+        assert!(rows[1].nf_conventional > rows[0].nf_conventional);
+        assert!(rows[1].sync_events < rows[0].sync_events);
+        // MDM reduces NF at every size.
+        for r in &rows {
+            assert!(r.nf_mdm < r.nf_conventional, "{r:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sparsity_sweep_mdm_better_when_sparse() {
+        let dir = tmp("sp");
+        let rows = sparsity_sweep(&[0.5, 0.9], 32, 4, 2, &dir).unwrap();
+        for r in &rows {
+            assert!(r.reduction_pct >= 0.0, "{r:?}");
+        }
+        // Sparser tiles leave more room for reordering.
+        assert!(rows[1].reduction_pct > rows[0].reduction_pct, "{rows:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adc_sweep_error_shrinks_with_bits() {
+        let dir = tmp("adc");
+        let rows = adc_sweep(&[4, 8, 12], 32, 8, 5, &dir).unwrap();
+        // ADC-only error decreases with resolution.
+        assert!(rows[2].1 < rows[0].1, "{rows:?}");
+        // With PR distortion the total error is at least the ADC-only error.
+        for r in &rows {
+            assert!(r.2 >= r.1 * 0.5, "{r:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn variation_sweep_reports_all_sigmas() {
+        let dir = tmp("var");
+        let rows = variation_sweep(&[0.05, 0.2], 8, 4, 3, &dir).unwrap();
+        assert_eq!(rows.len(), 2);
+        for (_, r) in &rows {
+            assert!(r.measured.mean > 0.0);
+        }
+        assert!(dir.join("ablation_variation.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_sweep_error_grows_and_aware_helps() {
+        let dir = tmp("flt");
+        let rows = fault_sweep(&[0.01, 0.1], 32, 8, 3, 4, &dir).unwrap();
+        // Error grows with fault rate for every policy.
+        assert!(rows[1].1 > rows[0].1);
+        // Fault-aware remap beats identity at the high rate.
+        assert!(rows[1].3 < rows[1].1, "{rows:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn global_sort_beats_per_tile() {
+        let dir = tmp("gs");
+        let rows = global_sort_compare(256, 64, 8, 5, &dir).unwrap();
+        let nf = |s: &str| rows.iter().find(|r| r.scheme == s).unwrap().nf_mean;
+        assert!(nf("per_tile_mdm") < nf("identity"));
+        assert!(nf("global_mdm") <= nf("per_tile_mdm") + 1e-9, "{rows:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roworder_mdm_is_best() {
+        let dir = tmp("ro");
+        let rows = roworder_compare(32, 8, 3, 3, &dir).unwrap();
+        let nf = |p: &str| rows.iter().find(|r| r.policy == p).unwrap().nf_mean;
+        assert!(nf("mdm_score") <= nf("identity") + 1e-12);
+        assert!(nf("mdm_score") <= nf("random") + 1e-12);
+        assert!(nf("mdm_score") <= nf("manhattan_asc") + 1e-12);
+        assert!(nf("mdm_score") <= nf("magnitude_desc") + 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

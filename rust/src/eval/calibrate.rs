@@ -1,0 +1,99 @@
+//! E6 / §V-C — calibrating the Eq.-17 noise coefficient η against the
+//! circuit solver.
+//!
+//! The paper calibrates η in SPICE so that Eq.-17-distorted weights
+//! reproduce the r = 2.5 Ω behaviour (yielding η = 2·10⁻³). We do the same
+//! against our solver: to first order the aggregate relative current
+//! deviation of a tile is `NF ≈ η · mean_active(d_M)`, so each random tile
+//! yields an estimate `η̂ = NF_measured / mean_active(d_M)`; we report the
+//! mean over tiles (and the OLS slope variant, which weighs dense tiles
+//! more).
+
+use super::random_planes;
+use crate::circuit::CrossbarCircuit;
+use crate::nf::{active_count, aggregate_manhattan};
+use crate::report;
+use crate::rng::Xoshiro256;
+use crate::stats::ols_through_origin;
+use crate::CrossbarPhysics;
+use anyhow::Result;
+use std::path::Path;
+
+/// Calibration result.
+#[derive(Debug, Clone)]
+pub struct EtaCalibration {
+    /// Mean per-tile estimate.
+    pub eta_mean: f64,
+    /// OLS-through-origin slope of NF against mean active distance.
+    pub eta_ols: f64,
+    /// Per-tile estimates.
+    pub estimates: Vec<f64>,
+}
+
+/// Run the calibration on random tiles.
+pub fn run(
+    n_tiles: usize,
+    tile: usize,
+    sparsity: f64,
+    physics: CrossbarPhysics,
+    seed: u64,
+    results_dir: &Path,
+) -> Result<EtaCalibration> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut mean_dist = Vec::with_capacity(n_tiles);
+    let mut measured = Vec::with_capacity(n_tiles);
+    let mut estimates = Vec::with_capacity(n_tiles);
+    for _ in 0..n_tiles {
+        let planes = random_planes(tile, tile, 1.0 - sparsity, &mut rng);
+        let n = active_count(&planes).max(1);
+        let md = aggregate_manhattan(&planes) / n as f64;
+        let nf = CrossbarCircuit::from_planes(&planes, physics)?.solve()?.nf();
+        mean_dist.push(md);
+        measured.push(nf);
+        estimates.push(nf / md.max(f64::MIN_POSITIVE));
+    }
+    let eta_mean = estimates.iter().sum::<f64>() / estimates.len().max(1) as f64;
+    let eta_ols = ols_through_origin(&mean_dist, &measured);
+
+    let rows: Vec<Vec<String>> = mean_dist
+        .iter()
+        .zip(&measured)
+        .zip(&estimates)
+        .map(|((d, m), e)| {
+            vec![format!("{d:.4}"), format!("{m:.6e}"), format!("{e:.6e}")]
+        })
+        .collect();
+    report::write_csv(
+        results_dir.join("eta_calibration.csv"),
+        &["mean_active_distance", "nf_measured", "eta_estimate"],
+        &rows,
+    )?;
+    Ok(EtaCalibration { eta_mean, eta_ols, estimates })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_eta_near_first_order_ratio() {
+        // To first order η ≈ r/R_on (the per-segment relative drop); the
+        // multi-cell interaction pushes it above. The paper's 2e-3 at
+        // r/R_on = 8.3e-6 reflects their (much denser current) setup; what
+        // must hold on ours is the order of magnitude vs r/R_on.
+        let dir = std::env::temp_dir().join(format!("cal_{}", std::process::id()));
+        let p = CrossbarPhysics::default();
+        let c = run(20, 16, 0.8, p, 1, &dir).unwrap();
+        assert!(c.eta_mean > 0.0);
+        let ratio = c.eta_mean / p.parasitic_ratio();
+        assert!(
+            (0.5..200.0).contains(&ratio),
+            "eta {} implausible vs r/R_on {}",
+            c.eta_mean,
+            p.parasitic_ratio()
+        );
+        // The two estimators agree within 2x.
+        assert!(c.eta_ols > 0.0 && (c.eta_ols / c.eta_mean) < 2.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

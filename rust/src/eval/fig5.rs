@@ -1,0 +1,221 @@
+//! E3 / Fig. 5 — NF reduction with MDM for different dataflows, across the
+//! model zoo.
+//!
+//! As in the paper (§V-B), the Manhattan Hypothesis makes full-model NF
+//! evaluation tractable without circuit-solving every tile: we bit-slice
+//! every layer, tile it at the evaluation geometry, and score each tile's
+//! NF with Eq. 16 under four configurations:
+//! {conventional, reversed} × {identity, MDM row sort}. Reported per model:
+//! mean NF per configuration and the MDM reduction per dataflow (the
+//! paper's headline: up to 46% NF reduction; reversed dataflow improves
+//! MDM by up to 50% over conventional).
+
+use crate::crossbar::{LayerTiling, TileGeometry};
+use crate::mdm::{Dataflow, MappingConfig, RowOrder};
+use crate::models::{model_by_name, ModelWeights};
+use crate::nf::manhattan_nf_mean;
+use crate::quant::SignSplit;
+use crate::report;
+use crate::rng::Xoshiro256;
+use crate::runtime::ArtifactStore;
+use anyhow::Result;
+use std::path::Path;
+
+/// Per-model Fig. 5 row.
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub model: String,
+    /// Mean tile NF per configuration.
+    pub nf_conv_identity: f64,
+    pub nf_conv_mdm: f64,
+    pub nf_rev_identity: f64,
+    pub nf_rev_mdm: f64,
+}
+
+impl Fig5Row {
+    /// MDM reduction (%) under the conventional dataflow.
+    pub fn reduction_conventional(&self) -> f64 {
+        100.0 * (1.0 - self.nf_conv_mdm / self.nf_conv_identity.max(f64::MIN_POSITIVE))
+    }
+
+    /// MDM reduction (%) under the reversed dataflow (the paper's MDM).
+    pub fn reduction_reversed(&self) -> f64 {
+        100.0 * (1.0 - self.nf_rev_mdm / self.nf_rev_identity.max(f64::MIN_POSITIVE))
+    }
+
+    /// Full-MDM (reversed + sort) reduction vs the conventional baseline —
+    /// the paper's headline number.
+    pub fn reduction_full(&self) -> f64 {
+        100.0 * (1.0 - self.nf_rev_mdm / self.nf_conv_identity.max(f64::MIN_POSITIVE))
+    }
+}
+
+/// Fig. 5 configuration.
+#[derive(Debug, Clone)]
+pub struct Fig5Config {
+    pub models: Vec<String>,
+    pub geometry: TileGeometry,
+    /// Max tiles sampled per layer shape (NF statistics converge fast;
+    /// large layers have hundreds of thousands of tiles).
+    pub tiles_per_layer: usize,
+    pub seed: u64,
+    /// Load trained weights for miniresnet/tinyvit from this artifacts dir
+    /// when available.
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for Fig5Config {
+    fn default() -> Self {
+        Self {
+            models: crate::models::model_names().iter().map(|s| s.to_string()).collect(),
+            geometry: TileGeometry::paper_eval(),
+            tiles_per_layer: 32,
+            seed: 42,
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// Mean tile NF of a whole model under one mapping config.
+fn model_nf(
+    weights: &ModelWeights,
+    geometry: TileGeometry,
+    config: MappingConfig,
+    tiles_per_layer: usize,
+    rng: &mut Xoshiro256,
+) -> Result<f64> {
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for (w, desc) in weights.layers.iter().zip(&weights.desc.layers) {
+        let split = SignSplit::of(w);
+        for part in [&split.pos, &split.neg] {
+            // Lazy tiling: only materialize the sampled tiles (huge layers
+            // have O(10^5) tiles; the statistics need a few dozen).
+            let quant = crate::quant::Quantizer::fit(part, geometry.k_bits)?;
+            let (gr, gc) = LayerTiling::grid_for(part.rows(), part.cols(), geometry);
+            let total = gr * gc;
+            let idx: Vec<usize> = if total <= tiles_per_layer {
+                (0..total).collect()
+            } else {
+                rng.choose_k(total, tiles_per_layer)
+            };
+            for &i in &idx {
+                let tile = LayerTiling::build_tile(part, geometry, quant, i / gc, i % gc)?;
+                let plan = tile.plan(config);
+                let placed = plan.apply(&tile.sliced.planes)?;
+                // Weight by the layer's repeat count.
+                acc += manhattan_nf_mean(&placed, 1.0) * desc.count as f64;
+                n += desc.count;
+            }
+        }
+    }
+    Ok(acc / n.max(1) as f64)
+}
+
+/// Run Fig. 5 over the configured models.
+pub fn run(cfg: &Fig5Config, results_dir: &Path) -> Result<Vec<Fig5Row>> {
+    let mut rows = Vec::new();
+    let configs = [
+        MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::Identity },
+        MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::MdmScore },
+        MappingConfig { dataflow: Dataflow::Reversed, row_order: RowOrder::Identity },
+        MappingConfig { dataflow: Dataflow::Reversed, row_order: RowOrder::MdmScore },
+    ];
+    for name in &cfg.models {
+        let desc = model_by_name(name)?;
+        let weights = if desc.is_trained() && cfg.artifacts_dir.is_some() {
+            let dir = cfg.artifacts_dir.as_ref().expect("checked");
+            match ArtifactStore::open(dir)
+                .and_then(|s| s.weights(name))
+                .and_then(|mdt| {
+                    // Reuse ModelWeights::load_trained via the mdt path.
+                    drop(mdt);
+                    ModelWeights::load_trained(
+                        &desc,
+                        Path::new(dir).join("weights").join(format!("{name}.mdt")),
+                    )
+                }) {
+                Ok(w) => w,
+                Err(_) => ModelWeights::synthesize(&desc, cfg.seed)?,
+            }
+        } else {
+            ModelWeights::synthesize(&desc, cfg.seed)?
+        };
+        let mut nf = [0.0f64; 4];
+        for (i, c) in configs.iter().enumerate() {
+            // Fresh rng per config so all configs see the same tile sample.
+            let mut rng = Xoshiro256::seeded(cfg.seed ^ 0xF165);
+            nf[i] = model_nf(&weights, cfg.geometry, *c, cfg.tiles_per_layer, &mut rng)?;
+        }
+        rows.push(Fig5Row {
+            model: name.clone(),
+            nf_conv_identity: nf[0],
+            nf_conv_mdm: nf[1],
+            nf_rev_identity: nf[2],
+            nf_rev_mdm: nf[3],
+        });
+    }
+
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                format!("{:.6}", r.nf_conv_identity),
+                format!("{:.6}", r.nf_conv_mdm),
+                format!("{:.6}", r.nf_rev_identity),
+                format!("{:.6}", r.nf_rev_mdm),
+                format!("{:.2}", r.reduction_conventional()),
+                format!("{:.2}", r.reduction_reversed()),
+                format!("{:.2}", r.reduction_full()),
+            ]
+        })
+        .collect();
+    report::write_csv(
+        results_dir.join("fig5_nf_reduction.csv"),
+        &[
+            "model",
+            "nf_conv_identity",
+            "nf_conv_mdm",
+            "nf_rev_identity",
+            "nf_rev_mdm",
+            "reduction_conv_pct",
+            "reduction_rev_pct",
+            "reduction_full_pct",
+        ],
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_structure_on_two_models() {
+        let dir = std::env::temp_dir().join(format!("fig5_{}", std::process::id()));
+        let cfg = Fig5Config {
+            models: vec!["resnet18".into(), "deit_s".into()],
+            tiles_per_layer: 4,
+            ..Default::default()
+        };
+        let rows = run(&cfg, &dir).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            // MDM never hurts under the Manhattan model.
+            assert!(r.reduction_conventional() >= -1e-9, "{r:?}");
+            assert!(r.reduction_reversed() >= -1e-9, "{r:?}");
+            // Full MDM meaningfully reduces NF.
+            assert!(r.reduction_full() > 5.0, "{r:?}");
+        }
+        // The transformer benefits less than the CNN (§V-C).
+        assert!(
+            rows[0].reduction_full() > rows[1].reduction_full(),
+            "resnet {:?} vs deit {:?}",
+            rows[0].reduction_full(),
+            rows[1].reduction_full()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

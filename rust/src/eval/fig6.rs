@@ -1,0 +1,199 @@
+//! E4 / Fig. 6 — model accuracy under PR-noise injection, with and without
+//! MDM.
+//!
+//! The paper injects position-dependent noise (Eq. 17, η calibrated in
+//! SPICE to 2·10⁻³) into every weight and evaluates ImageNet accuracy per
+//! configuration. Here: the coordinator programs the two trained models'
+//! crossbars under each configuration and serves the test split through the
+//! AOT forward graph (the L1 Pallas kernel does the matmuls) — measuring
+//! exactly the accuracy a CIM deployment with those crossbars would see.
+
+use crate::coordinator::{Engine, EngineConfig, ModelKind};
+use crate::crossbar::TileGeometry;
+use crate::mdm::{Dataflow, MappingConfig, RowOrder};
+use crate::report;
+use anyhow::Result;
+use std::path::Path;
+
+/// One accuracy measurement.
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub model: String,
+    pub config: String,
+    pub accuracy: f64,
+}
+
+/// The evaluated configurations: label + (mapping, noisy?).
+pub fn configurations() -> Vec<(&'static str, MappingConfig, bool)> {
+    vec![
+        ("ideal", MappingConfig::conventional(), false),
+        ("noisy_conventional", MappingConfig::conventional(), true),
+        (
+            "noisy_reversed_only",
+            MappingConfig { dataflow: Dataflow::Reversed, row_order: RowOrder::Identity },
+            true,
+        ),
+        ("noisy_mdm", MappingConfig::mdm(), true),
+        // Row sort at conventional dataflow: isolates the component of MDM
+        // that is robust in *weight space* at any η (the reversal trades
+        // cell-count NF against bit-significance placement — see
+        // EXPERIMENTS.md "beyond the paper").
+        (
+            "noisy_sort_only",
+            MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::MdmScore },
+            true,
+        ),
+        (
+            "noisy_random",
+            MappingConfig {
+                dataflow: Dataflow::Conventional,
+                row_order: RowOrder::Random { seed: 7 },
+            },
+            true,
+        ),
+    ]
+}
+
+/// Number of fresh in-distribution eval samples used on top of the
+/// artifact test shard: 2048 gives a binomial σ of ~0.4 points at 95%
+/// accuracy, enough to resolve the MDM deltas.
+pub const EVAL_N: usize = 2048;
+
+/// Run Fig. 6 for the given models.
+pub fn run(
+    artifacts_dir: &str,
+    models: &[ModelKind],
+    eta_signed: f64,
+    geometry: TileGeometry,
+    results_dir: &Path,
+) -> Result<Vec<Fig6Row>> {
+    // Larger in-distribution eval split (same prototypes as the artifact
+    // shards; see dataset::fresh_eval_split).
+    let test = crate::dataset::fresh_eval_split(EVAL_N, 4242);
+
+    let mut rows = Vec::new();
+    for &model in models {
+        for (label, mapping, noisy) in configurations() {
+            let cfg = EngineConfig {
+                model,
+                mapping,
+                eta_signed: if noisy { eta_signed } else { 0.0 },
+                geometry,
+                fwd_batch: 16,
+            };
+            let engine = Engine::program(artifacts_dir, cfg)?;
+            let accuracy = engine.accuracy(&test)?;
+            rows.push(Fig6Row {
+                model: model.weights_name().to_string(),
+                config: label.to_string(),
+                accuracy,
+            });
+        }
+    }
+
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| vec![r.model.clone(), r.config.clone(), format!("{:.4}", r.accuracy)])
+        .collect();
+    report::write_csv(
+        results_dir.join("fig6_accuracy.csv"),
+        &["model", "config", "accuracy"],
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+/// η sweep: accuracy of {conventional, MDM, sort-only} at several noise
+/// coefficients — quantifies where each MDM component pays off (the
+/// "beyond the paper" analysis in EXPERIMENTS.md).
+pub fn run_eta_sweep(
+    artifacts_dir: &str,
+    model: ModelKind,
+    etas: &[f64],
+    geometry: TileGeometry,
+    results_dir: &Path,
+) -> Result<Vec<(f64, String, f64)>> {
+    let test = crate::dataset::fresh_eval_split(EVAL_N, 4242);
+    let configs: Vec<(&str, MappingConfig)> = vec![
+        ("conventional", MappingConfig::conventional()),
+        ("mdm", MappingConfig::mdm()),
+        (
+            "sort_only",
+            MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::MdmScore },
+        ),
+        (
+            "reversed_only",
+            MappingConfig { dataflow: Dataflow::Reversed, row_order: RowOrder::Identity },
+        ),
+    ];
+    let mut out = Vec::new();
+    for &eta in etas {
+        for (label, mapping) in &configs {
+            let engine = Engine::program(
+                artifacts_dir,
+                EngineConfig { model, mapping: *mapping, eta_signed: eta, geometry, fwd_batch: 16 },
+            )?;
+            out.push((eta, label.to_string(), engine.accuracy(&test)?));
+        }
+    }
+    let csv: Vec<Vec<String>> = out
+        .iter()
+        .map(|(e, l, a)| vec![format!("{e:e}"), l.clone(), format!("{a:.4}")])
+        .collect();
+    report::write_csv(
+        results_dir.join(format!("fig6_eta_sweep_{}.csv", model.weights_name())),
+        &["eta_signed", "config", "accuracy"],
+        &csv,
+    )?;
+    Ok(out)
+}
+
+/// Accuracy delta restored by MDM: `acc(mdm) − acc(conventional)` per model
+/// (the paper's "+3.6% average in ResNets").
+pub fn mdm_restoration(rows: &[Fig6Row]) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let models: Vec<String> = {
+        let mut m: Vec<String> = rows.iter().map(|r| r.model.clone()).collect();
+        m.dedup();
+        m
+    };
+    for m in models {
+        let get = |cfg: &str| {
+            rows.iter()
+                .find(|r| r.model == m && r.config == cfg)
+                .map(|r| r.accuracy)
+                .unwrap_or(0.0)
+        };
+        let delta = get("noisy_mdm") - get("noisy_conventional");
+        out.push((m, delta));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn restoration_computed_per_model() {
+        let rows = vec![
+            Fig6Row { model: "a".into(), config: "noisy_conventional".into(), accuracy: 0.8 },
+            Fig6Row { model: "a".into(), config: "noisy_mdm".into(), accuracy: 0.9 },
+            Fig6Row { model: "b".into(), config: "noisy_conventional".into(), accuracy: 0.7 },
+            Fig6Row { model: "b".into(), config: "noisy_mdm".into(), accuracy: 0.72 },
+        ];
+        let r = mdm_restoration(&rows);
+        assert_eq!(r.len(), 2);
+        assert!((r[0].1 - 0.1).abs() < 1e-12);
+        assert!((r[1].1 - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn configurations_cover_paper_setups() {
+        let cfgs = configurations();
+        let labels: Vec<&str> = cfgs.iter().map(|c| c.0).collect();
+        assert!(labels.contains(&"ideal"));
+        assert!(labels.contains(&"noisy_conventional"));
+        assert!(labels.contains(&"noisy_mdm"));
+    }
+}

@@ -1,0 +1,40 @@
+//! Experiment drivers — one per paper figure/table plus ablations
+//! (see DESIGN.md §3 for the experiment index).
+//!
+//! Every driver returns structured results *and* writes a CSV under the
+//! configured results directory, so the paper's figures regenerate both on
+//! screen (`mdm <cmd>` via `report::`) and as data files (`results/*.csv`
+//! consumed by EXPERIMENTS.md).
+
+pub mod ablations;
+pub mod calibrate;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod sparsity;
+
+use crate::rng::Xoshiro256;
+use crate::tensor::Tensor;
+
+/// Random binary planes with (approximately) the given cell density —
+/// shared by Fig. 4 and the ablations (the paper uses ~80% sparsity = 20%
+/// density tiles).
+pub fn random_planes(rows: usize, cols: usize, density: f64, rng: &mut Xoshiro256) -> Tensor {
+    let data: Vec<f32> =
+        (0..rows * cols).map(|_| if rng.bernoulli(density) { 1.0 } else { 0.0 }).collect();
+    Tensor::new(&[rows, cols], data).expect("consistent shape")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_planes_density() {
+        let mut rng = Xoshiro256::seeded(1);
+        let p = random_planes(64, 64, 0.2, &mut rng);
+        let d = 1.0 - p.sparsity();
+        assert!((d - 0.2).abs() < 0.03, "density {d}");
+    }
+}

@@ -1,0 +1,286 @@
+//! Stuck-at-fault (SAF) modeling — the companion nonideality the paper's
+//! related work targets (refs [11–14]): memristors stuck at low resistance
+//! (SA-ON) or high resistance (SA-OFF) regardless of the programmed value.
+//!
+//! MDM interacts with SAFs: moving dense rows toward the I/O rails changes
+//! *which* programmed bits coincide with fault sites. This module provides
+//! the fault-map generator, the bit-plane corruption pass, and the repair
+//! heuristic (row remapping away from faulty high-significance cells) used
+//! by the `ablation` harness to quantify that interaction.
+
+use crate::mdm::MappingPlan;
+use crate::quant::BitSlicedMatrix;
+use crate::rng::Xoshiro256;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// One cell's fault state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultState {
+    Healthy,
+    /// Stuck at low resistance: reads as active (bit 1) no matter what.
+    StuckOn,
+    /// Stuck at high resistance: reads as inactive (bit 0).
+    StuckOff,
+}
+
+/// A crossbar-sized fault map.
+#[derive(Debug, Clone)]
+pub struct FaultMap {
+    rows: usize,
+    cols: usize,
+    states: Vec<FaultState>,
+}
+
+impl FaultMap {
+    /// All-healthy map.
+    pub fn healthy(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, states: vec![FaultState::Healthy; rows * cols] }
+    }
+
+    /// Random fault map: each cell is SA-OFF with `p_off`, SA-ON with
+    /// `p_on` (literature-typical totals: 0.1%–10%; SA-OFF dominates).
+    pub fn random(rows: usize, cols: usize, p_off: f64, p_on: f64, seed: u64) -> Self {
+        assert!(p_off + p_on <= 1.0);
+        let mut rng = Xoshiro256::seeded(seed);
+        let states = (0..rows * cols)
+            .map(|_| {
+                let u = rng.uniform();
+                if u < p_off {
+                    FaultState::StuckOff
+                } else if u < p_off + p_on {
+                    FaultState::StuckOn
+                } else {
+                    FaultState::Healthy
+                }
+            })
+            .collect();
+        Self { rows, cols, states }
+    }
+
+    /// Rows of the map.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns of the map.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// State at a physical cell.
+    pub fn state(&self, j: usize, k: usize) -> FaultState {
+        self.states[j * self.cols + k]
+    }
+
+    /// Set one cell (tests / targeted scenarios).
+    pub fn set(&mut self, j: usize, k: usize, s: FaultState) {
+        self.states[j * self.cols + k] = s;
+    }
+
+    /// Fraction of non-healthy cells.
+    pub fn fault_rate(&self) -> f64 {
+        let f = self.states.iter().filter(|s| !matches!(s, FaultState::Healthy)).count();
+        f as f64 / self.states.len().max(1) as f64
+    }
+}
+
+/// Apply a fault map to **physically laid-out** binary planes: stuck-on
+/// cells read 1, stuck-off cells read 0.
+pub fn corrupt_planes(physical: &Tensor, faults: &FaultMap) -> Result<Tensor> {
+    ensure!(
+        physical.rows() == faults.rows() && physical.cols() == faults.cols(),
+        "planes {:?} vs fault map {}x{}",
+        physical.shape(),
+        faults.rows(),
+        faults.cols()
+    );
+    let mut out = physical.clone();
+    for j in 0..faults.rows() {
+        let row = out.row_mut(j);
+        for (k, v) in row.iter_mut().enumerate() {
+            match faults.state(j, k) {
+                FaultState::Healthy => {}
+                FaultState::StuckOn => *v = 1.0,
+                FaultState::StuckOff => *v = 0.0,
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Mean absolute weight error a (plan, fault map) pair induces on a
+/// bit-sliced tile, normalized by the quantizer scale. This is the
+/// significance-weighted metric: a fault on a high-order bit of a large
+/// weight costs more.
+pub fn weight_error(
+    sliced: &BitSlicedMatrix,
+    plan: &MappingPlan,
+    faults: &FaultMap,
+) -> Result<f64> {
+    ensure!(
+        plan.rows() == sliced.rows() && plan.cols() == sliced.cols(),
+        "plan does not fit tile"
+    );
+    let physical = plan.apply(&sliced.planes)?;
+    let corrupted = corrupt_planes(&physical, faults)?;
+    let logical = plan.unapply(&corrupted)?;
+    // Reconstruct both weight matrices and compare.
+    let mut err = 0.0f64;
+    let (j_rows, n, k) = (sliced.rows(), sliced.n_weights, sliced.k_bits);
+    for j in 0..j_rows {
+        for w in 0..n {
+            let mut clean = 0.0f64;
+            let mut dirty = 0.0f64;
+            for b in 0..k {
+                let c = w * k + b;
+                let sig = 0.5f64.powi(b as i32 + 1);
+                if sliced.active(j, c) {
+                    clean += sig;
+                }
+                if logical.at2(j, c) != 0.0 {
+                    dirty += sig;
+                }
+            }
+            err += (clean - dirty).abs();
+        }
+    }
+    Ok(err / (j_rows * n) as f64)
+}
+
+/// Greedy fault-aware row remapping: assign logical rows to physical rows
+/// so that high-significance active bits avoid SA-OFF sites and inactive
+/// high-significance positions avoid SA-ON sites. A simple cost-greedy
+/// matching (logical rows in descending activity, each taking the
+/// lowest-cost remaining physical row).
+pub fn fault_aware_row_remap(sliced: &BitSlicedMatrix, faults: &FaultMap) -> Result<Vec<usize>> {
+    ensure!(faults.rows() == sliced.rows() && faults.cols() == sliced.cols());
+    let j_rows = sliced.rows();
+    let cols = sliced.cols();
+    // Cost of placing logical row l on physical row p.
+    let cost = |l: usize, p: usize| -> f64 {
+        let mut c = 0.0;
+        for k in 0..cols {
+            let sig = 0.5f64.powi(sliced.bit_of_col(k) as i32 + 1);
+            let active = sliced.active(l, k);
+            match faults.state(p, k) {
+                FaultState::Healthy => {}
+                FaultState::StuckOff => {
+                    if active {
+                        c += sig;
+                    }
+                }
+                FaultState::StuckOn => {
+                    if !active {
+                        c += sig;
+                    }
+                }
+            }
+        }
+        c
+    };
+    // Order logical rows by activity (desc) so heavy rows pick first.
+    let stats = crate::mdm::row_stats(&sliced.planes);
+    let order = crate::tensor::ops::argsort_f64(
+        &stats.count.iter().map(|&c| -(c as f64)).collect::<Vec<_>>(),
+    );
+    let mut taken = vec![false; j_rows];
+    let mut perm = vec![usize::MAX; j_rows]; // perm[physical] = logical
+    for &l in &order {
+        let mut best = (f64::INFINITY, usize::MAX);
+        for p in 0..j_rows {
+            if !taken[p] {
+                let c = cost(l, p);
+                if c < best.0 {
+                    best = (c, p);
+                }
+            }
+        }
+        taken[best.1] = true;
+        perm[best.1] = l;
+    }
+    Ok(perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mdm::{map_tile, MappingConfig};
+
+    fn tile(seed: u64) -> BitSlicedMatrix {
+        let mut rng = Xoshiro256::seeded(seed);
+        let data: Vec<f32> = (0..32 * 4).map(|_| rng.laplace(0.2).abs() as f32).collect();
+        let w = Tensor::new(&[32, 4], data).unwrap();
+        BitSlicedMatrix::slice(&w, 8).unwrap()
+    }
+
+    #[test]
+    fn healthy_map_is_identity() {
+        let s = tile(1);
+        let f = FaultMap::healthy(32, 32);
+        assert_eq!(f.fault_rate(), 0.0);
+        let plan = MappingPlan::identity(32, 32);
+        assert_eq!(weight_error(&s, &plan, &f).unwrap(), 0.0);
+        let phys = plan.apply(&s.planes).unwrap();
+        assert_eq!(corrupt_planes(&phys, &f).unwrap(), phys);
+    }
+
+    #[test]
+    fn random_map_rate_matches() {
+        let f = FaultMap::random(64, 64, 0.05, 0.02, 7);
+        assert!((f.fault_rate() - 0.07).abs() < 0.02, "{}", f.fault_rate());
+    }
+
+    #[test]
+    fn stuck_on_forces_ones() {
+        let s = tile(2);
+        let mut f = FaultMap::healthy(32, 32);
+        f.set(3, 5, FaultState::StuckOn);
+        f.set(4, 6, FaultState::StuckOff);
+        let phys = MappingPlan::identity(32, 32).apply(&s.planes).unwrap();
+        let c = corrupt_planes(&phys, &f).unwrap();
+        assert_eq!(c.at2(3, 5), 1.0);
+        assert_eq!(c.at2(4, 6), 0.0);
+    }
+
+    #[test]
+    fn weight_error_positive_under_faults() {
+        let s = tile(3);
+        let f = FaultMap::random(32, 32, 0.05, 0.05, 11);
+        let plan = map_tile(&s.planes, MappingConfig::conventional());
+        let e = weight_error(&s, &plan, &f).unwrap();
+        assert!(e > 0.0);
+        assert!(e < 1.0, "error {e} should be a small fraction of scale");
+    }
+
+    #[test]
+    fn fault_aware_remap_reduces_error() {
+        let mut worse = 0;
+        for seed in 0..8u64 {
+            let s = tile(100 + seed);
+            let f = FaultMap::random(32, 32, 0.08, 0.04, 200 + seed);
+            let ident = MappingPlan::identity(32, 32);
+            let e0 = weight_error(&s, &ident, &f).unwrap();
+            let remap = fault_aware_row_remap(&s, &f).unwrap();
+            let plan = MappingPlan::new(remap, (0..32).collect());
+            let e1 = weight_error(&s, &plan, &f).unwrap();
+            if e1 > e0 + 1e-12 {
+                worse += 1;
+            }
+        }
+        // Greedy matching: allow an occasional tie, never a majority loss.
+        assert!(worse <= 1, "fault-aware remap increased error on {worse}/8 maps");
+    }
+
+    #[test]
+    fn remap_is_permutation() {
+        let s = tile(5);
+        let f = FaultMap::random(32, 32, 0.1, 0.05, 17);
+        let perm = fault_aware_row_remap(&s, &f).unwrap();
+        let mut seen = vec![false; 32];
+        for &p in &perm {
+            assert!(p < 32 && !seen[p]);
+            seen[p] = true;
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! # mdm-cim — Manhattan Distance Mapping for memristive CIM crossbars
+//!
+//! A full reproduction of *MDM: Manhattan Distance Mapping of DNN Weights for
+//! Parasitic-Resistance-Resilient Memristive Crossbars* (Farias, Martins,
+//! Kung — CS.AR 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the CIM accelerator coordinator: weight tiling,
+//!   the MDM mapping pass, a crossbar-unit scheduler with digital
+//!   accumulation and an ADC model, a circuit-level parasitic-resistance
+//!   simulator (the SPICE substitute), and the full experiment/benchmark
+//!   harness for every figure in the paper.
+//! * **L2 (python/compile)** — JAX model graphs (MiniResNet, TinyViT) and a
+//!   train step, AOT-lowered once to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the crossbar-tile
+//!   MVM under position-dependent PR distortion, verified against a pure-jnp
+//!   oracle.
+//!
+//! Python never runs on the request path: `runtime` loads the AOT HLO
+//! artifacts through PJRT and `coordinator` drives them from Rust threads.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod circuit;
+pub mod config;
+pub mod coordinator;
+pub mod crossbar;
+pub mod dataset;
+pub mod eval;
+pub mod faults;
+pub mod mdm;
+pub mod models;
+pub mod nf;
+pub mod noise;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod testsupport;
+pub mod variation;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Physical constants used throughout the paper's evaluation (§III-B,
+/// Fig. 2 caption): wire parasitic resistance and device on/off resistance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrossbarPhysics {
+    /// Parasitic resistance of one wire segment, in ohms (paper: 2.5 Ω).
+    pub r_wire: f64,
+    /// Device LRS ("on") resistance, in ohms (paper: 300 kΩ).
+    pub r_on: f64,
+    /// Device HRS ("off") resistance, in ohms (paper: 3 MΩ).
+    pub r_off: f64,
+    /// Row drive voltage, in volts.
+    pub v_in: f64,
+}
+
+impl Default for CrossbarPhysics {
+    fn default() -> Self {
+        Self { r_wire: 2.5, r_on: 300e3, r_off: 3e6, v_in: 1.0 }
+    }
+}
+
+impl CrossbarPhysics {
+    /// `r / R_on` — the proportionality constant of the Manhattan
+    /// Hypothesis (Eq. 14/16).
+    pub fn parasitic_ratio(&self) -> f64 {
+        self.r_wire / self.r_on
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_physics_matches_paper() {
+        let p = CrossbarPhysics::default();
+        assert_eq!(p.r_wire, 2.5);
+        assert_eq!(p.r_on, 300e3);
+        assert_eq!(p.r_off, 3e6);
+        assert!((p.parasitic_ratio() - 2.5 / 300e3).abs() < 1e-18);
+    }
+}

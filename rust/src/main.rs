@@ -1,0 +1,729 @@
+//! `mdm` — the CLI leader process of the mdm-cim stack.
+//!
+//! Subcommands map 1:1 to the paper's experiments (DESIGN.md §3):
+//!
+//! ```text
+//! mdm heatmap   [--size N]                      E1 / Fig. 2
+//! mdm fit       [--tiles N] [--tile N]          E2 / Fig. 4
+//! mdm nf        [--models a,b,..] [--tiles N]   E3 / Fig. 5
+//! mdm accuracy  [--eta X] [--models a,b]        E4 / Fig. 6
+//! mdm calibrate-eta [--tiles N] [--tile N]      E6
+//! mdm sparsity  [--models a,b,..]               E5 / Theorem 1
+//! mdm ablation  <tilesize|sparsity|ratio|roworder>   A1–A3
+//! mdm serve     [--model m] [--requests N] ...  serving driver
+//! mdm netlist   [--rows J] [--cols K]           SPICE deck export
+//! mdm info                                      artifact/manifest summary
+//! ```
+//!
+//! Common flags: `--config path.toml`, `--results dir`, `--artifacts dir`,
+//! `--seed N`. No `clap` offline — a small hand-rolled parser below.
+
+use anyhow::{bail, Context, Result};
+use mdm_cim::config::{Config, ExperimentConfig, ServerConfig};
+use mdm_cim::coordinator::{EngineConfig, ModelKind, Server};
+use mdm_cim::crossbar::TileGeometry;
+use mdm_cim::mdm::MappingConfig;
+use mdm_cim::report;
+use mdm_cim::{eval, CrossbarPhysics};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed command line: subcommand + `--key value` flags.
+struct Args {
+    cmd: String,
+    sub: Option<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Result<Args> {
+    if argv.is_empty() {
+        bail!("usage: mdm <command> [--flag value ...]; see `mdm help`");
+    }
+    let cmd = argv[0].clone();
+    let mut sub = None;
+    let mut flags = HashMap::new();
+    let mut i = 1;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(key) = a.strip_prefix("--") {
+            // A flag followed by another flag (or nothing) is boolean.
+            match argv.get(i + 1) {
+                Some(next) if !next.starts_with("--") => {
+                    flags.insert(key.to_string(), next.clone());
+                    i += 2;
+                }
+                _ => {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            }
+        } else if sub.is_none() {
+            sub = Some(a.clone());
+            i += 1;
+        } else {
+            bail!("unexpected argument {a:?}");
+        }
+    }
+    Ok(Args { cmd, sub, flags })
+}
+
+impl Args {
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.flags.get("config") {
+        ExperimentConfig::from_config(&Config::load(path)?)
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(v) = args.flags.get("results") {
+        cfg.results_dir = v.clone();
+    }
+    if let Some(v) = args.flags.get("artifacts") {
+        cfg.artifacts_dir = v.clone();
+    }
+    if let Some(v) = args.flags.get("seed") {
+        cfg.seed = v.parse().context("--seed")?;
+    }
+    if let Some(v) = args.flags.get("eta") {
+        cfg.eta_signed = v.parse().context("--eta")?;
+    }
+    if let Some(v) = args.flags.get("tile") {
+        cfg.tile_size = v.parse().context("--tile")?;
+    }
+    Ok(cfg)
+}
+
+fn models_flag(args: &Args, default_all: bool) -> Vec<String> {
+    match args.flags.get("models") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None if default_all => {
+            mdm_cim::models::model_names().iter().map(|s| s.to_string()).collect()
+        }
+        None => vec!["miniresnet".into(), "tinyvit".into()],
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&argv)?;
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        "heatmap" => cmd_heatmap(&args),
+        "fit" => cmd_fit(&args),
+        "nf" => cmd_nf(&args),
+        "accuracy" => cmd_accuracy(&args),
+        "calibrate-eta" => cmd_calibrate(&args),
+        "sparsity" => cmd_sparsity(&args),
+        "ablation" => cmd_ablation(&args),
+        "serve" => cmd_serve(&args),
+        "netlist" => cmd_netlist(&args),
+        "info" => cmd_info(&args),
+        "doctor" => cmd_doctor(&args),
+        other => bail!("unknown command {other:?}; see `mdm help`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        parse_args(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse(&["ablation", "tilesize", "--seed", "7", "--tile", "32"]);
+        assert_eq!(a.cmd, "ablation");
+        assert_eq!(a.sub.as_deref(), Some("tilesize"));
+        assert_eq!(a.usize_or("seed", 0), 7);
+        assert_eq!(a.usize_or("tile", 0), 32);
+        assert_eq!(a.usize_or("missing", 5), 5);
+    }
+
+    #[test]
+    fn boolean_flag_followed_by_flag() {
+        // regression: `--sweep --models x` must not consume `--models`.
+        let a = parse(&["accuracy", "--sweep", "--models", "miniresnet"]);
+        assert_eq!(a.str_or("sweep", ""), "true");
+        assert_eq!(a.str_or("models", ""), "miniresnet");
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse(&["fit", "--verbose"]);
+        assert_eq!(a.str_or("verbose", ""), "true");
+    }
+
+    #[test]
+    fn rejects_empty_and_double_positional() {
+        assert!(parse_args(&[]).is_err());
+        let argv: Vec<String> = ["x", "a", "b"].iter().map(|s| s.to_string()).collect();
+        assert!(parse_args(&argv).is_err());
+    }
+
+    #[test]
+    fn numeric_flag_parsing() {
+        let a = parse(&["accuracy", "--eta", "-2e-3"]);
+        assert!((a.f64_or("eta", 0.0) + 2e-3).abs() < 1e-12);
+    }
+}
+
+const HELP: &str = "\
+mdm — Manhattan Distance Mapping for memristive CIM crossbars
+
+commands (paper experiment in brackets):
+  heatmap        single-cell NF map + anti-diagonal symmetry   [Fig. 2]
+  fit            Manhattan-Hypothesis least-squares fit        [Fig. 4]
+  nf             NF reduction across the model zoo             [Fig. 5]
+  accuracy       model accuracy under PR noise via PJRT        [Fig. 6]
+  calibrate-eta  calibrate the Eq.-17 noise coefficient        [\u{a7}V-C]
+  sparsity       bit-level sparsity across the zoo             [Thm. 1]
+  ablation       tilesize | sparsity | ratio | roworder |
+                 global | variation | faults | adc              [A1-A9]
+  serve          batched serving driver with metrics
+  netlist        export a SPICE .cir deck of a crossbar
+  info           artifact manifest summary
+  doctor         verify artifacts, kernel/oracle agreement, engines
+
+common flags: --config f.toml --results DIR --artifacts DIR --seed N
+              --eta X --tile N --models a,b,c
+";
+
+fn cmd_heatmap(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let size = args.usize_or("size", cfg.tile_size);
+    let r = eval::fig2::run(size, CrossbarPhysics::default(), Path::new(&cfg.results_dir))?;
+    println!("Fig. 2 — single-cell NF heatmap ({size}x{size})");
+    println!("{}", report::heatmap(&r.nf_map));
+    println!("max anti-diagonal asymmetry: {:.3e}", r.max_asymmetry);
+    println!(
+        "NF vs d_M: slope {:.4e} (theory r/R_on = {:.4e}), r^2 = {:.6}",
+        r.linear_fit.slope, r.theory_slope, r.linear_fit.r2
+    );
+    println!("csv: {}/fig2_heatmap.csv", cfg.results_dir);
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let f4 = eval::fig4::Fig4Config {
+        n_tiles: args.usize_or("tiles", 500),
+        tile: args.usize_or("tile", cfg.tile_size),
+        sparsity: args.f64_or("sparsity", 0.8),
+        physics: CrossbarPhysics::default(),
+        seed: cfg.seed,
+    };
+    println!(
+        "Fig. 4 — fitting the Manhattan Hypothesis on {} random {}x{} tiles @ {:.0}% sparsity",
+        f4.n_tiles,
+        f4.tile,
+        f4.tile,
+        f4.sparsity * 100.0
+    );
+    let r = eval::fig4::run(f4, Path::new(&cfg.results_dir))?;
+    println!(
+        "fit: measured = {:.4} * calculated + {:.3e}   (r^2 = {:.4})",
+        r.fit.fit.slope, r.fit.fit.intercept, r.fit.fit.r2
+    );
+    println!(
+        "error distribution: mu = {:.3}%  sigma = {:.3}%   (paper: mu=-0.126%, sigma=11.2%)",
+        r.fit.error_summary.mean, r.fit.error_summary.std
+    );
+    println!("{}", report::histogram_chart(&r.histogram, 8));
+    println!("csv: {}/fig4_*.csv", cfg.results_dir);
+    Ok(())
+}
+
+fn cmd_nf(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let f5 = eval::fig5::Fig5Config {
+        models: models_flag(args, true),
+        geometry: TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?,
+        tiles_per_layer: args.usize_or("tiles", 32),
+        seed: cfg.seed,
+        artifacts_dir: Some(cfg.artifacts_dir.clone()),
+    };
+    println!("Fig. 5 — NF reduction with MDM (tile {0}x{0})", cfg.tile_size);
+    let rows = eval::fig5::run(&f5, Path::new(&cfg.results_dir))?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                format!("{:.3}", r.nf_conv_identity),
+                format!("{:.3}", r.nf_rev_mdm),
+                format!("{:.1}%", r.reduction_conventional()),
+                format!("{:.1}%", r.reduction_reversed()),
+                format!("{:.1}%", r.reduction_full()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(
+            &["model", "NF conv", "NF mdm(rev)", "mdm@conv", "mdm@rev", "full"],
+            &table
+        )
+    );
+    println!("csv: {}/fig5_nf_reduction.csv", cfg.results_dir);
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let models: Vec<ModelKind> = models_flag(args, false)
+        .iter()
+        .map(|m| ModelKind::parse(m))
+        .collect::<Result<_>>()?;
+    if args.flags.contains_key("sweep") {
+        println!("Fig. 6 η sweep via the PJRT forward path ({} eval samples)", eval::fig6::EVAL_N);
+        let etas = [-1e-3, -2e-3, -5e-3, -1e-2, -2e-2];
+        for model in &models {
+            let rows = eval::fig6::run_eta_sweep(
+                &cfg.artifacts_dir,
+                *model,
+                &etas,
+                TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?,
+                Path::new(&cfg.results_dir),
+            )?;
+            let t: Vec<Vec<String>> = rows
+                .iter()
+                .map(|(e, l, a)| {
+                    vec![format!("{e:.0e}"), l.clone(), format!("{:.2}%", 100.0 * a)]
+                })
+                .collect();
+            println!("{}", report::table(&["eta", "config", "accuracy"], &t));
+        }
+        return Ok(());
+    }
+    println!(
+        "Fig. 6 — accuracy under PR noise (eta_signed = {:.1e}) via the PJRT forward path",
+        cfg.eta_signed
+    );
+    let rows = eval::fig6::run(
+        &cfg.artifacts_dir,
+        &models,
+        cfg.eta_signed,
+        TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?,
+        Path::new(&cfg.results_dir),
+    )?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| vec![r.model.clone(), r.config.clone(), format!("{:.2}%", 100.0 * r.accuracy)])
+        .collect();
+    println!("{}", report::table(&["model", "config", "accuracy"], &table));
+    for (m, delta) in eval::fig6::mdm_restoration(&rows) {
+        println!("MDM restores {:+.2} points on {m}", 100.0 * delta);
+    }
+    println!("csv: {}/fig6_accuracy.csv", cfg.results_dir);
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let n = args.usize_or("tiles", 100);
+    let tile = args.usize_or("tile", 32);
+    println!("calibrating eta on {n} random {tile}x{tile} tiles ...");
+    let c = eval::calibrate::run(
+        n,
+        tile,
+        args.f64_or("sparsity", 0.8),
+        CrossbarPhysics::default(),
+        cfg.seed,
+        Path::new(&cfg.results_dir),
+    )?;
+    println!("eta (mean estimate) = {:.4e}", c.eta_mean);
+    println!("eta (ols slope)     = {:.4e}", c.eta_ols);
+    println!("paper's SPICE calibration: 2e-3; first-order r/R_on = {:.4e}", 2.5 / 300e3);
+    println!("csv: {}/eta_calibration.csv", cfg.results_dir);
+    Ok(())
+}
+
+fn cmd_sparsity(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let models = models_flag(args, true);
+    let rows = eval::sparsity::run(&models, cfg.k_bits, cfg.seed, Path::new(&cfg.results_dir))?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                format!("{:.1}%", 100.0 * r.sparsity),
+                r.bit_density.iter().map(|d| format!("{d:.2}")).collect::<Vec<_>>().join(" "),
+            ]
+        })
+        .collect();
+    println!("{}", report::table(&["model", "sparsity", "bit density p1..pK"], &table));
+    println!("csv: {}/sparsity.csv", cfg.results_dir);
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let results = Path::new(&cfg.results_dir);
+    match args.sub.as_deref() {
+        Some("tilesize") => {
+            let rows = eval::ablations::tile_size_sweep(&[16, 32, 64, 128], cfg.k_bits, cfg.seed, results)?;
+            let t: Vec<Vec<String>> = rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.tile.to_string(),
+                        format!("{:.3}", r.nf_conventional),
+                        format!("{:.3}", r.nf_mdm),
+                        r.adc_conversions.to_string(),
+                        r.sync_events.to_string(),
+                    ]
+                })
+                .collect();
+            println!("{}", report::table(&["tile", "NF conv", "NF mdm", "ADC", "sync"], &t));
+        }
+        Some("sparsity") => {
+            let rows = eval::ablations::sparsity_sweep(
+                &[0.5, 0.6, 0.7, 0.8, 0.9, 0.95],
+                cfg.tile_size,
+                args.usize_or("tiles", 16),
+                cfg.seed,
+                results,
+            )?;
+            let t: Vec<Vec<String>> = rows
+                .iter()
+                .map(|r| vec![format!("{:.2}", r.sparsity), format!("{:.1}%", r.reduction_pct)])
+                .collect();
+            println!("{}", report::table(&["sparsity", "MDM reduction"], &t));
+        }
+        Some("ratio") => {
+            let rows = eval::ablations::ratio_sweep(
+                &[0.5, 2.5, 10.0, 50.0],
+                args.usize_or("tile", 32),
+                args.usize_or("tiles", 40),
+                cfg.seed,
+                results,
+            )?;
+            let t: Vec<Vec<String>> = rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        format!("{}", r.r_wire),
+                        format!("{:.1e}", r.ratio),
+                        format!("{:.4}", r.r2),
+                        format!("{:.1}%", r.sigma_pct),
+                    ]
+                })
+                .collect();
+            println!("{}", report::table(&["r_wire", "r/R_on", "r2", "sigma"], &t));
+        }
+        Some("roworder") => {
+            let rows = eval::ablations::roworder_compare(
+                cfg.tile_size,
+                cfg.k_bits,
+                args.usize_or("tiles", 16),
+                cfg.seed,
+                results,
+            )?;
+            let t: Vec<Vec<String>> =
+                rows.iter().map(|r| vec![r.policy.clone(), format!("{:.4}", r.nf_mean)]).collect();
+            println!("{}", report::table(&["row-order policy", "mean NF"], &t));
+        }
+        Some("adc") => {
+            let rows = eval::ablations::adc_sweep(
+                &[4, 6, 8, 10, 12],
+                cfg.tile_size,
+                cfg.k_bits,
+                cfg.seed,
+                results,
+            )?;
+            let t: Vec<Vec<String>> = rows
+                .iter()
+                .map(|(b, a, c, m)| {
+                    vec![
+                        b.to_string(),
+                        format!("{a:.3e}"),
+                        format!("{c:.3e}"),
+                        format!("{m:.3e}"),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                report::table(&["ADC bits", "ADC only", "PR+conv", "PR+MDM"], &t)
+            );
+        }
+        Some("variation") => {
+            let rows = eval::ablations::variation_sweep(
+                &[0.05, 0.1, 0.2, 0.3],
+                args.usize_or("tile", 16),
+                args.usize_or("tiles", 10),
+                cfg.seed,
+                results,
+            )?;
+            let t: Vec<Vec<String>> = rows
+                .iter()
+                .map(|(s, r)| {
+                    vec![
+                        format!("{s}"),
+                        format!("{:.3}", r.correlation),
+                        format!("{:.0}%", 100.0 * r.mdm_win_rate),
+                    ]
+                })
+                .collect();
+            println!("{}", report::table(&["sigma", "hypothesis corr", "MDM win rate"], &t));
+        }
+        Some("faults") => {
+            let rows = eval::ablations::fault_sweep(
+                &[0.001, 0.01, 0.05, 0.1],
+                args.usize_or("tile", 64),
+                cfg.k_bits,
+                args.usize_or("tiles", 8),
+                cfg.seed,
+                results,
+            )?;
+            let t: Vec<Vec<String>> = rows
+                .iter()
+                .map(|(r, a, b, c)| {
+                    vec![
+                        format!("{r}"),
+                        format!("{a:.4e}"),
+                        format!("{b:.4e}"),
+                        format!("{c:.4e}"),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                report::table(&["fault rate", "identity", "MDM", "fault-aware"], &t)
+            );
+        }
+        Some("global") => {
+            let rows = eval::ablations::global_sort_compare(
+                args.usize_or("fan-in", 512),
+                cfg.tile_size,
+                cfg.k_bits,
+                cfg.seed,
+                results,
+            )?;
+            let t: Vec<Vec<String>> =
+                rows.iter().map(|r| vec![r.scheme.clone(), format!("{:.4}", r.nf_mean)]).collect();
+            println!("{}", report::table(&["scheme", "mean NF"], &t));
+        }
+        other => bail!(
+            "ablation {:?} unknown \
+             (tilesize|sparsity|ratio|roworder|global|variation|faults|adc)",
+            other
+        ),
+    }
+    println!("csv under {}", cfg.results_dir);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let model = ModelKind::parse(&args.str_or("model", "miniresnet"))?;
+    let n_requests = args.usize_or("requests", 64);
+    let rows_per_req = args.usize_or("rows", 4);
+    let server_cfg = ServerConfig {
+        workers: args.usize_or("workers", 2),
+        max_batch: args.usize_or("max-batch", 16),
+        batch_window_us: args.usize_or("window-us", 200) as u64,
+        queue_depth: args.usize_or("queue", 256),
+    };
+    let engine_cfg = EngineConfig {
+        model,
+        mapping: if args.str_or("mapping", "mdm") == "conventional" {
+            MappingConfig::conventional()
+        } else {
+            MappingConfig::mdm()
+        },
+        eta_signed: cfg.eta_signed,
+        geometry: TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?,
+        fwd_batch: 16,
+    };
+    println!(
+        "serving {} with {} workers, mapping {:?}, eta {:.1e} ...",
+        args.str_or("model", "miniresnet"),
+        server_cfg.workers,
+        engine_cfg.mapping,
+        engine_cfg.eta_signed
+    );
+    let store = mdm_cim::runtime::ArtifactStore::open(&cfg.artifacts_dir)?;
+    let test = store.data("test")?;
+    drop(store);
+
+    let t0 = std::time::Instant::now();
+    let server = Server::start(&cfg.artifacts_dir, engine_cfg, server_cfg)?;
+    let mut receivers = Vec::new();
+    for i in 0..n_requests {
+        let (x, _) = test.batch(i * rows_per_req, rows_per_req);
+        receivers.push(server.submit(x)?);
+    }
+    let mut ok = 0;
+    for rx in receivers {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    let snap = server.metrics().snapshot();
+    server.shutdown();
+    println!(
+        "{ok}/{n_requests} responses in {:.2}s  ({:.1} req/s, {:.1} rows/s)",
+        elapsed.as_secs_f64(),
+        ok as f64 / elapsed.as_secs_f64(),
+        snap.rows as f64 / elapsed.as_secs_f64()
+    );
+    println!(
+        "batches {}  latency p50/p99 {:.1}/{:.1} ms  ADC conversions {}  sync events {}",
+        snap.batches,
+        snap.latency_p50_us as f64 / 1000.0,
+        snap.latency_p99_us as f64 / 1000.0,
+        snap.adc_conversions,
+        snap.sync_events
+    );
+    Ok(())
+}
+
+fn cmd_netlist(args: &Args) -> Result<()> {
+    let rows = args.usize_or("rows", 8);
+    let cols = args.usize_or("cols", 8);
+    let physics = CrossbarPhysics::default();
+    let mut c = mdm_cim::circuit::CrossbarCircuit::new(rows, cols, physics)?;
+    // Diagonal demo pattern unless --density given.
+    let density = args.f64_or("density", 0.0);
+    if density > 0.0 {
+        let mut rng = mdm_cim::rng::Xoshiro256::seeded(args.usize_or("seed", 42) as u64);
+        for j in 0..rows {
+            for k in 0..cols {
+                c.set_active(j, k, rng.bernoulli(density));
+            }
+        }
+    } else {
+        for d in 0..rows.min(cols) {
+            c.set_active(d, d, true);
+        }
+    }
+    print!("{}", mdm_cim::circuit::netlist::to_spice(&c, &physics));
+    Ok(())
+}
+
+/// `mdm doctor` — verify the deployment end to end: manifest present, every
+/// artifact compiles, no elided constants, kernel agrees with the Rust
+/// oracle, dataset shards agree with local regeneration, engines program.
+fn cmd_doctor(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let mut failures = 0usize;
+    let mut check = |name: &str, ok: std::result::Result<String, anyhow::Error>| match ok {
+        Ok(msg) => println!("  ok   {name}: {msg}"),
+        Err(e) => {
+            failures += 1;
+            println!("  FAIL {name}: {e:#}");
+        }
+    };
+
+    println!("mdm doctor — checking {} ...", cfg.artifacts_dir);
+    let store = mdm_cim::runtime::ArtifactStore::open(&cfg.artifacts_dir)?;
+    check("pjrt", Ok(format!("{} ({} devices)", store.runtime().platform(), store.runtime().device_count())));
+
+    for entry in store.manifest().entries.clone() {
+        let text = std::fs::read_to_string(store.dir().join(&entry.file))?;
+        check(
+            &format!("artifact {}", entry.name),
+            if text.contains("{...}") {
+                Err(anyhow::anyhow!("elided constants — rebuild artifacts"))
+            } else {
+                store.load(&entry.name).map(|_| format!("{} chars, compiles", text.len()))
+            },
+        );
+    }
+
+    // Kernel vs oracle smoke.
+    check("kernel vs rust oracle", (|| {
+        let kernel = store.load("noisy_tile_mvm_64x64")?;
+        let mut rng = mdm_cim::rng::Xoshiro256::seeded(1);
+        let wdata: Vec<f32> = (0..64 * 8).map(|_| rng.laplace(0.2).abs() as f32).collect();
+        let w = mdm_cim::tensor::Tensor::new(&[64, 8], wdata)?;
+        let sliced = mdm_cim::quant::BitSlicedMatrix::slice(&w, 8)?;
+        let plan = mdm_cim::mdm::map_tile(&sliced.planes, MappingConfig::mdm());
+        let xdata: Vec<f32> =
+            (0..8 * 64).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let x = mdm_cim::tensor::Tensor::new(&[8, 64], xdata)?;
+        let y = kernel.run1(&[
+            &x,
+            &sliced.planes,
+            &plan.logical_distance_matrix(),
+            &mdm_cim::tensor::Tensor::from_vec(sliced.col_scales()),
+            &mdm_cim::tensor::Tensor::new(&[1, 1], vec![-2e-3])?,
+        ])?;
+        let weff = mdm_cim::noise::distorted_weights(&sliced, &plan, -2e-3)?;
+        let y_ref = x.matmul(&weff)?;
+        let err = y
+            .data()
+            .iter()
+            .zip(y_ref.data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        anyhow::ensure!(err < 1e-3, "kernel/oracle divergence {err}");
+        Ok(format!("max err {err:.2e}"))
+    })());
+
+    // Dataset cross-language agreement.
+    check("dataset shards", (|| {
+        let shard = store.data("train")?;
+        let local = mdm_cim::dataset::generate(shard.len().min(64), 2.2, 42);
+        for i in 0..local.len() {
+            anyhow::ensure!(shard.label(i) == local.label(i), "label mismatch at {i}");
+        }
+        Ok(format!("{} examples, labels agree", shard.len()))
+    })());
+
+    // Engines program.
+    for m in [ModelKind::MiniResNet, ModelKind::TinyViT] {
+        check(&format!("engine {m:?}"), (|| {
+            let e = mdm_cim::coordinator::Engine::program(
+                &cfg.artifacts_dir,
+                EngineConfig::ideal(m),
+            )?;
+            let test = store.data("test")?;
+            let acc = e.accuracy(&test)?;
+            anyhow::ensure!(acc > 0.5, "accuracy {acc} implausibly low");
+            Ok(format!("ideal accuracy {:.1}%", 100.0 * acc))
+        })());
+    }
+
+    if failures == 0 {
+        println!("all checks passed");
+        Ok(())
+    } else {
+        bail!("{failures} check(s) failed")
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let store = mdm_cim::runtime::ArtifactStore::open(&cfg.artifacts_dir)?;
+    println!("artifacts: {}", store.dir().display());
+    println!("platform:  {}", store.runtime().platform());
+    let rows: Vec<Vec<String>> = store
+        .manifest()
+        .entries
+        .iter()
+        .map(|e| vec![e.name.clone(), e.file.clone(), e.input_shapes.clone(), e.note.clone()])
+        .collect();
+    println!("{}", report::table(&["name", "file", "inputs", "note"], &rows));
+    Ok(())
+}

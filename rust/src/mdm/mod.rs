@@ -1,0 +1,404 @@
+//! Manhattan Distance Mapping — the paper's contribution (§IV).
+//!
+//! MDM reduces the parasitic-resistance NF of a bit-sliced crossbar tile in
+//! three steps:
+//!
+//! 1. **Dataflow reversal** — feed activations from the side where the
+//!    denser low-order bit columns sit (Theorem 1 guarantees low-order
+//!    columns are denser for bell-shaped weights), shortening the conduction
+//!    paths of most active cells.
+//! 2. **Row scoring** — assign every row a Manhattan-based score measuring
+//!    how its active cells are exposed to PR accumulation.
+//! 3. **Row reordering** — sort rows so the most exposed/densest rows sit
+//!    closest to the I/O rails.
+//!
+//! The transformation is pure data movement: permuting rows together with
+//! the corresponding activation entries, and reversing column order together
+//! with the output column bookkeeping, leaves the computed product bitwise
+//! identical (tested below) — no retraining, no hardware change.
+//!
+//! ## Row-order policies
+//!
+//! Under the Manhattan model the NF contribution of a row with `n` active
+//! cells and column-distance sum `s = Σ_k δ_k·k`, placed at row distance
+//! `j`, is `n·j + s`. `Σ s` is permutation-invariant, so the optimal order
+//! places rows in **descending active count** (rearrangement inequality) —
+//! that is [`RowOrder::MdmScore`], our default, with the column-distance sum
+//! as tie-break. The paper's prose describes sorting ascending by a
+//! "Manhattan-based score"; [`RowOrder::ManhattanAsc`] implements that
+//! literal variant (ascending `Σ_k δ_k·k`) and the `ablation_roworder`
+//! bench compares all policies.
+
+mod plan;
+
+pub use plan::MappingPlan;
+
+use crate::tensor::ops::argsort_f64;
+use crate::tensor::Tensor;
+
+/// Direction activations are fed into the tile (§IV step 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    /// High-order bit columns nearest the input rail (the standard layout).
+    Conventional,
+    /// Low-order (denser) bit columns nearest the input rail.
+    Reversed,
+}
+
+/// Row-ordering policy (§IV steps 2–3 plus baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowOrder {
+    /// Keep the original row order (baseline).
+    Identity,
+    /// MDM: descending active-cell count, ties by ascending column-distance
+    /// sum — optimal for the Manhattan model (see module docs).
+    MdmScore,
+    /// Paper-literal variant: ascending `Σ_k δ_k · k`.
+    ManhattanAsc,
+    /// Uniformly random permutation (control).
+    Random { seed: u64 },
+    /// Sort rows by total dequantized magnitude, descending — the
+    /// sorted-weight-sectioning (SWS-like) baseline of refs [22, 23].
+    /// Also exactly the rearrangement-optimal order for *weight-space*
+    /// Eq.-17 distortion (row magnitude mass = bit-significance mass),
+    /// whereas [`RowOrder::MdmScore`] is optimal for the current-domain NF;
+    /// the `ablation_roworder` bench and EXPERIMENTS.md compare the two
+    /// objectives.
+    MagnitudeDesc,
+}
+
+/// Full mapping configuration for one tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MappingConfig {
+    pub dataflow: Dataflow,
+    pub row_order: RowOrder,
+}
+
+impl MappingConfig {
+    /// The paper's MDM configuration: reversed dataflow + MDM row sort.
+    pub fn mdm() -> Self {
+        Self { dataflow: Dataflow::Reversed, row_order: RowOrder::MdmScore }
+    }
+
+    /// The conventional baseline: no reversal, no reordering.
+    pub fn conventional() -> Self {
+        Self { dataflow: Dataflow::Conventional, row_order: RowOrder::Identity }
+    }
+}
+
+/// Per-row Manhattan statistics of a binary plane tensor.
+#[derive(Debug, Clone)]
+pub struct RowStats {
+    /// Active cells per row.
+    pub count: Vec<usize>,
+    /// `Σ_k δ_k · k` per row (column-distance sum).
+    pub col_dist_sum: Vec<f64>,
+}
+
+/// Compute per-row activity statistics of `[J, C]` binary planes.
+pub fn row_stats(planes: &Tensor) -> RowStats {
+    let (rows, _cols) = (planes.rows(), planes.cols());
+    let mut count = vec![0usize; rows];
+    let mut col_dist_sum = vec![0.0f64; rows];
+    for j in 0..rows {
+        for (k, &v) in planes.row(j).iter().enumerate() {
+            if v != 0.0 {
+                count[j] += 1;
+                col_dist_sum[j] += k as f64;
+            }
+        }
+    }
+    RowStats { count, col_dist_sum }
+}
+
+/// Compute the row permutation for a policy over (already column-ordered)
+/// planes. `magnitudes[j]` is the per-row total weight magnitude, used only
+/// by [`RowOrder::MagnitudeDesc`].
+pub fn row_permutation(planes: &Tensor, policy: RowOrder, magnitudes: Option<&[f64]>) -> Vec<usize> {
+    let rows = planes.rows();
+    match policy {
+        RowOrder::Identity => (0..rows).collect(),
+        RowOrder::MdmScore => {
+            let st = row_stats(planes);
+            // Descending count; break ties by ascending column-distance sum.
+            // Key = -count + tiny * col_dist_sum keeps one argsort pass.
+            let cols = planes.cols() as f64;
+            let keys: Vec<f64> = (0..rows)
+                .map(|j| -(st.count[j] as f64) + st.col_dist_sum[j] / (cols * cols * rows as f64))
+                .collect();
+            argsort_f64(&keys)
+        }
+        RowOrder::ManhattanAsc => {
+            let st = row_stats(planes);
+            argsort_f64(&st.col_dist_sum)
+        }
+        RowOrder::Random { seed } => {
+            let mut rng = crate::rng::Xoshiro256::seeded(seed);
+            rng.permutation(rows)
+        }
+        RowOrder::MagnitudeDesc => {
+            let mags = magnitudes.expect("MagnitudeDesc needs per-row magnitudes");
+            assert_eq!(mags.len(), rows);
+            let keys: Vec<f64> = mags.iter().map(|&m| -m).collect();
+            argsort_f64(&keys)
+        }
+    }
+}
+
+/// Build the full [`MappingPlan`] for a tile of binary planes `[J, C]`.
+///
+/// The column permutation implements the dataflow choice; the row
+/// permutation is computed **after** the columns are placed (scores depend
+/// on column distances).
+pub fn map_tile(planes: &Tensor, config: MappingConfig) -> MappingPlan {
+    map_tile_with_magnitudes(planes, config, None)
+}
+
+/// [`map_tile`] with per-row magnitudes for the [`RowOrder::MagnitudeDesc`]
+/// baseline.
+pub fn map_tile_with_magnitudes(
+    planes: &Tensor,
+    config: MappingConfig,
+    magnitudes: Option<&[f64]>,
+) -> MappingPlan {
+    let cols = planes.cols();
+    let col_perm: Vec<usize> = match config.dataflow {
+        Dataflow::Conventional => (0..cols).collect(),
+        Dataflow::Reversed => (0..cols).rev().collect(),
+    };
+    let placed = planes.permute_cols(&col_perm).expect("col perm is valid");
+    let row_perm = row_permutation(&placed, config.row_order, magnitudes);
+    MappingPlan::new(row_perm, col_perm)
+}
+
+/// **Global (cross-tile) MDM** — an extension beyond the paper's per-tile
+/// mapping: all `fan_in` rows of a layer may be permuted together (the
+/// activation vector is permuted once, so splitting into row-chunks after
+/// the permutation is just as legal as before it). Sorting all rows by
+/// active count descending and **dealing them round-robin across the
+/// row-chunks** places every chunk's near-rail positions with the densest
+/// rows — provably optimal for the summed Manhattan NF across chunks
+/// (rearrangement: position cost `pos` repeats once per chunk).
+///
+/// Returns `perm` with `perm[chunk · tile_rows + pos] = old_row`; the last
+/// chunk may be ragged.
+pub fn global_row_assignment(counts: &[usize], tile_rows: usize) -> Vec<usize> {
+    let n = counts.len();
+    assert!(tile_rows >= 1);
+    let n_chunks = n.div_ceil(tile_rows);
+    let keys: Vec<f64> = counts.iter().map(|&c| -(c as f64)).collect();
+    let sorted = argsort_f64(&keys); // descending count
+    let mut perm = vec![usize::MAX; n];
+    // Deal sorted rows across chunks position-by-position. Ragged tail:
+    // later positions may not exist in the last chunk.
+    let last_rows = n - (n_chunks - 1) * tile_rows;
+    let mut it = sorted.into_iter();
+    for pos in 0..tile_rows {
+        for chunk in 0..n_chunks {
+            if chunk == n_chunks - 1 && pos >= last_rows {
+                continue;
+            }
+            if let Some(row) = it.next() {
+                perm[chunk * tile_rows + pos] = row;
+            }
+        }
+    }
+    debug_assert!(perm.iter().all(|&p| p != usize::MAX));
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nf::manhattan_nf_sum;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn global_assignment_is_permutation_and_beats_per_tile() {
+        let mut rng = Xoshiro256::seeded(21);
+        // 8 chunks of 4 rows with wildly varying density.
+        let counts: Vec<usize> = (0..32).map(|_| rng.below(64) as usize).collect();
+        let perm = global_row_assignment(&counts, 4);
+        let mut seen = vec![false; 32];
+        for &p in &perm {
+            assert!(!seen[p]);
+            seen[p] = true;
+        }
+        // Cost = sum over rows of count * within-chunk position.
+        let cost = |perm: &[usize]| -> usize {
+            perm.iter().enumerate().map(|(newi, &old)| counts[old] * (newi % 4)).sum()
+        };
+        let global = cost(&perm);
+        // Per-chunk-only sort of the identity chunking.
+        let mut per_tile = Vec::new();
+        for chunk in 0..8 {
+            let mut rows: Vec<usize> = (chunk * 4..chunk * 4 + 4).collect();
+            rows.sort_by_key(|&r| std::cmp::Reverse(counts[r]));
+            per_tile.extend(rows);
+        }
+        assert!(global <= cost(&per_tile), "global {global} > per-tile {}", cost(&per_tile));
+    }
+
+    #[test]
+    fn global_assignment_ragged_tail() {
+        let counts = vec![5, 1, 4, 2, 3]; // 2 chunks of 3: last has 2 rows
+        let perm = global_row_assignment(&counts, 3);
+        assert_eq!(perm.len(), 5);
+        let mut s = perm.clone();
+        s.sort_unstable();
+        assert_eq!(s, vec![0, 1, 2, 3, 4]);
+        // Densest two rows (0: count 5, 2: count 4) land at position 0.
+        assert_eq!(perm[0], 0);
+        assert_eq!(perm[3], 2);
+    }
+
+    fn random_planes(rows: usize, cols: usize, density: f64, seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seeded(seed);
+        let data: Vec<f32> =
+            (0..rows * cols).map(|_| if rng.bernoulli(density) { 1.0 } else { 0.0 }).collect();
+        Tensor::new(&[rows, cols], data).unwrap()
+    }
+
+    #[test]
+    fn row_stats_hand_case() {
+        let mut t = Tensor::zeros(&[2, 4]);
+        *t.at2_mut(0, 1) = 1.0;
+        *t.at2_mut(0, 3) = 1.0;
+        *t.at2_mut(1, 0) = 1.0;
+        let st = row_stats(&t);
+        assert_eq!(st.count, vec![2, 1]);
+        assert_eq!(st.col_dist_sum, vec![4.0, 0.0]);
+    }
+
+    #[test]
+    fn mdm_score_orders_dense_rows_first() {
+        let mut t = Tensor::zeros(&[3, 4]);
+        // row 0: 1 active, row 1: 3 active, row 2: 2 active.
+        *t.at2_mut(0, 0) = 1.0;
+        for k in 0..3 {
+            *t.at2_mut(1, k) = 1.0;
+        }
+        for k in 0..2 {
+            *t.at2_mut(2, k) = 1.0;
+        }
+        let perm = row_permutation(&t, RowOrder::MdmScore, None);
+        assert_eq!(perm, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn row_sort_never_increases_manhattan_nf() {
+        // Property: at any fixed dataflow, the MDM row sort's
+        // Manhattan-model NF is <= the identity order's. (The dataflow
+        // reversal is only guaranteed to help on Theorem-1 tiles — see
+        // `reversal_helps_when_low_order_denser`.)
+        for seed in 0..30u64 {
+            let planes = random_planes(32, 32, 0.2, seed);
+            for dataflow in [Dataflow::Conventional, Dataflow::Reversed] {
+                let ident = map_tile(
+                    &planes,
+                    MappingConfig { dataflow, row_order: RowOrder::Identity },
+                );
+                let sorted = map_tile(
+                    &planes,
+                    MappingConfig { dataflow, row_order: RowOrder::MdmScore },
+                );
+                let nf_ident = manhattan_nf_sum(&ident.apply(&planes).unwrap(), 1.0);
+                let nf_sorted = manhattan_nf_sum(&sorted.apply(&planes).unwrap(), 1.0);
+                assert!(
+                    nf_sorted <= nf_ident + 1e-9,
+                    "seed {seed} {dataflow:?}: sorted {nf_sorted} > identity {nf_ident}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mdm_row_sort_is_optimal_among_permutations() {
+        // Exhaustive check on small tiles: no row permutation beats
+        // MdmScore under the Manhattan model (rearrangement inequality).
+        fn permutations(n: usize) -> Vec<Vec<usize>> {
+            if n == 1 {
+                return vec![vec![0]];
+            }
+            let mut out = Vec::new();
+            for p in permutations(n - 1) {
+                for i in 0..n {
+                    let mut q: Vec<usize> = p.iter().map(|&x| x + (x >= i) as usize).collect();
+                    q.insert(0, i);
+                    out.push(q);
+                }
+            }
+            out
+        }
+        for seed in 0..5u64 {
+            let planes = random_planes(5, 6, 0.35, seed + 100);
+            let plan = map_tile(
+                &planes,
+                MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::MdmScore },
+            );
+            let best = manhattan_nf_sum(&plan.apply(&planes).unwrap(), 1.0);
+            for perm in permutations(5) {
+                let cand = planes.permute_rows(&perm).unwrap();
+                let nf = manhattan_nf_sum(&cand, 1.0);
+                assert!(best <= nf + 1e-9, "seed {seed}: {best} > {nf} via {perm:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn reversal_helps_when_low_order_denser() {
+        // Columns with density increasing in column index (low-order bits on
+        // the far side, as in the conventional layout): reversal must lower
+        // the Manhattan NF.
+        let mut rng = Xoshiro256::seeded(9);
+        let (rows, cols) = (16, 8);
+        let mut t = Tensor::zeros(&[rows, cols]);
+        for j in 0..rows {
+            for k in 0..cols {
+                let density = 0.05 + 0.5 * k as f64 / cols as f64;
+                if rng.bernoulli(density) {
+                    *t.at2_mut(j, k) = 1.0;
+                }
+            }
+        }
+        let conv = map_tile(
+            &t,
+            MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::Identity },
+        );
+        let rev = map_tile(
+            &t,
+            MappingConfig { dataflow: Dataflow::Reversed, row_order: RowOrder::Identity },
+        );
+        let nf_conv = manhattan_nf_sum(&conv.apply(&t).unwrap(), 1.0);
+        let nf_rev = manhattan_nf_sum(&rev.apply(&t).unwrap(), 1.0);
+        assert!(nf_rev < nf_conv, "reversed {nf_rev} vs conventional {nf_conv}");
+    }
+
+    #[test]
+    fn random_policy_is_deterministic_per_seed() {
+        let planes = random_planes(16, 8, 0.3, 1);
+        let a = row_permutation(&planes, RowOrder::Random { seed: 5 }, None);
+        let b = row_permutation(&planes, RowOrder::Random { seed: 5 }, None);
+        let c = row_permutation(&planes, RowOrder::Random { seed: 6 }, None);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn magnitude_desc_uses_magnitudes() {
+        let planes = random_planes(4, 4, 0.5, 2);
+        let mags = vec![0.1, 3.0, 2.0, 0.5];
+        let perm = row_permutation(&planes, RowOrder::MagnitudeDesc, Some(&mags));
+        assert_eq!(perm, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn manhattan_asc_sorts_by_col_dist() {
+        let mut t = Tensor::zeros(&[3, 4]);
+        *t.at2_mut(0, 3) = 1.0; // sum 3
+        *t.at2_mut(1, 0) = 1.0; // sum 0
+        *t.at2_mut(2, 1) = 1.0; // sum 1
+        let perm = row_permutation(&t, RowOrder::ManhattanAsc, None);
+        assert_eq!(perm, vec![1, 2, 0]);
+    }
+}

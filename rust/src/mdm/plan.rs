@@ -1,0 +1,220 @@
+//! The [`MappingPlan`] — the reusable artifact of one MDM (or baseline)
+//! mapping decision for a tile.
+
+use crate::tensor::ops::invert_permutation;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// A tile mapping: where each logical row/column of the bit-planes lands on
+/// the physical crossbar.
+///
+/// `row_perm[p] = l` means physical row `p` (distance `p` from the sense
+/// rail) holds logical row `l`; likewise `col_perm[p] = l` for columns
+/// (distance `p` from the input rail). The plan also knows how to permute
+/// activations and un-permute outputs so the computed product is unchanged.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MappingPlan {
+    row_perm: Vec<usize>,
+    col_perm: Vec<usize>,
+}
+
+impl MappingPlan {
+    /// Build a plan from explicit permutations.
+    pub fn new(row_perm: Vec<usize>, col_perm: Vec<usize>) -> Self {
+        debug_assert!(is_permutation(&row_perm));
+        debug_assert!(is_permutation(&col_perm));
+        Self { row_perm, col_perm }
+    }
+
+    /// Identity plan for a `J×C` tile.
+    pub fn identity(j_rows: usize, c_cols: usize) -> Self {
+        Self { row_perm: (0..j_rows).collect(), col_perm: (0..c_cols).collect() }
+    }
+
+    /// Physical-row → logical-row permutation.
+    pub fn row_perm(&self) -> &[usize] {
+        &self.row_perm
+    }
+
+    /// Physical-column → logical-column permutation.
+    pub fn col_perm(&self) -> &[usize] {
+        &self.col_perm
+    }
+
+    /// Number of rows of the tile.
+    pub fn rows(&self) -> usize {
+        self.row_perm.len()
+    }
+
+    /// Number of columns of the tile.
+    pub fn cols(&self) -> usize {
+        self.col_perm.len()
+    }
+
+    /// Lay logical planes `[J, C]` out physically: `out[p, q] =
+    /// planes[row_perm[p], col_perm[q]]`.
+    pub fn apply(&self, planes: &Tensor) -> Result<Tensor> {
+        ensure!(
+            planes.rows() == self.rows() && planes.cols() == self.cols(),
+            "plan {}x{} does not fit planes {:?}",
+            self.rows(),
+            self.cols(),
+            planes.shape()
+        );
+        planes.permute_rows(&self.row_perm)?.permute_cols(&self.col_perm)
+    }
+
+    /// Undo [`Self::apply`].
+    pub fn unapply(&self, physical: &Tensor) -> Result<Tensor> {
+        physical
+            .permute_rows(&invert_permutation(&self.row_perm))?
+            .permute_cols(&invert_permutation(&self.col_perm))
+    }
+
+    /// Permute an activation batch `[B, J]` to match the physical row order:
+    /// physical row `p` multiplies activation `x[row_perm[p]]`.
+    pub fn apply_to_activations(&self, x: &Tensor) -> Result<Tensor> {
+        ensure!(
+            x.ndim() == 2 && x.cols() == self.rows(),
+            "activations {:?} do not match {} tile rows",
+            x.shape(),
+            self.rows()
+        );
+        x.permute_cols(&self.row_perm)
+    }
+
+    /// Map a physical column output vector back to logical column order:
+    /// `out_logical[col_perm[q]] = out_physical[q]` for each row of `[B, C]`.
+    pub fn unapply_to_outputs(&self, y: &Tensor) -> Result<Tensor> {
+        ensure!(
+            y.ndim() == 2 && y.cols() == self.cols(),
+            "outputs {:?} do not match {} tile cols",
+            y.shape(),
+            self.cols()
+        );
+        y.permute_cols(&invert_permutation(&self.col_perm))
+    }
+
+    /// The physical distance of the cell holding logical `(row, col)`:
+    /// `d = p_row + p_col` where `row_perm[p_row] = row` etc.
+    pub fn logical_cell_distance(&self, row: usize, col: usize) -> usize {
+        let inv_r = invert_permutation(&self.row_perm);
+        let inv_c = invert_permutation(&self.col_perm);
+        inv_r[row] + inv_c[col]
+    }
+
+    /// Distance tensor in **logical** layout: `d[l_row, l_col]` = Manhattan
+    /// distance of the physical cell holding that logical entry. This is the
+    /// tensor handed to the L1 kernel / noisy-forward HLO, which operates on
+    /// logical (un-permuted) operands.
+    pub fn logical_distance_matrix(&self) -> Tensor {
+        let (rows, cols) = (self.rows(), self.cols());
+        let inv_r = invert_permutation(&self.row_perm);
+        let inv_c = invert_permutation(&self.col_perm);
+        let mut d = vec![0.0f32; rows * cols];
+        for l_row in 0..rows {
+            for l_col in 0..cols {
+                d[l_row * cols + l_col] = (inv_r[l_row] + inv_c[l_col]) as f32;
+            }
+        }
+        Tensor::new(&[rows, cols], d).expect("consistent shape")
+    }
+}
+
+fn is_permutation(p: &[usize]) -> bool {
+    let mut seen = vec![false; p.len()];
+    for &i in p {
+        if i >= p.len() || seen[i] {
+            return false;
+        }
+        seen[i] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nf::{distance_matrix, manhattan_nf_sum};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn apply_unapply_roundtrip() {
+        let mut rng = Xoshiro256::seeded(1);
+        let data: Vec<f32> = (0..48).map(|_| rng.uniform() as f32).collect();
+        let t = Tensor::new(&[6, 8], data).unwrap();
+        let plan =
+            MappingPlan::new(rng.permutation(6), rng.permutation(8));
+        let phys = plan.apply(&t).unwrap();
+        assert_eq!(plan.unapply(&phys).unwrap(), t);
+    }
+
+    #[test]
+    fn identity_plan_is_noop() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let plan = MappingPlan::identity(2, 3);
+        assert_eq!(plan.apply(&t).unwrap(), t);
+        assert_eq!(plan.logical_cell_distance(1, 2), 3);
+    }
+
+    #[test]
+    fn activation_and_output_permutations_preserve_product() {
+        // x @ W == unapply_outputs( apply_activations(x) @ apply(W) )
+        let mut rng = Xoshiro256::seeded(2);
+        let wdata: Vec<f32> = (0..35).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let w = Tensor::new(&[5, 7], wdata).unwrap();
+        let xdata: Vec<f32> = (0..10).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let x = Tensor::new(&[2, 5], xdata).unwrap();
+        let plan = MappingPlan::new(rng.permutation(5), rng.permutation(7));
+
+        let y_ref = x.matmul(&w).unwrap();
+        let y_phys = plan
+            .apply_to_activations(&x)
+            .unwrap()
+            .matmul(&plan.apply(&w).unwrap())
+            .unwrap();
+        let y = plan.unapply_to_outputs(&y_phys).unwrap();
+        for (a, b) in y_ref.data().iter().zip(y.data()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn logical_distance_matrix_consistent_with_apply() {
+        // Manhattan NF computed on physically-laid-out planes equals the NF
+        // computed from logical planes weighted by the logical distance
+        // matrix.
+        let mut rng = Xoshiro256::seeded(3);
+        let data: Vec<f32> =
+            (0..64).map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 }).collect();
+        let planes = Tensor::new(&[8, 8], data).unwrap();
+        let plan = MappingPlan::new(rng.permutation(8), rng.permutation(8));
+
+        let phys = plan.apply(&planes).unwrap();
+        let nf_phys = manhattan_nf_sum(&phys, 1.0);
+
+        let d = plan.logical_distance_matrix();
+        let nf_logical: f64 = planes
+            .data()
+            .iter()
+            .zip(d.data())
+            .map(|(&b, &dist)| if b != 0.0 { dist as f64 } else { 0.0 })
+            .sum();
+        assert!((nf_phys - nf_logical).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identity_logical_distance_equals_geometry() {
+        let plan = MappingPlan::identity(4, 5);
+        assert_eq!(plan.logical_distance_matrix(), distance_matrix(4, 5));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let plan = MappingPlan::identity(3, 3);
+        let t = Tensor::zeros(&[4, 3]);
+        assert!(plan.apply(&t).is_err());
+        let x = Tensor::zeros(&[1, 4]);
+        assert!(plan.apply_to_activations(&x).is_err());
+    }
+}

@@ -1,0 +1,267 @@
+//! The model registry: layer shapes of the evaluated architectures.
+//!
+//! Shapes are the published ones (convolutions expressed as
+//! `fan_in = k·k·C_in`, `fan_out = C_out` matrices — the standard CIM
+//! mapping [22–25]). To keep the harness tractable each distinct layer
+//! shape is listed once with a `count` multiplier; the NF statistics are
+//! weighted by `count` so they match evaluating every layer.
+
+use super::synthetic::WeightProfile;
+use anyhow::{bail, Result};
+
+/// Kind of a layer (affects nothing in the NF math; kept for reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Linear,
+    Attention,
+}
+
+/// One (possibly repeated) layer shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerDesc {
+    pub kind: LayerKind,
+    /// Rows of the unrolled weight matrix.
+    pub fan_in: usize,
+    /// Columns of the unrolled weight matrix.
+    pub fan_out: usize,
+    /// How many times this shape occurs in the network.
+    pub count: usize,
+}
+
+impl LayerDesc {
+    const fn conv(k: usize, cin: usize, cout: usize, count: usize) -> Self {
+        Self { kind: LayerKind::Conv, fan_in: k * k * cin, fan_out: cout, count }
+    }
+
+    const fn linear(fan_in: usize, fan_out: usize, count: usize) -> Self {
+        Self { kind: LayerKind::Linear, fan_in, fan_out, count }
+    }
+
+    const fn attn(dim: usize, count: usize) -> Self {
+        // QKV + projection of one attention block, folded to one matrix
+        // shape for NF purposes.
+        Self { kind: LayerKind::Attention, fan_in: dim, fan_out: dim, count }
+    }
+}
+
+/// A model entry in the zoo.
+#[derive(Debug, Clone)]
+pub struct ModelDesc {
+    pub name: &'static str,
+    pub family: &'static str,
+    pub profile: WeightProfile,
+    pub layers: Vec<LayerDesc>,
+}
+
+/// All evaluated model names (the paper's Fig. 5/6 x-axis).
+pub fn model_names() -> &'static [&'static str] {
+    &[
+        "resnet18", "resnet34", "resnet50", "vgg11", "vgg16", "vit_s", "deit_s", "deit_b",
+        "miniresnet", "tinyvit",
+    ]
+}
+
+/// Look up a model by name.
+pub fn model_by_name(name: &str) -> Result<ModelDesc> {
+    let d = match name {
+        "resnet18" => ModelDesc {
+            name: "resnet18",
+            family: "resnet",
+            profile: WeightProfile::cnn(),
+            layers: vec![
+                LayerDesc::conv(7, 3, 64, 1),
+                LayerDesc::conv(3, 64, 64, 4),
+                LayerDesc::conv(3, 128, 128, 3),
+                LayerDesc::conv(3, 64, 128, 1),
+                LayerDesc::conv(3, 256, 256, 3),
+                LayerDesc::conv(3, 128, 256, 1),
+                LayerDesc::conv(3, 512, 512, 3),
+                LayerDesc::conv(3, 256, 512, 1),
+                LayerDesc::linear(512, 1000, 1),
+            ],
+        },
+        "resnet34" => ModelDesc {
+            name: "resnet34",
+            family: "resnet",
+            profile: WeightProfile::cnn(),
+            layers: vec![
+                LayerDesc::conv(7, 3, 64, 1),
+                LayerDesc::conv(3, 64, 64, 6),
+                LayerDesc::conv(3, 128, 128, 7),
+                LayerDesc::conv(3, 64, 128, 1),
+                LayerDesc::conv(3, 256, 256, 11),
+                LayerDesc::conv(3, 128, 256, 1),
+                LayerDesc::conv(3, 512, 512, 5),
+                LayerDesc::conv(3, 256, 512, 1),
+                LayerDesc::linear(512, 1000, 1),
+            ],
+        },
+        "resnet50" => ModelDesc {
+            name: "resnet50",
+            family: "resnet",
+            profile: WeightProfile::cnn(),
+            layers: vec![
+                LayerDesc::conv(7, 3, 64, 1),
+                LayerDesc::conv(1, 64, 64, 3),
+                LayerDesc::conv(3, 64, 64, 3),
+                LayerDesc::conv(1, 64, 256, 3),
+                LayerDesc::conv(1, 256, 128, 4),
+                LayerDesc::conv(3, 128, 128, 4),
+                LayerDesc::conv(1, 128, 512, 4),
+                LayerDesc::conv(1, 512, 256, 6),
+                LayerDesc::conv(3, 256, 256, 6),
+                LayerDesc::conv(1, 256, 1024, 6),
+                LayerDesc::conv(1, 1024, 512, 3),
+                LayerDesc::conv(3, 512, 512, 3),
+                LayerDesc::conv(1, 512, 2048, 3),
+                LayerDesc::linear(2048, 1000, 1),
+            ],
+        },
+        "vgg11" => ModelDesc {
+            name: "vgg11",
+            family: "vgg",
+            profile: WeightProfile::vgg(),
+            layers: vec![
+                LayerDesc::conv(3, 3, 64, 1),
+                LayerDesc::conv(3, 64, 128, 1),
+                LayerDesc::conv(3, 128, 256, 2),
+                LayerDesc::conv(3, 256, 512, 2),
+                LayerDesc::conv(3, 512, 512, 2),
+                LayerDesc::linear(25088, 4096, 1),
+                LayerDesc::linear(4096, 4096, 1),
+                LayerDesc::linear(4096, 1000, 1),
+            ],
+        },
+        "vgg16" => ModelDesc {
+            name: "vgg16",
+            family: "vgg",
+            profile: WeightProfile::vgg(),
+            layers: vec![
+                LayerDesc::conv(3, 3, 64, 2),
+                LayerDesc::conv(3, 64, 128, 2),
+                LayerDesc::conv(3, 128, 256, 3),
+                LayerDesc::conv(3, 256, 512, 3),
+                LayerDesc::conv(3, 512, 512, 3),
+                LayerDesc::linear(25088, 4096, 1),
+                LayerDesc::linear(4096, 4096, 1),
+                LayerDesc::linear(4096, 1000, 1),
+            ],
+        },
+        "vit_s" => ModelDesc {
+            name: "vit_s",
+            family: "vit",
+            profile: WeightProfile::vit(),
+            layers: vec![
+                LayerDesc::linear(768, 384, 1), // patch embed (16x16x3)
+                LayerDesc::attn(384, 12),
+                LayerDesc::linear(384, 1536, 12), // MLP up
+                LayerDesc::linear(1536, 384, 12), // MLP down
+                LayerDesc::linear(384, 1000, 1),
+            ],
+        },
+        "deit_s" => ModelDesc {
+            name: "deit_s",
+            family: "deit",
+            profile: WeightProfile::deit(),
+            layers: vec![
+                LayerDesc::linear(768, 384, 1),
+                LayerDesc::attn(384, 12),
+                LayerDesc::linear(384, 1536, 12),
+                LayerDesc::linear(1536, 384, 12),
+                LayerDesc::linear(384, 1000, 1),
+            ],
+        },
+        "deit_b" => ModelDesc {
+            name: "deit_b",
+            family: "deit",
+            profile: WeightProfile::deit(),
+            layers: vec![
+                LayerDesc::linear(768, 768, 1),
+                LayerDesc::attn(768, 12),
+                LayerDesc::linear(768, 3072, 12),
+                LayerDesc::linear(3072, 768, 12),
+                LayerDesc::linear(768, 1000, 1),
+            ],
+        },
+        // Our two actually-trained models (L2 exports their weights via
+        // `make artifacts`). One LayerDesc entry per weight tensor, in
+        // export order (`layer{i}` in artifacts/weights/<name>.mdt).
+        "miniresnet" => ModelDesc {
+            name: "miniresnet",
+            family: "resnet",
+            profile: WeightProfile::cnn(),
+            layers: vec![
+                // 16x16 synthetic images, flattened: 256 features.
+                LayerDesc::linear(256, 128, 1), // stem
+                LayerDesc::linear(128, 128, 1), // residual block 1
+                LayerDesc::linear(128, 128, 1), // residual block 2
+                LayerDesc::linear(128, 10, 1),  // head
+            ],
+        },
+        "tinyvit" => ModelDesc {
+            name: "tinyvit",
+            family: "vit",
+            profile: WeightProfile::vit(),
+            layers: vec![
+                LayerDesc::linear(16, 64, 1),   // patch embed (4x4 patches)
+                LayerDesc::linear(64, 192, 1),  // block 1 qkv
+                LayerDesc::linear(64, 64, 1),   // block 1 proj
+                LayerDesc::linear(64, 256, 1),  // block 1 mlp up
+                LayerDesc::linear(256, 64, 1),  // block 1 mlp down
+                LayerDesc::linear(64, 192, 1),  // block 2 qkv
+                LayerDesc::linear(64, 64, 1),   // block 2 proj
+                LayerDesc::linear(64, 256, 1),  // block 2 mlp up
+                LayerDesc::linear(256, 64, 1),  // block 2 mlp down
+                LayerDesc::linear(64, 10, 1),   // head
+            ],
+        },
+        other => bail!("unknown model {other:?}; known: {:?}", model_names()),
+    };
+    Ok(d)
+}
+
+impl ModelDesc {
+    /// Total parameters counting repeats.
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.fan_in * l.fan_out * l.count).sum()
+    }
+
+    /// True when trained weights are expected under `artifacts/weights/`.
+    pub fn is_trained(&self) -> bool {
+        matches!(self.name, "miniresnet" | "tinyvit")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_resolve() {
+        for name in model_names() {
+            let d = model_by_name(name).unwrap();
+            assert_eq!(d.name, *name);
+            assert!(!d.layers.is_empty());
+            assert!(d.n_params() > 0);
+        }
+        assert!(model_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn param_counts_in_expected_ballpark() {
+        // Sanity: resnet18 ~11M conv+fc params, vgg16 ~138M, deit_b ~86M.
+        let r18 = model_by_name("resnet18").unwrap().n_params();
+        assert!((9_000_000..14_000_000).contains(&r18), "resnet18: {r18}");
+        let v16 = model_by_name("vgg16").unwrap().n_params();
+        assert!((120_000_000..150_000_000).contains(&v16), "vgg16: {v16}");
+        let db = model_by_name("deit_b").unwrap().n_params();
+        assert!((50_000_000..100_000_000).contains(&db), "deit_b: {db}");
+    }
+
+    #[test]
+    fn trained_flags() {
+        assert!(model_by_name("miniresnet").unwrap().is_trained());
+        assert!(!model_by_name("resnet18").unwrap().is_trained());
+    }
+}

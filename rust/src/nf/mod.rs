@@ -1,0 +1,190 @@
+//! Analytical nonideality-factor models — the Manhattan Hypothesis (§III-B).
+//!
+//! Eq. 16 of the paper:
+//!
+//! ```text
+//! NF ≈ (r / R_on) · Σ_{j,k} δ_{j,k} · (j + k)
+//! ```
+//!
+//! where `δ_{j,k} = 1` for active cells, `j` is the row distance from the
+//! sense rail and `k` the column distance from the input rail. The *sum*
+//! form is the paper's Eq. 16; we also provide the *mean* form
+//! (`NF = Δi/i₀` aggregates over active cells, so dividing by the active
+//! count matches the measured aggregate NF up to the fitted constant — the
+//! paper itself calibrates the linear map by least squares, Fig. 4).
+
+use crate::stats::{ols, relative_error_pct, summary, OlsFit, Summary};
+use crate::tensor::Tensor;
+
+/// Aggregate Manhattan distance of active cells: `Σ δ_{j,k} (j + k)`.
+pub fn aggregate_manhattan(planes: &Tensor) -> f64 {
+    assert_eq!(planes.ndim(), 2, "planes must be 2-D");
+    let rows = planes.rows();
+    let mut acc = 0.0f64;
+    for j in 0..rows {
+        let row = planes.row(j);
+        for (k, &v) in row.iter().enumerate() {
+            if v != 0.0 {
+                acc += (j + k) as f64;
+            }
+        }
+    }
+    acc
+}
+
+/// Number of active cells.
+pub fn active_count(planes: &Tensor) -> usize {
+    planes.data().iter().filter(|&&v| v != 0.0).count()
+}
+
+/// Eq. 16 (sum form): `NF ≈ (r/R_on) Σ δ (j+k)`.
+pub fn manhattan_nf_sum(planes: &Tensor, parasitic_ratio: f64) -> f64 {
+    parasitic_ratio * aggregate_manhattan(planes)
+}
+
+/// Mean form: `NF ≈ (r/R_on) · mean over active cells of (j+k)` — the
+/// density-normalized variant that matches the aggregate `|Δi/i₀|`
+/// measurement to first order.
+pub fn manhattan_nf_mean(planes: &Tensor, parasitic_ratio: f64) -> f64 {
+    let n = active_count(planes);
+    if n == 0 {
+        return 0.0;
+    }
+    parasitic_ratio * aggregate_manhattan(planes) / n as f64
+}
+
+/// Per-column mean form: `NF_k ≈ (r/R_on) · mean_j over active of (j+k)`.
+pub fn manhattan_nf_per_col(planes: &Tensor, parasitic_ratio: f64) -> Vec<f64> {
+    let (rows, cols) = (planes.rows(), planes.cols());
+    (0..cols)
+        .map(|k| {
+            let mut acc = 0.0f64;
+            let mut n = 0usize;
+            for j in 0..rows {
+                if planes.at2(j, k) != 0.0 {
+                    acc += (j + k) as f64;
+                    n += 1;
+                }
+            }
+            if n == 0 {
+                0.0
+            } else {
+                parasitic_ratio * acc / n as f64
+            }
+        })
+        .collect()
+}
+
+/// The distance matrix `d_M(j,k) = j + k` as a tensor — fed to the L1
+/// kernel / noisy-forward HLO as an input so one compiled executable serves
+/// every mapping.
+pub fn distance_matrix(j_rows: usize, k_cols: usize) -> Tensor {
+    let mut d = vec![0.0f32; j_rows * k_cols];
+    for j in 0..j_rows {
+        for k in 0..k_cols {
+            d[j * k_cols + k] = (j + k) as f32;
+        }
+    }
+    Tensor::new(&[j_rows, k_cols], d).expect("shape is consistent")
+}
+
+/// Result of calibrating the hypothesis against circuit measurements
+/// (the Fig. 4 experiment).
+#[derive(Debug, Clone)]
+pub struct HypothesisFit {
+    /// OLS fit of measured NF against calculated NF.
+    pub fit: OlsFit,
+    /// Per-tile relative error (%) of the fitted prediction vs measurement.
+    pub errors_pct: Vec<f64>,
+    /// Summary of the error distribution (paper: μ = −0.126%, σ = 11.2%).
+    pub error_summary: Summary,
+}
+
+/// Least-squares calibration of calculated (Eq. 16) vs measured NF, and the
+/// relative-error distribution of the fitted linear map — exactly the Fig. 4
+/// procedure.
+pub fn fit_hypothesis(calculated: &[f64], measured: &[f64]) -> HypothesisFit {
+    assert_eq!(calculated.len(), measured.len());
+    let fit = ols(calculated, measured);
+    let predicted: Vec<f64> =
+        calculated.iter().map(|&c| fit.slope * c + fit.intercept).collect();
+    let errors_pct = relative_error_pct(&predicted, measured);
+    let error_summary = summary(&errors_pct);
+    HypothesisFit { fit, errors_pct, error_summary }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planes_from(rows: usize, cols: usize, on: &[(usize, usize)]) -> Tensor {
+        let mut t = Tensor::zeros(&[rows, cols]);
+        for &(j, k) in on {
+            *t.at2_mut(j, k) = 1.0;
+        }
+        t
+    }
+
+    #[test]
+    fn aggregate_and_counts() {
+        let p = planes_from(4, 4, &[(0, 0), (1, 2), (3, 3)]);
+        assert_eq!(aggregate_manhattan(&p), 0.0 + 3.0 + 6.0);
+        assert_eq!(active_count(&p), 3);
+    }
+
+    #[test]
+    fn sum_and_mean_forms() {
+        let p = planes_from(4, 4, &[(1, 1), (2, 2)]);
+        let ratio = 1e-5;
+        assert!((manhattan_nf_sum(&p, ratio) - ratio * 6.0).abs() < 1e-18);
+        assert!((manhattan_nf_mean(&p, ratio) - ratio * 3.0).abs() < 1e-18);
+    }
+
+    #[test]
+    fn empty_planes_zero_nf() {
+        let p = Tensor::zeros(&[4, 4]);
+        assert_eq!(manhattan_nf_sum(&p, 1e-5), 0.0);
+        assert_eq!(manhattan_nf_mean(&p, 1e-5), 0.0);
+    }
+
+    #[test]
+    fn per_col_matches_hand_computation() {
+        let p = planes_from(3, 2, &[(0, 0), (2, 0), (1, 1)]);
+        let nf = manhattan_nf_per_col(&p, 1.0);
+        // col 0: active at j=0 (d=0) and j=2 (d=2) -> mean 1.0
+        // col 1: active at j=1 (d=2) -> 2.0
+        assert!((nf[0] - 1.0).abs() < 1e-12);
+        assert!((nf[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distance_matrix_values() {
+        let d = distance_matrix(3, 4);
+        assert_eq!(d.at2(0, 0), 0.0);
+        assert_eq!(d.at2(2, 3), 5.0);
+        assert_eq!(d.at2(1, 2), 3.0);
+    }
+
+    #[test]
+    fn hypothesis_fit_perfect_line() {
+        let calc = vec![1.0, 2.0, 3.0, 4.0];
+        let meas: Vec<f64> = calc.iter().map(|c| 0.8 * c + 0.1).collect();
+        let h = fit_hypothesis(&calc, &meas);
+        assert!((h.fit.slope - 0.8).abs() < 1e-12);
+        assert!((h.fit.intercept - 0.1).abs() < 1e-12);
+        assert!(h.error_summary.std < 1e-9);
+    }
+
+    #[test]
+    fn hypothesis_fit_error_stats_reasonable() {
+        // Noisy linear relation -> error distribution centered near 0.
+        let mut rng = crate::rng::Xoshiro256::seeded(31);
+        let calc: Vec<f64> = (0..400).map(|_| rng.uniform_range(0.5, 2.0)).collect();
+        let meas: Vec<f64> =
+            calc.iter().map(|&c| 1.3 * c * (1.0 + 0.05 * rng.normal())).collect();
+        let h = fit_hypothesis(&calc, &meas);
+        assert!(h.error_summary.mean.abs() < 1.5, "mean {}", h.error_summary.mean);
+        assert!(h.error_summary.std < 12.0, "std {}", h.error_summary.std);
+        assert!(h.fit.r2 > 0.8);
+    }
+}

@@ -1,0 +1,172 @@
+//! Position-dependent PR noise injection (Eq. 17) — the Rust mirror of the
+//! L1 Pallas kernel, used by the pure-Rust accuracy path and as the oracle
+//! in cross-layer tests.
+//!
+//! Eq. 17 distorts each bit-sliced weight by its Manhattan distance:
+//!
+//! ```text
+//! w'_j = Σ_{k≤K} b_{j,k}(w_j) · 2^{-k} · (1 + η_signed · d_M(j,k))
+//! ```
+//!
+//! The paper writes the factor as `(1 + η δ)` and calibrates `η` in SPICE so
+//! the distorted model matches the `r = 2.5 Ω` circuit (η = 2·10⁻³).
+//! Physically PR *reduces* the sensed current, so the calibrated signed
+//! coefficient is negative; we expose `eta_signed` directly (pass
+//! `-2e-3` for the paper's operating point — see `eval::calibrate_eta`).
+
+use crate::mdm::MappingPlan;
+use crate::quant::BitSlicedMatrix;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Distort a physical binary plane tensor into effective per-cell weights:
+/// `eff[j,c] = planes[j,c] · (1 + eta_signed · (j + c))`.
+///
+/// `planes` is in physical layout (rows/cols already placed), so the
+/// distance is simply the cell position.
+pub fn distort_planes(planes: &Tensor, eta_signed: f64) -> Tensor {
+    let rows = planes.rows();
+    let mut out = planes.clone();
+    for j in 0..rows {
+        let row = out.row_mut(j);
+        for (k, v) in row.iter_mut().enumerate() {
+            if *v != 0.0 {
+                *v *= (1.0 + eta_signed * (j + k) as f64) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Reconstruct the **distorted dequantized weight matrix** `[J, N]` of a
+/// bit-sliced tile under a mapping plan: each bit contributes
+/// `scale · 2^{-(bit+1)} · (1 + η_signed · d)` where `d` is the Manhattan
+/// distance of the physical cell holding that bit.
+///
+/// This is the weight a PyTorch/JAX model would see after Eq.-17 injection,
+/// and the oracle the L1 kernel is tested against.
+pub fn distorted_weights(
+    sliced: &BitSlicedMatrix,
+    plan: &MappingPlan,
+    eta_signed: f64,
+) -> Result<Tensor> {
+    ensure!(
+        plan.rows() == sliced.rows() && plan.cols() == sliced.cols(),
+        "plan {}x{} does not match sliced {}x{}",
+        plan.rows(),
+        plan.cols(),
+        sliced.rows(),
+        sliced.cols()
+    );
+    let d = plan.logical_distance_matrix();
+    let (j_rows, n, k_bits) = (sliced.rows(), sliced.n_weights, sliced.k_bits);
+    let mut out = vec![0.0f32; j_rows * n];
+    for j in 0..j_rows {
+        for w in 0..n {
+            let mut acc = 0.0f64;
+            for b in 0..k_bits {
+                let c = w * k_bits + b;
+                if sliced.active(j, c) {
+                    let dist = d.at2(j, c) as f64;
+                    acc += 0.5f64.powi(b as i32 + 1) * (1.0 + eta_signed * dist);
+                }
+            }
+            out[j * n + w] = (acc * sliced.quant.scale as f64) as f32;
+        }
+    }
+    Tensor::new(&[j_rows, n], out)
+}
+
+/// Mean absolute relative distortion of the tile's weights under the plan:
+/// `mean_j,w |w' − w| / max|w|` — a cheap scalar proxy used in reports.
+pub fn mean_relative_distortion(
+    sliced: &BitSlicedMatrix,
+    plan: &MappingPlan,
+    eta_signed: f64,
+) -> Result<f64> {
+    let clean = sliced.dequantize()?;
+    let noisy = distorted_weights(sliced, plan, eta_signed)?;
+    let denom = clean.max_abs().max(f32::MIN_POSITIVE) as f64;
+    let n = clean.len() as f64;
+    let sum: f64 = clean
+        .data()
+        .iter()
+        .zip(noisy.data())
+        .map(|(&a, &b)| ((a - b).abs() as f64) / denom)
+        .sum();
+    Ok(sum / n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mdm::{map_tile, MappingConfig};
+    use crate::rng::Xoshiro256;
+
+    fn random_nonneg(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seeded(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.laplace(0.2).abs() as f32).collect();
+        Tensor::new(&[rows, cols], data).unwrap()
+    }
+
+    #[test]
+    fn zero_eta_is_identity() {
+        let w = random_nonneg(8, 4, 1);
+        let s = BitSlicedMatrix::slice(&w, 8).unwrap();
+        let plan = MappingPlan::identity(s.rows(), s.cols());
+        let noisy = distorted_weights(&s, &plan, 0.0).unwrap();
+        let clean = s.dequantize().unwrap();
+        for (a, b) in clean.data().iter().zip(noisy.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn distort_planes_scales_by_distance() {
+        let mut planes = Tensor::zeros(&[3, 3]);
+        *planes.at2_mut(0, 0) = 1.0;
+        *planes.at2_mut(2, 2) = 1.0;
+        let d = distort_planes(&planes, -0.01);
+        assert_eq!(d.at2(0, 0), 1.0); // distance 0: untouched
+        assert!((d.at2(2, 2) - 0.96).abs() < 1e-6); // distance 4: 1 - 0.04
+        assert_eq!(d.at2(1, 1), 0.0); // inactive stays 0
+    }
+
+    #[test]
+    fn negative_eta_shrinks_weights() {
+        let w = random_nonneg(16, 4, 2);
+        let s = BitSlicedMatrix::slice(&w, 8).unwrap();
+        let plan = MappingPlan::identity(s.rows(), s.cols());
+        let noisy = distorted_weights(&s, &plan, -1e-3).unwrap();
+        let clean = s.dequantize().unwrap();
+        assert!(noisy.sum() < clean.sum());
+        // And every individual weight shrank or stayed equal.
+        for (a, b) in clean.data().iter().zip(noisy.data()) {
+            assert!(*b <= *a + 1e-7);
+        }
+    }
+
+    #[test]
+    fn mdm_plan_reduces_distortion() {
+        // The whole point: under the same η, the MDM-mapped tile sees less
+        // total distortion than the conventional mapping.
+        let w = random_nonneg(64, 8, 3);
+        let s = BitSlicedMatrix::slice(&w, 8).unwrap();
+        let conv = map_tile(&s.planes, MappingConfig::conventional());
+        let mdm = map_tile(&s.planes, MappingConfig::mdm());
+        let d_conv = mean_relative_distortion(&s, &conv, -2e-3).unwrap();
+        let d_mdm = mean_relative_distortion(&s, &mdm, -2e-3).unwrap();
+        assert!(
+            d_mdm < d_conv,
+            "MDM distortion {d_mdm} not below conventional {d_conv}"
+        );
+    }
+
+    #[test]
+    fn plan_shape_mismatch_rejected() {
+        let w = random_nonneg(8, 4, 4);
+        let s = BitSlicedMatrix::slice(&w, 8).unwrap();
+        let plan = MappingPlan::identity(4, 4);
+        assert!(distorted_weights(&s, &plan, -1e-3).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Fixed-point quantization and bit-slicing (§II-A of the paper).
+//!
+//! Bit-sliced crossbars store each weight across `K` fractional-bit columns:
+//! `w = s · Σ_{k=1..K} b_k · 2^{-k}` where `s` is the per-tensor scale and
+//! `b_k ∈ {0,1}`. Signs are handled by the standard differential scheme: the
+//! weight matrix is split into non-negative positive and negative parts that
+//! map to separate column groups (or separate crossbars), and the digital
+//! backend subtracts the two partial sums.
+//!
+//! Column-order convention: within one weight's `K` columns, local bit index
+//! `0` is the **highest-order** bit (`2^{-1}`) and `K-1` the lowest
+//! (`2^{-K}`). The *conventional* dataflow places bit 0 closest to the input
+//! rail; the *reversed* dataflow (paper §IV step 1) places bit `K-1` there.
+
+mod slicing;
+
+pub use slicing::{BitSlicedMatrix, SignSplit};
+
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Symmetric per-tensor fixed-point quantizer with `k_bits` fractional bits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantizer {
+    /// Number of fractional bits `K` (paper uses 8 for 128-wide crossbars
+    /// with 16 multipliers).
+    pub k_bits: usize,
+    /// Scale `s`; magnitudes are normalized to `[0, 1)` by `s`.
+    pub scale: f32,
+}
+
+impl Quantizer {
+    /// Fit a quantizer to a tensor: `scale = max|w|` (plus epsilon so that
+    /// the maximum maps strictly below 1.0 and fits in `K` bits).
+    pub fn fit(w: &Tensor, k_bits: usize) -> Result<Self> {
+        ensure!((1..=24).contains(&k_bits), "k_bits {} out of range", k_bits);
+        let m = w.max_abs();
+        let scale = if m == 0.0 { 1.0 } else { m * (1.0 + 1e-6) };
+        Ok(Self { k_bits, scale })
+    }
+
+    /// Number of representable magnitude levels, `2^K`.
+    pub fn levels(&self) -> u32 {
+        1u32 << self.k_bits
+    }
+
+    /// Quantize one magnitude (non-negative) to an integer level in
+    /// `[0, 2^K - 1]` (round-to-nearest).
+    pub fn level_of(&self, mag: f32) -> u32 {
+        debug_assert!(mag >= 0.0);
+        let x = (mag / self.scale) * self.levels() as f32;
+        let l = x.round() as i64;
+        l.clamp(0, (self.levels() - 1) as i64) as u32
+    }
+
+    /// Reconstruct the magnitude of an integer level.
+    pub fn mag_of(&self, level: u32) -> f32 {
+        self.scale * level as f32 / self.levels() as f32
+    }
+
+    /// The `K` fractional bits of a level, local bit 0 = highest order
+    /// (`2^{-1}`).
+    pub fn bits_of(&self, level: u32) -> Vec<u8> {
+        (0..self.k_bits).map(|b| ((level >> (self.k_bits - 1 - b)) & 1) as u8).collect()
+    }
+
+    /// Worst-case absolute quantization error: half an LSB from rounding in
+    /// the interior plus up to another half LSB where the top code clamps
+    /// (magnitudes in `(1 − 2^{-K}, 1]·scale` all map to level `2^K − 1`),
+    /// i.e. one full LSB `scale · 2^{-K}`.
+    pub fn max_abs_error(&self) -> f32 {
+        self.scale / (1u32 << self.k_bits) as f32
+    }
+}
+
+/// Probability that fractional bit `k` (1-based, value `2^{-k}`) is set,
+/// measured over a slice of magnitudes under quantizer `q` — the empirical
+/// `p_k` of Theorem 1.
+pub fn empirical_bit_density(q: &Quantizer, mags: &[f32]) -> Vec<f64> {
+    let mut counts = vec![0usize; q.k_bits];
+    for &m in mags {
+        let level = q.level_of(m.abs());
+        for (b, c) in counts.iter_mut().enumerate() {
+            if (level >> (q.k_bits - 1 - b)) & 1 == 1 {
+                *c += 1;
+            }
+        }
+    }
+    counts.iter().map(|&c| c as f64 / mags.len().max(1) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_scale_covers_max() {
+        let w = Tensor::from_vec(vec![0.5, -2.0, 1.0]);
+        let q = Quantizer::fit(&w, 8).unwrap();
+        assert!(q.scale >= 2.0);
+        assert!(q.level_of(2.0) <= q.levels() - 1);
+    }
+
+    #[test]
+    fn level_roundtrip_error_bounded() {
+        let q = Quantizer { k_bits: 8, scale: 1.0 };
+        for i in 0..=1000 {
+            let mag = i as f32 / 1000.0 * 0.999;
+            let rec = q.mag_of(q.level_of(mag));
+            assert!(
+                (rec - mag).abs() <= q.max_abs_error() + 1e-7,
+                "mag {mag} rec {rec} err {}",
+                (rec - mag).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn bits_of_msb_first() {
+        let q = Quantizer { k_bits: 4, scale: 1.0 };
+        // level 0b1010 -> bits [1,0,1,0] with bit 0 = 2^-1.
+        assert_eq!(q.bits_of(0b1010), vec![1, 0, 1, 0]);
+        // Value check: 2^-1 + 2^-3 = 0.625 = 10/16.
+        assert!((q.mag_of(0b1010) - 0.625).abs() < 1e-7);
+    }
+
+    #[test]
+    fn k_bits_validation() {
+        let w = Tensor::from_vec(vec![1.0]);
+        assert!(Quantizer::fit(&w, 0).is_err());
+        assert!(Quantizer::fit(&w, 25).is_err());
+        assert!(Quantizer::fit(&w, 8).is_ok());
+    }
+
+    #[test]
+    fn zero_tensor_quantizes_to_zero() {
+        let w = Tensor::zeros(&[4]);
+        let q = Quantizer::fit(&w, 8).unwrap();
+        assert_eq!(q.level_of(0.0), 0);
+        assert_eq!(q.mag_of(0), 0.0);
+    }
+
+    #[test]
+    fn bit_density_low_order_denser_for_bell_shape() {
+        // Theorem 1: for a decreasing density, p_k < 1/2 and p_k -> 1/2 as
+        // k grows, so low-order bits are denser than high-order ones.
+        let mut r = crate::rng::Xoshiro256::seeded(5);
+        let mags: Vec<f32> = (0..40_000).map(|_| r.laplace(0.15).abs() as f32).collect();
+        let maxm = mags.iter().cloned().fold(0.0f32, f32::max);
+        let q = Quantizer { k_bits: 8, scale: maxm * (1.0 + 1e-6) };
+        let p = empirical_bit_density(&q, &mags);
+        // High-order bit much sparser than the mid/low-order bits.
+        assert!(p[0] < 0.2, "p1 = {}", p[0]);
+        assert!(p[6] > 0.3, "p7 = {}", p[6]);
+        // All p_k below 1/2 within sampling noise (Theorem 1 says p_k < 1/2
+        // exactly; the last bit can brush 0.5 after round-to-nearest).
+        for (k, &pk) in p.iter().enumerate() {
+            assert!(pk < 0.55, "p_{} = {}", k + 1, pk);
+        }
+    }
+}

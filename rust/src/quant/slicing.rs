@@ -1,0 +1,249 @@
+//! Bit-slicing of weight matrices into crossbar bit-planes, and the
+//! differential sign split.
+
+use super::Quantizer;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// A weight matrix split into non-negative positive/negative parts
+/// (differential columns; outputs subtract).
+#[derive(Debug, Clone)]
+pub struct SignSplit {
+    pub pos: Tensor,
+    pub neg: Tensor,
+}
+
+impl SignSplit {
+    /// Split `w` into `w⁺ = max(w, 0)` and `w⁻ = max(-w, 0)`.
+    pub fn of(w: &Tensor) -> Self {
+        Self { pos: w.map(|x| x.max(0.0)), neg: w.map(|x| (-x).max(0.0)) }
+    }
+
+    /// Reconstruct `w = w⁺ − w⁻`.
+    pub fn merge(&self) -> Result<Tensor> {
+        self.pos.zip(&self.neg, |p, n| p - n)
+    }
+}
+
+/// A bit-sliced weight matrix: `J` rows × (`N` weights · `K` bits) binary
+/// columns, as laid out on a crossbar tile.
+///
+/// Crossbar column `c` holds bit `c % K` (local bit 0 = highest order,
+/// `2^{-1}`) of weight column `c / K`. The stored [`Tensor`] contains 0.0/1.0
+/// entries so it can flow directly into matmuls and into the L1 kernel's
+/// operands.
+#[derive(Debug, Clone)]
+pub struct BitSlicedMatrix {
+    /// Binary plane, shape `[J, N*K]`, entries in {0.0, 1.0}.
+    pub planes: Tensor,
+    /// Number of logical weight columns `N`.
+    pub n_weights: usize,
+    /// Fractional bits per weight `K`.
+    pub k_bits: usize,
+    /// The quantizer used (holds the scale).
+    pub quant: Quantizer,
+}
+
+impl BitSlicedMatrix {
+    /// Bit-slice a **non-negative** weight matrix `w: [J, N]` with `K`
+    /// fractional bits, fitting the quantizer scale to this matrix.
+    pub fn slice(w: &Tensor, k_bits: usize) -> Result<Self> {
+        let quant = Quantizer::fit(w, k_bits)?;
+        Self::slice_with(w, quant)
+    }
+
+    /// Bit-slice with an externally fitted quantizer (e.g. a per-layer scale
+    /// shared by every tile of the layer so dequantization is consistent).
+    pub fn slice_with(w: &Tensor, quant: Quantizer) -> Result<Self> {
+        ensure!(w.ndim() == 2, "bit-slice needs a 2-D matrix, got {:?}", w.shape());
+        ensure!(
+            w.data().iter().all(|&x| x >= 0.0),
+            "bit-slice input must be non-negative (sign-split first)"
+        );
+        let k_bits = quant.k_bits;
+        let (j_rows, n) = (w.rows(), w.cols());
+        let mut planes = vec![0.0f32; j_rows * n * k_bits];
+        for j in 0..j_rows {
+            for wcol in 0..n {
+                let level = quant.level_of(w.at2(j, wcol));
+                for b in 0..k_bits {
+                    if (level >> (k_bits - 1 - b)) & 1 == 1 {
+                        planes[j * n * k_bits + wcol * k_bits + b] = 1.0;
+                    }
+                }
+            }
+        }
+        Ok(Self {
+            planes: Tensor::new(&[j_rows, n * k_bits], planes)?,
+            n_weights: n,
+            k_bits,
+            quant,
+        })
+    }
+
+    /// Number of crossbar rows `J`.
+    pub fn rows(&self) -> usize {
+        self.planes.rows()
+    }
+
+    /// Number of crossbar columns `N·K`.
+    pub fn cols(&self) -> usize {
+        self.planes.cols()
+    }
+
+    /// Logical weight column of crossbar column `c`.
+    pub fn weight_of_col(&self, c: usize) -> usize {
+        c / self.k_bits
+    }
+
+    /// Local bit index (0 = highest order) of crossbar column `c`.
+    pub fn bit_of_col(&self, c: usize) -> usize {
+        c % self.k_bits
+    }
+
+    /// Scale factor of crossbar column `c`: `scale · 2^{-(bit+1)}`.
+    pub fn col_scale(&self, c: usize) -> f32 {
+        self.quant.scale * 0.5f32.powi(self.bit_of_col(c) as i32 + 1)
+    }
+
+    /// All column scales as a vector (length `N·K`), for the L1 kernel.
+    pub fn col_scales(&self) -> Vec<f32> {
+        (0..self.cols()).map(|c| self.col_scale(c)).collect()
+    }
+
+    /// Reconstruct the (quantized) weight matrix `[J, N]`.
+    pub fn dequantize(&self) -> Result<Tensor> {
+        let (j_rows, n, k) = (self.rows(), self.n_weights, self.k_bits);
+        let mut out = vec![0.0f32; j_rows * n];
+        for j in 0..j_rows {
+            for wcol in 0..n {
+                let mut acc = 0.0f32;
+                for b in 0..k {
+                    if self.planes.at2(j, wcol * k + b) == 1.0 {
+                        acc += 0.5f32.powi(b as i32 + 1);
+                    }
+                }
+                out[j * n + wcol] = acc * self.quant.scale;
+            }
+        }
+        Tensor::new(&[j_rows, n], out)
+    }
+
+    /// Fraction of zero cells (crossbar sparsity — the paper's models sit at
+    /// ≥ ~76–80%).
+    pub fn sparsity(&self) -> f64 {
+        self.planes.sparsity()
+    }
+
+    /// Density (fraction of active cells) of each crossbar column — the
+    /// structured pattern of Theorem 1.
+    pub fn column_density(&self) -> Vec<f64> {
+        let (r, c) = (self.rows(), self.cols());
+        let mut d = vec![0.0f64; c];
+        for j in 0..r {
+            let row = self.planes.row(j);
+            for (cc, &v) in row.iter().enumerate() {
+                if v != 0.0 {
+                    d[cc] += 1.0;
+                }
+            }
+        }
+        for v in &mut d {
+            *v /= r as f64;
+        }
+        d
+    }
+
+    /// Active-cell indicator as a boolean matrix (for NF evaluation).
+    pub fn active(&self, j: usize, c: usize) -> bool {
+        self.planes.at2(j, c) != 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn sign_split_merge_roundtrip() {
+        let w = Tensor::new(&[2, 3], vec![1.0, -2.0, 0.0, 0.5, -0.5, 3.0]).unwrap();
+        let s = SignSplit::of(&w);
+        assert!(s.pos.data().iter().all(|&x| x >= 0.0));
+        assert!(s.neg.data().iter().all(|&x| x >= 0.0));
+        assert_eq!(s.merge().unwrap(), w);
+    }
+
+    #[test]
+    fn slice_rejects_negative_and_non2d() {
+        let w = Tensor::new(&[1, 2], vec![1.0, -0.1]).unwrap();
+        assert!(BitSlicedMatrix::slice(&w, 8).is_err());
+        let v = Tensor::from_vec(vec![1.0]);
+        assert!(BitSlicedMatrix::slice(&v, 8).is_err());
+    }
+
+    #[test]
+    fn slice_dequant_error_bounded() {
+        let mut r = Xoshiro256::seeded(3);
+        let data: Vec<f32> = (0..64).map(|_| r.uniform() as f32).collect();
+        let w = Tensor::new(&[8, 8], data).unwrap();
+        let s = BitSlicedMatrix::slice(&w, 8).unwrap();
+        let d = s.dequantize().unwrap();
+        let tol = s.quant.max_abs_error() + 1e-6;
+        for (a, b) in w.data().iter().zip(d.data()) {
+            assert!((a - b).abs() <= tol, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn column_layout_and_scales() {
+        let w = Tensor::new(&[1, 2], vec![0.75, 0.25]).unwrap();
+        // scale ≈ 0.75; normalized: 1.0 -> level 255-ish, 1/3 -> level 85.
+        let s = BitSlicedMatrix::slice(&w, 4).unwrap();
+        assert_eq!(s.cols(), 8);
+        assert_eq!(s.weight_of_col(0), 0);
+        assert_eq!(s.weight_of_col(4), 1);
+        assert_eq!(s.bit_of_col(0), 0);
+        assert_eq!(s.bit_of_col(7), 3);
+        // col 0 scale = scale * 2^-1, col 3 = scale * 2^-4.
+        assert!((s.col_scale(0) - s.quant.scale * 0.5).abs() < 1e-7);
+        assert!((s.col_scale(3) - s.quant.scale * 0.0625).abs() < 1e-7);
+        assert_eq!(s.col_scales().len(), 8);
+    }
+
+    #[test]
+    fn sliced_matmul_equals_dequant_matmul() {
+        // x @ dequant(W) must equal (x @ planes) . col_scales grouped by
+        // weight — the identity the crossbar (and the L1 kernel) computes.
+        let mut r = Xoshiro256::seeded(7);
+        let wdata: Vec<f32> = (0..32).map(|_| r.uniform() as f32).collect();
+        let w = Tensor::new(&[4, 8], wdata).unwrap();
+        let s = BitSlicedMatrix::slice(&w, 8).unwrap();
+        let xdata: Vec<f32> = (0..4).map(|_| r.uniform_range(-1.0, 1.0) as f32).collect();
+        let x = Tensor::new(&[1, 4], xdata).unwrap();
+
+        let y_ref = x.matmul(&s.dequantize().unwrap()).unwrap();
+
+        let part = x.matmul(&s.planes).unwrap(); // [1, N*K]
+        let scales = s.col_scales();
+        let mut y = vec![0.0f32; s.n_weights];
+        for c in 0..s.cols() {
+            y[s.weight_of_col(c)] += part.data()[c] * scales[c];
+        }
+        for (a, b) in y_ref.data().iter().zip(&y) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn column_density_monotone_for_bell_weights() {
+        let mut r = Xoshiro256::seeded(11);
+        let data: Vec<f32> = (0..4096).map(|_| r.laplace(0.1).abs() as f32).collect();
+        let w = Tensor::new(&[4096, 1], data).unwrap();
+        let s = BitSlicedMatrix::slice(&w, 8).unwrap();
+        let d = s.column_density();
+        // Highest-order bit far sparser than the 7th bit.
+        assert!(d[0] < d[6], "{:?}", d);
+        assert!(s.sparsity() > 0.5);
+    }
+}

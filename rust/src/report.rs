@@ -1,0 +1,203 @@
+//! Terminal/CSV reporting: ASCII tables, bar charts, histograms and
+//! heatmaps, plus CSV writers for `results/`. Every experiment driver
+//! renders through this module so figures regenerate both on screen and as
+//! data files.
+
+use crate::stats::Histogram;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Render an ASCII table with a header row.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in &widths {
+            let _ = write!(out, "+{}", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "+");
+    };
+    sep(&mut out);
+    for (i, h) in headers.iter().enumerate() {
+        let _ = write!(out, "| {:width$} ", h, width = widths[i]);
+    }
+    let _ = writeln!(out, "|");
+    sep(&mut out);
+    for row in rows {
+        for i in 0..ncols {
+            let cell = row.get(i).map(String::as_str).unwrap_or("");
+            let _ = write!(out, "| {:width$} ", cell, width = widths[i]);
+        }
+        let _ = writeln!(out, "|");
+    }
+    sep(&mut out);
+    out
+}
+
+/// Horizontal bar chart: one labelled bar per entry, scaled to `width`.
+pub fn bar_chart(entries: &[(String, f64)], width: usize) -> String {
+    let maxv = entries.iter().map(|e| e.1.abs()).fold(0.0f64, f64::max);
+    let label_w = entries.iter().map(|e| e.0.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (label, v) in entries {
+        let n = if maxv > 0.0 { ((v.abs() / maxv) * width as f64).round() as usize } else { 0 };
+        let _ = writeln!(
+            out,
+            "{:label_w$} | {:<width$} {v:.4}",
+            label,
+            "#".repeat(n),
+            label_w = label_w,
+            width = width
+        );
+    }
+    out
+}
+
+/// Vertical ASCII histogram (for the Fig. 4 error distribution).
+pub fn histogram_chart(h: &Histogram, height: usize) -> String {
+    let maxc = h.counts.iter().cloned().max().unwrap_or(0);
+    let mut out = String::new();
+    if maxc == 0 {
+        return "(empty histogram)\n".into();
+    }
+    for level in (1..=height).rev() {
+        let thresh = (level as f64 / height as f64) * maxc as f64;
+        for &c in &h.counts {
+            let _ = write!(out, "{}", if c as f64 >= thresh { '█' } else { ' ' });
+        }
+        let _ = writeln!(out);
+    }
+    let _ = writeln!(out, "{}", "-".repeat(h.counts.len()));
+    let _ = writeln!(out, "[{:.3} .. {:.3}]  n={}", h.lo, h.hi, h.total());
+    out
+}
+
+/// ASCII heatmap of a 2-D tensor using a 10-step grayscale ramp
+/// (for the Fig. 2 NF map).
+pub fn heatmap(t: &Tensor) -> String {
+    const RAMP: &[char] = &[' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    assert_eq!(t.ndim(), 2);
+    let (rows, cols) = (t.rows(), t.cols());
+    let maxv = t.data().iter().cloned().fold(f32::MIN, f32::max);
+    let minv = t.data().iter().cloned().fold(f32::MAX, f32::min);
+    let span = (maxv - minv).max(f32::MIN_POSITIVE);
+    let mut out = String::new();
+    for j in 0..rows {
+        for k in 0..cols {
+            let x = (t.at2(j, k) - minv) / span;
+            let idx = ((x * (RAMP.len() - 1) as f32).round() as usize).min(RAMP.len() - 1);
+            let _ = write!(out, "{}", RAMP[idx]);
+        }
+        let _ = writeln!(out);
+    }
+    let _ = writeln!(out, "min={minv:.3e} max={maxv:.3e}");
+    out
+}
+
+/// Write a CSV file (creates parent directories).
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    let mut text = String::new();
+    let _ = writeln!(text, "{}", headers.join(","));
+    for row in rows {
+        let escaped: Vec<String> = row
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        let _ = writeln!(text, "{}", escaped.join(","));
+    }
+    std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Format a float with engineering-friendly precision.
+pub fn fmt_g(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1e4 || v.abs() < 1e-3 {
+        format!("{v:.4e}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns() {
+        let t = table(
+            &["model", "nf"],
+            &[
+                vec!["resnet18".into(), "0.1".into()],
+                vec!["x".into(), "12.5".into()],
+            ],
+        );
+        assert!(t.contains("| model    | nf   |"));
+        assert!(t.lines().count() >= 6);
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let c = bar_chart(&[("a".into(), 1.0), ("bb".into(), 2.0)], 10);
+        let lines: Vec<&str> = c.lines().collect();
+        assert!(lines[0].matches('#').count() == 5);
+        assert!(lines[1].matches('#').count() == 10);
+    }
+
+    #[test]
+    fn histogram_chart_renders() {
+        let h = Histogram::build(&[0.1, 0.2, 0.2, 0.9], 0.0, 1.0, 4);
+        let s = histogram_chart(&h, 3);
+        assert!(s.contains("n=4"));
+    }
+
+    #[test]
+    fn heatmap_renders_extremes() {
+        let t = Tensor::new(&[1, 3], vec![0.0, 0.5, 1.0]).unwrap();
+        let s = heatmap(&t);
+        assert!(s.starts_with(' '));
+        assert!(s.lines().next().unwrap().ends_with('@'));
+    }
+
+    #[test]
+    fn csv_roundtrip_with_escaping() {
+        let dir = std::env::temp_dir().join(format!("csv_test_{}", std::process::id()));
+        let p = dir.join("out.csv");
+        write_csv(&p, &["a", "b"], &[vec!["1,2".into(), "x\"y".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n\"1,2\",\"x\"\"y\"\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fmt_g_ranges() {
+        assert_eq!(fmt_g(0.0), "0");
+        assert!(fmt_g(12345.0).contains('e'));
+        assert!(fmt_g(0.0001).contains('e'));
+        assert_eq!(fmt_g(1.5), "1.5000");
+    }
+}

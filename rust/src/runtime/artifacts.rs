@@ -1,0 +1,150 @@
+//! Artifact store: the manifest-driven catalog of AOT outputs
+//! (`artifacts/manifest.txt` + `*.hlo.txt` + `weights/` + `data/`),
+//! with lazy compilation and caching of executables.
+
+use super::{CompiledModule, Runtime};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One line of `manifest.txt`: `name \t file \t input-shapes \t note`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub input_shapes: String,
+    pub note: String,
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('\t').collect();
+            ensure!(parts.len() >= 2, "manifest line {} malformed: {line:?}", i + 1);
+            entries.push(ManifestEntry {
+                name: parts[0].to_string(),
+                file: parts[1].to_string(),
+                input_shapes: parts.get(2).unwrap_or(&"").to_string(),
+                note: parts.get(3).unwrap_or(&"").to_string(),
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    /// Find an entry by name.
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// The artifact directory with a compile-once executable cache.
+pub struct ArtifactStore {
+    runtime: Runtime,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<CompiledModule>>>,
+}
+
+impl ArtifactStore {
+    /// Open an artifact directory (must contain `manifest.txt` — i.e.
+    /// `make artifacts` has run).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        if !manifest_path.exists() {
+            bail!(
+                "no manifest at {} — run `make artifacts` first",
+                manifest_path.display()
+            );
+        }
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        Ok(Self { runtime: Runtime::cpu()?, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// The artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The shared PJRT runtime.
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Load (compile-once, cached) an executable by manifest name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<CompiledModule>> {
+        if let Some(m) = self.cache.lock().expect("cache lock").get(name) {
+            return Ok(m.clone());
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?;
+        let module =
+            std::sync::Arc::new(self.runtime.compile_file(self.dir.join(&entry.file))?);
+        self.cache.lock().expect("cache lock").insert(name.to_string(), module.clone());
+        Ok(module)
+    }
+
+    /// Load a weights file (`weights/<name>.mdt`).
+    pub fn weights(&self, name: &str) -> Result<crate::tensor::MdtFile> {
+        crate::tensor::read_mdt(self.dir.join("weights").join(format!("{name}.mdt")))
+    }
+
+    /// Load a dataset shard (`data/<name>.mdt`).
+    pub fn data(&self, name: &str) -> Result<crate::dataset::Dataset> {
+        crate::dataset::load(self.dir.join("data").join(format!("{name}.mdt")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_looks_up() {
+        let m = Manifest::parse(
+            "miniresnet_fwd\tminiresnet_fwd.hlo.txt\t(16, 256)\tlogits\n\nk\tf.hlo.txt\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.get("miniresnet_fwd").unwrap().file, "miniresnet_fwd.hlo.txt");
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("just-one-field").is_err());
+    }
+
+    #[test]
+    fn store_requires_manifest() {
+        let dir = std::env::temp_dir().join(format!("art_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = match ArtifactStore::open(&dir) {
+            Ok(_) => panic!("open should fail without a manifest"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("make artifacts"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

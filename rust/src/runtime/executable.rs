@@ -1,0 +1,60 @@
+//! A compiled PJRT executable with tensor-level call conventions.
+
+use super::{literal_to_tensor, tensor_to_literal};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Context, Result};
+
+/// One compiled HLO module, executable with [`Tensor`] operands.
+///
+/// All AOT entry points are lowered with `return_tuple=True`, so the single
+/// output literal is a tuple; [`CompiledModule::run`] unpacks it into one
+/// tensor per element.
+pub struct CompiledModule {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+    /// Cumulative number of `run` calls (metrics).
+    calls: std::sync::atomic::AtomicU64,
+}
+
+impl CompiledModule {
+    pub(super) fn new(exe: xla::PjRtLoadedExecutable, name: String) -> Self {
+        Self { exe, name, calls: std::sync::atomic::AtomicU64::new(0) }
+    }
+
+    /// Source artifact path.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of completed `run` calls.
+    pub fn call_count(&self) -> u64 {
+        self.calls.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Execute with tensor inputs; returns the tuple elements as tensors.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        ensure!(!result.is_empty() && !result[0].is_empty(), "empty execution result");
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        // return_tuple=True => the output is always a tuple literal.
+        let elements = out.decompose_tuple().context("decomposing output tuple")?;
+        elements.iter().map(literal_to_tensor).collect::<Result<Vec<_>>>().map(|ts| {
+            self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            ts
+        })
+    }
+
+    /// Execute and expect exactly one output tensor.
+    pub fn run1(&self, inputs: &[&Tensor]) -> Result<Tensor> {
+        let mut out = self.run(inputs)?;
+        ensure!(out.len() == 1, "{} returned {} outputs, expected 1", self.name, out.len());
+        Ok(out.pop().expect("len checked"))
+    }
+}

@@ -1,0 +1,95 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them from
+//! Rust — Python never runs on this path.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6 over xla_extension 0.5.1):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. The interchange format is HLO **text**
+//! (see `python/compile/aot.py` and /opt/xla-example/README.md: jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids).
+
+mod artifacts;
+mod executable;
+
+pub use artifacts::{ArtifactStore, Manifest, ManifestEntry};
+pub use executable::CompiledModule;
+
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Shared PJRT CPU client. One per process; executables keep an `Arc`.
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client: Arc::new(client) })
+    }
+
+    /// Backend platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile one HLO-text file.
+    pub fn compile_file(&self, path: impl AsRef<std::path::Path>) -> Result<CompiledModule> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledModule::new(exe, path.display().to_string()))
+    }
+}
+
+/// Convert a [`Tensor`] to an `xla::Literal` (f32, row-major).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).context("reshaping literal")
+}
+
+/// Convert an `xla::Literal` back to a [`Tensor`].
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.shape().context("literal shape")?;
+    let dims: Vec<usize> = match &shape {
+        xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+        other => anyhow::bail!("expected array literal, got {other:?}"),
+    };
+    let data: Vec<f32> = lit.to_vec().context("literal to_vec")?;
+    Tensor::new(&dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_tensor_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.device_count() >= 1);
+        assert!(!rt.platform().is_empty());
+    }
+}

@@ -1,0 +1,228 @@
+//! Statistics utilities: summary statistics, histograms, ordinary least
+//! squares, and correlation — everything the Fig. 4 fit and the experiment
+//! reports need.
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    /// Population standard deviation (the paper reports σ of the fit error).
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute [`Summary`] of a slice. Empty input yields zeros.
+pub fn summary(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Summary { n: xs.len(), mean, std: var.sqrt(), min, max }
+}
+
+/// p-th percentile (0..=100) by linear interpolation on the sorted sample.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let w = rank - lo as f64;
+        s[lo] * (1.0 - w) + s[hi] * w
+    }
+}
+
+/// Fixed-width histogram over `[lo, hi]` with `bins` buckets; values outside
+/// the range are clamped into the edge buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<usize>,
+}
+
+impl Histogram {
+    /// Build a histogram of the sample.
+    pub fn build(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        let mut counts = vec![0usize; bins];
+        let w = (hi - lo) / bins as f64;
+        for &x in xs {
+            let mut b = ((x - lo) / w).floor() as i64;
+            if b < 0 {
+                b = 0;
+            }
+            if b >= bins as i64 {
+                b = bins as i64 - 1;
+            }
+            counts[b as usize] += 1;
+        }
+        Self { lo, hi, counts }
+    }
+
+    /// Center of bucket `i`.
+    pub fn center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Total number of samples.
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+}
+
+/// Result of a 1-D ordinary-least-squares fit `y ≈ slope·x + intercept`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OlsFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+}
+
+/// Ordinary least squares for `y ≈ a·x + b`. Requires `x.len() == y.len() >= 2`.
+pub fn ols(x: &[f64], y: &[f64]) -> OlsFit {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2, "ols needs at least two points");
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let sxx: f64 = x.iter().map(|xi| (xi - mx) * (xi - mx)).sum();
+    let sxy: f64 = x.iter().zip(y).map(|(xi, yi)| (xi - mx) * (yi - my)).sum();
+    let slope = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    let intercept = my - slope * mx;
+    let ss_tot: f64 = y.iter().map(|yi| (yi - my) * (yi - my)).sum();
+    let ss_res: f64 =
+        x.iter().zip(y).map(|(xi, yi)| (yi - (slope * xi + intercept)).powi(2)).sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    OlsFit { slope, intercept, r2 }
+}
+
+/// Ordinary least squares *through the origin*: `y ≈ a·x`.
+pub fn ols_through_origin(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let sxx: f64 = x.iter().map(|xi| xi * xi).sum();
+    if sxx == 0.0 {
+        return 0.0;
+    }
+    x.iter().zip(y).map(|(xi, yi)| xi * yi).sum::<f64>() / sxx
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (xi, yi) in x.iter().zip(y) {
+        sxy += (xi - mx) * (yi - my);
+        sxx += (xi - mx) * (xi - mx);
+        syy += (yi - my) * (yi - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// Relative-error series `100 · (pred - meas) / meas` in percent, skipping
+/// entries where `meas == 0`.
+pub fn relative_error_pct(pred: &[f64], meas: &[f64]) -> Vec<f64> {
+    pred.iter()
+        .zip(meas)
+        .filter(|(_, &m)| m != 0.0)
+        .map(|(&p, &m)| 100.0 * (p - m) / m)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summary(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = summary(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamping() {
+        let h = Histogram::build(&[-5.0, 0.1, 0.2, 0.9, 7.0], 0.0, 1.0, 2);
+        assert_eq!(h.counts, vec![3, 2]); // -5 clamps left, 7 clamps right
+        assert_eq!(h.total(), 5);
+        assert!((h.center(0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_exact_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let f = ols(&x, &y);
+        assert!((f.slope - 2.0).abs() < 1e-12);
+        assert!((f.intercept - 1.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_origin() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [2.0, 4.0, 6.0];
+        assert!((ols_through_origin(&x, &y) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_signs() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let up = [2.0, 4.0, 6.0, 8.0];
+        let down = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &up) - 1.0).abs() < 1e-12);
+        assert!((pearson(&x, &down) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relative_error_skips_zero_measurement() {
+        let e = relative_error_pct(&[1.1, 2.0, 5.0], &[1.0, 0.0, 4.0]);
+        assert_eq!(e.len(), 2);
+        assert!((e[0] - 10.0).abs() < 1e-9);
+        assert!((e[1] - 25.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,193 @@
+//! `.mdt` — the tensor container format shared between the Rust runtime and
+//! the Python build path (`python/compile/mdt.py`).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic   : 4 bytes  = b"MDT1"
+//! count   : u32      = number of named tensors
+//! entry*  :
+//!   name_len : u32
+//!   name     : utf-8 bytes
+//!   dtype    : u8   (0 = f32; only f32 is defined for now)
+//!   ndim     : u32
+//!   dims     : ndim x u64
+//!   data     : prod(dims) x f32, row-major
+//! ```
+
+use super::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"MDT1";
+const DTYPE_F32: u8 = 0;
+
+/// An ordered collection of named tensors, as stored in one `.mdt` file.
+#[derive(Debug, Clone, Default)]
+pub struct MdtFile {
+    /// Name → tensor, sorted by name for deterministic files.
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl MdtFile {
+    /// Empty container.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a tensor.
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.insert(name.into(), t);
+    }
+
+    /// Fetch a tensor by name.
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("mdt: no tensor named {name:?}"))
+    }
+
+    /// Tensor names in file order.
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read an `.mdt` file.
+pub fn read_mdt(path: impl AsRef<Path>) -> Result<MdtFile> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    read_mdt_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse `.mdt` content from a byte buffer.
+pub fn read_mdt_bytes(bytes: &[u8]) -> Result<MdtFile> {
+    let mut r = bytes;
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic {magic:?}, expected {MAGIC:?}");
+    }
+    let count = read_u32(&mut r)?;
+    let mut out = MdtFile::new();
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("unreasonable tensor name length {name_len}");
+        }
+        let mut name_bytes = vec![0u8; name_len];
+        r.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes).context("tensor name is not utf-8")?;
+        let mut dtype = [0u8; 1];
+        r.read_exact(&mut dtype)?;
+        if dtype[0] != DTYPE_F32 {
+            bail!("unsupported dtype {} for {name:?}", dtype[0]);
+        }
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 8 {
+            bail!("unreasonable ndim {ndim} for {name:?}");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u64(&mut r)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut raw = vec![0u8; n * 4];
+        r.read_exact(&mut raw)
+            .with_context(|| format!("truncated data for {name:?} ({n} f32s)"))?;
+        let data: Vec<f32> =
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        out.insert(name, Tensor::new(&dims, data)?);
+    }
+    Ok(out)
+}
+
+/// Write an `.mdt` file (atomically via a temp file + rename).
+pub fn write_mdt(path: impl AsRef<Path>, file: &MdtFile) -> Result<()> {
+    let path = path.as_ref();
+    let mut buf: Vec<u8> = Vec::new();
+    buf.write_all(MAGIC)?;
+    buf.write_all(&(file.tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in &file.tensors {
+        buf.write_all(&(name.len() as u32).to_le_bytes())?;
+        buf.write_all(name.as_bytes())?;
+        buf.write_all(&[DTYPE_F32])?;
+        buf.write_all(&(t.ndim() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            buf.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &x in t.data() {
+            buf.write_all(&x.to_le_bytes())?;
+        }
+    }
+    let tmp = path.with_extension("mdt.tmp");
+    std::fs::write(&tmp, &buf).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming to {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mdt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.mdt");
+
+        let mut f = MdtFile::new();
+        f.insert("w", Tensor::new(&[2, 3], vec![1., -2., 3.5, 0., 1e-9, 6.]).unwrap());
+        f.insert("b", Tensor::from_vec(vec![0.25, -0.5]));
+        write_mdt(&path, &f).unwrap();
+
+        let g = read_mdt(&path).unwrap();
+        assert_eq!(g.names(), vec!["b", "w"]);
+        assert_eq!(g.get("w").unwrap(), f.get("w").unwrap());
+        assert_eq!(g.get("b").unwrap(), f.get("b").unwrap());
+        assert!(g.get("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(read_mdt_bytes(b"XXXX\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut f = MdtFile::new();
+        f.insert("w", Tensor::zeros(&[4, 4]));
+        let dir = std::env::temp_dir().join(format!("mdt_trunc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.mdt");
+        write_mdt(&path, &f).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(read_mdt_bytes(&bytes[..bytes.len() - 3]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_file_ok() {
+        let f = MdtFile::new();
+        let dir = std::env::temp_dir().join(format!("mdt_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("e.mdt");
+        write_mdt(&path, &f).unwrap();
+        let g = read_mdt(&path).unwrap();
+        assert!(g.tensors.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

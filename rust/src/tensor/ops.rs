@@ -1,0 +1,261 @@
+//! Linear-algebra and reordering operations on [`Tensor`].
+
+use super::Tensor;
+use anyhow::{bail, Result};
+
+impl Tensor {
+    /// Matrix multiply: `self [m,k] @ rhs [k,n] -> [m,n]`.
+    ///
+    /// Blocked i-k-j loop order with an accumulation row buffer — the fast
+    /// pure-Rust ordering for row-major data (see EXPERIMENTS.md §Perf).
+    pub fn matmul(&self, rhs: &Tensor) -> Result<Tensor> {
+        if self.ndim() != 2 || rhs.ndim() != 2 {
+            bail!("matmul needs 2-D tensors, got {:?} @ {:?}", self.shape(), rhs.shape());
+        }
+        let (m, k) = (self.shape()[0], self.shape()[1]);
+        let (k2, n) = (rhs.shape()[0], rhs.shape()[1]);
+        if k != k2 {
+            bail!("matmul inner-dim mismatch: {:?} @ {:?}", self.shape(), rhs.shape());
+        }
+        let mut out = vec![0.0f32; m * n];
+        let a = self.data();
+        let b = rhs.data();
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue; // bit-plane operands are sparse; skip zero rows
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += aik * bv;
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn transpose(&self) -> Result<Tensor> {
+        if self.ndim() != 2 {
+            bail!("transpose needs a 2-D tensor");
+        }
+        let (r, c) = (self.shape()[0], self.shape()[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data()[i * c + j];
+            }
+        }
+        Tensor::new(&[c, r], out)
+    }
+
+    /// Gather rows of a 2-D tensor: `out[i] = self[perm[i]]`.
+    pub fn permute_rows(&self, perm: &[usize]) -> Result<Tensor> {
+        if self.ndim() != 2 {
+            bail!("permute_rows needs a 2-D tensor");
+        }
+        let c = self.cols();
+        let mut out = Vec::with_capacity(perm.len() * c);
+        for &p in perm {
+            if p >= self.rows() {
+                bail!("row index {} out of range for {} rows", p, self.rows());
+            }
+            out.extend_from_slice(self.row(p));
+        }
+        Tensor::new(&[perm.len(), c], out)
+    }
+
+    /// Gather columns of a 2-D tensor: `out[:, j] = self[:, perm[j]]`.
+    pub fn permute_cols(&self, perm: &[usize]) -> Result<Tensor> {
+        if self.ndim() != 2 {
+            bail!("permute_cols needs a 2-D tensor");
+        }
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; r * perm.len()];
+        for i in 0..r {
+            let src = self.row(i);
+            let dst = &mut out[i * perm.len()..(i + 1) * perm.len()];
+            for (jj, &p) in perm.iter().enumerate() {
+                if p >= c {
+                    bail!("col index {} out of range for {} cols", p, c);
+                }
+                dst[jj] = src[p];
+            }
+        }
+        Tensor::new(&[r, perm.len()], out)
+    }
+
+    /// Reverse the column order (the paper's *dataflow reversal*).
+    pub fn reverse_cols(&self) -> Result<Tensor> {
+        let c = self.cols();
+        let perm: Vec<usize> = (0..c).rev().collect();
+        self.permute_cols(&perm)
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Elementwise binary op; shapes must match.
+    pub fn zip(&self, rhs: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape != rhs.shape {
+            bail!("zip shape mismatch {:?} vs {:?}", self.shape, rhs.shape);
+        }
+        let data = self.data.iter().zip(rhs.data.iter()).map(|(&a, &b)| f(a, b)).collect();
+        Ok(Tensor { shape: self.shape.clone(), data })
+    }
+
+    /// Sum of all elements (f64 accumulator for stability).
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.data.len() as f64
+    }
+
+    /// Maximum absolute value.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Fraction of exactly-zero entries.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|&&x| x == 0.0).count();
+        zeros as f64 / self.data.len() as f64
+    }
+
+    /// Index of the maximum element of each row of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows())
+            .map(|i| {
+                let row = self.row(i);
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// Indices that sort `keys` ascending (stable).
+pub fn argsort_f64(keys: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..keys.len()).collect();
+    idx.sort_by(|&a, &b| keys[a].partial_cmp(&keys[b]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Invert a permutation: `inv[perm[i]] = i`.
+pub fn invert_permutation(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Tensor;
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Tensor::new(&[1, 3], vec![1., 2., 3.]).unwrap();
+        let b = Tensor::new(&[3, 2], vec![1., 0., 0., 1., 1., 1.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.shape(), &[1, 2]);
+        assert_eq!(c.data(), &[4., 5.]);
+    }
+
+    #[test]
+    fn matmul_dim_mismatch() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let t = a.transpose().unwrap();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.at2(2, 1), 6.0);
+        assert_eq!(t.transpose().unwrap(), a);
+    }
+
+    #[test]
+    fn permute_rows_and_inverse() {
+        let a = Tensor::new(&[3, 2], vec![0., 0., 1., 1., 2., 2.]).unwrap();
+        let perm = vec![2, 0, 1];
+        let p = a.permute_rows(&perm).unwrap();
+        assert_eq!(p.row(0), &[2., 2.]);
+        let back = p.permute_rows(&invert_permutation(&perm)).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn permute_cols_reverse() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let r = a.reverse_cols().unwrap();
+        assert_eq!(r.row(0), &[3., 2., 1.]);
+        assert_eq!(r.reverse_cols().unwrap(), a);
+    }
+
+    #[test]
+    fn permutation_semantics_preserved_in_matvec() {
+        // Permuting matrix rows and the activation vector identically leaves
+        // x^T W unchanged — the invariant MDM relies on (§IV).
+        let w = Tensor::new(&[3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let x = Tensor::new(&[1, 3], vec![0.5, -1.0, 2.0]).unwrap();
+        let y0 = x.matmul(&w).unwrap();
+        let perm = vec![2, 0, 1];
+        let wp = w.permute_rows(&perm).unwrap();
+        let xp = x.permute_cols(&perm).unwrap();
+        let y1 = xp.matmul(&wp).unwrap();
+        for (a, b) in y0.data().iter().zip(y1.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn argsort_stable_ascending() {
+        let keys = vec![3.0, 1.0, 2.0, 1.0];
+        assert_eq!(argsort_f64(&keys), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::new(&[2, 2], vec![1., -2., 0., 3.]).unwrap();
+        assert_eq!(t.sum(), 2.0);
+        assert_eq!(t.mean(), 0.5);
+        assert_eq!(t.max_abs(), 3.0);
+        assert_eq!(t.sparsity(), 0.25);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor::new(&[2, 3], vec![0., 5., 1., 9., 2., 3.]).unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+}

@@ -1,0 +1,160 @@
+//! Mini property-testing harness (`proptest` is unavailable offline; see
+//! DESIGN.md §5).
+//!
+//! [`propcheck`] runs a property over `n` randomized cases from a seeded
+//! generator. On failure it retries with progressively "smaller" cases
+//! produced by the generator at lower size budgets (shrinking-lite) and
+//! reports the failing seed + size so the case is exactly reproducible.
+
+use crate::rng::Xoshiro256;
+use std::time::Instant;
+
+/// Timing statistics of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    /// Iterations per second at the mean.
+    pub fn throughput(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Minimal benchmark runner (`criterion` is unavailable offline; see
+/// DESIGN.md §5): `warmup` untimed runs, then `iters` timed runs; prints
+/// `name: mean ± std (min)` and returns the stats for CSV emission.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let stats = BenchStats { iters, mean_s: mean, std_s: var.sqrt(), min_s: min };
+    println!(
+        "{name:<44} {:>10.3} ms ± {:>7.3} ms   (min {:>9.3} ms, {} iters)",
+        mean * 1e3,
+        stats.std_s * 1e3,
+        min * 1e3,
+        iters
+    );
+    stats
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+    /// Maximum size budget handed to the generator.
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0x4D44_4D31, max_size: 64 }
+    }
+}
+
+/// Run `property(gen(rng, size))` over randomized cases.
+///
+/// `gen` receives a seeded RNG and a size budget in `[1, max_size]`;
+/// `property` returns `Err(msg)` to fail. Panics with the reproducing seed
+/// and size on failure (after attempting smaller sizes of the same seed to
+/// report the smallest observed failure).
+pub fn propcheck<T, G, P>(config: PropConfig, mut gen: G, mut property: P)
+where
+    G: FnMut(&mut Xoshiro256, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        let seed = config.seed.wrapping_add(case as u64);
+        // Size sweeps low -> high so early cases are small anyway.
+        let size = 1 + (case * config.max_size) / config.cases.max(1);
+        let mut rng = Xoshiro256::seeded(seed);
+        let value = gen(&mut rng, size);
+        if let Err(msg) = property(&value) {
+            // Shrinking-lite: same seed, smaller sizes.
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng2 = Xoshiro256::seeded(seed);
+                let v2 = gen(&mut rng2, s);
+                if let Err(m2) = property(&v2) {
+                    smallest = (s, m2);
+                    if s == 1 {
+                        break;
+                    }
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, size={}): {}\n  reproduce: propcheck with seed {seed}, size {}",
+                smallest.0, smallest.1, smallest.0
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        propcheck(
+            PropConfig { cases: 10, seed: 1, max_size: 8 },
+            |rng, size| rng.below(size as u64 + 1),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        propcheck(
+            PropConfig { cases: 10, seed: 2, max_size: 8 },
+            |rng, _| rng.below(100),
+            |&v| if v < 1000 { Err(format!("v = {v}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn shrinks_to_smaller_size() {
+        // A property failing for all sizes must report size 1.
+        let result = std::panic::catch_unwind(|| {
+            propcheck(
+                PropConfig { cases: 1, seed: 3, max_size: 64 },
+                |_rng, size| size,
+                |_| Err("always".into()),
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("size=1"), "{msg}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Device-variation Monte-Carlo — process/voltage/temperature (PVT)
+//! nonidealities (paper refs [9, 10]) layered on top of the PR model.
+//!
+//! Real memristor conductances vary log-normally around their programmed
+//! levels. This module perturbs the circuit's device resistances and
+//! re-measures NF, answering two questions the paper leaves open:
+//!
+//! 1. does the Manhattan Hypothesis's linear fit survive realistic device
+//!    variation (A7 ablation)?
+//! 2. does MDM's NF ranking (MDM < conventional) survive it?
+
+use crate::circuit::CrossbarCircuit;
+use crate::rng::Xoshiro256;
+use crate::stats::{pearson, summary, Summary};
+use crate::tensor::Tensor;
+use crate::CrossbarPhysics;
+use anyhow::Result;
+
+/// Log-normal variation model: `R = R_nominal · exp(σ·z)`, `z ~ N(0,1)`.
+#[derive(Debug, Clone, Copy)]
+pub struct VariationModel {
+    /// Log-std of the on-state resistance (literature: 0.05–0.3).
+    pub sigma_on: f64,
+    /// Log-std of the off-state resistance.
+    pub sigma_off: f64,
+}
+
+impl Default for VariationModel {
+    fn default() -> Self {
+        Self { sigma_on: 0.1, sigma_off: 0.2 }
+    }
+}
+
+/// A crossbar with per-cell varied device resistances.
+///
+/// The base [`CrossbarCircuit`] assumes two shared resistance levels; for
+/// Monte-Carlo we rebuild the solve with per-cell conductances by scaling
+/// each cell's state into an equivalent two-level circuit is impossible —
+/// so this struct carries explicit per-cell resistances and assembles its
+/// own solve through the same solver stack.
+#[derive(Debug, Clone)]
+pub struct VariedCrossbar {
+    /// Per-cell resistance (ohms), row-major.
+    pub r_cell: Vec<f64>,
+    pub rows: usize,
+    pub cols: usize,
+    pub physics: CrossbarPhysics,
+}
+
+impl VariedCrossbar {
+    /// Sample a varied instance of `planes` under `model`.
+    pub fn sample(
+        planes: &Tensor,
+        physics: CrossbarPhysics,
+        model: VariationModel,
+        seed: u64,
+    ) -> Self {
+        let (rows, cols) = (planes.rows(), planes.cols());
+        let mut rng = Xoshiro256::seeded(seed);
+        let r_cell = (0..rows * cols)
+            .map(|i| {
+                let active = planes.data()[i] != 0.0;
+                let (nominal, sigma) = if active {
+                    (physics.r_on, model.sigma_on)
+                } else {
+                    (physics.r_off, model.sigma_off)
+                };
+                if nominal.is_finite() {
+                    nominal * (sigma * rng.normal()).exp()
+                } else {
+                    f64::INFINITY
+                }
+            })
+            .collect();
+        Self { r_cell, rows, cols, physics }
+    }
+
+    /// Measured NF of the varied crossbar, against the *varied ideal*
+    /// currents (so device variation alone is not misread as PR error).
+    pub fn nf(&self) -> Result<f64> {
+        // Reuse CrossbarCircuit by quantizing each cell to its own state:
+        // we solve the exact varied mesh via the generic path below.
+        let sol = self.solve()?;
+        Ok(sol)
+    }
+
+    fn solve(&self) -> Result<f64> {
+        // Build two solves: the varied mesh (with wire R) and the varied
+        // ideal (wire R -> 0 equivalent: analytic column sums).
+        // We reuse the CrossbarCircuit assembly by noting the solver stack
+        // only needs per-cell conductances. To avoid duplicating the mesh
+        // assembly we approximate through a fine-grained trick: a circuit
+        // with per-cell resistance == r_cell is exactly the generic mesh;
+        // CrossbarCircuit supports two levels only, so here we assemble via
+        // many single-level solves is wasteful — instead we exploit that
+        // the mesh assembly is linear in the per-cell conductances and
+        // perform the assembly ourselves through the public BandedSpd API.
+        crate::circuit::solve_varied_mesh(
+            self.rows,
+            self.cols,
+            &self.r_cell,
+            self.physics.r_wire,
+            self.physics.v_in,
+        )
+    }
+}
+
+/// A7: Monte-Carlo summary of the hypothesis under variation.
+#[derive(Debug, Clone)]
+pub struct VariationReport {
+    /// Pearson correlation between Eq.-16 NF and varied-measured NF.
+    pub correlation: f64,
+    /// Summary of measured NF across tiles.
+    pub measured: Summary,
+    /// Fraction of (MDM, conventional) pairs where MDM still measured
+    /// lower NF under variation.
+    pub mdm_win_rate: f64,
+}
+
+/// Run the variation Monte-Carlo: `n_tiles` random tiles, each with a
+/// varied device instance; correlate Eq. 16 with the varied measurement
+/// and check MDM's ranking robustness.
+pub fn monte_carlo(
+    n_tiles: usize,
+    tile: usize,
+    density: f64,
+    physics: CrossbarPhysics,
+    model: VariationModel,
+    seed: u64,
+) -> Result<VariationReport> {
+    use crate::mdm::{map_tile, MappingConfig};
+    use crate::nf::manhattan_nf_sum;
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut calc = Vec::new();
+    let mut meas = Vec::new();
+    let mut wins = 0usize;
+    for t in 0..n_tiles {
+        // Density varies tile-to-tile (as in Fig. 4).
+        let d = (density + rng.uniform_range(-0.05, 0.05)).clamp(0.02, 0.9);
+        let planes = crate::eval::random_planes(tile, tile, d, &mut rng);
+        calc.push(manhattan_nf_sum(&planes, physics.parasitic_ratio()));
+        let varied = VariedCrossbar::sample(&planes, physics, model, seed ^ (t as u64) << 16);
+        meas.push(varied.nf()?);
+
+        // MDM ranking robustness on the same tile + same variation seed.
+        let conv = map_tile(&planes, MappingConfig::conventional()).apply(&planes)?;
+        let mdm = map_tile(&planes, MappingConfig::mdm()).apply(&planes)?;
+        let nf_conv =
+            VariedCrossbar::sample(&conv, physics, model, seed ^ (t as u64) << 16).nf()?;
+        let nf_mdm =
+            VariedCrossbar::sample(&mdm, physics, model, seed ^ (t as u64) << 16).nf()?;
+        if nf_mdm <= nf_conv {
+            wins += 1;
+        }
+    }
+    Ok(VariationReport {
+        correlation: pearson(&calc, &meas),
+        measured: summary(&meas),
+        mdm_win_rate: wins as f64 / n_tiles.max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_variation_matches_base_circuit() {
+        let physics = CrossbarPhysics::default();
+        let mut rng = Xoshiro256::seeded(3);
+        let planes = crate::eval::random_planes(12, 12, 0.25, &mut rng);
+        let varied = VariedCrossbar::sample(
+            &planes,
+            physics,
+            VariationModel { sigma_on: 0.0, sigma_off: 0.0 },
+            1,
+        );
+        let nf_varied = varied.nf().unwrap();
+        let nf_base =
+            CrossbarCircuit::from_planes(&planes, physics).unwrap().solve().unwrap().nf();
+        assert!(
+            (nf_varied - nf_base).abs() < 1e-9 + nf_base * 1e-6,
+            "{nf_varied} vs {nf_base}"
+        );
+    }
+
+    #[test]
+    fn variation_keeps_hypothesis_correlated() {
+        let r = monte_carlo(
+            12,
+            16,
+            0.2,
+            CrossbarPhysics::default(),
+            VariationModel::default(),
+            42,
+        )
+        .unwrap();
+        assert!(r.correlation > 0.6, "correlation {}", r.correlation);
+        assert!(r.measured.mean > 0.0);
+        assert!(r.mdm_win_rate >= 0.5, "win rate {}", r.mdm_win_rate);
+    }
+
+    #[test]
+    fn sampling_deterministic_per_seed() {
+        let physics = CrossbarPhysics::default();
+        let mut rng = Xoshiro256::seeded(9);
+        let planes = crate::eval::random_planes(8, 8, 0.3, &mut rng);
+        let a = VariedCrossbar::sample(&planes, physics, VariationModel::default(), 5);
+        let b = VariedCrossbar::sample(&planes, physics, VariationModel::default(), 5);
+        assert_eq!(a.r_cell, b.r_cell);
+    }
+}

@@ -1,0 +1,173 @@
+//! Integration tests over the serving coordinator: engine programming,
+//! batching, backpressure, and end-to-end correctness of served logits.
+//!
+//! Requires `make artifacts`.
+
+use mdm_cim::config::ServerConfig;
+use mdm_cim::coordinator::{Engine, EngineConfig, ModelKind, Server};
+use mdm_cim::crossbar::TileGeometry;
+use mdm_cim::mdm::MappingConfig;
+use mdm_cim::runtime::ArtifactStore;
+
+fn engine_cfg(eta: f64, mapping: MappingConfig) -> EngineConfig {
+    EngineConfig {
+        model: ModelKind::MiniResNet,
+        mapping,
+        eta_signed: eta,
+        geometry: TileGeometry::paper_eval(),
+        fwd_batch: 16,
+    }
+}
+
+/// Served logits equal direct engine inference (batching is transparent).
+#[test]
+fn served_logits_match_direct_engine() {
+    let test = ArtifactStore::open("artifacts").unwrap().data("test").unwrap();
+    let engine = Engine::program("artifacts", engine_cfg(0.0, MappingConfig::conventional()))
+        .unwrap();
+    let server = Server::start(
+        "artifacts",
+        engine_cfg(0.0, MappingConfig::conventional()),
+        ServerConfig { workers: 1, max_batch: 16, batch_window_us: 100, queue_depth: 64 },
+    )
+    .unwrap();
+
+    let (x, _) = test.batch(0, 5);
+    let direct = engine.infer(&x).unwrap();
+    let rx = server.submit(x).unwrap();
+    let resp = rx.recv().unwrap();
+    assert_eq!(resp.logits.shape(), direct.shape());
+    for (a, b) in resp.logits.data().iter().zip(direct.data()) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    server.shutdown();
+}
+
+/// Multiple concurrent requests all come back, with metrics accounting.
+#[test]
+fn concurrent_requests_complete_with_metrics() {
+    let test = ArtifactStore::open("artifacts").unwrap().data("test").unwrap();
+    let server = Server::start(
+        "artifacts",
+        engine_cfg(-2e-3, MappingConfig::mdm()),
+        ServerConfig { workers: 2, max_batch: 16, batch_window_us: 200, queue_depth: 128 },
+    )
+    .unwrap();
+    let n = 12;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let (x, _) = test.batch(i * 3, 3);
+        rxs.push(server.submit(x).unwrap());
+    }
+    let mut got = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits.shape(), &[3, 10]);
+        got += 1;
+    }
+    assert_eq!(got, n);
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.requests, n as u64);
+    assert_eq!(snap.completed, n as u64);
+    assert_eq!(snap.rows, (3 * n) as u64);
+    assert!(snap.batches >= 1);
+    assert!(snap.adc_conversions > 0);
+    assert!(snap.latency_p99_us >= snap.latency_p50_us);
+    server.shutdown();
+}
+
+/// Backpressure: a zero-worker... not possible (min 1 worker), so instead a
+/// tiny queue with a flood of requests must reject some.
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let test = ArtifactStore::open("artifacts").unwrap().data("test").unwrap();
+    let server = Server::start(
+        "artifacts",
+        engine_cfg(0.0, MappingConfig::conventional()),
+        // Large window + queue depth 2 means the 3rd+ submissions race the
+        // batcher; flooding 64 requests must trip rejection at least once.
+        ServerConfig { workers: 1, max_batch: 4, batch_window_us: 50_000, queue_depth: 2 },
+    )
+    .unwrap();
+    let mut rejected = 0usize;
+    let mut rxs = Vec::new();
+    for i in 0..64 {
+        let (x, _) = test.batch(i, 1);
+        match server.submit(x) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "expected at least one backpressure rejection");
+    // Accepted requests still complete.
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.rejected as usize, rejected);
+    server.shutdown();
+}
+
+/// The row-sort component of MDM must not hurt accuracy even at strong
+/// distortion (it moves the heavy rows toward the I/O rails; unlike the
+/// dataflow reversal it has no bit-significance trade-off — see
+/// EXPERIMENTS.md "beyond the paper" for the reversal analysis).
+#[test]
+fn row_sort_at_least_as_accurate_under_strong_distortion() {
+    use mdm_cim::mdm::{Dataflow, RowOrder};
+    let test = ArtifactStore::open("artifacts").unwrap().data("test").unwrap();
+    let eta = -1e-2;
+    let conv =
+        Engine::program("artifacts", engine_cfg(eta, MappingConfig::conventional())).unwrap();
+    let sort_cfg = MappingConfig {
+        dataflow: Dataflow::Conventional,
+        row_order: RowOrder::MdmScore,
+    };
+    let sorted = Engine::program("artifacts", engine_cfg(eta, sort_cfg)).unwrap();
+    let acc_conv = conv.accuracy(&test).unwrap();
+    let acc_sorted = sorted.accuracy(&test).unwrap();
+    assert!(
+        acc_sorted >= acc_conv - 0.005,
+        "row-sorted {acc_sorted} worse than conventional {acc_conv} at eta {eta}"
+    );
+}
+
+/// At the paper's calibrated operating point (η = 2e-3) full MDM must not
+/// be worse than the conventional mapping (Fig. 6 relation).
+#[test]
+fn mdm_not_worse_at_paper_eta() {
+    let test = ArtifactStore::open("artifacts").unwrap().data("test").unwrap();
+    let eta = -2e-3;
+    let conv =
+        Engine::program("artifacts", engine_cfg(eta, MappingConfig::conventional())).unwrap();
+    let mdm = Engine::program("artifacts", engine_cfg(eta, MappingConfig::mdm())).unwrap();
+    let acc_conv = conv.accuracy(&test).unwrap();
+    let acc_mdm = mdm.accuracy(&test).unwrap();
+    assert!(
+        acc_mdm >= acc_conv - 0.005,
+        "MDM {acc_mdm} worse than conventional {acc_conv} at eta {eta}"
+    );
+}
+
+/// Engine cost model: more/smaller tiles => more sync events.
+#[test]
+fn engine_cost_scales_with_tile_size() {
+    let mk = |tile: usize| {
+        let cfg = EngineConfig {
+            model: ModelKind::MiniResNet,
+            mapping: MappingConfig::mdm(),
+            eta_signed: -2e-3,
+            geometry: TileGeometry::new(tile, tile, 8).unwrap(),
+            fwd_batch: 16,
+        };
+        Engine::program("artifacts", cfg).unwrap()
+    };
+    let small = mk(16);
+    let big = mk(64);
+    assert!(
+        small.unit_cost().sync_events > big.unit_cost().sync_events,
+        "small {:?} vs big {:?}",
+        small.unit_cost(),
+        big.unit_cost()
+    );
+}

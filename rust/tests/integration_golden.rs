@@ -1,0 +1,84 @@
+//! Golden-number regression gates: the headline quantities of each
+//! reproduced figure, pinned with tolerances wide enough for seed/platform
+//! drift but tight enough to catch real regressions in the solver, the
+//! mapping, or the NF model. (Small problem sizes keep this under a few
+//! seconds; the full-scale numbers live in EXPERIMENTS.md.)
+
+use mdm_cim::eval;
+use mdm_cim::CrossbarPhysics;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("golden_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Fig. 2: NF-vs-distance slope equals r/R_on within 2%, r² ≈ 1, exact
+/// anti-diagonal symmetry.
+#[test]
+fn golden_fig2() {
+    let dir = tmp("fig2");
+    let r = eval::fig2::run(16, CrossbarPhysics::default(), &dir).unwrap();
+    assert!(r.max_asymmetry < 1e-9, "asymmetry {}", r.max_asymmetry);
+    let rel = (r.linear_fit.slope - r.theory_slope).abs() / r.theory_slope;
+    assert!(rel < 0.02, "slope off by {:.3}%", 100.0 * rel);
+    assert!(r.linear_fit.r2 > 0.9999);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Fig. 4: Eq.-16 sum form explains the measured NF (r² > 0.98) with a
+/// near-zero mean error.
+#[test]
+fn golden_fig4() {
+    let dir = tmp("fig4");
+    let cfg = eval::fig4::Fig4Config { n_tiles: 60, tile: 32, ..Default::default() };
+    let r = eval::fig4::run(cfg, &dir).unwrap();
+    // (0.98+ at the full 500×64×64 scale; the quick 60×32×32 gate allows a
+    // little more sampling noise.)
+    assert!(r.fit.fit.r2 > 0.95, "r2 {}", r.fit.fit.r2);
+    assert!(r.fit.error_summary.mean.abs() < 1.0, "mu {}", r.fit.error_summary.mean);
+    assert!(r.fit.error_summary.std < 5.0, "sigma {}", r.fit.error_summary.std);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Fig. 5 shape: MDM reduces NF on every model; CNN family beats the
+/// transformer family; full reduction lands in the 10–25% band at 64×64.
+#[test]
+fn golden_fig5_shape() {
+    let dir = tmp("fig5");
+    let cfg = eval::fig5::Fig5Config {
+        models: vec!["resnet18".into(), "deit_s".into()],
+        tiles_per_layer: 6,
+        ..Default::default()
+    };
+    let rows = eval::fig5::run(&cfg, &dir).unwrap();
+    for r in &rows {
+        assert!(r.reduction_full() > 10.0 && r.reduction_full() < 25.0, "{r:?}");
+    }
+    assert!(rows[0].reduction_full() > rows[1].reduction_full());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A1 trend: at 16×16 the MDM reduction exceeds 30% (the path to the
+/// paper's "up to 46%") and sync costs fall as tiles grow.
+#[test]
+fn golden_tilesize_trend() {
+    let dir = tmp("ts");
+    let rows = eval::ablations::tile_size_sweep(&[16, 64], 8, 42, &dir).unwrap();
+    let red16 = 100.0 * (1.0 - rows[0].nf_mdm / rows[0].nf_conventional);
+    assert!(red16 > 30.0, "16x16 reduction {red16}%");
+    assert!(rows[0].sync_events > rows[1].sync_events);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// E6: η calibrates to within [1x, 100x] of r/R_on on the linear mesh and
+/// the two estimators agree.
+#[test]
+fn golden_eta_calibration() {
+    let dir = tmp("eta");
+    let c = eval::calibrate::run(30, 32, 0.8, CrossbarPhysics::default(), 42, &dir).unwrap();
+    let ratio = c.eta_mean / CrossbarPhysics::default().parasitic_ratio();
+    assert!((1.0..100.0).contains(&ratio), "eta/r_ratio = {ratio}");
+    assert!((c.eta_ols / c.eta_mean - 1.0).abs() < 0.5);
+    std::fs::remove_dir_all(&dir).ok();
+}
