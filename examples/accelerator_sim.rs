@@ -13,7 +13,7 @@
 use mdm_cim::config::ServerConfig;
 use mdm_cim::coordinator::{EngineConfig, ModelKind, Server};
 use mdm_cim::crossbar::TileGeometry;
-use mdm_cim::mdm::MappingConfig;
+use mdm_cim::mdm::strategy_by_name;
 use mdm_cim::runtime::ArtifactStore;
 
 const REQUESTS: usize = 96;
@@ -29,13 +29,10 @@ fn main() -> anyhow::Result<()> {
     );
     let mut csv = Vec::new();
     for tile in [16usize, 32, 64] {
-        for (label, mapping) in [
-            ("conventional", MappingConfig::conventional()),
-            ("mdm", MappingConfig::mdm()),
-        ] {
+        for label in ["conventional", "mdm"] {
             let engine_cfg = EngineConfig {
                 model: ModelKind::MiniResNet,
-                mapping,
+                strategy: strategy_by_name(label)?,
                 eta_signed: -2e-3,
                 geometry: TileGeometry::new(tile, tile, 8)?,
                 fwd_batch: 16,

@@ -7,7 +7,7 @@
 //!
 //! 1. Loads the AOT `train_step` HLO and the *initial* (untrained) weights,
 //!    then trains MiniResNet for several hundred SGD steps from Rust,
-//!    logging the loss curve (recorded in EXPERIMENTS.md).
+//!    logging the loss curve (recorded under results/).
 //! 2. Programs crossbars from the freshly trained weights under
 //!    {ideal, conventional, MDM} and measures test accuracy through the
 //!    AOT forward graph (L1 Pallas matmuls inside).
@@ -15,7 +15,7 @@
 
 use mdm_cim::coordinator::{Engine, EngineConfig, ModelKind};
 use mdm_cim::crossbar::TileGeometry;
-use mdm_cim::mdm::MappingConfig;
+use mdm_cim::mdm::strategy_by_name;
 use mdm_cim::runtime::ArtifactStore;
 use mdm_cim::tensor::{write_mdt, MdtFile, Tensor};
 
@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
         f.insert(format!("layer{i}"), w.clone());
     }
     write_mdt(dir.join("miniresnet_rust_e2e.mdt"), &f)?;
-    // Loss curve for EXPERIMENTS.md.
+    // Loss curve for the results pipeline.
     std::fs::create_dir_all("results")?;
     let rows: Vec<Vec<String>> = loss_curve
         .iter()
@@ -86,16 +86,16 @@ fn main() -> anyhow::Result<()> {
     let eta = -2e-3;
     println!("\nevaluating under PR distortion (eta = {eta:.0e}):");
     let test = ArtifactStore::open(&artifacts)?.data("test")?;
-    for (label, mapping, eta_signed) in [
-        ("ideal        ", MappingConfig::conventional(), 0.0),
-        ("conventional ", MappingConfig::conventional(), eta),
-        ("MDM          ", MappingConfig::mdm(), eta),
+    for (label, strategy, eta_signed) in [
+        ("ideal        ", "conventional", 0.0),
+        ("conventional ", "conventional", eta),
+        ("MDM          ", "mdm", eta),
     ] {
         let engine = Engine::program(
             &artifacts,
             EngineConfig {
                 model: ModelKind::MiniResNet,
-                mapping,
+                strategy: strategy_by_name(strategy)?,
                 eta_signed,
                 geometry,
                 fwd_batch: 16,

@@ -1,55 +1,97 @@
-//! Quickstart: map one weight matrix with MDM and see the NF drop.
+//! Quickstart: program one weight matrix through the compile pipeline and
+//! see the NF and the weight distortion drop under MDM.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! No artifacts needed — this exercises the pure-Rust mapping path:
-//! bell-shaped weights → sign split → bit-slice → MDM plan → Manhattan NF.
+//! No artifacts needed — this exercises the pure-Rust path end to end:
+//! bell-shaped weights → `Pipeline` (quantize → bit-slice → tile → map →
+//! distort) → `ProgrammedLayer`, once with the conventional baseline and
+//! once with the paper's MDM strategy (both selected by registry name).
 
-use mdm_cim::mdm::{map_tile, MappingConfig};
+use mdm_cim::crossbar::TileGeometry;
+use mdm_cim::mdm::{plan_tile, strategy_by_name};
 use mdm_cim::models::{generate_layer_weights, WeightProfile};
-use mdm_cim::nf::manhattan_nf_mean;
+use mdm_cim::pipeline::{Pipeline, ProgrammedLayer};
 use mdm_cim::quant::{BitSlicedMatrix, SignSplit};
 use mdm_cim::report;
+use mdm_cim::rng::Xoshiro256;
 
 fn main() -> anyhow::Result<()> {
     // A 64x8 layer slice with a realistic CNN weight distribution.
     let w = generate_layer_weights(64, 8, &WeightProfile::cnn(), 42)?;
     println!("weights: {:?}, {:.1}% exactly zero", w.shape(), 100.0 * w.sparsity());
 
-    // 1. Sign-split (differential columns) and bit-slice the positive part.
-    let split = SignSplit::of(&w);
-    let sliced = BitSlicedMatrix::slice(&split.pos, 8)?;
+    let geometry = TileGeometry::paper_eval();
+    let physics = mdm_cim::CrossbarPhysics::default();
+    let eta = -2e-3;
+
+    // 1. One compile call per configuration: sign-split, bit-slice, tile,
+    //    map with the named strategy, apply Eq.-17 PR distortion — cached
+    //    into a ProgrammedLayer, exactly like flashing a CIM chip.
+    let clean = Pipeline::new(geometry).compile(&w)?; // eta 0 reference
+    let conv = Pipeline::new(geometry)
+        .strategy("conventional")?
+        .physics(physics)
+        .eta_signed(eta)
+        .compile(&w)?;
+    let mdm = Pipeline::new(geometry)
+        .strategy("mdm")?
+        .physics(physics)
+        .eta_signed(eta)
+        .compile(&w)?;
     println!(
-        "bit-sliced: {}x{} cells, crossbar sparsity {:.1}%",
-        sliced.rows(),
-        sliced.cols(),
-        100.0 * sliced.sparsity()
+        "programmed {} tiles per configuration as {}/{} (plans + conductances cached once)",
+        conv.n_tiles(),
+        conv.strategy,
+        mdm.strategy,
     );
 
-    // 2. Build the conventional and MDM mapping plans.
-    let conv = map_tile(&sliced.planes, MappingConfig::conventional());
-    let mdm = map_tile(&sliced.planes, MappingConfig::mdm());
-
-    // 3. Compare the Manhattan-model NF (unit parasitic ratio).
-    let nf_conv = manhattan_nf_mean(&conv.apply(&sliced.planes)?, 1.0);
-    let nf_mdm = manhattan_nf_mean(&mdm.apply(&sliced.planes)?, 1.0);
+    // 2. Mean Manhattan NF of the sampled tiles under each strategy.
+    let nf = |name: &str| -> anyhow::Result<f64> {
+        let mut rng = Xoshiro256::seeded(7);
+        let (sum, n) = Pipeline::new(geometry).strategy(name)?.sampled_nf(&w, 8, &mut rng)?;
+        Ok(sum / n.max(1) as f64)
+    };
+    let nf_conv = nf("conventional")?;
+    let nf_mdm = nf("mdm")?;
     println!("\nNF (conventional) = {:.3}", nf_conv);
     println!("NF (MDM)          = {:.3}", nf_mdm);
     println!("reduction         = {:.1}%", 100.0 * (1.0 - nf_mdm / nf_conv));
 
-    // 4. Where did the active cells go? (darker = active)
-    println!("\nconventional layout:");
-    println!("{}", report::heatmap(&conv.apply(&sliced.planes)?));
-    println!("MDM layout (dense rows pulled toward the I/O corner):");
-    println!("{}", report::heatmap(&mdm.apply(&sliced.planes)?));
+    // 3. What the accelerator actually serves: distortion of the effective
+    //    weights relative to the clean (quantized, undistorted) program.
+    let dist = |p: &ProgrammedLayer| -> f64 {
+        p.effective_weights()
+            .data()
+            .iter()
+            .zip(clean.effective_weights().data())
+            .map(|(a, b)| ((a - b).abs()) as f64)
+            .sum()
+    };
+    println!("\nEq.-17 weight distortion (sum |w' - w|):");
+    println!("  conventional: {:.5}", dist(&conv));
+    println!("  MDM:          {:.5}", dist(&mdm));
 
-    // 5. The invariant that makes MDM free: the product is unchanged.
-    let x = generate_layer_weights(1, 64, &WeightProfile::cnn(), 7)?;
-    let y_ref = x.matmul(&split.pos)?;
-    let y_mdm = mdm
-        .unapply_to_outputs(&mdm.apply_to_activations(&x)?.matmul(&mdm.apply(&split.pos)?)?)?;
+    // 4. Where did the active cells go? (darker = active)
+    let split = SignSplit::of(&w);
+    let sliced = BitSlicedMatrix::slice(&split.pos, geometry.k_bits)?;
+    let conv_plan = plan_tile(&*strategy_by_name("conventional")?, &sliced);
+    let mdm_plan = plan_tile(&*strategy_by_name("mdm")?, &sliced);
+    println!("\nconventional layout:");
+    println!("{}", report::heatmap(&conv_plan.apply(&sliced.planes)?));
+    println!("MDM layout (dense rows pulled toward the I/O corner):");
+    println!("{}", report::heatmap(&mdm_plan.apply(&sliced.planes)?));
+
+    // 5. The invariant that makes MDM free: permuting activations in and
+    //    un-permuting outputs leaves the product unchanged (same plan as
+    //    the layout above).
+    let x = generate_layer_weights(1, sliced.rows(), &WeightProfile::cnn(), 7)?;
+    let y_ref = x.matmul(&sliced.planes)?;
+    let y_mdm = mdm_plan.unapply_to_outputs(
+        &mdm_plan.apply_to_activations(&x)?.matmul(&mdm_plan.apply(&sliced.planes)?)?,
+    )?;
     let err: f32 = y_ref
         .data()
         .iter()

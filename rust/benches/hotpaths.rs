@@ -1,5 +1,5 @@
 //! `cargo bench` — micro-benchmarks of the L3 hot paths, used by the
-//! EXPERIMENTS.md §Perf iteration loop.
+//! rust/DESIGN.md §6 (Perf) iteration loop.
 //!
 //!   solver:   banded Cholesky factor+solve, CG, Sherman–Morrison toggles
 //!   mapping:  bit-slicing, row scoring, plan application
@@ -12,7 +12,7 @@ use mdm_cim::circuit::CrossbarCircuit;
 use mdm_cim::coordinator::{Engine, EngineConfig, ModelKind};
 use mdm_cim::crossbar::TileGeometry;
 use mdm_cim::eval::random_planes;
-use mdm_cim::mdm::{map_tile, MappingConfig};
+use mdm_cim::mdm::{plan_tile, strategy_by_name};
 use mdm_cim::noise::distorted_weights;
 use mdm_cim::quant::BitSlicedMatrix;
 use mdm_cim::report::write_csv;
@@ -69,11 +69,12 @@ fn main() -> anyhow::Result<()> {
     });
     record("bitslice_512x64_k8", s);
     let sliced = BitSlicedMatrix::slice(&w, 8)?;
+    let mdm = strategy_by_name("mdm")?;
     let s = bench("mdm_map_tile_512x512", 1, 10, || {
-        map_tile(&sliced.planes, MappingConfig::mdm());
+        plan_tile(mdm.as_ref(), &sliced);
     });
     record("mdm_map_tile_512x512", s);
-    let plan = map_tile(&sliced.planes, MappingConfig::mdm());
+    let plan = plan_tile(mdm.as_ref(), &sliced);
     let s = bench("plan_apply_512x512", 1, 10, || {
         plan.apply(&sliced.planes).unwrap();
     });
@@ -112,7 +113,7 @@ fn main() -> anyhow::Result<()> {
             "artifacts",
             EngineConfig {
                 model: ModelKind::MiniResNet,
-                mapping: MappingConfig::mdm(),
+                strategy: mdm.clone(),
                 eta_signed: -2e-3,
                 geometry: TileGeometry::paper_eval(),
                 fwd_batch: 16,
@@ -129,7 +130,7 @@ fn main() -> anyhow::Result<()> {
                 "artifacts",
                 EngineConfig {
                     model: ModelKind::MiniResNet,
-                    mapping: MappingConfig::mdm(),
+                    strategy: mdm.clone(),
                     eta_signed: -2e-3,
                     geometry: TileGeometry::paper_eval(),
                     fwd_batch: 16,

@@ -19,7 +19,7 @@ use anyhow::{bail, ensure, Result};
 /// sub-diagonal band is contiguous, which makes the right-looking Cholesky
 /// factorization and both triangular solves stream linearly through memory
 /// (the original row-band layout cost ~6× in cache misses — see
-/// EXPERIMENTS.md §Perf).
+/// rust/DESIGN.md §6 (Perf)).
 #[derive(Debug, Clone)]
 pub struct BandedSpd {
     n: usize,

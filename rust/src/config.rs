@@ -1,6 +1,6 @@
 //! Configuration system: a minimal TOML-subset parser plus the typed
 //! experiment/server configurations (no `serde`/`toml` offline —
-//! DESIGN.md §5).
+//! rust/DESIGN.md §5).
 //!
 //! Supported TOML subset: `[section]` headers, `key = value` with string
 //! (`"..."`), integer, float, and boolean values, `#` comments, blank
@@ -167,6 +167,9 @@ pub struct ExperimentConfig {
     pub k_bits: usize,
     /// Signed Eq.-17 noise coefficient.
     pub eta_signed: f64,
+    /// Mapping-strategy registry name (resolved by
+    /// `mdm::strategy_by_name` at the point of use).
+    pub strategy: String,
     /// Seed for all randomized pieces.
     pub seed: u64,
     /// Output directory for CSVs.
@@ -181,6 +184,7 @@ impl Default for ExperimentConfig {
             tile_size: 64,
             k_bits: 8,
             eta_signed: -2e-3,
+            strategy: "mdm".into(),
             seed: 42,
             results_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
@@ -197,6 +201,7 @@ impl ExperimentConfig {
             tile_size: c.int_or("experiment", "tile_size", d.tile_size as i64) as usize,
             k_bits: c.int_or("experiment", "k_bits", d.k_bits as i64) as usize,
             eta_signed: c.float_or("experiment", "eta_signed", d.eta_signed),
+            strategy: c.str_or("experiment", "strategy", &d.strategy),
             seed: c.int_or("experiment", "seed", d.seed as i64) as u64,
             results_dir: c.str_or("experiment", "results_dir", &d.results_dir),
             artifacts_dir: c.str_or("experiment", "artifacts_dir", &d.artifacts_dir),
@@ -286,12 +291,17 @@ label = "a # not a comment"
         assert_eq!(e.tile_size, 64);
         assert_eq!(e.k_bits, 8);
         assert!((e.eta_signed + 2e-3).abs() < 1e-12);
+        assert_eq!(e.strategy, "mdm");
     }
 
     #[test]
     fn typed_configs_from_text() {
-        let c = Config::parse("[experiment]\ntile_size = 32\n[server]\nworkers = 8").unwrap();
+        let c = Config::parse(
+            "[experiment]\ntile_size = 32\nstrategy = \"sort_only\"\n[server]\nworkers = 8",
+        )
+        .unwrap();
         assert_eq!(ExperimentConfig::from_config(&c).tile_size, 32);
+        assert_eq!(ExperimentConfig::from_config(&c).strategy, "sort_only");
         assert_eq!(ServerConfig::from_config(&c).workers, 8);
         // Unspecified keys fall back.
         assert_eq!(ServerConfig::from_config(&c).max_batch, 16);

@@ -1,17 +1,18 @@
 //! Per-worker inference engine: one simulated crossbar accelerator.
 //!
-//! At construction the engine "programs its crossbars": it loads the
-//! trained weights, sign-splits and tiles every layer, builds the mapping
-//! plan (conventional / MDM / ...), applies the Eq.-17 PR distortion to get
-//! the effective weight matrices, and compiles the model's AOT forward
-//! graph on its own PJRT runtime. Serving then feeds activations through
-//! the compiled graph with the distorted weights as inputs — the L1 Pallas
-//! kernel does the per-layer matmuls inside the HLO.
+//! At construction the engine "programs its crossbars" through the
+//! [`Pipeline`] compile chain: it loads the trained weights and, per layer,
+//! compiles sign-split → bit-slice → tile → mapping-strategy plan → Eq.-17
+//! PR distortion into a cached [`crate::pipeline::ProgrammedLayer`], keeping
+//! the effective weight matrices; it then compiles the model's AOT forward
+//! graph on its own PJRT runtime. Serving feeds activations through the
+//! compiled graph with the programmed weights as inputs — the L1 Pallas
+//! kernel does the per-layer matmuls inside the HLO, and no mapping work is
+//! left on the request path.
 
-use crate::crossbar::{CostModel, LayerTiling, TileCost, TileGeometry};
-use crate::mdm::MappingConfig;
-use crate::noise::distorted_weights;
-use crate::quant::SignSplit;
+use crate::crossbar::{TileCost, TileGeometry};
+use crate::mdm::{strategy_by_name, MappingStrategy};
+use crate::pipeline::Pipeline;
 use crate::runtime::{ArtifactStore, CompiledModule};
 use crate::tensor::Tensor;
 use anyhow::{ensure, Context, Result};
@@ -57,10 +58,12 @@ impl ModelKind {
 }
 
 /// Engine configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub model: ModelKind,
-    pub mapping: MappingConfig,
+    /// Mapping strategy programming every layer's tiles (select by name via
+    /// [`strategy_by_name`]).
+    pub strategy: Arc<dyn MappingStrategy>,
     /// Signed Eq.-17 coefficient; 0.0 = ideal (no distortion).
     pub eta_signed: f64,
     pub geometry: TileGeometry,
@@ -73,49 +76,23 @@ impl EngineConfig {
     pub fn ideal(model: ModelKind) -> Self {
         Self {
             model,
-            mapping: MappingConfig::conventional(),
+            strategy: strategy_by_name("conventional").expect("baseline strategy registered"),
             eta_signed: 0.0,
             geometry: TileGeometry::paper_eval(),
             fwd_batch: 16,
         }
     }
-}
 
-/// Compute the effective (distorted, quantized) weight matrix of one signed
-/// layer under a mapping config — the "programmed crossbar" contents.
-///
-/// Sign-split → per-part tiling → per-tile plan + Eq.-17 distortion →
-/// reassembly → `pos − neg`.
-pub fn program_layer(
-    w_signed: &Tensor,
-    geometry: TileGeometry,
-    mapping: MappingConfig,
-    eta_signed: f64,
-) -> Result<Tensor> {
-    let split = SignSplit::of(w_signed);
-    let pos = program_nonneg(&split.pos, geometry, mapping, eta_signed)?;
-    let neg = program_nonneg(&split.neg, geometry, mapping, eta_signed)?;
-    pos.zip(&neg, |p, n| p - n)
-}
-
-fn program_nonneg(
-    w: &Tensor,
-    geometry: TileGeometry,
-    mapping: MappingConfig,
-    eta_signed: f64,
-) -> Result<Tensor> {
-    let tiling = LayerTiling::partition(w, geometry)?;
-    let mut out = Tensor::zeros(&[tiling.fan_in, tiling.fan_out]);
-    for tile in &tiling.tiles {
-        let plan = tile.plan(mapping);
-        let wt = distorted_weights(&tile.sliced, &plan, eta_signed)?;
-        for r in 0..wt.rows() {
-            let src = wt.row(r).to_vec();
-            let dst = out.row_mut(tile.row_start + r);
-            dst[tile.col_start..tile.col_start + src.len()].copy_from_slice(&src);
-        }
+    /// Configuration with a named strategy at the paper's operating point.
+    pub fn with_strategy(model: ModelKind, strategy: &str, eta_signed: f64) -> Result<Self> {
+        Ok(Self {
+            model,
+            strategy: strategy_by_name(strategy)?,
+            eta_signed,
+            geometry: TileGeometry::paper_eval(),
+            fwd_batch: 16,
+        })
     }
-    Ok(out)
 }
 
 /// A ready-to-serve engine.
@@ -124,7 +101,7 @@ pub struct Engine {
     fwd: Arc<CompiledModule>,
     /// Programmed (distorted) layer matrices, in forward-graph input order.
     programmed: Vec<Tensor>,
-    /// Per-layer tilings of the positive part (for the cost model).
+    /// Aggregate per-input analog cost of the programmed model.
     cost: TileCost,
 }
 
@@ -140,9 +117,11 @@ impl Engine {
         let weights = store.weights(config.model.weights_name())?;
         let desc = crate::models::model_by_name(config.model.zoo_name())?;
 
+        let pipeline = Pipeline::new(config.geometry)
+            .strategy_impl(config.strategy.clone())
+            .eta_signed(config.eta_signed);
         let mut programmed = Vec::with_capacity(desc.layers.len());
         let mut cost = TileCost::default();
-        let cost_model = CostModel::default();
         for (i, l) in desc.layers.iter().enumerate() {
             let w = weights.get(&format!("layer{i}"))?;
             ensure!(
@@ -154,19 +133,16 @@ impl Engine {
             );
             let eff = if config.eta_signed == 0.0 {
                 // Ideal path: exact fp32 weights (no quantization error
-                // either — the "digital baseline" of Fig. 6).
+                // either — the "digital baseline" of Fig. 6); price the
+                // layer without programming it.
+                cost.add(&pipeline.layer_cost(w)?);
                 w.clone()
             } else {
-                program_layer(w, config.geometry, config.mapping, config.eta_signed)?
+                let layer = pipeline.compile(w)?;
+                cost.add(&layer.cost());
+                layer.into_effective()
             };
             programmed.push(eff);
-            // Cost accounting over the positive-part tiling (pos/neg are
-            // symmetric in size; double it).
-            let split = SignSplit::of(w);
-            let tiling = LayerTiling::partition(&split.pos, config.geometry)?;
-            let mut c = cost_model.layer_cost(&tiling, 1);
-            c.add(&cost_model.layer_cost(&tiling, 1)); // neg part
-            cost.add(&c);
         }
         Ok(Self { config, fwd, programmed, cost })
     }

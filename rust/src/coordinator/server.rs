@@ -84,6 +84,7 @@ impl Server {
             let work_rx = work_rx.clone();
             let metrics = metrics.clone();
             let dir = artifacts_dir.to_string();
+            let engine_cfg = engine_cfg.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("mdm-worker{w}"))

@@ -8,7 +8,7 @@
 //! digital accumulation across row-chunks is exact.
 
 use super::TileGeometry;
-use crate::mdm::{map_tile_with_magnitudes, MappingConfig, MappingPlan};
+use crate::mdm::{plan_tile, MappingPlan, MappingStrategy};
 use crate::noise::distorted_weights;
 use crate::quant::{BitSlicedMatrix, Quantizer};
 use crate::tensor::Tensor;
@@ -36,23 +36,9 @@ impl Tile {
         self.sliced.n_weights
     }
 
-    /// Build the mapping plan for this tile under a policy.
-    pub fn plan(&self, config: MappingConfig) -> MappingPlan {
-        // Per-row dequantized magnitudes are only needed by the
-        // MagnitudeDesc baseline; skip the dequantization otherwise (plan
-        // building is on the fig5/engine-programming hot path).
-        let mags: Option<Vec<f64>> =
-            if matches!(config.row_order, crate::mdm::RowOrder::MagnitudeDesc) {
-                let deq = self.sliced.dequantize().expect("dequantize");
-                Some(
-                    (0..deq.rows())
-                        .map(|j| deq.row(j).iter().map(|&x| x as f64).sum())
-                        .collect(),
-                )
-            } else {
-                None
-            };
-        map_tile_with_magnitudes(&self.sliced.planes, config, mags.as_deref())
+    /// Build the mapping plan for this tile under a strategy.
+    pub fn plan(&self, strategy: &dyn MappingStrategy) -> MappingPlan {
+        plan_tile(strategy, &self.sliced)
     }
 
     /// Clean partial product: `x_sub [B, rows] @ dequant [rows, n_weights]`.
@@ -100,7 +86,7 @@ impl LayerTiling {
     /// Build a single tile `(gr, gc)` of the grid — the lazy path used when
     /// only a sample of a huge layer's tiles is needed (NF statistics over
     /// a VGG fc layer would otherwise bit-slice ~200k tiles to look at 32;
-    /// see EXPERIMENTS.md §Perf).
+    /// see rust/DESIGN.md §6 (Perf)).
     pub fn build_tile(
         w: &Tensor,
         geometry: TileGeometry,
@@ -125,11 +111,19 @@ impl LayerTiling {
         Ok(Tile { row_start: r0, col_start: c0, sliced: BitSlicedMatrix::slice_with(&sub, quant)? })
     }
 
-    /// Partition a **non-negative** layer matrix `[fan_in, fan_out]`.
+    /// Partition a **non-negative** layer matrix `[fan_in, fan_out]`,
+    /// fitting a per-layer quantizer.
     pub fn partition(w: &Tensor, geometry: TileGeometry) -> Result<Self> {
         ensure!(w.ndim() == 2, "layer matrix must be 2-D");
-        let (fan_in, fan_out) = (w.rows(), w.cols());
         let quant = Quantizer::fit(w, geometry.k_bits)?;
+        Self::partition_with(w, geometry, quant)
+    }
+
+    /// [`Self::partition`] with an externally fitted quantizer (e.g. a scale
+    /// shared across layers by `pipeline::Pipeline::quantizer`).
+    pub fn partition_with(w: &Tensor, geometry: TileGeometry, quant: Quantizer) -> Result<Self> {
+        ensure!(w.ndim() == 2, "layer matrix must be 2-D");
+        let (fan_in, fan_out) = (w.rows(), w.cols());
         let (grid_rows, grid_cols) = Self::grid_for(fan_in, fan_out, geometry);
         let mut tiles = Vec::with_capacity(grid_rows * grid_cols);
         for gr in 0..grid_rows {
@@ -151,16 +145,16 @@ impl LayerTiling {
         self.matvec_with(x, |tile, x_sub| tile.matvec_clean(x_sub))
     }
 
-    /// Full layer matvec under PR distortion with one mapping config for
+    /// Full layer matvec under PR distortion with one mapping strategy for
     /// every tile.
     pub fn matvec_noisy(
         &self,
         x: &Tensor,
-        config: MappingConfig,
+        strategy: &dyn MappingStrategy,
         eta_signed: f64,
     ) -> Result<Tensor> {
         self.matvec_with(x, |tile, x_sub| {
-            let plan = tile.plan(config);
+            let plan = tile.plan(strategy);
             tile.matvec_noisy(x_sub, &plan, eta_signed)
         })
     }
@@ -205,6 +199,7 @@ impl LayerTiling {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mdm::{Identity, Mdm};
     use crate::rng::Xoshiro256;
 
     fn random_nonneg(rows: usize, cols: usize, seed: u64) -> Tensor {
@@ -259,7 +254,7 @@ mod tests {
         let t = LayerTiling::partition(&w, g).unwrap();
         let x = random_nonneg(3, 16, 5);
         let clean = t.matvec_clean(&x).unwrap();
-        let noisy = t.matvec_noisy(&x, MappingConfig::mdm(), 0.0).unwrap();
+        let noisy = t.matvec_noisy(&x, &Mdm::reversed(), 0.0).unwrap();
         for (a, b) in clean.data().iter().zip(noisy.data()) {
             assert!((a - b).abs() < 1e-5);
         }
@@ -280,8 +275,8 @@ mod tests {
                 .map(|(a, b)| ((a - b).abs()) as f64)
                 .sum::<f64>()
         };
-        let conv = t.matvec_noisy(&x, MappingConfig::conventional(), eta).unwrap();
-        let mdm = t.matvec_noisy(&x, MappingConfig::mdm(), eta).unwrap();
+        let conv = t.matvec_noisy(&x, &Identity::conventional(), eta).unwrap();
+        let mdm = t.matvec_noisy(&x, &Mdm::reversed(), eta).unwrap();
         assert!(
             err(&mdm) < err(&conv),
             "MDM error {} vs conventional {}",

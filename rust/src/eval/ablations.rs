@@ -1,17 +1,25 @@
-//! Ablations A1–A3 + row-order policy comparison (DESIGN.md §3).
+//! Ablations A1–A3 + row-order policy comparison (rust/DESIGN.md §3).
 //!
 //! * A1 `tile_size_sweep` — NF vs tile size with MDM on/off, plus the
 //!   system-level cost (ADC conversions, sync events) at each size: the
 //!   paper's scalability argument quantified.
 //! * A2 `sparsity_sweep` — MDM's NF reduction vs cell sparsity.
 //! * A3 `ratio_sweep` — Manhattan-Hypothesis fit quality vs `r/R_on`.
-//! * `roworder_compare` — MDM's score policy vs the paper-literal
-//!   ascending-Manhattan score, random, and magnitude-sorted baselines.
+//! * `roworder_compare` — the MDM strategy vs every other registered
+//!   placement (paper-literal ascending-Manhattan, random, magnitude-sorted
+//!   SWS-like, X-CHANGR-style rotation).
+//!
+//! All mappings are constructed through [`MappingStrategy`] implementations
+//! (by registry name where the canonical configuration applies, directly
+//! where a specific dataflow is pinned).
 
 use super::random_planes;
 use crate::circuit::CrossbarCircuit;
 use crate::crossbar::{CostModel, LayerTiling, TileGeometry};
-use crate::mdm::{map_tile, Dataflow, MappingConfig, RowOrder};
+use crate::mdm::{
+    plan_tile, strategy_by_name, Dataflow, Identity, MagnitudeDesc, ManhattanAsc, MapContext,
+    MappingStrategy, Mdm, Random, SlicedTile, XChangrRotate,
+};
 use crate::nf::{fit_hypothesis, manhattan_nf_mean};
 use crate::quant::SignSplit;
 use crate::report;
@@ -19,6 +27,7 @@ use crate::rng::Xoshiro256;
 use crate::CrossbarPhysics;
 use anyhow::Result;
 use std::path::Path;
+use std::sync::Arc;
 
 /// A1 row: one tile size.
 #[derive(Debug, Clone)]
@@ -42,6 +51,7 @@ pub fn tile_size_sweep(
     let w = crate::models::generate_layer_weights(512, 64, &profile, seed)?;
     let split = SignSplit::of(&w);
     let cost_model = CostModel::default();
+    let strategies = [strategy_by_name("conventional")?, strategy_by_name("mdm")?];
     let mut rows = Vec::new();
     for &tile in sizes {
         let geom = TileGeometry::new(tile, tile, k_bits)?;
@@ -53,12 +63,10 @@ pub fn tile_size_sweep(
             let c = cost_model.layer_cost(&tiling, 1);
             adc += c.adc_conversions;
             sync += c.sync_events;
-            for (i, cfg) in
-                [MappingConfig::conventional(), MappingConfig::mdm()].iter().enumerate()
-            {
+            for (i, strategy) in strategies.iter().enumerate() {
                 let mut acc = 0.0;
                 for t in &tiling.tiles {
-                    let plan = t.plan(*cfg);
+                    let plan = t.plan(strategy.as_ref());
                     acc += manhattan_nf_mean(&plan.apply(&t.sliced.planes)?, 1.0);
                 }
                 nf[i] += acc / tiling.n_tiles() as f64 / 2.0;
@@ -109,6 +117,8 @@ pub fn sparsity_sweep(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<SparsitySweepRow>> {
+    let conv = strategy_by_name("conventional")?;
+    let mdm = strategy_by_name("mdm")?;
     let mut rng = Xoshiro256::seeded(seed);
     let mut rows = Vec::new();
     for &sp in levels {
@@ -116,10 +126,11 @@ pub fn sparsity_sweep(
         let mut nf_mdm = 0.0;
         for _ in 0..n_tiles {
             let planes = random_planes(tile, tile, 1.0 - sp, &mut rng);
-            let conv = map_tile(&planes, MappingConfig::conventional());
-            let mdm = map_tile(&planes, MappingConfig::mdm());
-            nf_conv += manhattan_nf_mean(&conv.apply(&planes)?, 1.0);
-            nf_mdm += manhattan_nf_mean(&mdm.apply(&planes)?, 1.0);
+            let t = SlicedTile::from_planes(planes.clone())?;
+            let cp = plan_tile(conv.as_ref(), &t);
+            let mp = plan_tile(mdm.as_ref(), &t);
+            nf_conv += manhattan_nf_mean(&cp.apply(&planes)?, 1.0);
+            nf_mdm += manhattan_nf_mean(&mp.apply(&planes)?, 1.0);
         }
         nf_conv /= n_tiles as f64;
         nf_mdm /= n_tiles as f64;
@@ -213,7 +224,8 @@ pub struct RowOrderRow {
     pub nf_mean: f64,
 }
 
-/// Compare row-order policies at a fixed (reversed) dataflow.
+/// Compare every registered placement strategy at a fixed (reversed)
+/// dataflow.
 pub fn roworder_compare(
     tile: usize,
     k_bits: usize,
@@ -222,14 +234,15 @@ pub fn roworder_compare(
     results_dir: &Path,
 ) -> Result<Vec<RowOrderRow>> {
     let profile = crate::models::WeightProfile::cnn();
-    let policies: Vec<(&str, RowOrder)> = vec![
-        ("identity", RowOrder::Identity),
-        ("mdm_score", RowOrder::MdmScore),
-        ("manhattan_asc", RowOrder::ManhattanAsc),
-        ("random", RowOrder::Random { seed: 99 }),
-        ("magnitude_desc", RowOrder::MagnitudeDesc),
+    let strategies: Vec<Arc<dyn MappingStrategy>> = vec![
+        Arc::new(Identity::reversed()),
+        Arc::new(Mdm::reversed()),
+        Arc::new(ManhattanAsc::reversed()),
+        Arc::new(Random { dataflow: Dataflow::Reversed, seed: 99 }),
+        Arc::new(MagnitudeDesc::reversed()),
+        Arc::new(XChangrRotate { dataflow: Dataflow::Reversed }),
     ];
-    let mut sums = vec![0.0f64; policies.len()];
+    let mut sums = vec![0.0f64; strategies.len()];
     for t in 0..n_tiles {
         let w = crate::models::generate_layer_weights(
             tile,
@@ -239,21 +252,19 @@ pub fn roworder_compare(
         )?;
         let split = SignSplit::of(&w);
         let sliced = crate::quant::BitSlicedMatrix::slice(&split.pos, k_bits)?;
-        let deq = sliced.dequantize()?;
-        let mags: Vec<f64> =
-            (0..deq.rows()).map(|j| deq.row(j).iter().map(|&x| x as f64).sum()).collect();
-        for (i, (_, policy)) in policies.iter().enumerate() {
-            let cfg = MappingConfig { dataflow: Dataflow::Reversed, row_order: *policy };
-            let plan = crate::mdm::map_tile_with_magnitudes(&sliced.planes, cfg, Some(&mags));
+        // One dequantization amortized across all strategies via MapContext.
+        let ctx = MapContext { magnitudes: Some(crate::mdm::row_magnitudes(&sliced)) };
+        for (i, strategy) in strategies.iter().enumerate() {
+            let plan = strategy.plan(&sliced, &ctx);
             sums[i] += manhattan_nf_mean(&plan.apply(&sliced.planes)?, 1.0);
         }
     }
-    let rows: Vec<RowOrderRow> = policies
+    let rows: Vec<RowOrderRow> = strategies
         .iter()
         .zip(&sums)
-        .map(|((name, _), s)| RowOrderRow {
-            policy: name.to_string(),
-            nf_mean: s / n_tiles as f64,
+        .map(|(s, sum)| RowOrderRow {
+            policy: s.name().to_string(),
+            nf_mean: sum / n_tiles as f64,
         })
         .collect();
     let csv: Vec<Vec<String>> = rows
@@ -305,8 +316,10 @@ pub fn variation_sweep(
     Ok(out)
 }
 
-/// A8 (extension): stuck-at faults × mapping policy — weight-space error of
-/// {identity, MDM, fault-aware remap} under increasing fault rates.
+/// A8 (extension): stuck-at faults × mapping strategy — weight-space error
+/// of {identity, MDM, fault-aware remap} under increasing fault rates. The
+/// fault-aware policy is the stateful [`crate::faults::FaultAware`]
+/// strategy.
 pub fn fault_sweep(
     rates: &[f64],
     tile: usize,
@@ -315,9 +328,10 @@ pub fn fault_sweep(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<(f64, f64, f64, f64)>> {
-    use crate::faults::{fault_aware_row_remap, weight_error, FaultMap};
-    use crate::mdm::MappingPlan;
+    use crate::faults::{weight_error, FaultAware, FaultMap};
     let profile = crate::models::WeightProfile::cnn();
+    let identity = Identity::conventional();
+    let mdm = strategy_by_name("mdm")?;
     let mut out = Vec::new();
     for &rate in rates {
         let (mut e_id, mut e_mdm, mut e_aware) = (0.0f64, 0.0f64, 0.0f64);
@@ -337,12 +351,11 @@ pub fn fault_sweep(
                 rate * 0.3,
                 seed ^ 0xFA017 ^ (t as u64),
             );
-            let ident = MappingPlan::identity(tile, tile);
+            let ident = plan_tile(&identity, &sliced);
             e_id += weight_error(&sliced, &ident, &faults)?;
-            let mdm = map_tile(&sliced.planes, MappingConfig::mdm());
-            e_mdm += weight_error(&sliced, &mdm, &faults)?;
-            let remap = fault_aware_row_remap(&sliced, &faults)?;
-            let aware = MappingPlan::new(remap, (0..tile).collect());
+            let mdm_plan = plan_tile(mdm.as_ref(), &sliced);
+            e_mdm += weight_error(&sliced, &mdm_plan, &faults)?;
+            let aware = plan_tile(&FaultAware { faults: faults.clone() }, &sliced);
             e_aware += weight_error(&sliced, &aware, &faults)?;
         }
         let n = n_tiles as f64;
@@ -382,6 +395,8 @@ pub fn adc_sweep(
     let w = crate::models::generate_layer_weights(tile, tile / k_bits, &profile, seed)?;
     let split = SignSplit::of(&w);
     let tiling = LayerTiling::partition(&split.pos, TileGeometry::new(tile, tile, k_bits)?)?;
+    let conv = strategy_by_name("conventional")?;
+    let mdm = strategy_by_name("mdm")?;
     let mut rng = Xoshiro256::seeded(seed ^ 0xADC);
     let xdata: Vec<f32> = (0..4 * tile).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
     let x = crate::tensor::Tensor::new(&[4, tile], xdata)?;
@@ -402,10 +417,10 @@ pub fn adc_sweep(
         let adc = AdcTransfer::fit(bits, &clean)?;
         let e_adc = err(&quantize_partials(&adc, &clean));
         // PR distortion + ADC, conventional vs MDM mapping.
-        let conv = tiling.matvec_noisy(&x, MappingConfig::conventional(), eta)?;
-        let e_conv = err(&quantize_partials(&adc, &conv));
-        let mdm = tiling.matvec_noisy(&x, MappingConfig::mdm(), eta)?;
-        let e_mdm = err(&quantize_partials(&adc, &mdm));
+        let noisy_conv = tiling.matvec_noisy(&x, conv.as_ref(), eta)?;
+        let e_conv = err(&quantize_partials(&adc, &noisy_conv));
+        let noisy_mdm = tiling.matvec_noisy(&x, mdm.as_ref(), eta)?;
+        let e_mdm = err(&quantize_partials(&adc, &noisy_mdm));
         out.push((bits, e_adc, e_conv, e_mdm));
     }
     let csv: Vec<Vec<String>> = out
@@ -443,7 +458,7 @@ pub fn global_sort_compare(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<GlobalSortRow>> {
-    use crate::mdm::{global_row_assignment, row_stats, Dataflow, MappingConfig, RowOrder};
+    use crate::mdm::{global_row_assignment, row_stats};
     let profile = crate::models::WeightProfile::cnn();
     let w = crate::models::generate_layer_weights(fan_in, tile / k_bits, &profile, seed)?;
     let split = SignSplit::of(&w);
@@ -451,6 +466,8 @@ pub fn global_sort_compare(
     // Reversed dataflow applied to the full layer planes once.
     let planes = sliced.planes.reverse_cols()?;
     let n_chunks = fan_in.div_ceil(tile);
+    // Columns already reversed above, so sort rows at conventional dataflow.
+    let sorter = Mdm::conventional();
 
     let chunk_nf = |planes: &crate::tensor::Tensor, sort_within: bool| -> Result<f64> {
         let mut acc = 0.0;
@@ -459,11 +476,7 @@ pub fn global_sort_compare(
                 (c * tile..((c + 1) * tile).min(fan_in)).collect();
             let chunk = planes.permute_rows(&rows)?;
             let placed = if sort_within {
-                let cfg = MappingConfig {
-                    dataflow: Dataflow::Conventional, // already reversed above
-                    row_order: RowOrder::MdmScore,
-                };
-                crate::mdm::map_tile(&chunk, cfg).apply(&chunk)?
+                plan_tile(&sorter, &SlicedTile::from_planes(chunk.clone())?).apply(&chunk)?
             } else {
                 chunk
             };
@@ -577,10 +590,12 @@ mod tests {
         let dir = tmp("ro");
         let rows = roworder_compare(32, 8, 3, 3, &dir).unwrap();
         let nf = |p: &str| rows.iter().find(|r| r.policy == p).unwrap().nf_mean;
-        assert!(nf("mdm_score") <= nf("identity") + 1e-12);
-        assert!(nf("mdm_score") <= nf("random") + 1e-12);
-        assert!(nf("mdm_score") <= nf("manhattan_asc") + 1e-12);
-        assert!(nf("mdm_score") <= nf("magnitude_desc") + 1e-12);
+        // Identity order at reversed dataflow reports its registry name.
+        assert!(nf("mdm") <= nf("reversed") + 1e-12);
+        assert!(nf("mdm") <= nf("random") + 1e-12);
+        assert!(nf("mdm") <= nf("manhattan_asc") + 1e-12);
+        assert!(nf("mdm") <= nf("magnitude_desc") + 1e-12);
+        assert!(nf("mdm") <= nf("xchangr") + 1e-12);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -59,7 +59,7 @@ pub fn run(cfg: Fig4Config, results_dir: &Path) -> Result<Fig4Result> {
         // "approximately 80% sparsity" (§V-A): per-tile sparsity is drawn
         // from a ±5-point band around the target, which is also what makes
         // the fit informative (at *exactly* fixed sparsity both series
-        // concentrate and the correlation degenerates — see EXPERIMENTS.md).
+        // concentrate and the correlation degenerates — see rust/DESIGN.md).
         let sp = (cfg.sparsity + rng.uniform_range(-0.05, 0.05)).clamp(0.01, 0.99);
         let planes = random_planes(cfg.tile, cfg.tile, 1.0 - sp, &mut rng);
         // Calculated: Eq. 16 exactly as written (sum form).

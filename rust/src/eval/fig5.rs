@@ -2,19 +2,17 @@
 //! model zoo.
 //!
 //! As in the paper (§V-B), the Manhattan Hypothesis makes full-model NF
-//! evaluation tractable without circuit-solving every tile: we bit-slice
-//! every layer, tile it at the evaluation geometry, and score each tile's
-//! NF with Eq. 16 under four configurations:
-//! {conventional, reversed} × {identity, MDM row sort}. Reported per model:
-//! mean NF per configuration and the MDM reduction per dataflow (the
-//! paper's headline: up to 46% NF reduction; reversed dataflow improves
-//! MDM by up to 50% over conventional).
+//! evaluation tractable without circuit-solving every tile: for each of the
+//! four configurations {conventional, reversed} × {identity, MDM row sort}
+//! — selected **by name** from the strategy registry — a
+//! [`Pipeline`] samples tiles of every layer lazily and scores their NF
+//! with Eq. 16. Reported per model: mean NF per configuration and the MDM
+//! reduction per dataflow (the paper's headline: up to 46% NF reduction;
+//! reversed dataflow improves MDM by up to 50% over conventional).
 
-use crate::crossbar::{LayerTiling, TileGeometry};
-use crate::mdm::{Dataflow, MappingConfig, RowOrder};
+use crate::crossbar::TileGeometry;
 use crate::models::{model_by_name, ModelWeights};
-use crate::nf::manhattan_nf_mean;
-use crate::quant::SignSplit;
+use crate::pipeline::Pipeline;
 use crate::report;
 use crate::rng::Xoshiro256;
 use crate::runtime::ArtifactStore;
@@ -76,38 +74,24 @@ impl Default for Fig5Config {
     }
 }
 
-/// Mean tile NF of a whole model under one mapping config.
+/// The {dataflow} × {row order} grid, as registry strategy names, in
+/// `[conv_identity, conv_mdm, rev_identity, rev_mdm]` order.
+const GRID: [&str; 4] = ["conventional", "sort_only", "reversed", "mdm"];
+
+/// Mean tile NF of a whole model under one pipeline (layers weighted by
+/// their zoo repeat count).
 fn model_nf(
     weights: &ModelWeights,
-    geometry: TileGeometry,
-    config: MappingConfig,
+    pipeline: &Pipeline,
     tiles_per_layer: usize,
     rng: &mut Xoshiro256,
 ) -> Result<f64> {
     let mut acc = 0.0f64;
     let mut n = 0usize;
     for (w, desc) in weights.layers.iter().zip(&weights.desc.layers) {
-        let split = SignSplit::of(w);
-        for part in [&split.pos, &split.neg] {
-            // Lazy tiling: only materialize the sampled tiles (huge layers
-            // have O(10^5) tiles; the statistics need a few dozen).
-            let quant = crate::quant::Quantizer::fit(part, geometry.k_bits)?;
-            let (gr, gc) = LayerTiling::grid_for(part.rows(), part.cols(), geometry);
-            let total = gr * gc;
-            let idx: Vec<usize> = if total <= tiles_per_layer {
-                (0..total).collect()
-            } else {
-                rng.choose_k(total, tiles_per_layer)
-            };
-            for &i in &idx {
-                let tile = LayerTiling::build_tile(part, geometry, quant, i / gc, i % gc)?;
-                let plan = tile.plan(config);
-                let placed = plan.apply(&tile.sliced.planes)?;
-                // Weight by the layer's repeat count.
-                acc += manhattan_nf_mean(&placed, 1.0) * desc.count as f64;
-                n += desc.count;
-            }
-        }
+        let (sum, tiles) = pipeline.sampled_nf(w, tiles_per_layer, rng)?;
+        acc += sum * desc.count as f64;
+        n += tiles * desc.count;
     }
     Ok(acc / n.max(1) as f64)
 }
@@ -115,12 +99,6 @@ fn model_nf(
 /// Run Fig. 5 over the configured models.
 pub fn run(cfg: &Fig5Config, results_dir: &Path) -> Result<Vec<Fig5Row>> {
     let mut rows = Vec::new();
-    let configs = [
-        MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::Identity },
-        MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::MdmScore },
-        MappingConfig { dataflow: Dataflow::Reversed, row_order: RowOrder::Identity },
-        MappingConfig { dataflow: Dataflow::Reversed, row_order: RowOrder::MdmScore },
-    ];
     for name in &cfg.models {
         let desc = model_by_name(name)?;
         let weights = if desc.is_trained() && cfg.artifacts_dir.is_some() {
@@ -142,10 +120,11 @@ pub fn run(cfg: &Fig5Config, results_dir: &Path) -> Result<Vec<Fig5Row>> {
             ModelWeights::synthesize(&desc, cfg.seed)?
         };
         let mut nf = [0.0f64; 4];
-        for (i, c) in configs.iter().enumerate() {
+        for (i, strategy) in GRID.iter().enumerate() {
+            let pipeline = Pipeline::new(cfg.geometry).strategy(strategy)?;
             // Fresh rng per config so all configs see the same tile sample.
             let mut rng = Xoshiro256::seeded(cfg.seed ^ 0xF165);
-            nf[i] = model_nf(&weights, cfg.geometry, *c, cfg.tiles_per_layer, &mut rng)?;
+            nf[i] = model_nf(&weights, &pipeline, cfg.tiles_per_layer, &mut rng)?;
         }
         rows.push(Fig5Row {
             model: name.clone(),

@@ -4,13 +4,15 @@
 //! The paper injects position-dependent noise (Eq. 17, η calibrated in
 //! SPICE to 2·10⁻³) into every weight and evaluates ImageNet accuracy per
 //! configuration. Here: the coordinator programs the two trained models'
-//! crossbars under each configuration and serves the test split through the
-//! AOT forward graph (the L1 Pallas kernel does the matmuls) — measuring
-//! exactly the accuracy a CIM deployment with those crossbars would see.
+//! crossbars under each configuration (strategies resolved **by name**
+//! through the `mdm::strategy_by_name` registry) and serves the test split
+//! through the AOT forward graph (the L1 Pallas kernel does the matmuls) —
+//! measuring exactly the accuracy a CIM deployment with those crossbars
+//! would see.
 
 use crate::coordinator::{Engine, EngineConfig, ModelKind};
 use crate::crossbar::TileGeometry;
-use crate::mdm::{Dataflow, MappingConfig, RowOrder};
+use crate::mdm::strategy_by_name;
 use crate::report;
 use anyhow::Result;
 use std::path::Path;
@@ -23,34 +25,19 @@ pub struct Fig6Row {
     pub accuracy: f64,
 }
 
-/// The evaluated configurations: label + (mapping, noisy?).
-pub fn configurations() -> Vec<(&'static str, MappingConfig, bool)> {
+/// The evaluated configurations: label + (strategy name, noisy?).
+pub fn configurations() -> Vec<(&'static str, &'static str, bool)> {
     vec![
-        ("ideal", MappingConfig::conventional(), false),
-        ("noisy_conventional", MappingConfig::conventional(), true),
-        (
-            "noisy_reversed_only",
-            MappingConfig { dataflow: Dataflow::Reversed, row_order: RowOrder::Identity },
-            true,
-        ),
-        ("noisy_mdm", MappingConfig::mdm(), true),
+        ("ideal", "conventional", false),
+        ("noisy_conventional", "conventional", true),
+        ("noisy_reversed_only", "reversed", true),
+        ("noisy_mdm", "mdm", true),
         // Row sort at conventional dataflow: isolates the component of MDM
         // that is robust in *weight space* at any η (the reversal trades
         // cell-count NF against bit-significance placement — see
-        // EXPERIMENTS.md "beyond the paper").
-        (
-            "noisy_sort_only",
-            MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::MdmScore },
-            true,
-        ),
-        (
-            "noisy_random",
-            MappingConfig {
-                dataflow: Dataflow::Conventional,
-                row_order: RowOrder::Random { seed: 7 },
-            },
-            true,
-        ),
+        // rust/DESIGN.md "beyond the paper").
+        ("noisy_sort_only", "sort_only", true),
+        ("noisy_random", "random", true),
     ]
 }
 
@@ -73,10 +60,10 @@ pub fn run(
 
     let mut rows = Vec::new();
     for &model in models {
-        for (label, mapping, noisy) in configurations() {
+        for (label, strategy, noisy) in configurations() {
             let cfg = EngineConfig {
                 model,
-                mapping,
+                strategy: strategy_by_name(strategy)?,
                 eta_signed: if noisy { eta_signed } else { 0.0 },
                 geometry,
                 fwd_batch: 16,
@@ -103,9 +90,9 @@ pub fn run(
     Ok(rows)
 }
 
-/// η sweep: accuracy of {conventional, MDM, sort-only} at several noise
-/// coefficients — quantifies where each MDM component pays off (the
-/// "beyond the paper" analysis in EXPERIMENTS.md).
+/// η sweep: accuracy of {conventional, MDM, sort-only, reversed-only} at
+/// several noise coefficients — quantifies where each MDM component pays
+/// off (the "beyond the paper" analysis in rust/DESIGN.md).
 pub fn run_eta_sweep(
     artifacts_dir: &str,
     model: ModelKind,
@@ -114,24 +101,24 @@ pub fn run_eta_sweep(
     results_dir: &Path,
 ) -> Result<Vec<(f64, String, f64)>> {
     let test = crate::dataset::fresh_eval_split(EVAL_N, 4242);
-    let configs: Vec<(&str, MappingConfig)> = vec![
-        ("conventional", MappingConfig::conventional()),
-        ("mdm", MappingConfig::mdm()),
-        (
-            "sort_only",
-            MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::MdmScore },
-        ),
-        (
-            "reversed_only",
-            MappingConfig { dataflow: Dataflow::Reversed, row_order: RowOrder::Identity },
-        ),
+    let configs: &[(&str, &str)] = &[
+        ("conventional", "conventional"),
+        ("mdm", "mdm"),
+        ("sort_only", "sort_only"),
+        ("reversed_only", "reversed"),
     ];
     let mut out = Vec::new();
     for &eta in etas {
-        for (label, mapping) in &configs {
+        for (label, strategy) in configs {
             let engine = Engine::program(
                 artifacts_dir,
-                EngineConfig { model, mapping: *mapping, eta_signed: eta, geometry, fwd_batch: 16 },
+                EngineConfig {
+                    model,
+                    strategy: strategy_by_name(strategy)?,
+                    eta_signed: eta,
+                    geometry,
+                    fwd_batch: 16,
+                },
             )?;
             out.push((eta, label.to_string(), engine.accuracy(&test)?));
         }
@@ -189,11 +176,15 @@ mod tests {
     }
 
     #[test]
-    fn configurations_cover_paper_setups() {
+    fn configurations_cover_paper_setups_and_resolve() {
         let cfgs = configurations();
         let labels: Vec<&str> = cfgs.iter().map(|c| c.0).collect();
         assert!(labels.contains(&"ideal"));
         assert!(labels.contains(&"noisy_conventional"));
         assert!(labels.contains(&"noisy_mdm"));
+        // Every configuration's strategy must resolve through the registry.
+        for (_, strategy, _) in cfgs {
+            assert!(strategy_by_name(strategy).is_ok(), "{strategy} must resolve");
+        }
     }
 }

@@ -4,7 +4,7 @@
 //! Every driver returns structured results *and* writes a CSV under the
 //! configured results directory, so the paper's figures regenerate both on
 //! screen (`mdm <cmd>` via `report::`) and as data files (`results/*.csv`
-//! consumed by EXPERIMENTS.md).
+//! consumed by the results pipeline).
 
 pub mod ablations;
 pub mod calibrate;

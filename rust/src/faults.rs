@@ -5,10 +5,11 @@
 //! MDM interacts with SAFs: moving dense rows toward the I/O rails changes
 //! *which* programmed bits coincide with fault sites. This module provides
 //! the fault-map generator, the bit-plane corruption pass, and the repair
-//! heuristic (row remapping away from faulty high-significance cells) used
-//! by the `ablation` harness to quantify that interaction.
+//! heuristic exposed as the stateful [`FaultAware`] mapping strategy (row
+//! remapping away from faulty high-significance cells) used by the
+//! `ablation` harness to quantify that interaction.
 
-use crate::mdm::MappingPlan;
+use crate::mdm::{MapContext, MappingPlan, MappingStrategy, SlicedTile};
 use crate::quant::BitSlicedMatrix;
 use crate::rng::Xoshiro256;
 use crate::tensor::Tensor;
@@ -202,10 +203,39 @@ pub fn fault_aware_row_remap(sliced: &BitSlicedMatrix, faults: &FaultMap) -> Res
     Ok(perm)
 }
 
+/// The fault-aware placement as a [`MappingStrategy`]: rows are greedily
+/// remapped away from faulty high-significance cells
+/// ([`fault_aware_row_remap`]), columns stay put. Stateful — it carries the
+/// crossbar's measured [`FaultMap`] — so it is constructed programmatically
+/// rather than through the name registry.
+///
+/// Panics if the fault map's shape does not match the tile (the map belongs
+/// to one physical crossbar; using it on another tile is a bug).
+#[derive(Debug, Clone)]
+pub struct FaultAware {
+    pub faults: FaultMap,
+}
+
+impl MappingStrategy for FaultAware {
+    fn name(&self) -> &'static str {
+        "fault_aware"
+    }
+
+    fn description(&self) -> &'static str {
+        "greedy row remap away from faulty high-significance cells"
+    }
+
+    fn plan(&self, tile: &SlicedTile, _ctx: &MapContext) -> MappingPlan {
+        let remap =
+            fault_aware_row_remap(tile, &self.faults).expect("fault map must match tile shape");
+        MappingPlan::new(remap, (0..tile.cols()).collect())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mdm::{map_tile, MappingConfig};
+    use crate::mdm::{plan_tile, Identity, Mdm};
 
     fn tile(seed: u64) -> BitSlicedMatrix {
         let mut rng = Xoshiro256::seeded(seed);
@@ -247,7 +277,7 @@ mod tests {
     fn weight_error_positive_under_faults() {
         let s = tile(3);
         let f = FaultMap::random(32, 32, 0.05, 0.05, 11);
-        let plan = map_tile(&s.planes, MappingConfig::conventional());
+        let plan = plan_tile(&Identity::conventional(), &s);
         let e = weight_error(&s, &plan, &f).unwrap();
         assert!(e > 0.0);
         assert!(e < 1.0, "error {e} should be a small fraction of scale");
@@ -261,8 +291,7 @@ mod tests {
             let f = FaultMap::random(32, 32, 0.08, 0.04, 200 + seed);
             let ident = MappingPlan::identity(32, 32);
             let e0 = weight_error(&s, &ident, &f).unwrap();
-            let remap = fault_aware_row_remap(&s, &f).unwrap();
-            let plan = MappingPlan::new(remap, (0..32).collect());
+            let plan = plan_tile(&FaultAware { faults: f.clone() }, &s);
             let e1 = weight_error(&s, &plan, &f).unwrap();
             if e1 > e0 + 1e-12 {
                 worse += 1;
@@ -282,5 +311,18 @@ mod tests {
             assert!(p < 32 && !seen[p]);
             seen[p] = true;
         }
+    }
+
+    #[test]
+    fn mdm_strategy_error_differs_from_identity_under_faults() {
+        // MDM moves rows, so fault sites coincide with different programmed
+        // bits than under identity — the interaction the A8 ablation
+        // quantifies. Both must stay finite and positive.
+        let s = tile(6);
+        let f = FaultMap::random(32, 32, 0.05, 0.05, 23);
+        let e_ident = weight_error(&s, &plan_tile(&Identity::conventional(), &s), &f).unwrap();
+        let e_mdm = weight_error(&s, &plan_tile(&Mdm::reversed(), &s), &f).unwrap();
+        assert!(e_ident > 0.0 && e_mdm > 0.0);
+        assert!(e_ident < 1.0 && e_mdm < 1.0);
     }
 }

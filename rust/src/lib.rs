@@ -4,11 +4,13 @@
 //! Parasitic-Resistance-Resilient Memristive Crossbars* (Farias, Martins,
 //! Kung — CS.AR 2025) as a three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the CIM accelerator coordinator: weight tiling,
-//!   the MDM mapping pass, a crossbar-unit scheduler with digital
-//!   accumulation and an ADC model, a circuit-level parasitic-resistance
-//!   simulator (the SPICE substitute), and the full experiment/benchmark
-//!   harness for every figure in the paper.
+//! * **L3 (this crate)** — the CIM accelerator coordinator: the
+//!   [`mdm::MappingStrategy`] registry and the [`pipeline::Pipeline`]
+//!   compile chain (quantize → bit-slice → tile → map → distort), a
+//!   crossbar-unit scheduler with digital accumulation and an ADC model, a
+//!   circuit-level parasitic-resistance simulator (the SPICE substitute),
+//!   and the full experiment/benchmark harness for every figure in the
+//!   paper.
 //! * **L2 (python/compile)** — JAX model graphs (MiniResNet, TinyViT) and a
 //!   train step, AOT-lowered once to HLO text.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the crossbar-tile
@@ -18,8 +20,9 @@
 //! Python never runs on the request path: `runtime` loads the AOT HLO
 //! artifacts through PJRT and `coordinator` drives them from Rust threads.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `rust/DESIGN.md` for the system inventory, the mapping/pipeline API,
+//! and the per-experiment index; module-level docs ([`mdm`], [`pipeline`],
+//! [`crossbar`], [`coordinator`]) carry the per-subsystem detail.
 
 pub mod circuit;
 pub mod config;
@@ -32,6 +35,7 @@ pub mod mdm;
 pub mod models;
 pub mod nf;
 pub mod noise;
+pub mod pipeline;
 pub mod quant;
 pub mod report;
 pub mod rng;

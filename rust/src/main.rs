@@ -10,19 +10,21 @@
 //! mdm calibrate-eta [--tiles N] [--tile N]      E6
 //! mdm sparsity  [--models a,b,..]               E5 / Theorem 1
 //! mdm ablation  <tilesize|sparsity|ratio|roworder>   A1–A3
-//! mdm serve     [--model m] [--requests N] ...  serving driver
+//! mdm serve     [--model m] [--strategy s] ...  serving driver
+//! mdm strategies                                mapping-strategy registry
 //! mdm netlist   [--rows J] [--cols K]           SPICE deck export
 //! mdm info                                      artifact/manifest summary
 //! ```
 //!
 //! Common flags: `--config path.toml`, `--results dir`, `--artifacts dir`,
-//! `--seed N`. No `clap` offline — a small hand-rolled parser below.
+//! `--seed N`, `--strategy NAME`. No `clap` offline — a small hand-rolled
+//! parser below (rust/DESIGN.md §5).
 
 use anyhow::{bail, Context, Result};
 use mdm_cim::config::{Config, ExperimentConfig, ServerConfig};
 use mdm_cim::coordinator::{EngineConfig, ModelKind, Server};
 use mdm_cim::crossbar::TileGeometry;
-use mdm_cim::mdm::MappingConfig;
+use mdm_cim::mdm::{plan_tile, strategy_by_name, strategy_names};
 use mdm_cim::report;
 use mdm_cim::{eval, CrossbarPhysics};
 use std::collections::HashMap;
@@ -102,6 +104,9 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.flags.get("tile") {
         cfg.tile_size = v.parse().context("--tile")?;
     }
+    if let Some(v) = args.flags.get("strategy") {
+        cfg.strategy = v.clone();
+    }
     Ok(cfg)
 }
 
@@ -131,6 +136,7 @@ fn main() -> Result<()> {
         "sparsity" => cmd_sparsity(&args),
         "ablation" => cmd_ablation(&args),
         "serve" => cmd_serve(&args),
+        "strategies" => cmd_strategies(&args),
         "netlist" => cmd_netlist(&args),
         "info" => cmd_info(&args),
         "doctor" => cmd_doctor(&args),
@@ -197,13 +203,27 @@ commands (paper experiment in brackets):
   ablation       tilesize | sparsity | ratio | roworder |
                  global | variation | faults | adc              [A1-A9]
   serve          batched serving driver with metrics
+  strategies     list the registered mapping strategies
   netlist        export a SPICE .cir deck of a crossbar
   info           artifact manifest summary
   doctor         verify artifacts, kernel/oracle agreement, engines
 
 common flags: --config f.toml --results DIR --artifacts DIR --seed N
-              --eta X --tile N --models a,b,c
+              --eta X --tile N --models a,b,c --strategy NAME
 ";
+
+fn cmd_strategies(_args: &Args) -> Result<()> {
+    let rows: Vec<Vec<String>> = strategy_names()
+        .iter()
+        .map(|(n, d)| vec![n.to_string(), d.to_string()])
+        .collect();
+    println!("{}", report::table(&["strategy", "description"], &rows));
+    println!(
+        "select with --strategy NAME (serve) or `strategy = \"NAME\"` under \
+         [experiment] in a config file; random:SEED pins the control seed"
+    );
+    Ok(())
+}
 
 fn cmd_heatmap(args: &Args) -> Result<()> {
     let cfg = experiment_config(args)?;
@@ -543,22 +563,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_window_us: args.usize_or("window-us", 200) as u64,
         queue_depth: args.usize_or("queue", 256),
     };
+    // Strategy precedence: --strategy > deprecated --mapping > config file.
+    let strategy_name = args
+        .flags
+        .get("strategy")
+        .or_else(|| args.flags.get("mapping"))
+        .cloned()
+        .unwrap_or_else(|| cfg.strategy.clone());
     let engine_cfg = EngineConfig {
         model,
-        mapping: if args.str_or("mapping", "mdm") == "conventional" {
-            MappingConfig::conventional()
-        } else {
-            MappingConfig::mdm()
-        },
+        strategy: strategy_by_name(&strategy_name)?,
         eta_signed: cfg.eta_signed,
         geometry: TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?,
         fwd_batch: 16,
     };
     println!(
-        "serving {} with {} workers, mapping {:?}, eta {:.1e} ...",
+        "serving {} with {} workers, strategy {strategy_name}, eta {:.1e} ...",
         args.str_or("model", "miniresnet"),
         server_cfg.workers,
-        engine_cfg.mapping,
         engine_cfg.eta_signed
     );
     let store = mdm_cim::runtime::ArtifactStore::open(&cfg.artifacts_dir)?;
@@ -658,7 +680,7 @@ fn cmd_doctor(args: &Args) -> Result<()> {
         let wdata: Vec<f32> = (0..64 * 8).map(|_| rng.laplace(0.2).abs() as f32).collect();
         let w = mdm_cim::tensor::Tensor::new(&[64, 8], wdata)?;
         let sliced = mdm_cim::quant::BitSlicedMatrix::slice(&w, 8)?;
-        let plan = mdm_cim::mdm::map_tile(&sliced.planes, MappingConfig::mdm());
+        let plan = plan_tile(&*strategy_by_name("mdm")?, &sliced);
         let xdata: Vec<f32> =
             (0..8 * 64).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
         let x = mdm_cim::tensor::Tensor::new(&[8, 64], xdata)?;

@@ -17,6 +17,23 @@
 //! with the output column bookkeeping, leaves the computed product bitwise
 //! identical (tested below) — no retraining, no hardware change.
 //!
+//! ## The mapping API
+//!
+//! MDM is one point in a family of placement transforms. The public surface
+//! is organized in three layers:
+//!
+//! * [`MappingStrategy`] (see [`strategy`]) — a trait turning one bit-sliced
+//!   tile into a [`MappingPlan`]; implementations cover MDM, the identity
+//!   baseline, the paper-literal ascending-Manhattan sort, SWS-like
+//!   magnitude sorting, a random control, and an X-CHANGR-style rotation.
+//!   [`strategy_by_name`] resolves strategies from CLI/config strings.
+//! * [`crate::pipeline::Pipeline`] — the compile chain (quantize →
+//!   bit-slice → tile → map → distort) that applies a strategy to whole
+//!   layers and caches the programmed result.
+//! * The primitives below ([`row_stats`], [`row_permutation`],
+//!   [`global_row_assignment`]) — the scoring/sorting building blocks the
+//!   strategies are made of.
+//!
 //! ## Row-order policies
 //!
 //! Under the Manhattan model the NF contribution of a row with `n` active
@@ -30,11 +47,19 @@
 //! bench compares all policies.
 
 mod plan;
+pub mod strategy;
 
 pub use plan::MappingPlan;
+pub use strategy::{
+    plan_tile, row_magnitudes, strategy_by_name, strategy_names, Identity, MagnitudeDesc,
+    ManhattanAsc, MapContext, MappingStrategy, Mdm, Random, SlicedTile, XChangrRotate,
+    DEFAULT_RANDOM_SEED,
+};
 
 use crate::tensor::ops::argsort_f64;
 use crate::tensor::Tensor;
+use std::fmt;
+use std::str::FromStr;
 
 /// Direction activations are fed into the tile (§IV step 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,6 +68,27 @@ pub enum Dataflow {
     Conventional,
     /// Low-order (denser) bit columns nearest the input rail.
     Reversed,
+}
+
+impl fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Dataflow::Conventional => "conventional",
+            Dataflow::Reversed => "reversed",
+        })
+    }
+}
+
+impl FromStr for Dataflow {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim() {
+            "conventional" => Ok(Dataflow::Conventional),
+            "reversed" => Ok(Dataflow::Reversed),
+            other => anyhow::bail!("unknown dataflow {other:?} (conventional|reversed)"),
+        }
+    }
 }
 
 /// Row-ordering policy (§IV steps 2–3 plus baselines).
@@ -62,27 +108,44 @@ pub enum RowOrder {
     /// Also exactly the rearrangement-optimal order for *weight-space*
     /// Eq.-17 distortion (row magnitude mass = bit-significance mass),
     /// whereas [`RowOrder::MdmScore`] is optimal for the current-domain NF;
-    /// the `ablation_roworder` bench and EXPERIMENTS.md compare the two
-    /// objectives.
+    /// the `ablation_roworder` bench compares the two objectives.
     MagnitudeDesc,
 }
 
-/// Full mapping configuration for one tile.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct MappingConfig {
-    pub dataflow: Dataflow,
-    pub row_order: RowOrder,
+impl fmt::Display for RowOrder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RowOrder::Identity => f.write_str("identity"),
+            RowOrder::MdmScore => f.write_str("mdm_score"),
+            RowOrder::ManhattanAsc => f.write_str("manhattan_asc"),
+            RowOrder::Random { seed } => write!(f, "random:{seed}"),
+            RowOrder::MagnitudeDesc => f.write_str("magnitude_desc"),
+        }
+    }
 }
 
-impl MappingConfig {
-    /// The paper's MDM configuration: reversed dataflow + MDM row sort.
-    pub fn mdm() -> Self {
-        Self { dataflow: Dataflow::Reversed, row_order: RowOrder::MdmScore }
-    }
+impl FromStr for RowOrder {
+    type Err = anyhow::Error;
 
-    /// The conventional baseline: no reversal, no reordering.
-    pub fn conventional() -> Self {
-        Self { dataflow: Dataflow::Conventional, row_order: RowOrder::Identity }
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let key = s.trim();
+        if let Some(seed) = key.strip_prefix("random:") {
+            let seed: u64 = seed
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad seed in row order {key:?}: {e}"))?;
+            return Ok(RowOrder::Random { seed });
+        }
+        match key {
+            "identity" => Ok(RowOrder::Identity),
+            "mdm_score" | "mdm" => Ok(RowOrder::MdmScore),
+            "manhattan_asc" => Ok(RowOrder::ManhattanAsc),
+            "random" => Ok(RowOrder::Random { seed: DEFAULT_RANDOM_SEED }),
+            "magnitude_desc" => Ok(RowOrder::MagnitudeDesc),
+            other => anyhow::bail!(
+                "unknown row order {other:?} \
+                 (identity|mdm_score|manhattan_asc|random[:SEED]|magnitude_desc)"
+            ),
+        }
     }
 }
 
@@ -113,7 +176,8 @@ pub fn row_stats(planes: &Tensor) -> RowStats {
 
 /// Compute the row permutation for a policy over (already column-ordered)
 /// planes. `magnitudes[j]` is the per-row total weight magnitude, used only
-/// by [`RowOrder::MagnitudeDesc`].
+/// by [`RowOrder::MagnitudeDesc`]. This is a strategy building block —
+/// callers outside [`strategy`] should go through a [`MappingStrategy`].
 pub fn row_permutation(planes: &Tensor, policy: RowOrder, magnitudes: Option<&[f64]>) -> Vec<usize> {
     let rows = planes.rows();
     match policy {
@@ -143,32 +207,6 @@ pub fn row_permutation(planes: &Tensor, policy: RowOrder, magnitudes: Option<&[f
             argsort_f64(&keys)
         }
     }
-}
-
-/// Build the full [`MappingPlan`] for a tile of binary planes `[J, C]`.
-///
-/// The column permutation implements the dataflow choice; the row
-/// permutation is computed **after** the columns are placed (scores depend
-/// on column distances).
-pub fn map_tile(planes: &Tensor, config: MappingConfig) -> MappingPlan {
-    map_tile_with_magnitudes(planes, config, None)
-}
-
-/// [`map_tile`] with per-row magnitudes for the [`RowOrder::MagnitudeDesc`]
-/// baseline.
-pub fn map_tile_with_magnitudes(
-    planes: &Tensor,
-    config: MappingConfig,
-    magnitudes: Option<&[f64]>,
-) -> MappingPlan {
-    let cols = planes.cols();
-    let col_perm: Vec<usize> = match config.dataflow {
-        Dataflow::Conventional => (0..cols).collect(),
-        Dataflow::Reversed => (0..cols).rev().collect(),
-    };
-    let placed = planes.permute_cols(&col_perm).expect("col perm is valid");
-    let row_perm = row_permutation(&placed, config.row_order, magnitudes);
-    MappingPlan::new(row_perm, col_perm)
 }
 
 /// **Global (cross-tile) MDM** — an extension beyond the paper's per-tile
@@ -210,7 +248,6 @@ pub fn global_row_assignment(counts: &[usize], tile_rows: usize) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nf::manhattan_nf_sum;
     use crate::rng::Xoshiro256;
 
     #[test]
@@ -252,13 +289,6 @@ mod tests {
         assert_eq!(perm[3], 2);
     }
 
-    fn random_planes(rows: usize, cols: usize, density: f64, seed: u64) -> Tensor {
-        let mut rng = Xoshiro256::seeded(seed);
-        let data: Vec<f32> =
-            (0..rows * cols).map(|_| if rng.bernoulli(density) { 1.0 } else { 0.0 }).collect();
-        Tensor::new(&[rows, cols], data).unwrap()
-    }
-
     #[test]
     fn row_stats_hand_case() {
         let mut t = Tensor::zeros(&[2, 4]);
@@ -286,109 +316,20 @@ mod tests {
     }
 
     #[test]
-    fn row_sort_never_increases_manhattan_nf() {
-        // Property: at any fixed dataflow, the MDM row sort's
-        // Manhattan-model NF is <= the identity order's. (The dataflow
-        // reversal is only guaranteed to help on Theorem-1 tiles — see
-        // `reversal_helps_when_low_order_denser`.)
-        for seed in 0..30u64 {
-            let planes = random_planes(32, 32, 0.2, seed);
-            for dataflow in [Dataflow::Conventional, Dataflow::Reversed] {
-                let ident = map_tile(
-                    &planes,
-                    MappingConfig { dataflow, row_order: RowOrder::Identity },
-                );
-                let sorted = map_tile(
-                    &planes,
-                    MappingConfig { dataflow, row_order: RowOrder::MdmScore },
-                );
-                let nf_ident = manhattan_nf_sum(&ident.apply(&planes).unwrap(), 1.0);
-                let nf_sorted = manhattan_nf_sum(&sorted.apply(&planes).unwrap(), 1.0);
-                assert!(
-                    nf_sorted <= nf_ident + 1e-9,
-                    "seed {seed} {dataflow:?}: sorted {nf_sorted} > identity {nf_ident}"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn mdm_row_sort_is_optimal_among_permutations() {
-        // Exhaustive check on small tiles: no row permutation beats
-        // MdmScore under the Manhattan model (rearrangement inequality).
-        fn permutations(n: usize) -> Vec<Vec<usize>> {
-            if n == 1 {
-                return vec![vec![0]];
-            }
-            let mut out = Vec::new();
-            for p in permutations(n - 1) {
-                for i in 0..n {
-                    let mut q: Vec<usize> = p.iter().map(|&x| x + (x >= i) as usize).collect();
-                    q.insert(0, i);
-                    out.push(q);
-                }
-            }
-            out
-        }
-        for seed in 0..5u64 {
-            let planes = random_planes(5, 6, 0.35, seed + 100);
-            let plan = map_tile(
-                &planes,
-                MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::MdmScore },
-            );
-            let best = manhattan_nf_sum(&plan.apply(&planes).unwrap(), 1.0);
-            for perm in permutations(5) {
-                let cand = planes.permute_rows(&perm).unwrap();
-                let nf = manhattan_nf_sum(&cand, 1.0);
-                assert!(best <= nf + 1e-9, "seed {seed}: {best} > {nf} via {perm:?}");
-            }
-        }
-    }
-
-    #[test]
-    fn reversal_helps_when_low_order_denser() {
-        // Columns with density increasing in column index (low-order bits on
-        // the far side, as in the conventional layout): reversal must lower
-        // the Manhattan NF.
-        let mut rng = Xoshiro256::seeded(9);
-        let (rows, cols) = (16, 8);
-        let mut t = Tensor::zeros(&[rows, cols]);
-        for j in 0..rows {
-            for k in 0..cols {
-                let density = 0.05 + 0.5 * k as f64 / cols as f64;
-                if rng.bernoulli(density) {
-                    *t.at2_mut(j, k) = 1.0;
-                }
-            }
-        }
-        let conv = map_tile(
-            &t,
-            MappingConfig { dataflow: Dataflow::Conventional, row_order: RowOrder::Identity },
-        );
-        let rev = map_tile(
-            &t,
-            MappingConfig { dataflow: Dataflow::Reversed, row_order: RowOrder::Identity },
-        );
-        let nf_conv = manhattan_nf_sum(&conv.apply(&t).unwrap(), 1.0);
-        let nf_rev = manhattan_nf_sum(&rev.apply(&t).unwrap(), 1.0);
-        assert!(nf_rev < nf_conv, "reversed {nf_rev} vs conventional {nf_conv}");
-    }
-
-    #[test]
     fn random_policy_is_deterministic_per_seed() {
-        let planes = random_planes(16, 8, 0.3, 1);
-        let a = row_permutation(&planes, RowOrder::Random { seed: 5 }, None);
-        let b = row_permutation(&planes, RowOrder::Random { seed: 5 }, None);
-        let c = row_permutation(&planes, RowOrder::Random { seed: 6 }, None);
+        let t = Tensor::zeros(&[16, 8]);
+        let a = row_permutation(&t, RowOrder::Random { seed: 5 }, None);
+        let b = row_permutation(&t, RowOrder::Random { seed: 5 }, None);
+        let c = row_permutation(&t, RowOrder::Random { seed: 6 }, None);
         assert_eq!(a, b);
         assert_ne!(a, c);
     }
 
     #[test]
     fn magnitude_desc_uses_magnitudes() {
-        let planes = random_planes(4, 4, 0.5, 2);
+        let t = Tensor::zeros(&[4, 4]);
         let mags = vec![0.1, 3.0, 2.0, 0.5];
-        let perm = row_permutation(&planes, RowOrder::MagnitudeDesc, Some(&mags));
+        let perm = row_permutation(&t, RowOrder::MagnitudeDesc, Some(&mags));
         assert_eq!(perm, vec![1, 2, 3, 0]);
     }
 
@@ -400,5 +341,33 @@ mod tests {
         *t.at2_mut(2, 1) = 1.0; // sum 1
         let perm = row_permutation(&t, RowOrder::ManhattanAsc, None);
         assert_eq!(perm, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn dataflow_roundtrips_through_strings() {
+        for d in [Dataflow::Conventional, Dataflow::Reversed] {
+            assert_eq!(d.to_string().parse::<Dataflow>().unwrap(), d);
+        }
+        assert!("sideways".parse::<Dataflow>().is_err());
+    }
+
+    #[test]
+    fn roworder_roundtrips_through_strings() {
+        for r in [
+            RowOrder::Identity,
+            RowOrder::MdmScore,
+            RowOrder::ManhattanAsc,
+            RowOrder::Random { seed: 31 },
+            RowOrder::MagnitudeDesc,
+        ] {
+            assert_eq!(r.to_string().parse::<RowOrder>().unwrap(), r);
+        }
+        // Bare "random" gets the default seed.
+        assert_eq!(
+            "random".parse::<RowOrder>().unwrap(),
+            RowOrder::Random { seed: DEFAULT_RANDOM_SEED }
+        );
+        assert!("random:x".parse::<RowOrder>().is_err());
+        assert!("bogus".parse::<RowOrder>().is_err());
     }
 }

@@ -1,0 +1,540 @@
+//! The [`MappingStrategy`] trait and the name-keyed strategy registry.
+//!
+//! A mapping strategy decides, for one bit-sliced crossbar tile, where every
+//! logical row and column lands physically — i.e. it produces the tile's
+//! [`MappingPlan`]. The paper's MDM is one strategy among several; related
+//! placements from the literature (X-CHANGR's channel rotation, SWS-like
+//! magnitude sorting) are expressed as further implementations of the same
+//! trait, so the CLI (`--strategy NAME`), config files
+//! (`strategy = "NAME"` under `[experiment]`), and the eval harness all
+//! select placements uniformly by string through [`strategy_by_name`].
+//!
+//! Strategies that need extra state (e.g. [`crate::faults::FaultAware`]
+//! carries a fault map) implement the trait too but are constructed
+//! programmatically rather than through the registry.
+
+use super::{row_permutation, Dataflow, MappingPlan, RowOrder};
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::sync::Arc;
+
+/// A bit-sliced crossbar tile as handed to mapping strategies. Raw binary
+/// planes that never came from a weight matrix can be wrapped with
+/// [`crate::quant::BitSlicedMatrix::from_planes`].
+pub use crate::quant::BitSlicedMatrix as SlicedTile;
+
+/// Seed used by the registry's default `"random"` strategy (kept at the
+/// historical Fig. 6 control seed so results stay reproducible).
+pub const DEFAULT_RANDOM_SEED: u64 = 7;
+
+/// Side information a strategy may consume when planning one tile.
+#[derive(Debug, Clone, Default)]
+pub struct MapContext {
+    /// Per-row dequantized magnitude mass (`Σ_w |w|` per row). Strategies
+    /// that need it ([`MagnitudeDesc`]) compute it from the tile when the
+    /// caller leaves this unset; supplying it here lets callers amortize one
+    /// dequantization across several strategies (see
+    /// `eval::ablations::roworder_compare`).
+    pub magnitudes: Option<Vec<f64>>,
+}
+
+/// A tile-mapping policy: dataflow (column placement) plus row placement.
+///
+/// `plan` must return a plan whose permutations match the tile's dimensions;
+/// it panics on tiles that are inconsistent with the strategy's own state
+/// (e.g. a fault map of the wrong shape) — shape errors across the public
+/// pipeline are caught earlier with `Result`s.
+pub trait MappingStrategy: fmt::Debug + Send + Sync {
+    /// Registry name of **this configuration** (what `--strategy` matches,
+    /// and what `ProgrammedLayer` records as provenance) — dataflow
+    /// variants that the registry distinguishes report their own name
+    /// (e.g. `Mdm::conventional()` is `"sort_only"`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `mdm strategies`.
+    fn description(&self) -> &'static str {
+        ""
+    }
+
+    /// Build the mapping plan for one tile.
+    fn plan(&self, tile: &SlicedTile, ctx: &MapContext) -> MappingPlan;
+}
+
+/// Build a plan for a tile under a strategy with an empty [`MapContext`] —
+/// the one-call entry point used by the pipeline and the eval harness.
+pub fn plan_tile(strategy: &dyn MappingStrategy, tile: &SlicedTile) -> MappingPlan {
+    strategy.plan(tile, &MapContext::default())
+}
+
+/// Column permutation realizing a dataflow choice.
+fn dataflow_col_perm(dataflow: Dataflow, cols: usize) -> Vec<usize> {
+    match dataflow {
+        Dataflow::Conventional => (0..cols).collect(),
+        Dataflow::Reversed => (0..cols).rev().collect(),
+    }
+}
+
+/// Shared plan construction: place columns per the dataflow, then compute
+/// the row permutation **on the placed planes** (row scores depend on
+/// column distances).
+fn plan_with_order(
+    tile: &SlicedTile,
+    dataflow: Dataflow,
+    order: RowOrder,
+    magnitudes: Option<&[f64]>,
+) -> MappingPlan {
+    let col_perm = dataflow_col_perm(dataflow, tile.cols());
+    let placed = tile.planes.permute_cols(&col_perm).expect("column permutation is valid");
+    MappingPlan::new(row_permutation(&placed, order, magnitudes), col_perm)
+}
+
+/// Per-row dequantized magnitude mass of a tile (the [`MagnitudeDesc`]
+/// score), exposed so callers can precompute it into a [`MapContext`].
+pub fn row_magnitudes(tile: &SlicedTile) -> Vec<f64> {
+    let deq = tile.dequantize().expect("dequantize sliced tile");
+    (0..deq.rows()).map(|j| deq.row(j).iter().map(|&x| x as f64).sum()).collect()
+}
+
+/// Keep rows and columns where they fall — the baseline placement at either
+/// dataflow.
+#[derive(Debug, Clone, Copy)]
+pub struct Identity {
+    pub dataflow: Dataflow,
+}
+
+impl Identity {
+    /// Conventional dataflow, no reordering (the paper's baseline).
+    pub fn conventional() -> Self {
+        Self { dataflow: Dataflow::Conventional }
+    }
+
+    /// Reversed dataflow only (isolates the paper's §IV step 1).
+    pub fn reversed() -> Self {
+        Self { dataflow: Dataflow::Reversed }
+    }
+}
+
+impl MappingStrategy for Identity {
+    fn name(&self) -> &'static str {
+        match self.dataflow {
+            Dataflow::Conventional => "conventional",
+            Dataflow::Reversed => "reversed",
+        }
+    }
+
+    fn description(&self) -> &'static str {
+        "no row reordering; dataflow as configured"
+    }
+
+    fn plan(&self, tile: &SlicedTile, _ctx: &MapContext) -> MappingPlan {
+        plan_with_order(tile, self.dataflow, RowOrder::Identity, None)
+    }
+}
+
+/// The paper's MDM: descending active-count row sort (ties by ascending
+/// column-distance sum), canonically at the reversed dataflow.
+#[derive(Debug, Clone, Copy)]
+pub struct Mdm {
+    pub dataflow: Dataflow,
+}
+
+impl Mdm {
+    /// Full MDM (§IV): reversed dataflow + row sort.
+    pub fn reversed() -> Self {
+        Self { dataflow: Dataflow::Reversed }
+    }
+
+    /// Row sort only, at the conventional dataflow ("sort_only" in Fig. 6).
+    pub fn conventional() -> Self {
+        Self { dataflow: Dataflow::Conventional }
+    }
+}
+
+impl MappingStrategy for Mdm {
+    fn name(&self) -> &'static str {
+        match self.dataflow {
+            Dataflow::Reversed => "mdm",
+            Dataflow::Conventional => "sort_only",
+        }
+    }
+
+    fn description(&self) -> &'static str {
+        "MDM row sort: densest rows nearest the rails (paper §IV)"
+    }
+
+    fn plan(&self, tile: &SlicedTile, _ctx: &MapContext) -> MappingPlan {
+        plan_with_order(tile, self.dataflow, RowOrder::MdmScore, None)
+    }
+}
+
+/// Paper-literal variant: rows ascending by `Σ_k δ_k · k`.
+#[derive(Debug, Clone, Copy)]
+pub struct ManhattanAsc {
+    pub dataflow: Dataflow,
+}
+
+impl ManhattanAsc {
+    pub fn reversed() -> Self {
+        Self { dataflow: Dataflow::Reversed }
+    }
+}
+
+impl MappingStrategy for ManhattanAsc {
+    fn name(&self) -> &'static str {
+        "manhattan_asc"
+    }
+
+    fn description(&self) -> &'static str {
+        "paper-literal ascending Manhattan row score"
+    }
+
+    fn plan(&self, tile: &SlicedTile, _ctx: &MapContext) -> MappingPlan {
+        plan_with_order(tile, self.dataflow, RowOrder::ManhattanAsc, None)
+    }
+}
+
+/// Sorted-weight-sectioning-like baseline (refs [22, 23]): rows by
+/// descending dequantized magnitude mass.
+#[derive(Debug, Clone, Copy)]
+pub struct MagnitudeDesc {
+    pub dataflow: Dataflow,
+}
+
+impl MagnitudeDesc {
+    pub fn reversed() -> Self {
+        Self { dataflow: Dataflow::Reversed }
+    }
+}
+
+impl MappingStrategy for MagnitudeDesc {
+    fn name(&self) -> &'static str {
+        "magnitude_desc"
+    }
+
+    fn description(&self) -> &'static str {
+        "SWS-like: rows by descending weight magnitude"
+    }
+
+    fn plan(&self, tile: &SlicedTile, ctx: &MapContext) -> MappingPlan {
+        let mags = match &ctx.magnitudes {
+            Some(m) => m.clone(),
+            None => row_magnitudes(tile),
+        };
+        plan_with_order(tile, self.dataflow, RowOrder::MagnitudeDesc, Some(&mags))
+    }
+}
+
+/// Uniformly random row placement (control).
+#[derive(Debug, Clone, Copy)]
+pub struct Random {
+    pub dataflow: Dataflow,
+    pub seed: u64,
+}
+
+impl Random {
+    pub fn conventional(seed: u64) -> Self {
+        Self { dataflow: Dataflow::Conventional, seed }
+    }
+}
+
+impl MappingStrategy for Random {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn description(&self) -> &'static str {
+        "seeded random row permutation (control)"
+    }
+
+    fn plan(&self, tile: &SlicedTile, _ctx: &MapContext) -> MappingPlan {
+        plan_with_order(tile, self.dataflow, RowOrder::Random { seed: self.seed }, None)
+    }
+}
+
+/// X-CHANGR-style baseline (arXiv:1907.00285): cyclically rotate the row
+/// placement by half the tile height, so channels that sit far from the
+/// sense rail under the identity placement sit near it after rotation — a
+/// score-free placement alternative used as a literature baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct XChangrRotate {
+    pub dataflow: Dataflow,
+}
+
+impl XChangrRotate {
+    pub fn conventional() -> Self {
+        Self { dataflow: Dataflow::Conventional }
+    }
+}
+
+impl MappingStrategy for XChangrRotate {
+    fn name(&self) -> &'static str {
+        "xchangr"
+    }
+
+    fn description(&self) -> &'static str {
+        "X-CHANGR-style half-height cyclic row rotation"
+    }
+
+    fn plan(&self, tile: &SlicedTile, _ctx: &MapContext) -> MappingPlan {
+        let col_perm = dataflow_col_perm(self.dataflow, tile.cols());
+        let rows = tile.rows();
+        let shift = rows / 2;
+        let row_perm: Vec<usize> = (0..rows).map(|p| (p + shift) % rows).collect();
+        MappingPlan::new(row_perm, col_perm)
+    }
+}
+
+/// One registry row: canonical name, accepted aliases, a blurb describing
+/// the registered configuration, and its constructor.
+struct RegistryEntry {
+    name: &'static str,
+    aliases: &'static [&'static str],
+    blurb: &'static str,
+    ctor: fn() -> Arc<dyn MappingStrategy>,
+}
+
+fn ctor_conventional() -> Arc<dyn MappingStrategy> {
+    Arc::new(Identity::conventional())
+}
+
+fn ctor_reversed() -> Arc<dyn MappingStrategy> {
+    Arc::new(Identity::reversed())
+}
+
+fn ctor_mdm() -> Arc<dyn MappingStrategy> {
+    Arc::new(Mdm::reversed())
+}
+
+fn ctor_sort_only() -> Arc<dyn MappingStrategy> {
+    Arc::new(Mdm::conventional())
+}
+
+fn ctor_manhattan_asc() -> Arc<dyn MappingStrategy> {
+    Arc::new(ManhattanAsc::reversed())
+}
+
+fn ctor_magnitude_desc() -> Arc<dyn MappingStrategy> {
+    Arc::new(MagnitudeDesc::reversed())
+}
+
+fn ctor_random() -> Arc<dyn MappingStrategy> {
+    Arc::new(Random::conventional(DEFAULT_RANDOM_SEED))
+}
+
+fn ctor_xchangr() -> Arc<dyn MappingStrategy> {
+    Arc::new(XChangrRotate::conventional())
+}
+
+const REGISTRY: &[RegistryEntry] = &[
+    RegistryEntry {
+        name: "conventional",
+        aliases: &["identity"],
+        blurb: "conventional dataflow, no reordering (baseline)",
+        ctor: ctor_conventional,
+    },
+    RegistryEntry {
+        name: "reversed",
+        aliases: &["reversed_only"],
+        blurb: "dataflow reversal only (paper §IV step 1)",
+        ctor: ctor_reversed,
+    },
+    RegistryEntry {
+        name: "mdm",
+        aliases: &[],
+        blurb: "full MDM: reversed dataflow + MDM row sort (paper §IV)",
+        ctor: ctor_mdm,
+    },
+    RegistryEntry {
+        name: "sort_only",
+        aliases: &["mdm_conventional"],
+        blurb: "MDM row sort at the conventional dataflow",
+        ctor: ctor_sort_only,
+    },
+    RegistryEntry {
+        name: "manhattan_asc",
+        aliases: &[],
+        blurb: "paper-literal ascending Manhattan score, reversed dataflow",
+        ctor: ctor_manhattan_asc,
+    },
+    RegistryEntry {
+        name: "magnitude_desc",
+        aliases: &[],
+        blurb: "SWS-like magnitude-sorted rows, reversed dataflow",
+        ctor: ctor_magnitude_desc,
+    },
+    RegistryEntry {
+        name: "random",
+        aliases: &[],
+        blurb: "random row placement (control; also random:SEED)",
+        ctor: ctor_random,
+    },
+    RegistryEntry {
+        name: "xchangr",
+        aliases: &["xchangr_rotate"],
+        blurb: "X-CHANGR-style cyclic row rotation baseline",
+        ctor: ctor_xchangr,
+    },
+];
+
+/// All registered strategy names with their descriptions (CLI listing).
+pub fn strategy_names() -> Vec<(&'static str, &'static str)> {
+    REGISTRY.iter().map(|e| (e.name, e.blurb)).collect()
+}
+
+/// Resolve a strategy by registry name (or alias). `"random:SEED"` selects
+/// the random control with an explicit seed.
+pub fn strategy_by_name(name: &str) -> Result<Arc<dyn MappingStrategy>> {
+    let key = name.trim();
+    if let Some(seed) = key.strip_prefix("random:") {
+        let seed: u64 =
+            seed.parse().with_context(|| format!("bad seed in strategy {key:?}"))?;
+        return Ok(Arc::new(Random::conventional(seed)));
+    }
+    for e in REGISTRY {
+        if e.name == key || e.aliases.contains(&key) {
+            return Ok((e.ctor)());
+        }
+    }
+    let known: Vec<&str> = REGISTRY.iter().map(|e| e.name).collect();
+    bail!("unknown mapping strategy {key:?} (known: {})", known.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nf::manhattan_nf_sum;
+    use crate::rng::Xoshiro256;
+    use crate::tensor::Tensor;
+
+    fn random_planes(rows: usize, cols: usize, density: f64, seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seeded(seed);
+        let data: Vec<f32> =
+            (0..rows * cols).map(|_| if rng.bernoulli(density) { 1.0 } else { 0.0 }).collect();
+        Tensor::new(&[rows, cols], data).unwrap()
+    }
+
+    fn tile_of(planes: &Tensor) -> SlicedTile {
+        SlicedTile::from_planes(planes.clone()).unwrap()
+    }
+
+    #[test]
+    fn registry_resolves_names_and_aliases() {
+        for (name, _) in strategy_names() {
+            // Every canonical name resolves, and the resolved strategy
+            // reports exactly that name (provenance round-trip).
+            assert_eq!(strategy_by_name(name).unwrap().name(), name, "{name} must round-trip");
+        }
+        // Aliases resolve to the canonical configuration.
+        assert_eq!(strategy_by_name("identity").unwrap().name(), "conventional");
+        assert_eq!(strategy_by_name("reversed_only").unwrap().name(), "reversed");
+        assert_eq!(strategy_by_name("mdm_conventional").unwrap().name(), "sort_only");
+        assert_eq!(strategy_by_name("xchangr_rotate").unwrap().name(), "xchangr");
+        assert!(strategy_by_name("no_such_strategy").is_err());
+        assert!(strategy_by_name("random:bad").is_err());
+    }
+
+    #[test]
+    fn random_seed_suffix_is_honored() {
+        let planes = random_planes(16, 8, 0.3, 1);
+        let t = tile_of(&planes);
+        let a = plan_tile(&*strategy_by_name("random:5").unwrap(), &t);
+        let b = plan_tile(&*strategy_by_name("random:5").unwrap(), &t);
+        let c = plan_tile(&*strategy_by_name("random:6").unwrap(), &t);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn row_sort_never_increases_manhattan_nf() {
+        // Property: at any fixed dataflow, the MDM row sort's
+        // Manhattan-model NF is <= the identity order's. (The dataflow
+        // reversal is only guaranteed to help on Theorem-1 tiles — see
+        // `reversal_helps_when_low_order_denser`.)
+        for seed in 0..30u64 {
+            let planes = random_planes(32, 32, 0.2, seed);
+            let tile = tile_of(&planes);
+            for dataflow in [Dataflow::Conventional, Dataflow::Reversed] {
+                let ident = plan_tile(&Identity { dataflow }, &tile);
+                let sorted = plan_tile(&Mdm { dataflow }, &tile);
+                let nf_ident = manhattan_nf_sum(&ident.apply(&planes).unwrap(), 1.0);
+                let nf_sorted = manhattan_nf_sum(&sorted.apply(&planes).unwrap(), 1.0);
+                assert!(
+                    nf_sorted <= nf_ident + 1e-9,
+                    "seed {seed} {dataflow:?}: sorted {nf_sorted} > identity {nf_ident}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mdm_row_sort_is_optimal_among_permutations() {
+        // Exhaustive check on small tiles: no row permutation beats the MDM
+        // strategy under the Manhattan model (rearrangement inequality).
+        fn permutations(n: usize) -> Vec<Vec<usize>> {
+            if n == 1 {
+                return vec![vec![0]];
+            }
+            let mut out = Vec::new();
+            for p in permutations(n - 1) {
+                for i in 0..n {
+                    let mut q: Vec<usize> = p.iter().map(|&x| x + (x >= i) as usize).collect();
+                    q.insert(0, i);
+                    out.push(q);
+                }
+            }
+            out
+        }
+        for seed in 0..5u64 {
+            let planes = random_planes(5, 6, 0.35, seed + 100);
+            let plan = plan_tile(&Mdm::conventional(), &tile_of(&planes));
+            let best = manhattan_nf_sum(&plan.apply(&planes).unwrap(), 1.0);
+            for perm in permutations(5) {
+                let cand = planes.permute_rows(&perm).unwrap();
+                let nf = manhattan_nf_sum(&cand, 1.0);
+                assert!(best <= nf + 1e-9, "seed {seed}: {best} > {nf} via {perm:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn reversal_helps_when_low_order_denser() {
+        // Columns with density increasing in column index (low-order bits on
+        // the far side, as in the conventional layout): reversal must lower
+        // the Manhattan NF.
+        let mut rng = Xoshiro256::seeded(9);
+        let (rows, cols) = (16, 8);
+        let mut t = Tensor::zeros(&[rows, cols]);
+        for j in 0..rows {
+            for k in 0..cols {
+                let density = 0.05 + 0.5 * k as f64 / cols as f64;
+                if rng.bernoulli(density) {
+                    *t.at2_mut(j, k) = 1.0;
+                }
+            }
+        }
+        let tile = tile_of(&t);
+        let conv = plan_tile(&Identity::conventional(), &tile);
+        let rev = plan_tile(&Identity::reversed(), &tile);
+        let nf_conv = manhattan_nf_sum(&conv.apply(&t).unwrap(), 1.0);
+        let nf_rev = manhattan_nf_sum(&rev.apply(&t).unwrap(), 1.0);
+        assert!(nf_rev < nf_conv, "reversed {nf_rev} vs conventional {nf_conv}");
+    }
+
+    #[test]
+    fn xchangr_rotation_is_a_half_height_rotation() {
+        let planes = random_planes(8, 4, 0.5, 3);
+        let plan = plan_tile(&XChangrRotate::conventional(), &tile_of(&planes));
+        assert_eq!(plan.row_perm(), &[4, 5, 6, 7, 0, 1, 2, 3]);
+        assert_eq!(plan.col_perm(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn magnitude_desc_prefers_context_magnitudes() {
+        let planes = random_planes(4, 4, 0.5, 2);
+        let tile = tile_of(&planes);
+        let ctx = MapContext { magnitudes: Some(vec![0.1, 3.0, 2.0, 0.5]) };
+        let plan = MagnitudeDesc::reversed().plan(&tile, &ctx);
+        // Rows sorted by the supplied magnitudes, descending.
+        assert_eq!(plan.row_perm(), &[1, 2, 3, 0]);
+    }
+}

@@ -100,7 +100,7 @@ pub fn mean_relative_distortion(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mdm::{map_tile, MappingConfig};
+    use crate::mdm::{plan_tile, Identity, Mdm};
     use crate::rng::Xoshiro256;
 
     fn random_nonneg(rows: usize, cols: usize, seed: u64) -> Tensor {
@@ -152,8 +152,8 @@ mod tests {
         // total distortion than the conventional mapping.
         let w = random_nonneg(64, 8, 3);
         let s = BitSlicedMatrix::slice(&w, 8).unwrap();
-        let conv = map_tile(&s.planes, MappingConfig::conventional());
-        let mdm = map_tile(&s.planes, MappingConfig::mdm());
+        let conv = plan_tile(&Identity::conventional(), &s);
+        let mdm = plan_tile(&Mdm::reversed(), &s);
         let d_conv = mean_relative_distortion(&s, &conv, -2e-3).unwrap();
         let d_mdm = mean_relative_distortion(&s, &mdm, -2e-3).unwrap();
         assert!(

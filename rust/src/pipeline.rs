@@ -1,0 +1,452 @@
+//! The compile pipeline — programming a CIM accelerator in one step.
+//!
+//! [`Pipeline`] owns the whole **quantize → bit-slice → tile → map →
+//! distort** chain that used to be spelled out by hand at every call site:
+//!
+//! ```no_run
+//! use mdm_cim::crossbar::TileGeometry;
+//! use mdm_cim::pipeline::Pipeline;
+//! use mdm_cim::tensor::Tensor;
+//!
+//! let weights = Tensor::zeros(&[256, 64]); // a signed layer matrix
+//! let programmed = Pipeline::new(TileGeometry::paper_eval())
+//!     .strategy("mdm")?                  // any registered MappingStrategy
+//!     .eta_signed(-2e-3)                 // Eq.-17 PR distortion
+//!     .compile(&weights)?;               // -> ProgrammedLayer
+//! let y = programmed.matvec(&Tensor::zeros(&[1, 256]))?;
+//! # anyhow::Ok(())
+//! ```
+//!
+//! [`ProgrammedLayer`] is the cached artifact of that step — per-tile
+//! [`MappingPlan`]s and distorted conductances are computed **once** at
+//! program time (like flashing a real crossbar chip) and reused by every
+//! inference, so no mapping work is left on the serving hot path.
+
+use crate::crossbar::{CostModel, LayerTiling, TileCost, TileGeometry};
+use crate::mdm::{strategy_by_name, MappingPlan, MappingStrategy};
+use crate::nf::manhattan_nf_mean;
+use crate::noise::distorted_weights;
+use crate::quant::{Quantizer, SignSplit};
+use crate::rng::Xoshiro256;
+use crate::tensor::Tensor;
+use crate::CrossbarPhysics;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Builder for the quantize → bit-slice → tile → map → distort chain.
+///
+/// Defaults: per-part fitted quantizer, `"conventional"` (identity)
+/// strategy, paper-default physics, `eta_signed = 0.0` (no distortion).
+#[derive(Clone)]
+pub struct Pipeline {
+    geometry: TileGeometry,
+    quantizer: Option<Quantizer>,
+    strategy: Arc<dyn MappingStrategy>,
+    physics: CrossbarPhysics,
+    eta_signed: f64,
+    cost_model: CostModel,
+}
+
+impl Pipeline {
+    /// Start a pipeline at a tile geometry.
+    pub fn new(geometry: TileGeometry) -> Self {
+        Self {
+            geometry,
+            quantizer: None,
+            strategy: strategy_by_name("conventional").expect("baseline strategy registered"),
+            physics: CrossbarPhysics::default(),
+            eta_signed: 0.0,
+            cost_model: CostModel::default(),
+        }
+    }
+
+    /// Select the mapping strategy by registry name (see
+    /// [`crate::mdm::strategy_names`]).
+    pub fn strategy(mut self, name: &str) -> Result<Self> {
+        self.strategy = strategy_by_name(name)?;
+        Ok(self)
+    }
+
+    /// Select an explicit (possibly stateful) strategy implementation.
+    pub fn strategy_impl(mut self, strategy: Arc<dyn MappingStrategy>) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Share an externally fitted quantizer instead of fitting one per sign
+    /// part (e.g. to pin the scale across layers).
+    pub fn quantizer(mut self, quant: Quantizer) -> Self {
+        self.quantizer = Some(quant);
+        self
+    }
+
+    /// Crossbar physics recorded with the programmed artifact (and the
+    /// source of `parasitic_ratio` for physical-unit NF reports).
+    pub fn physics(mut self, physics: CrossbarPhysics) -> Self {
+        self.physics = physics;
+        self
+    }
+
+    /// Signed Eq.-17 distortion coefficient (0.0 = ideal programming).
+    pub fn eta_signed(mut self, eta_signed: f64) -> Self {
+        self.eta_signed = eta_signed;
+        self
+    }
+
+    /// Cost model used to price the programmed layers.
+    pub fn cost_model(mut self, cost_model: CostModel) -> Self {
+        self.cost_model = cost_model;
+        self
+    }
+
+    /// Quantizer for one non-negative part: the shared override, or a fresh
+    /// fit.
+    fn part_quantizer(&self, part: &Tensor) -> Result<Quantizer> {
+        match self.quantizer {
+            Some(q) => Ok(q),
+            None => Quantizer::fit(part, self.geometry.k_bits),
+        }
+    }
+
+    /// Program one **signed** layer matrix `[fan_in, fan_out]`: sign-split,
+    /// tile both parts, map every tile with the configured strategy, distort
+    /// per Eq. 17, and cache the assembled effective weights.
+    pub fn compile(&self, w_signed: &Tensor) -> Result<ProgrammedLayer> {
+        ensure!(w_signed.ndim() == 2, "layer matrix must be 2-D, got {:?}", w_signed.shape());
+        let split = SignSplit::of(w_signed);
+        let pos = self.compile_nonneg(&split.pos)?;
+        let neg = self.compile_nonneg(&split.neg)?;
+        let effective = pos.effective.zip(&neg.effective, |p, n| p - n)?;
+        Ok(ProgrammedLayer {
+            geometry: self.geometry,
+            physics: self.physics,
+            eta_signed: self.eta_signed,
+            strategy: self.strategy.name(),
+            pos,
+            neg,
+            effective,
+        })
+    }
+
+    /// Program one **non-negative** part (half of the differential pair).
+    pub fn compile_nonneg(&self, w: &Tensor) -> Result<ProgrammedPart> {
+        let quant = self.part_quantizer(w)?;
+        let tiling = LayerTiling::partition_with(w, self.geometry, quant)?;
+        // Price the part while the tiling is in hand, so callers never need
+        // a second partition pass just for cost accounting.
+        let cost = self.cost_model.layer_cost(&tiling, 1);
+        let mut tiles = Vec::with_capacity(tiling.n_tiles());
+        let mut effective = Tensor::zeros(&[tiling.fan_in, tiling.fan_out]);
+        for tile in &tiling.tiles {
+            let plan = tile.plan(self.strategy.as_ref());
+            let weights = distorted_weights(&tile.sliced, &plan, self.eta_signed)?;
+            for r in 0..weights.rows() {
+                let src = weights.row(r).to_vec();
+                let dst = effective.row_mut(tile.row_start + r);
+                dst[tile.col_start..tile.col_start + src.len()].copy_from_slice(&src);
+            }
+            tiles.push(ProgrammedTile {
+                row_start: tile.row_start,
+                col_start: tile.col_start,
+                plan,
+                weights,
+            });
+        }
+        Ok(ProgrammedPart {
+            fan_in: tiling.fan_in,
+            fan_out: tiling.fan_out,
+            quant,
+            tiles,
+            effective,
+            cost,
+        })
+    }
+
+    /// Analog cost of executing one signed layer at this geometry (both
+    /// differential parts), per activation vector, **without** programming
+    /// it — the ideal-path shortcut. Compiled layers carry the same figure
+    /// for free in [`ProgrammedLayer::cost`].
+    pub fn layer_cost(&self, w_signed: &Tensor) -> Result<TileCost> {
+        let split = SignSplit::of(w_signed);
+        let mut cost = TileCost::default();
+        for part in [&split.pos, &split.neg] {
+            let tiling = LayerTiling::partition(part, self.geometry)?;
+            cost.add(&self.cost_model.layer_cost(&tiling, 1));
+        }
+        Ok(cost)
+    }
+
+    /// Mean-per-tile Manhattan NF (at unit parasitic ratio — multiply by
+    /// `physics.parasitic_ratio()` for physical units) over up to
+    /// `tiles_per_part` sampled tiles of each sign part, without
+    /// materializing the full tile grid (huge layers have O(10^5) tiles; the
+    /// statistics need a few dozen). Returns `(nf_sum, n_tiles)` so callers
+    /// can weight across layers.
+    pub fn sampled_nf(
+        &self,
+        w_signed: &Tensor,
+        tiles_per_part: usize,
+        rng: &mut Xoshiro256,
+    ) -> Result<(f64, usize)> {
+        ensure!(w_signed.ndim() == 2, "layer matrix must be 2-D, got {:?}", w_signed.shape());
+        let split = SignSplit::of(w_signed);
+        let mut acc = 0.0f64;
+        let mut n = 0usize;
+        for part in [&split.pos, &split.neg] {
+            let quant = self.part_quantizer(part)?;
+            let (gr, gc) = LayerTiling::grid_for(part.rows(), part.cols(), self.geometry);
+            let total = gr * gc;
+            let idx: Vec<usize> = if total <= tiles_per_part {
+                (0..total).collect()
+            } else {
+                rng.choose_k(total, tiles_per_part)
+            };
+            for &i in &idx {
+                let tile = LayerTiling::build_tile(part, self.geometry, quant, i / gc, i % gc)?;
+                let plan = tile.plan(self.strategy.as_ref());
+                acc += manhattan_nf_mean(&plan.apply(&tile.sliced.planes)?, 1.0);
+                n += 1;
+            }
+        }
+        Ok((acc, n))
+    }
+}
+
+impl std::fmt::Debug for Pipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pipeline")
+            .field("geometry", &self.geometry)
+            .field("strategy", &self.strategy.name())
+            .field("eta_signed", &self.eta_signed)
+            .field("quantizer", &self.quantizer)
+            .finish()
+    }
+}
+
+/// One programmed crossbar tile: its mapping plan and its cached distorted
+/// weights `[rows, n_weights]`.
+#[derive(Debug, Clone)]
+pub struct ProgrammedTile {
+    /// First fan-in row this tile covers.
+    pub row_start: usize,
+    /// First logical weight column this tile covers.
+    pub col_start: usize,
+    /// Where every logical row/column landed physically.
+    pub plan: MappingPlan,
+    /// Effective (distorted, dequantized) tile weights.
+    pub weights: Tensor,
+}
+
+/// One programmed sign part of a layer.
+#[derive(Debug, Clone)]
+pub struct ProgrammedPart {
+    pub fan_in: usize,
+    pub fan_out: usize,
+    /// Quantizer shared by every tile of the part.
+    pub quant: Quantizer,
+    /// Row-major programmed tile grid.
+    pub tiles: Vec<ProgrammedTile>,
+    /// Assembled effective part matrix `[fan_in, fan_out]`.
+    pub effective: Tensor,
+    /// Per-input analog cost of this part (priced at compile time).
+    pub cost: TileCost,
+}
+
+/// The cached result of programming one signed layer: what a real CIM chip
+/// holds after flashing — per-tile plans, per-tile conductances, and the
+/// assembled effective weight matrix the forward graph multiplies by.
+#[derive(Debug, Clone)]
+pub struct ProgrammedLayer {
+    pub geometry: TileGeometry,
+    pub physics: CrossbarPhysics,
+    pub eta_signed: f64,
+    /// Registry name of the strategy that programmed the layer.
+    pub strategy: &'static str,
+    pub pos: ProgrammedPart,
+    pub neg: ProgrammedPart,
+    effective: Tensor,
+}
+
+impl ProgrammedLayer {
+    /// The effective signed weight matrix `pos − neg`, `[fan_in, fan_out]`.
+    pub fn effective_weights(&self) -> &Tensor {
+        &self.effective
+    }
+
+    /// Consume the layer, keeping only the effective matrix (the engine's
+    /// forward-graph input).
+    pub fn into_effective(self) -> Tensor {
+        self.effective
+    }
+
+    /// Total programmed tiles across both sign parts.
+    pub fn n_tiles(&self) -> usize {
+        self.pos.tiles.len() + self.neg.tiles.len()
+    }
+
+    /// Per-input analog cost across both sign parts, priced once at compile
+    /// time (no re-tiling).
+    pub fn cost(&self) -> TileCost {
+        let mut c = self.pos.cost;
+        c.add(&self.neg.cost);
+        c
+    }
+
+    /// Serve a batch through the programmed layer: `x [B, fan_in] @ W_eff`.
+    pub fn matvec(&self, x: &Tensor) -> Result<Tensor> {
+        ensure!(
+            x.ndim() == 2 && x.cols() == self.pos.fan_in,
+            "activations {:?} do not match fan_in {}",
+            x.shape(),
+            self.pos.fan_in
+        );
+        x.matmul(&self.effective)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::BitSlicedMatrix;
+    use crate::rng::Xoshiro256;
+
+    fn random_signed(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seeded(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.laplace(0.2) as f32).collect();
+        Tensor::new(&[rows, cols], data).unwrap()
+    }
+
+    #[test]
+    fn ideal_compile_equals_quantized_weights() {
+        let w = random_signed(20, 6, 1);
+        let g = TileGeometry::new(8, 16, 8).unwrap();
+        let p = Pipeline::new(g).compile(&w).unwrap(); // eta 0, identity
+        // Reference: per-part shared-quantizer dequantization, assembled the
+        // same way the tiling does.
+        let split = SignSplit::of(&w);
+        let qp = Quantizer::fit(&split.pos, 8).unwrap();
+        let qn = Quantizer::fit(&split.neg, 8).unwrap();
+        let dp = BitSlicedMatrix::slice_with(&split.pos, qp).unwrap().dequantize().unwrap();
+        let dn = BitSlicedMatrix::slice_with(&split.neg, qn).unwrap().dequantize().unwrap();
+        let reference = dp.zip(&dn, |a, b| a - b).unwrap();
+        for (a, b) in p.effective_weights().data().iter().zip(reference.data()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mdm_compile_closer_to_clean_than_conventional() {
+        let w = random_signed(128, 16, 2).map(f32::abs);
+        let g = TileGeometry::paper_eval();
+        let eta = -2e-3;
+        let clean = Pipeline::new(g).compile(&w).unwrap();
+        let conv =
+            Pipeline::new(g).strategy("conventional").unwrap().eta_signed(eta).compile(&w).unwrap();
+        let mdm = Pipeline::new(g).strategy("mdm").unwrap().eta_signed(eta).compile(&w).unwrap();
+        let err = |p: &ProgrammedLayer| -> f64 {
+            p.effective_weights()
+                .data()
+                .iter()
+                .zip(clean.effective_weights().data())
+                .map(|(a, b)| ((a - b).abs()) as f64)
+                .sum()
+        };
+        assert!(
+            err(&mdm) < err(&conv),
+            "MDM error {} not below conventional {}",
+            err(&mdm),
+            err(&conv)
+        );
+    }
+
+    #[test]
+    fn compiled_matvec_matches_tiled_noisy_matvec() {
+        let w = random_signed(40, 8, 3).map(f32::abs); // non-negative layer
+        let g = TileGeometry::new(16, 32, 8).unwrap();
+        let eta = -2e-3;
+        let strategy = strategy_by_name("mdm").unwrap();
+        let part = Pipeline::new(g)
+            .strategy_impl(strategy.clone())
+            .eta_signed(eta)
+            .compile_nonneg(&w)
+            .unwrap();
+        let tiling = LayerTiling::partition(&w, g).unwrap();
+        let mut rng = Xoshiro256::seeded(4);
+        let xdata: Vec<f32> = (0..3 * 40).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let x = Tensor::new(&[3, 40], xdata).unwrap();
+        let y_pipeline = x.matmul(&part.effective).unwrap();
+        let y_tiled = tiling.matvec_noisy(&x, strategy.as_ref(), eta).unwrap();
+        for (a, b) in y_pipeline.data().iter().zip(y_tiled.data()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn programmed_layer_caches_plans_per_tile() {
+        let w = random_signed(40, 10, 5);
+        let g = TileGeometry::new(16, 32, 8).unwrap(); // 4 weights per tile row
+        let p = Pipeline::new(g).strategy("mdm").unwrap().eta_signed(-2e-3).compile(&w).unwrap();
+        // 3 row-chunks x 3 col-chunks per part.
+        assert_eq!(p.pos.tiles.len(), 9);
+        assert_eq!(p.n_tiles(), 18);
+        assert_eq!(p.strategy, "mdm");
+        for t in &p.pos.tiles {
+            assert_eq!(t.plan.rows(), t.weights.rows());
+        }
+    }
+
+    #[test]
+    fn sampled_nf_prefers_mdm() {
+        let w = random_signed(256, 32, 6);
+        let g = TileGeometry::paper_eval();
+        let mut r1 = Xoshiro256::seeded(9);
+        let mut r2 = Xoshiro256::seeded(9);
+        let (conv, n1) =
+            Pipeline::new(g).sampled_nf(&w, 8, &mut r1).unwrap();
+        let (mdm, n2) = Pipeline::new(g)
+            .strategy("mdm")
+            .unwrap()
+            .sampled_nf(&w, 8, &mut r2)
+            .unwrap();
+        assert_eq!(n1, n2);
+        assert!(n1 > 0);
+        assert!(mdm < conv, "mdm {mdm} not below conventional {conv}");
+    }
+
+    #[test]
+    fn compiled_cost_matches_uncompiled_layer_cost() {
+        let w = random_signed(40, 10, 8);
+        let g = TileGeometry::new(16, 32, 8).unwrap();
+        let pipe = Pipeline::new(g).eta_signed(-2e-3);
+        let programmed = pipe.compile(&w).unwrap();
+        let priced = pipe.layer_cost(&w).unwrap();
+        assert_eq!(programmed.cost().adc_conversions, priced.adc_conversions);
+        assert_eq!(programmed.cost().sync_events, priced.sync_events);
+        assert_eq!(programmed.cost().io_bytes, priced.io_bytes);
+    }
+
+    #[test]
+    fn physics_is_recorded_with_the_artifact() {
+        let physics = CrossbarPhysics { r_wire: 5.0, ..CrossbarPhysics::default() };
+        let w = random_signed(8, 2, 9);
+        let p = Pipeline::new(TileGeometry::new(8, 16, 8).unwrap())
+            .physics(physics)
+            .compile(&w)
+            .unwrap();
+        assert_eq!(p.physics, physics);
+    }
+
+    #[test]
+    fn unknown_strategy_name_is_an_error() {
+        assert!(Pipeline::new(TileGeometry::paper_eval()).strategy("nope").is_err());
+    }
+
+    #[test]
+    fn quantizer_override_is_respected() {
+        let w = random_signed(8, 4, 7).map(f32::abs);
+        let g = TileGeometry::new(8, 16, 8).unwrap();
+        let q = Quantizer { k_bits: 8, scale: 10.0 };
+        let part = Pipeline::new(g).quantizer(q).compile_nonneg(&w).unwrap();
+        assert_eq!(part.quant, q);
+    }
+}

@@ -81,6 +81,21 @@ impl BitSlicedMatrix {
         })
     }
 
+    /// Wrap raw binary planes `[J, C]` as a 1-bit-per-weight sliced tile at
+    /// unit scale — the adapter used when mapping synthetic/random planes
+    /// that never came from a weight matrix (ablations, Monte-Carlo,
+    /// property tests). Each crossbar column is its own logical weight, so
+    /// `dequantize` returns `0.5 · planes`.
+    pub fn from_planes(planes: Tensor) -> Result<Self> {
+        ensure!(planes.ndim() == 2, "planes must be 2-D, got {:?}", planes.shape());
+        ensure!(
+            planes.data().iter().all(|&x| x == 0.0 || x == 1.0),
+            "planes must be binary (0.0/1.0 entries)"
+        );
+        let n_weights = planes.cols();
+        Ok(Self { planes, n_weights, k_bits: 1, quant: Quantizer { k_bits: 1, scale: 1.0 } })
+    }
+
     /// Number of crossbar rows `J`.
     pub fn rows(&self) -> usize {
         self.planes.rows()
@@ -233,6 +248,25 @@ mod tests {
         for (a, b) in y_ref.data().iter().zip(&y) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn from_planes_wraps_binary_planes_at_unit_scale() {
+        let planes =
+            Tensor::new(&[2, 3], vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0]).unwrap();
+        let s = BitSlicedMatrix::from_planes(planes.clone()).unwrap();
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.cols(), 3);
+        assert_eq!(s.n_weights, 3);
+        assert_eq!(s.k_bits, 1);
+        // dequantize = 0.5 * planes.
+        let d = s.dequantize().unwrap();
+        for (a, b) in d.data().iter().zip(planes.data()) {
+            assert_eq!(*a, 0.5 * b);
+        }
+        // Non-binary input rejected.
+        let bad = Tensor::new(&[1, 2], vec![0.5, 1.0]).unwrap();
+        assert!(BitSlicedMatrix::from_planes(bad).is_err());
     }
 
     #[test]

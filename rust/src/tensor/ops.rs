@@ -7,7 +7,7 @@ impl Tensor {
     /// Matrix multiply: `self [m,k] @ rhs [k,n] -> [m,n]`.
     ///
     /// Blocked i-k-j loop order with an accumulation row buffer — the fast
-    /// pure-Rust ordering for row-major data (see EXPERIMENTS.md §Perf).
+    /// pure-Rust ordering for row-major data (see rust/DESIGN.md §6 (Perf)).
     pub fn matmul(&self, rhs: &Tensor) -> Result<Tensor> {
         if self.ndim() != 2 || rhs.ndim() != 2 {
             bail!("matmul needs 2-D tensors, got {:?} @ {:?}", self.shape(), rhs.shape());

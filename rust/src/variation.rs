@@ -128,7 +128,7 @@ pub fn monte_carlo(
     model: VariationModel,
     seed: u64,
 ) -> Result<VariationReport> {
-    use crate::mdm::{map_tile, MappingConfig};
+    use crate::mdm::{plan_tile, Identity, Mdm, SlicedTile};
     use crate::nf::manhattan_nf_sum;
     let mut rng = Xoshiro256::seeded(seed);
     let mut calc = Vec::new();
@@ -143,8 +143,9 @@ pub fn monte_carlo(
         meas.push(varied.nf()?);
 
         // MDM ranking robustness on the same tile + same variation seed.
-        let conv = map_tile(&planes, MappingConfig::conventional()).apply(&planes)?;
-        let mdm = map_tile(&planes, MappingConfig::mdm()).apply(&planes)?;
+        let sliced = SlicedTile::from_planes(planes.clone())?;
+        let conv = plan_tile(&Identity::conventional(), &sliced).apply(&planes)?;
+        let mdm = plan_tile(&Mdm::reversed(), &sliced).apply(&planes)?;
         let nf_conv =
             VariedCrossbar::sample(&conv, physics, model, seed ^ (t as u64) << 16).nf()?;
         let nf_mdm =

@@ -1,33 +1,38 @@
 //! Integration tests over the serving coordinator: engine programming,
 //! batching, backpressure, and end-to-end correctness of served logits.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts`; each test skips (with a note on stderr) when
+//! the artifacts are absent so the pure-Rust suite stays runnable.
 
 use mdm_cim::config::ServerConfig;
 use mdm_cim::coordinator::{Engine, EngineConfig, ModelKind, Server};
 use mdm_cim::crossbar::TileGeometry;
-use mdm_cim::mdm::MappingConfig;
+use mdm_cim::mdm::strategy_by_name;
 use mdm_cim::runtime::ArtifactStore;
 
-fn engine_cfg(eta: f64, mapping: MappingConfig) -> EngineConfig {
-    EngineConfig {
-        model: ModelKind::MiniResNet,
-        mapping,
-        eta_signed: eta,
-        geometry: TileGeometry::paper_eval(),
-        fwd_batch: 16,
+fn artifacts_ready(test_name: &str) -> bool {
+    let ready = std::path::Path::new("artifacts/manifest.txt").exists();
+    if !ready {
+        eprintln!("skipping {test_name}: artifacts missing (run `make artifacts`)");
     }
+    ready
+}
+
+fn engine_cfg(eta: f64, strategy: &str) -> EngineConfig {
+    EngineConfig::with_strategy(ModelKind::MiniResNet, strategy, eta).unwrap()
 }
 
 /// Served logits equal direct engine inference (batching is transparent).
 #[test]
 fn served_logits_match_direct_engine() {
+    if !artifacts_ready("served_logits_match_direct_engine") {
+        return;
+    }
     let test = ArtifactStore::open("artifacts").unwrap().data("test").unwrap();
-    let engine = Engine::program("artifacts", engine_cfg(0.0, MappingConfig::conventional()))
-        .unwrap();
+    let engine = Engine::program("artifacts", engine_cfg(0.0, "conventional")).unwrap();
     let server = Server::start(
         "artifacts",
-        engine_cfg(0.0, MappingConfig::conventional()),
+        engine_cfg(0.0, "conventional"),
         ServerConfig { workers: 1, max_batch: 16, batch_window_us: 100, queue_depth: 64 },
     )
     .unwrap();
@@ -46,10 +51,13 @@ fn served_logits_match_direct_engine() {
 /// Multiple concurrent requests all come back, with metrics accounting.
 #[test]
 fn concurrent_requests_complete_with_metrics() {
+    if !artifacts_ready("concurrent_requests_complete_with_metrics") {
+        return;
+    }
     let test = ArtifactStore::open("artifacts").unwrap().data("test").unwrap();
     let server = Server::start(
         "artifacts",
-        engine_cfg(-2e-3, MappingConfig::mdm()),
+        engine_cfg(-2e-3, "mdm"),
         ServerConfig { workers: 2, max_batch: 16, batch_window_us: 200, queue_depth: 128 },
     )
     .unwrap();
@@ -80,10 +88,13 @@ fn concurrent_requests_complete_with_metrics() {
 /// tiny queue with a flood of requests must reject some.
 #[test]
 fn backpressure_rejects_when_queue_full() {
+    if !artifacts_ready("backpressure_rejects_when_queue_full") {
+        return;
+    }
     let test = ArtifactStore::open("artifacts").unwrap().data("test").unwrap();
     let server = Server::start(
         "artifacts",
-        engine_cfg(0.0, MappingConfig::conventional()),
+        engine_cfg(0.0, "conventional"),
         // Large window + queue depth 2 means the 3rd+ submissions race the
         // batcher; flooding 64 requests must trip rejection at least once.
         ServerConfig { workers: 1, max_batch: 4, batch_window_us: 50_000, queue_depth: 2 },
@@ -111,19 +122,16 @@ fn backpressure_rejects_when_queue_full() {
 /// The row-sort component of MDM must not hurt accuracy even at strong
 /// distortion (it moves the heavy rows toward the I/O rails; unlike the
 /// dataflow reversal it has no bit-significance trade-off — see
-/// EXPERIMENTS.md "beyond the paper" for the reversal analysis).
+/// rust/DESIGN.md "beyond the paper" for the reversal analysis).
 #[test]
 fn row_sort_at_least_as_accurate_under_strong_distortion() {
-    use mdm_cim::mdm::{Dataflow, RowOrder};
+    if !artifacts_ready("row_sort_at_least_as_accurate_under_strong_distortion") {
+        return;
+    }
     let test = ArtifactStore::open("artifacts").unwrap().data("test").unwrap();
     let eta = -1e-2;
-    let conv =
-        Engine::program("artifacts", engine_cfg(eta, MappingConfig::conventional())).unwrap();
-    let sort_cfg = MappingConfig {
-        dataflow: Dataflow::Conventional,
-        row_order: RowOrder::MdmScore,
-    };
-    let sorted = Engine::program("artifacts", engine_cfg(eta, sort_cfg)).unwrap();
+    let conv = Engine::program("artifacts", engine_cfg(eta, "conventional")).unwrap();
+    let sorted = Engine::program("artifacts", engine_cfg(eta, "sort_only")).unwrap();
     let acc_conv = conv.accuracy(&test).unwrap();
     let acc_sorted = sorted.accuracy(&test).unwrap();
     assert!(
@@ -136,11 +144,13 @@ fn row_sort_at_least_as_accurate_under_strong_distortion() {
 /// be worse than the conventional mapping (Fig. 6 relation).
 #[test]
 fn mdm_not_worse_at_paper_eta() {
+    if !artifacts_ready("mdm_not_worse_at_paper_eta") {
+        return;
+    }
     let test = ArtifactStore::open("artifacts").unwrap().data("test").unwrap();
     let eta = -2e-3;
-    let conv =
-        Engine::program("artifacts", engine_cfg(eta, MappingConfig::conventional())).unwrap();
-    let mdm = Engine::program("artifacts", engine_cfg(eta, MappingConfig::mdm())).unwrap();
+    let conv = Engine::program("artifacts", engine_cfg(eta, "conventional")).unwrap();
+    let mdm = Engine::program("artifacts", engine_cfg(eta, "mdm")).unwrap();
     let acc_conv = conv.accuracy(&test).unwrap();
     let acc_mdm = mdm.accuracy(&test).unwrap();
     assert!(
@@ -152,10 +162,13 @@ fn mdm_not_worse_at_paper_eta() {
 /// Engine cost model: more/smaller tiles => more sync events.
 #[test]
 fn engine_cost_scales_with_tile_size() {
+    if !artifacts_ready("engine_cost_scales_with_tile_size") {
+        return;
+    }
     let mk = |tile: usize| {
         let cfg = EngineConfig {
             model: ModelKind::MiniResNet,
-            mapping: MappingConfig::mdm(),
+            strategy: strategy_by_name("mdm").unwrap(),
             eta_signed: -2e-3,
             geometry: TileGeometry::new(tile, tile, 8).unwrap(),
             fwd_batch: 16,

@@ -2,7 +2,7 @@
 //! reproduced figure, pinned with tolerances wide enough for seed/platform
 //! drift but tight enough to catch real regressions in the solver, the
 //! mapping, or the NF model. (Small problem sizes keep this under a few
-//! seconds; the full-scale numbers live in EXPERIMENTS.md.)
+//! seconds; the full-scale numbers live in rust/DESIGN.md.)
 
 use mdm_cim::eval;
 use mdm_cim::CrossbarPhysics;

@@ -5,7 +5,7 @@
 use mdm_cim::circuit::CrossbarCircuit;
 use mdm_cim::crossbar::{LayerTiling, TileGeometry};
 use mdm_cim::eval::random_planes;
-use mdm_cim::mdm::{map_tile, MappingConfig};
+use mdm_cim::mdm::{plan_tile, strategy_by_name, Identity, MagnitudeDesc, Mdm, SlicedTile};
 use mdm_cim::models::{generate_layer_weights, WeightProfile};
 use mdm_cim::nf::{manhattan_nf_mean, manhattan_nf_sum};
 use mdm_cim::quant::{BitSlicedMatrix, SignSplit};
@@ -21,13 +21,15 @@ fn full_mapping_pipeline() {
     let w = generate_layer_weights(256, 32, &WeightProfile::cnn(), 11).unwrap();
     let split = SignSplit::of(&w);
     let geom = TileGeometry::paper_eval();
+    let conv_s = strategy_by_name("conventional").unwrap();
+    let mdm_s = strategy_by_name("mdm").unwrap();
     for part in [&split.pos, &split.neg] {
         let tiling = LayerTiling::partition(part, geom).unwrap();
         let mut nf_conv = 0.0;
         let mut nf_mdm = 0.0;
         for tile in &tiling.tiles {
-            let conv = tile.plan(MappingConfig::conventional());
-            let mdm = tile.plan(MappingConfig::mdm());
+            let conv = tile.plan(conv_s.as_ref());
+            let mdm = tile.plan(mdm_s.as_ref());
             nf_conv += manhattan_nf_mean(&conv.apply(&tile.sliced.planes).unwrap(), 1.0);
             nf_mdm += manhattan_nf_mean(&mdm.apply(&tile.sliced.planes).unwrap(), 1.0);
         }
@@ -43,7 +45,7 @@ fn full_mapping_pipeline() {
 /// gradient case.)
 #[test]
 fn prop_row_sort_never_worse_per_dataflow() {
-    use mdm_cim::mdm::{Dataflow, RowOrder};
+    use mdm_cim::mdm::Dataflow;
     propcheck(
         PropConfig { cases: 48, seed: 101, max_size: 48 },
         |rng, size| {
@@ -53,15 +55,10 @@ fn prop_row_sort_never_worse_per_dataflow() {
             random_planes(rows, cols, density, rng)
         },
         |planes| {
+            let tile = SlicedTile::from_planes(planes.clone()).map_err(|e| e.to_string())?;
             for dataflow in [Dataflow::Conventional, Dataflow::Reversed] {
-                let ident = map_tile(
-                    planes,
-                    MappingConfig { dataflow, row_order: RowOrder::Identity },
-                );
-                let sorted = map_tile(
-                    planes,
-                    MappingConfig { dataflow, row_order: RowOrder::MdmScore },
-                );
+                let ident = plan_tile(&Identity { dataflow }, &tile);
+                let sorted = plan_tile(&Mdm { dataflow }, &tile);
                 let a = manhattan_nf_sum(&ident.apply(planes).unwrap(), 1.0);
                 let b = manhattan_nf_sum(&sorted.apply(planes).unwrap(), 1.0);
                 if b > a + 1e-9 {
@@ -179,12 +176,12 @@ fn prop_circuit_antidiagonal_symmetry() {
 /// rows ordered by dequantized magnitude mass) never increases the Eq.-17
 /// weight-space distortion at a fixed dataflow. This is the exact
 /// rearrangement-optimal order for weight-space error — the cell-count
-/// `MdmScore` is optimal for the *current-domain* NF instead; the two
+/// MDM score is optimal for the *current-domain* NF instead; the two
 /// objectives differ, which is the decomposition analyzed in
-/// EXPERIMENTS.md "beyond the paper".
+/// rust/DESIGN.md "beyond the paper".
 #[test]
 fn prop_magnitude_sort_distortion_never_worse() {
-    use mdm_cim::mdm::{map_tile_with_magnitudes, Dataflow, RowOrder};
+    use mdm_cim::mdm::Dataflow;
     propcheck(
         PropConfig { cases: 24, seed: 505, max_size: 24 },
         |rng, size| {
@@ -196,19 +193,9 @@ fn prop_magnitude_sort_distortion_never_worse() {
         },
         |w| {
             let s = BitSlicedMatrix::slice(w, 8).map_err(|e| e.to_string())?;
-            let deq = s.dequantize().map_err(|e| e.to_string())?;
-            let mags: Vec<f64> = (0..deq.rows())
-                .map(|j| deq.row(j).iter().map(|&x| x as f64).sum())
-                .collect();
-            let conv = map_tile(&s.planes, MappingConfig::conventional());
-            let sorted = map_tile_with_magnitudes(
-                &s.planes,
-                MappingConfig {
-                    dataflow: Dataflow::Conventional,
-                    row_order: RowOrder::MagnitudeDesc,
-                },
-                Some(&mags),
-            );
+            let conv = plan_tile(&Identity::conventional(), &s);
+            let sorted =
+                plan_tile(&MagnitudeDesc { dataflow: Dataflow::Conventional }, &s);
             let dc = mdm_cim::noise::mean_relative_distortion(&s, &conv, -2e-3)
                 .map_err(|e| e.to_string())?;
             let dm = mdm_cim::noise::mean_relative_distortion(&s, &sorted, -2e-3)
@@ -236,8 +223,8 @@ fn solver_confirms_mdm_nf_reduction() {
         let w = generate_layer_weights(32, 4, &WeightProfile::cnn(), 1000 + t as u64).unwrap();
         let split = SignSplit::of(&w);
         let s = BitSlicedMatrix::slice(&split.pos, 8).unwrap();
-        let conv = map_tile(&s.planes, MappingConfig::conventional());
-        let mdm = map_tile(&s.planes, MappingConfig::mdm());
+        let conv = plan_tile(&Identity::conventional(), &s);
+        let mdm = plan_tile(&Mdm::reversed(), &s);
         let nf_conv = CrossbarCircuit::from_planes(&conv.apply(&s.planes).unwrap(), physics)
             .unwrap()
             .solve()

@@ -1,7 +1,9 @@
 //! Integration tests over the runtime + AOT artifacts: the cross-layer
 //! contracts between Python (L1/L2 build path) and Rust (L3 request path).
 //!
-//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! Requires `make artifacts` (the Makefile `test` target guarantees it);
+//! each test skips with a note on stderr when the artifacts are absent so
+//! the pure-Rust suite stays runnable.
 
 use mdm_cim::mdm::MappingPlan;
 use mdm_cim::noise::distorted_weights;
@@ -10,15 +12,19 @@ use mdm_cim::rng::Xoshiro256;
 use mdm_cim::runtime::ArtifactStore;
 use mdm_cim::tensor::Tensor;
 
-fn store() -> ArtifactStore {
-    ArtifactStore::open("artifacts").expect("run `make artifacts` before cargo test")
+fn store() -> Option<ArtifactStore> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactStore::open("artifacts").expect("run `make artifacts` before cargo test"))
 }
 
 /// The AOT noisy-tile-MVM kernel (L1 Pallas, through PJRT) must agree with
 /// the independent Rust implementation of Eq. 17 to float precision.
 #[test]
 fn aot_noisy_kernel_matches_rust_oracle() {
-    let store = store();
+    let Some(store) = store() else { return };
     let kernel = store.load("noisy_tile_mvm_64x64").unwrap();
     let mut rng = Xoshiro256::seeded(9);
 
@@ -26,7 +32,8 @@ fn aot_noisy_kernel_matches_rust_oracle() {
     let wdata: Vec<f32> = (0..64 * 8).map(|_| rng.laplace(0.2).abs() as f32).collect();
     let w = Tensor::new(&[64, 8], wdata).unwrap();
     let sliced = BitSlicedMatrix::slice(&w, 8).unwrap();
-    let plan = mdm_cim::mdm::map_tile(&sliced.planes, mdm_cim::mdm::MappingConfig::mdm());
+    let plan =
+        mdm_cim::mdm::plan_tile(&*mdm_cim::mdm::strategy_by_name("mdm").unwrap(), &sliced);
 
     let xdata: Vec<f32> = (0..8 * 64).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
     let x = Tensor::new(&[8, 64], xdata).unwrap();
@@ -49,7 +56,7 @@ fn aot_noisy_kernel_matches_rust_oracle() {
 /// The AOT bit-slice kernel must agree with `quant::BitSlicedMatrix`.
 #[test]
 fn aot_bitslice_matches_rust_quant() {
-    let store = store();
+    let Some(store) = store() else { return };
     let kernel = store.load("bitslice_64x8").unwrap();
     let mut rng = Xoshiro256::seeded(21);
     // Integer levels in [0, 256).
@@ -77,7 +84,7 @@ fn aot_bitslice_matches_rust_quant() {
 /// when fed the clean trained weights.
 #[test]
 fn aot_forward_reproduces_trained_accuracy() {
-    let store = store();
+    let Some(store) = store() else { return };
     let fwd = store.load("miniresnet_fwd").unwrap();
     let weights = store.weights("miniresnet").unwrap();
     let test = store.data("test").unwrap();
@@ -114,7 +121,7 @@ fn aot_forward_reproduces_trained_accuracy() {
 /// positional encoding; aot.py now prints with print_large_constants).
 #[test]
 fn artifacts_contain_no_elided_constants() {
-    let store = store();
+    let Some(store) = store() else { return };
     for entry in &store.manifest().entries {
         let text = std::fs::read_to_string(store.dir().join(&entry.file)).unwrap();
         assert!(
@@ -131,7 +138,7 @@ fn artifacts_contain_no_elided_constants() {
 /// positional encoding zeroed it still got ~49%, so gate well above that).
 #[test]
 fn aot_tinyvit_forward_reproduces_trained_accuracy() {
-    let store = store();
+    let Some(store) = store() else { return };
     let fwd = store.load("tinyvit_fwd").unwrap();
     let weights = store.weights("tinyvit").unwrap();
     let test = store.data("test").unwrap();
@@ -164,7 +171,7 @@ fn aot_tinyvit_forward_reproduces_trained_accuracy() {
 /// match local regeneration (same xoshiro port) to float tolerance.
 #[test]
 fn dataset_cross_language_agreement() {
-    let store = store();
+    let Some(store) = store() else { return };
     let shard = store.data("train").unwrap();
     let local = mdm_cim::dataset::generate(shard.len(), 2.2, 42);
     assert_eq!(shard.x.shape(), local.x.shape());
@@ -184,7 +191,7 @@ fn dataset_cross_language_agreement() {
 /// the e2e example).
 #[test]
 fn aot_train_step_reduces_loss() {
-    let store = store();
+    let Some(store) = store() else { return };
     let step = store.load("train_step_miniresnet").unwrap();
     let init = store.weights("miniresnet_init").unwrap();
     let train = store.data("train").unwrap();
@@ -215,7 +222,7 @@ fn aot_train_step_reduces_loss() {
 /// must equal the clean bit-sliced matmul).
 #[test]
 fn aot_kernel_zero_eta_is_clean() {
-    let store = store();
+    let Some(store) = store() else { return };
     let kernel = store.load("noisy_tile_mvm_64x64").unwrap();
     let mut rng = Xoshiro256::seeded(33);
     let wdata: Vec<f32> = (0..64 * 8).map(|_| rng.uniform() as f32).collect();

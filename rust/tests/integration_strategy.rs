@@ -1,0 +1,136 @@
+//! Property tests for [`MappingPlan`] invariants across **every registered
+//! strategy**: whatever placement a strategy picks, (a) its permutations
+//! round-trip the planes bitwise, (b) activation-permute + output-un-permute
+//! reproduces the unmapped matvec (to f32 accumulation-order tolerance —
+//! a row permutation reorders the dot-product reduction, so exact bitwise
+//! equality only holds for column-only plans), and (c) degenerate tiles
+//! (1 row, 1 column, 1x1, all-zero planes) never panic.
+
+use mdm_cim::mdm::{plan_tile, strategy_by_name, strategy_names, MappingStrategy, SlicedTile};
+use mdm_cim::quant::BitSlicedMatrix;
+use mdm_cim::rng::Xoshiro256;
+use mdm_cim::tensor::Tensor;
+use std::sync::Arc;
+
+fn all_strategies() -> Vec<(&'static str, Arc<dyn MappingStrategy>)> {
+    strategy_names()
+        .iter()
+        .map(|(name, _)| (*name, strategy_by_name(name).expect("registered name resolves")))
+        .collect()
+}
+
+fn random_planes(rows: usize, cols: usize, density: f64, rng: &mut Xoshiro256) -> Tensor {
+    let data: Vec<f32> =
+        (0..rows * cols).map(|_| if rng.bernoulli(density) { 1.0 } else { 0.0 }).collect();
+    Tensor::new(&[rows, cols], data).unwrap()
+}
+
+/// A real bit-sliced tile from a bell-shaped weight matrix.
+fn bell_tile(rows: usize, weights: usize, seed: u64) -> BitSlicedMatrix {
+    let mut rng = Xoshiro256::seeded(seed);
+    let data: Vec<f32> =
+        (0..rows * weights).map(|_| rng.laplace(0.2).abs() as f32).collect();
+    let w = Tensor::new(&[rows, weights], data).unwrap();
+    BitSlicedMatrix::slice(&w, 8).unwrap()
+}
+
+/// (a) `unapply(apply(planes)) == planes` **bitwise**, for every strategy
+/// and a spread of tile shapes — the pure-permutation round-trip.
+#[test]
+fn planes_roundtrip_bitwise_for_every_strategy() {
+    let mut rng = Xoshiro256::seeded(11);
+    for (rows, cols) in [(4usize, 4usize), (16, 8), (7, 13), (32, 32)] {
+        let planes = random_planes(rows, cols, 0.3, &mut rng);
+        let tile = SlicedTile::from_planes(planes.clone()).unwrap();
+        for (name, strategy) in all_strategies() {
+            let plan = plan_tile(strategy.as_ref(), &tile);
+            let phys = plan.apply(&planes).unwrap();
+            assert_eq!(
+                plan.unapply(&phys).unwrap(),
+                planes,
+                "{name} round-trip not bitwise on {rows}x{cols}"
+            );
+        }
+    }
+}
+
+/// (b) The mapped matvec is the unmapped matvec: permute activations in,
+/// multiply by the physically laid-out planes, un-permute outputs.
+#[test]
+fn matvec_preserved_for_every_strategy() {
+    let mut rng = Xoshiro256::seeded(22);
+    for seed in 0..4u64 {
+        let sliced = bell_tile(24, 3, 100 + seed);
+        let xdata: Vec<f32> =
+            (0..2 * sliced.rows()).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let x = Tensor::new(&[2, sliced.rows()], xdata).unwrap();
+        let y_ref = x.matmul(&sliced.planes).unwrap();
+        for (name, strategy) in all_strategies() {
+            let plan = plan_tile(strategy.as_ref(), &sliced);
+            let y = plan
+                .unapply_to_outputs(
+                    &plan
+                        .apply_to_activations(&x)
+                        .unwrap()
+                        .matmul(&plan.apply(&sliced.planes).unwrap())
+                        .unwrap(),
+                )
+                .unwrap();
+            let err = y_ref
+                .data()
+                .iter()
+                .zip(y.data())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-4, "{name} changed the product by {err}");
+        }
+    }
+}
+
+/// (c) Degenerate tiles must not panic under any registered strategy, and
+/// their plans must still be valid permutations.
+#[test]
+fn degenerate_tiles_do_not_panic() {
+    let single_row = random_planes(1, 8, 0.5, &mut Xoshiro256::seeded(1));
+    let single_col = random_planes(8, 1, 0.5, &mut Xoshiro256::seeded(2));
+    let unit = random_planes(1, 1, 1.0, &mut Xoshiro256::seeded(3));
+    let all_zero = Tensor::zeros(&[6, 6]);
+    for planes in [&single_row, &single_col, &unit, &all_zero] {
+        let tile = SlicedTile::from_planes(planes.clone()).unwrap();
+        for (name, strategy) in all_strategies() {
+            let plan = plan_tile(strategy.as_ref(), &tile);
+            assert_eq!(plan.rows(), planes.rows(), "{name}");
+            assert_eq!(plan.cols(), planes.cols(), "{name}");
+            // apply must succeed and round-trip.
+            let phys = plan.apply(planes).unwrap();
+            assert_eq!(plan.unapply(&phys).unwrap(), *planes, "{name}");
+        }
+    }
+    // An all-zero *weight* tile (real quantizer path) must also plan fine.
+    let zero_w = Tensor::zeros(&[8, 2]);
+    let sliced = BitSlicedMatrix::slice(&zero_w, 8).unwrap();
+    for (name, strategy) in all_strategies() {
+        let plan = plan_tile(strategy.as_ref(), &sliced);
+        assert_eq!(plan.rows(), 8, "{name}");
+    }
+}
+
+/// The plan's logical distance matrix is consistent with its permutations
+/// for every strategy (the tensor the L1 kernel consumes).
+#[test]
+fn logical_distances_consistent_for_every_strategy() {
+    let sliced = bell_tile(16, 2, 7);
+    for (name, strategy) in all_strategies() {
+        let plan = plan_tile(strategy.as_ref(), &sliced);
+        let d = plan.logical_distance_matrix();
+        for l_row in 0..plan.rows() {
+            for l_col in 0..plan.cols() {
+                assert_eq!(
+                    d.at2(l_row, l_col) as usize,
+                    plan.logical_cell_distance(l_row, l_col),
+                    "{name} at ({l_row},{l_col})"
+                );
+            }
+        }
+    }
+}
