@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
                 eta_signed: -2e-3,
                 geometry: TileGeometry::new(tile, tile, 8)?,
                 fwd_batch: 16,
+                solver_parallel: mdm_cim::parallel::ParallelConfig::default(),
             };
             let server = Server::start(
                 &artifacts,

@@ -99,6 +99,7 @@ fn main() -> anyhow::Result<()> {
                 eta_signed,
                 geometry,
                 fwd_batch: 16,
+                solver_parallel: mdm_cim::parallel::ParallelConfig::default(),
             },
         )?;
         let acc = engine.accuracy(&test)?;

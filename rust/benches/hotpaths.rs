@@ -70,10 +70,10 @@ fn main() -> anyhow::Result<()> {
     record("bitslice_512x64_k8", s);
     let sliced = BitSlicedMatrix::slice(&w, 8)?;
     let mdm = strategy_by_name("mdm")?;
-    let s = bench("mdm_map_tile_512x512", 1, 10, || {
+    let s = bench("mdm_plan_tile_512x512", 1, 10, || {
         plan_tile(mdm.as_ref(), &sliced);
     });
-    record("mdm_map_tile_512x512", s);
+    record("mdm_plan_tile_512x512", s);
     let plan = plan_tile(mdm.as_ref(), &sliced);
     let s = bench("plan_apply_512x512", 1, 10, || {
         plan.apply(&sliced.planes).unwrap();
@@ -117,6 +117,7 @@ fn main() -> anyhow::Result<()> {
                 eta_signed: -2e-3,
                 geometry: TileGeometry::paper_eval(),
                 fwd_batch: 16,
+                solver_parallel: mdm_cim::parallel::ParallelConfig::default(),
             },
         )?;
         let test = ArtifactStore::open("artifacts")?.data("test")?;
@@ -134,6 +135,7 @@ fn main() -> anyhow::Result<()> {
                     eta_signed: -2e-3,
                     geometry: TileGeometry::paper_eval(),
                     fwd_batch: 16,
+                    solver_parallel: mdm_cim::parallel::ParallelConfig::default(),
                 },
             )
             .unwrap();

@@ -93,6 +93,7 @@ fn main() -> anyhow::Result<()> {
                     &[ModelKind::MiniResNet, ModelKind::TinyViT],
                     -2e-3,
                     TileGeometry::paper_eval(),
+                    mdm_cim::parallel::ParallelConfig::default(),
                     out,
                 )
                 .unwrap(),

@@ -497,22 +497,49 @@ impl SingleToggleSolver {
 
 /// NF of every single-cell position: `out[j][k]` = aggregate NF of the
 /// crossbar with only cell `(j,k)` active (others in `base` state, normally
-/// all off). This is the Fig. 2 experiment.
+/// all off). This is the Fig. 2 experiment, run at the process-default
+/// worker count (the [`crate::parallel::ParallelConfig`] default).
 pub fn single_cell_nf_map(
     j_rows: usize,
     k_cols: usize,
     physics: CrossbarPhysics,
 ) -> Result<Tensor> {
+    single_cell_nf_map_with(j_rows, k_cols, physics, &crate::parallel::ParallelConfig::default())
+}
+
+/// [`single_cell_nf_map`] at an explicit worker count. The base crossbar is
+/// factorized once; the per-position Sherman–Morrison toggles are
+/// independent, so they fan out over the pool with each cell's NF written
+/// back at its own index — bitwise identical to the serial sweep.
+pub fn single_cell_nf_map_with(
+    j_rows: usize,
+    k_cols: usize,
+    physics: CrossbarPhysics,
+    parallel: &crate::parallel::ParallelConfig,
+) -> Result<Tensor> {
     let base = CrossbarCircuit::new(j_rows, k_cols, physics)?;
     let solver = base.factorize()?;
-    let mut out = vec![0.0f32; j_rows * k_cols];
-    for j in 0..j_rows {
-        for k in 0..k_cols {
-            let sol = solver.solve_with_toggle(j, k, true)?;
-            out[j * k_cols + k] = sol.nf() as f32;
-        }
-    }
+    let out: Vec<f32> =
+        crate::parallel::try_map_indexed(parallel, j_rows * k_cols, |cell| {
+            let (j, k) = (cell / k_cols, cell % k_cols);
+            Ok(solver.solve_with_toggle(j, k, true)?.nf() as f32)
+        })?;
     Tensor::new(&[j_rows, k_cols], out)
+}
+
+/// Measured (full-Kirchhoff) aggregate NF of many independent tiles, one
+/// banded-Cholesky solve per tile, fanned out over the worker pool. The
+/// result at index `i` is the NF of `planes[i]`; the output order (and the
+/// bits) match a serial loop — this is the hot path of Fig. 4, the ratio
+/// ablation, and the `mdm bench` parallel-vs-serial harness.
+pub fn measure_tile_nfs(
+    planes: &[Tensor],
+    physics: CrossbarPhysics,
+    parallel: &crate::parallel::ParallelConfig,
+) -> Result<Vec<f64>> {
+    crate::parallel::try_map(parallel, planes, |p| {
+        CrossbarCircuit::from_planes(p, physics)?.solve().map(|s| s.nf())
+    })
 }
 
 #[cfg(test)]
@@ -633,6 +660,33 @@ mod tests {
             }
         }
         assert!(dense.solve().unwrap().nf() > sparse.solve().unwrap().nf());
+    }
+
+    #[test]
+    fn parallel_nf_map_is_bitwise_serial() {
+        let p = phys_open();
+        let serial =
+            single_cell_nf_map_with(6, 5, p, &crate::parallel::ParallelConfig::serial()).unwrap();
+        let par =
+            single_cell_nf_map_with(6, 5, p, &crate::parallel::ParallelConfig::with_threads(4))
+                .unwrap();
+        for (a, b) in serial.data().iter().zip(par.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn measure_tile_nfs_matches_direct_solves() {
+        let p = phys();
+        let mut rng = crate::rng::Xoshiro256::seeded(11);
+        let tiles: Vec<Tensor> =
+            (0..6).map(|_| crate::eval::random_planes(8, 8, 0.3, &mut rng)).collect();
+        let par =
+            measure_tile_nfs(&tiles, p, &crate::parallel::ParallelConfig::with_threads(3)).unwrap();
+        for (t, &nf) in tiles.iter().zip(&par) {
+            let direct = CrossbarCircuit::from_planes(t, p).unwrap().solve().unwrap().nf();
+            assert_eq!(nf.to_bits(), direct.to_bits());
+        }
     }
 
     #[test]

@@ -176,6 +176,10 @@ pub struct ExperimentConfig {
     pub results_dir: String,
     /// Artifacts directory (HLO + weights).
     pub artifacts_dir: String,
+    /// Solver worker threads (`[runtime] threads` / `--threads`); 0 = auto
+    /// (available parallelism). Installed process-wide by the CLI via
+    /// [`crate::parallel::install_global`].
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -188,6 +192,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             results_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
+            threads: 0,
         }
     }
 }
@@ -205,6 +210,9 @@ impl ExperimentConfig {
             seed: c.int_or("experiment", "seed", d.seed as i64) as u64,
             results_dir: c.str_or("experiment", "results_dir", &d.results_dir),
             artifacts_dir: c.str_or("experiment", "artifacts_dir", &d.artifacts_dir),
+            // Negative values are nonsense; treat them as 0 = auto rather
+            // than letting `as usize` wrap into a huge thread count.
+            threads: c.int_or("runtime", "threads", d.threads as i64).max(0) as usize,
         }
     }
 }
@@ -305,5 +313,14 @@ label = "a # not a comment"
         assert_eq!(ServerConfig::from_config(&c).workers, 8);
         // Unspecified keys fall back.
         assert_eq!(ServerConfig::from_config(&c).max_batch, 16);
+    }
+
+    #[test]
+    fn runtime_threads_key_parsed_with_auto_default() {
+        let c = Config::parse("[runtime]\nthreads = 6").unwrap();
+        assert_eq!(ExperimentConfig::from_config(&c).threads, 6);
+        // Absent key = 0 = auto-detect at the point of use.
+        let c = Config::parse("[experiment]\ntile_size = 16").unwrap();
+        assert_eq!(ExperimentConfig::from_config(&c).threads, 0);
     }
 }

@@ -13,6 +13,7 @@ use std::time::{Duration, Instant};
 /// A batch of requests plus their row extents.
 #[derive(Debug)]
 pub struct Batch {
+    /// The coalesced requests, in arrival order.
     pub requests: Vec<InferenceRequest>,
     /// Total rows across the requests.
     pub rows: usize,
@@ -111,6 +112,76 @@ mod tests {
         let (tx, rx) = mpsc::channel::<InferenceRequest>();
         drop(tx);
         assert!(next_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn closed_channel_drains_queued_requests_before_none() {
+        // Requests already in the queue when the sender disconnects must
+        // still be served: batches keep coming until the queue is empty,
+        // and only then does next_batch report shutdown with None.
+        let (tx, rx) = mpsc::channel();
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, h) = req(i, 1);
+            tx.send(r).unwrap();
+            keep.push(h);
+        }
+        drop(tx);
+        let b1 = next_batch(&rx, 2, Duration::from_millis(50)).unwrap();
+        assert_eq!(b1.rows, 2);
+        let b2 = next_batch(&rx, 2, Duration::from_millis(50)).unwrap();
+        assert_eq!(b2.rows, 2);
+        let b3 = next_batch(&rx, 2, Duration::from_millis(50)).unwrap();
+        assert_eq!(b3.rows, 1);
+        assert!(next_batch(&rx, 2, Duration::from_millis(50)).is_none());
+    }
+
+    #[test]
+    fn single_oversized_request_ships_alone_without_waiting() {
+        // A request bigger than max_rows must form its own batch
+        // immediately — the while condition is already false, so no window
+        // wait and no packing of later requests.
+        let (tx, rx) = mpsc::channel();
+        let (big, _h1) = req(1, 10);
+        let (next, _h2) = req(2, 1);
+        tx.send(big).unwrap();
+        tx.send(next).unwrap();
+        let t0 = Instant::now();
+        let b = next_batch(&rx, 4, Duration::from_millis(500)).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        assert_eq!(b.rows, 10);
+        assert!(
+            t0.elapsed() < Duration::from_millis(400),
+            "oversized request waited out the window: {:?}",
+            t0.elapsed()
+        );
+        // The trailing request is untouched, queued for the next batch.
+        let b2 = next_batch(&rx, 4, Duration::from_millis(1)).unwrap();
+        assert_eq!(b2.rows, 1);
+    }
+
+    #[test]
+    fn window_expiry_ships_partial_batch_excluding_late_request() {
+        // A partial batch (rows < max_rows) must ship when the window
+        // closes; a request arriving after expiry belongs to the next batch.
+        let (tx, rx) = mpsc::channel();
+        let (first, _h1) = req(1, 1);
+        tx.send(first).unwrap();
+        // Generous margin between window (30ms) and the late send (300ms)
+        // so a scheduler stall on a loaded CI runner cannot push the late
+        // request inside the first window.
+        let late = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            let (r, h) = req(2, 1);
+            tx.send(r).unwrap();
+            h
+        });
+        let b = next_batch(&rx, 100, Duration::from_millis(30)).unwrap();
+        assert_eq!(b.requests.len(), 1, "late request leaked into an expired window");
+        assert_eq!(b.rows, 1);
+        let _h2 = late.join().unwrap();
+        let b2 = next_batch(&rx, 100, Duration::from_millis(30)).unwrap();
+        assert_eq!(b2.requests[0].id, 2);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 use crate::crossbar::{TileCost, TileGeometry};
 use crate::mdm::{strategy_by_name, MappingStrategy};
+use crate::parallel::ParallelConfig;
 use crate::pipeline::Pipeline;
 use crate::runtime::{ArtifactStore, CompiledModule};
 use crate::tensor::Tensor;
@@ -60,15 +61,24 @@ impl ModelKind {
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
+    /// Which trained model to program and serve.
     pub model: ModelKind,
     /// Mapping strategy programming every layer's tiles (select by name via
     /// [`strategy_by_name`]).
     pub strategy: Arc<dyn MappingStrategy>,
     /// Signed Eq.-17 coefficient; 0.0 = ideal (no distortion).
     pub eta_signed: f64,
+    /// Tile geometry the crossbars are programmed at.
     pub geometry: TileGeometry,
     /// AOT forward batch (the graph's fixed leading dimension).
     pub fwd_batch: usize,
+    /// Worker pool for the per-tile programming work at `Engine::program`
+    /// time — pinned **separately** from the server's request workers
+    /// ([`crate::config::ServerConfig::workers`]), so a deployment can give
+    /// crossbar programming the whole machine while request fan-out stays
+    /// narrow (CLI: `mdm serve --solver-threads N`). Programming results are
+    /// bitwise independent of this setting.
+    pub solver_parallel: ParallelConfig,
 }
 
 impl EngineConfig {
@@ -80,6 +90,7 @@ impl EngineConfig {
             eta_signed: 0.0,
             geometry: TileGeometry::paper_eval(),
             fwd_batch: 16,
+            solver_parallel: ParallelConfig::default(),
         }
     }
 
@@ -91,6 +102,7 @@ impl EngineConfig {
             eta_signed,
             geometry: TileGeometry::paper_eval(),
             fwd_batch: 16,
+            solver_parallel: ParallelConfig::default(),
         })
     }
 }
@@ -119,7 +131,8 @@ impl Engine {
 
         let pipeline = Pipeline::new(config.geometry)
             .strategy_impl(config.strategy.clone())
-            .eta_signed(config.eta_signed);
+            .eta_signed(config.eta_signed)
+            .parallel(config.solver_parallel);
         let mut programmed = Vec::with_capacity(desc.layers.len());
         let mut cost = TileCost::default();
         for (i, l) in desc.layers.iter().enumerate() {

@@ -90,15 +90,25 @@ impl Metrics {
 /// Point-in-time copy of the metrics.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Requests accepted into the ingress queue.
     pub requests: u64,
+    /// Requests rejected by backpressure (queue full).
     pub rejected: u64,
+    /// Requests answered.
     pub completed: u64,
+    /// Batches formed by the batcher.
     pub batches: u64,
+    /// Input rows served.
     pub rows: u64,
+    /// Analog-to-digital conversions performed.
     pub adc_conversions: u64,
+    /// Digital synchronization events performed.
     pub sync_events: u64,
+    /// Median end-to-end latency, microseconds.
     pub latency_p50_us: u64,
+    /// 99th-percentile end-to-end latency, microseconds.
     pub latency_p99_us: u64,
+    /// Mean end-to-end latency, microseconds.
     pub latency_mean_us: f64,
 }
 

@@ -33,6 +33,7 @@ use std::time::Instant;
 /// One inference request: a batch of flattened images.
 #[derive(Debug)]
 pub struct InferenceRequest {
+    /// Server-assigned request id.
     pub id: u64,
     /// `[n, 256]` inputs.
     pub x: Tensor,
@@ -45,6 +46,7 @@ pub struct InferenceRequest {
 /// The response to one request.
 #[derive(Debug)]
 pub struct InferenceResponse {
+    /// Id of the request this answers.
     pub id: u64,
     /// `[n, 10]` logits.
     pub logits: Tensor,

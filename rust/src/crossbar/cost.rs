@@ -31,6 +31,7 @@ impl Default for AdcModel {
 /// Full cost model for tiled execution.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CostModel {
+    /// ADC conversion cost parameters.
     pub adc: AdcModel,
     /// Analog MVM settle time per tile activation, nanoseconds.
     pub tile_settle_ns: f64,

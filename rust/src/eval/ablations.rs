@@ -14,13 +14,14 @@
 //! where a specific dataflow is pinned).
 
 use super::random_planes;
-use crate::circuit::CrossbarCircuit;
+use crate::circuit::measure_tile_nfs;
 use crate::crossbar::{CostModel, LayerTiling, TileGeometry};
 use crate::mdm::{
     plan_tile, strategy_by_name, Dataflow, Identity, MagnitudeDesc, ManhattanAsc, MapContext,
     MappingStrategy, Mdm, Random, SlicedTile, XChangrRotate,
 };
-use crate::nf::{fit_hypothesis, manhattan_nf_mean};
+use crate::nf::{fit_hypothesis, manhattan_nf_mean, manhattan_nf_mean_batch};
+use crate::parallel::{self, ParallelConfig};
 use crate::quant::SignSplit;
 use crate::report;
 use crate::rng::Xoshiro256;
@@ -32,14 +33,21 @@ use std::sync::Arc;
 /// A1 row: one tile size.
 #[derive(Debug, Clone)]
 pub struct TileSizeRow {
+    /// Tile side length.
     pub tile: usize,
+    /// Mean tile NF without reordering.
     pub nf_conventional: f64,
+    /// Mean tile NF under full MDM.
     pub nf_mdm: f64,
+    /// ADC conversions per activation vector at this size.
     pub adc_conversions: u64,
+    /// Digital synchronization events per activation vector.
     pub sync_events: u64,
 }
 
-/// A1: NF and system cost vs tile size for a fixed synthetic layer.
+/// A1: NF and system cost vs tile size for a fixed synthetic layer. The
+/// sweep points are independent (the layer is fixed up front), so they fan
+/// out over the process-default worker pool.
 pub fn tile_size_sweep(
     sizes: &[usize],
     k_bits: usize,
@@ -52,8 +60,7 @@ pub fn tile_size_sweep(
     let split = SignSplit::of(&w);
     let cost_model = CostModel::default();
     let strategies = [strategy_by_name("conventional")?, strategy_by_name("mdm")?];
-    let mut rows = Vec::new();
-    for &tile in sizes {
+    let rows = parallel::try_map(&ParallelConfig::default(), sizes, |&tile| {
         let geom = TileGeometry::new(tile, tile, k_bits)?;
         let mut nf = [0.0f64; 2];
         let mut adc = 0u64;
@@ -72,14 +79,14 @@ pub fn tile_size_sweep(
                 nf[i] += acc / tiling.n_tiles() as f64 / 2.0;
             }
         }
-        rows.push(TileSizeRow {
+        Ok(TileSizeRow {
             tile,
             nf_conventional: nf[0],
             nf_mdm: nf[1],
             adc_conversions: adc,
             sync_events: sync,
-        });
-    }
+        })
+    })?;
     let csv: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {
@@ -103,13 +110,19 @@ pub fn tile_size_sweep(
 /// A2 row: one sparsity level.
 #[derive(Debug, Clone)]
 pub struct SparsitySweepRow {
+    /// Cell sparsity of the level.
     pub sparsity: f64,
+    /// Mean NF without reordering.
     pub nf_conventional: f64,
+    /// Mean NF under full MDM.
     pub nf_mdm: f64,
+    /// MDM's NF reduction at this level, percent.
     pub reduction_pct: f64,
 }
 
-/// A2: MDM reduction vs cell sparsity on random tiles.
+/// A2: MDM reduction vs cell sparsity on random tiles. The tile population
+/// is drawn serially (one rng stream spans all levels, as before), then the
+/// per-tile plan + NF scoring fans out over the process-default pool.
 pub fn sparsity_sweep(
     levels: &[f64],
     tile: usize,
@@ -120,17 +133,31 @@ pub fn sparsity_sweep(
     let conv = strategy_by_name("conventional")?;
     let mdm = strategy_by_name("mdm")?;
     let mut rng = Xoshiro256::seeded(seed);
+    let population: Vec<crate::tensor::Tensor> = levels
+        .iter()
+        .flat_map(|&sp| {
+            (0..n_tiles)
+                .map(|_| random_planes(tile, tile, 1.0 - sp, &mut rng))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let pool = ParallelConfig::default();
+    let per_tile = parallel::try_map(&pool, &population, |planes| {
+        let t = SlicedTile::from_planes(planes.clone())?;
+        let cp = plan_tile(conv.as_ref(), &t);
+        let mp = plan_tile(mdm.as_ref(), &t);
+        Ok((
+            manhattan_nf_mean(&cp.apply(planes)?, 1.0),
+            manhattan_nf_mean(&mp.apply(planes)?, 1.0),
+        ))
+    })?;
     let mut rows = Vec::new();
-    for &sp in levels {
+    for (li, &sp) in levels.iter().enumerate() {
         let mut nf_conv = 0.0;
         let mut nf_mdm = 0.0;
-        for _ in 0..n_tiles {
-            let planes = random_planes(tile, tile, 1.0 - sp, &mut rng);
-            let t = SlicedTile::from_planes(planes.clone())?;
-            let cp = plan_tile(conv.as_ref(), &t);
-            let mp = plan_tile(mdm.as_ref(), &t);
-            nf_conv += manhattan_nf_mean(&cp.apply(&planes)?, 1.0);
-            nf_mdm += manhattan_nf_mean(&mp.apply(&planes)?, 1.0);
+        for (c, m) in &per_tile[li * n_tiles..(li + 1) * n_tiles] {
+            nf_conv += c;
+            nf_mdm += m;
         }
         nf_conv /= n_tiles as f64;
         nf_mdm /= n_tiles as f64;
@@ -163,7 +190,9 @@ pub fn sparsity_sweep(
 /// A3 row: one parasitic ratio.
 #[derive(Debug, Clone)]
 pub struct RatioRow {
+    /// Wire resistance of the sweep point, ohms.
     pub r_wire: f64,
+    /// Parasitic ratio `r / R_on`.
     pub ratio: f64,
     /// r² of the hypothesis fit at this ratio.
     pub r2: f64,
@@ -171,7 +200,10 @@ pub struct RatioRow {
     pub sigma_pct: f64,
 }
 
-/// A3: hypothesis fit quality vs `r/R_on` (fixed R_on, sweeping r).
+/// A3: hypothesis fit quality vs `r/R_on` (fixed R_on, sweeping r). Every
+/// ratio re-seeds its own rng, so the tile population per ratio is drawn
+/// serially and the circuit-level measurements fan out over the
+/// process-default pool.
 pub fn ratio_sweep(
     r_values: &[f64],
     tile: usize,
@@ -179,17 +211,15 @@ pub fn ratio_sweep(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<RatioRow>> {
+    let pool = ParallelConfig::default();
     let mut rows = Vec::new();
     for &r_wire in r_values {
         let physics = CrossbarPhysics { r_wire, ..CrossbarPhysics::default() };
         let mut rng = Xoshiro256::seeded(seed);
-        let mut calc = Vec::new();
-        let mut meas = Vec::new();
-        for _ in 0..n_tiles {
-            let planes = random_planes(tile, tile, 0.2, &mut rng);
-            calc.push(manhattan_nf_mean(&planes, physics.parasitic_ratio()));
-            meas.push(CrossbarCircuit::from_planes(&planes, physics)?.solve()?.nf());
-        }
+        let planes: Vec<crate::tensor::Tensor> =
+            (0..n_tiles).map(|_| random_planes(tile, tile, 0.2, &mut rng)).collect();
+        let calc = manhattan_nf_mean_batch(&planes, physics.parasitic_ratio(), &pool);
+        let meas = measure_tile_nfs(&planes, physics, &pool)?;
         let fit = fit_hypothesis(&calc, &meas);
         rows.push(RatioRow {
             r_wire,
@@ -220,7 +250,9 @@ pub fn ratio_sweep(
 /// Row-order policy comparison on random bell-shaped tiles.
 #[derive(Debug, Clone)]
 pub struct RowOrderRow {
+    /// Strategy registry name of the policy.
     pub policy: String,
+    /// Mean tile NF under the policy.
     pub nf_mean: f64,
 }
 
@@ -276,7 +308,9 @@ pub fn roworder_compare(
 }
 
 /// A7 (extension): Manhattan-Hypothesis and MDM-ranking robustness under
-/// log-normal device variation (PVT Monte-Carlo, `variation::`).
+/// log-normal device variation (PVT Monte-Carlo, `variation::`). Each σ
+/// re-seeds its own Monte-Carlo, so the sweep points fan out over the
+/// process-default pool.
 pub fn variation_sweep(
     sigmas: &[f64],
     tile: usize,
@@ -284,19 +318,12 @@ pub fn variation_sweep(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<(f64, crate::variation::VariationReport)>> {
-    let mut out = Vec::new();
-    for &sigma in sigmas {
+    let reports = parallel::try_map(&ParallelConfig::default(), sigmas, |&sigma| {
         let model = crate::variation::VariationModel { sigma_on: sigma, sigma_off: 2.0 * sigma };
-        let rep = crate::variation::monte_carlo(
-            n_tiles,
-            tile,
-            0.2,
-            CrossbarPhysics::default(),
-            model,
-            seed,
-        )?;
-        out.push((sigma, rep));
-    }
+        crate::variation::monte_carlo(n_tiles, tile, 0.2, CrossbarPhysics::default(), model, seed)
+    })?;
+    let out: Vec<(f64, crate::variation::VariationReport)> =
+        sigmas.iter().copied().zip(reports).collect();
     let csv: Vec<Vec<String>> = out
         .iter()
         .map(|(s, r)| {
@@ -445,7 +472,9 @@ pub fn adc_sweep(
 /// A6 (extension): per-tile MDM vs **global cross-tile MDM** on a layer.
 #[derive(Debug, Clone)]
 pub struct GlobalSortRow {
+    /// Placement scheme label (`identity` / `per_tile_mdm` / `global_mdm`).
     pub scheme: String,
+    /// Mean chunk NF under the scheme.
     pub nf_mean: f64,
 }
 

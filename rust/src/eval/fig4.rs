@@ -7,11 +7,13 @@
 //! distribution of the fit (paper: μ = −0.126%, σ = 11.2%).
 
 use super::random_planes;
-use crate::circuit::CrossbarCircuit;
-use crate::nf::{fit_hypothesis, manhattan_nf_sum, HypothesisFit};
+use crate::circuit::measure_tile_nfs;
+use crate::nf::{fit_hypothesis, manhattan_nf_sum_batch, HypothesisFit};
+use crate::parallel::ParallelConfig;
 use crate::report;
 use crate::rng::Xoshiro256;
 use crate::stats::Histogram;
+use crate::tensor::Tensor;
 use crate::CrossbarPhysics;
 use anyhow::Result;
 use std::path::Path;
@@ -19,12 +21,19 @@ use std::path::Path;
 /// Fig. 4 configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct Fig4Config {
+    /// Number of random tiles to fit over (paper: 500).
     pub n_tiles: usize,
+    /// Tile side length (square tiles; paper: 64).
     pub tile: usize,
     /// Cell sparsity (paper: 0.8).
     pub sparsity: f64,
+    /// Crossbar physics for the circuit-level measurement.
     pub physics: CrossbarPhysics,
+    /// Seed for the random tile population.
     pub seed: u64,
+    /// Worker pool for the per-tile circuit solves (the experiment's hot
+    /// path — one banded-Cholesky factorization per tile).
+    pub parallel: ParallelConfig,
 }
 
 impl Default for Fig4Config {
@@ -35,6 +44,7 @@ impl Default for Fig4Config {
             sparsity: 0.8,
             physics: CrossbarPhysics::default(),
             seed: 42,
+            parallel: ParallelConfig::default(),
         }
     }
 }
@@ -42,32 +52,38 @@ impl Default for Fig4Config {
 /// Fig. 4 results: the hypothesis fit plus the raw series.
 #[derive(Debug, Clone)]
 pub struct Fig4Result {
+    /// Least-squares calibration of calculated vs measured NF.
     pub fit: HypothesisFit,
+    /// Eq.-16 (sum form) NF per tile.
     pub calculated: Vec<f64>,
+    /// Circuit-measured NF per tile.
     pub measured: Vec<f64>,
     /// Error histogram over ±3σ (the figure's x-axis).
     pub histogram: Histogram,
 }
 
-/// Run the experiment.
+/// Run the experiment. The tile population is drawn serially (the rng
+/// stream is the reproducibility contract), then the expensive per-tile
+/// Kirchhoff solves fan out over `cfg.parallel` — results are bitwise
+/// identical at any thread count.
 pub fn run(cfg: Fig4Config, results_dir: &Path) -> Result<Fig4Result> {
     let mut rng = Xoshiro256::seeded(cfg.seed);
     let ratio = cfg.physics.parasitic_ratio();
-    let mut calculated = Vec::with_capacity(cfg.n_tiles);
-    let mut measured = Vec::with_capacity(cfg.n_tiles);
-    for _ in 0..cfg.n_tiles {
-        // "approximately 80% sparsity" (§V-A): per-tile sparsity is drawn
-        // from a ±5-point band around the target, which is also what makes
-        // the fit informative (at *exactly* fixed sparsity both series
-        // concentrate and the correlation degenerates — see rust/DESIGN.md).
-        let sp = (cfg.sparsity + rng.uniform_range(-0.05, 0.05)).clamp(0.01, 0.99);
-        let planes = random_planes(cfg.tile, cfg.tile, 1.0 - sp, &mut rng);
-        // Calculated: Eq. 16 exactly as written (sum form).
-        calculated.push(manhattan_nf_sum(&planes, ratio));
-        // Measured: full Kirchhoff solve of the tile.
-        let circuit = CrossbarCircuit::from_planes(&planes, cfg.physics)?;
-        measured.push(circuit.solve()?.nf());
-    }
+    let tiles: Vec<Tensor> = (0..cfg.n_tiles)
+        .map(|_| {
+            // "approximately 80% sparsity" (§V-A): per-tile sparsity is
+            // drawn from a ±5-point band around the target, which is also
+            // what makes the fit informative (at *exactly* fixed sparsity
+            // both series concentrate and the correlation degenerates — see
+            // rust/DESIGN.md).
+            let sp = (cfg.sparsity + rng.uniform_range(-0.05, 0.05)).clamp(0.01, 0.99);
+            random_planes(cfg.tile, cfg.tile, 1.0 - sp, &mut rng)
+        })
+        .collect();
+    // Calculated: Eq. 16 exactly as written (sum form).
+    let calculated = manhattan_nf_sum_batch(&tiles, ratio, &cfg.parallel);
+    // Measured: full Kirchhoff solve of each tile.
+    let measured = measure_tile_nfs(&tiles, cfg.physics, &cfg.parallel)?;
     let fit = fit_hypothesis(&calculated, &measured);
     let spread = 3.0 * fit.error_summary.std;
     let histogram = Histogram::build(
@@ -112,6 +128,27 @@ mod tests {
         assert!(r.fit.error_summary.mean.abs() < 3.0, "mean {}", r.fit.error_summary.mean);
         assert_eq!(r.calculated.len(), 40);
         assert!(dir.join("fig4_nf_calc_vs_measured.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fig4_parallel_matches_serial_bitwise() {
+        let dir = std::env::temp_dir().join(format!("fig4_par_{}", std::process::id()));
+        let base = Fig4Config {
+            n_tiles: 12,
+            tile: 16,
+            parallel: ParallelConfig::serial(),
+            ..Default::default()
+        };
+        let serial = run(base, &dir).unwrap();
+        let par =
+            run(Fig4Config { parallel: ParallelConfig::with_threads(4), ..base }, &dir).unwrap();
+        for (a, b) in serial.measured.iter().zip(&par.measured) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in serial.calculated.iter().zip(&par.calculated) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

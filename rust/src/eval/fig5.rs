@@ -12,6 +12,7 @@
 
 use crate::crossbar::TileGeometry;
 use crate::models::{model_by_name, ModelWeights};
+use crate::parallel::{self, ParallelConfig};
 use crate::pipeline::Pipeline;
 use crate::report;
 use crate::rng::Xoshiro256;
@@ -22,11 +23,15 @@ use std::path::Path;
 /// Per-model Fig. 5 row.
 #[derive(Debug, Clone)]
 pub struct Fig5Row {
+    /// Zoo model name.
     pub model: String,
-    /// Mean tile NF per configuration.
+    /// Mean tile NF of the conventional dataflow with identity row order.
     pub nf_conv_identity: f64,
+    /// Mean tile NF of the MDM row sort at the conventional dataflow.
     pub nf_conv_mdm: f64,
+    /// Mean tile NF of the reversed dataflow with identity row order.
     pub nf_rev_identity: f64,
+    /// Mean tile NF of full MDM (reversed dataflow + row sort).
     pub nf_rev_mdm: f64,
 }
 
@@ -51,15 +56,21 @@ impl Fig5Row {
 /// Fig. 5 configuration.
 #[derive(Debug, Clone)]
 pub struct Fig5Config {
+    /// Zoo model names to evaluate.
     pub models: Vec<String>,
+    /// Tile geometry of the sweep.
     pub geometry: TileGeometry,
     /// Max tiles sampled per layer shape (NF statistics converge fast;
     /// large layers have hundreds of thousands of tiles).
     pub tiles_per_layer: usize,
+    /// Seed for the tile sampling.
     pub seed: u64,
     /// Load trained weights for miniresnet/tinyvit from this artifacts dir
     /// when available.
     pub artifacts_dir: Option<String>,
+    /// Worker pool, split across the four {dataflow} × {row order} sweep
+    /// points (each point's tile sampling runs on its share of the pool).
+    pub parallel: ParallelConfig,
 }
 
 impl Default for Fig5Config {
@@ -70,6 +81,7 @@ impl Default for Fig5Config {
             tiles_per_layer: 32,
             seed: 42,
             artifacts_dir: None,
+            parallel: ParallelConfig::default(),
         }
     }
 }
@@ -119,13 +131,16 @@ pub fn run(cfg: &Fig5Config, results_dir: &Path) -> Result<Vec<Fig5Row>> {
         } else {
             ModelWeights::synthesize(&desc, cfg.seed)?
         };
-        let mut nf = [0.0f64; 4];
-        for (i, strategy) in GRID.iter().enumerate() {
-            let pipeline = Pipeline::new(cfg.geometry).strategy(strategy)?;
-            // Fresh rng per config so all configs see the same tile sample.
+        // The four sweep points are independent (each draws its own rng so
+        // all configs see the same tile sample); fan them out and hand each
+        // point an equal share of the worker pool for its tile sampling
+        // (floor division so the total stays within the requested budget).
+        let share = ParallelConfig::with_threads(cfg.parallel.threads / GRID.len());
+        let nf = parallel::try_map(&cfg.parallel, &GRID, |strategy| {
+            let pipeline = Pipeline::new(cfg.geometry).strategy(strategy)?.parallel(share);
             let mut rng = Xoshiro256::seeded(cfg.seed ^ 0xF165);
-            nf[i] = model_nf(&weights, &pipeline, cfg.tiles_per_layer, &mut rng)?;
-        }
+            model_nf(&weights, &pipeline, cfg.tiles_per_layer, &mut rng)
+        })?;
         rows.push(Fig5Row {
             model: name.clone(),
             nf_conv_identity: nf[0],

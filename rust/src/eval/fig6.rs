@@ -13,6 +13,7 @@
 use crate::coordinator::{Engine, EngineConfig, ModelKind};
 use crate::crossbar::TileGeometry;
 use crate::mdm::strategy_by_name;
+use crate::parallel::{self, ParallelConfig};
 use crate::report;
 use anyhow::Result;
 use std::path::Path;
@@ -20,8 +21,11 @@ use std::path::Path;
 /// One accuracy measurement.
 #[derive(Debug, Clone)]
 pub struct Fig6Row {
+    /// Trained model name.
     pub model: String,
+    /// Configuration label (see [`configurations`]).
     pub config: String,
+    /// Top-1 accuracy on the eval split.
     pub accuracy: f64,
 }
 
@@ -46,12 +50,17 @@ pub fn configurations() -> Vec<(&'static str, &'static str, bool)> {
 /// accuracy, enough to resolve the MDM deltas.
 pub const EVAL_N: usize = 2048;
 
-/// Run Fig. 6 for the given models.
+/// Run Fig. 6 for the given models. The per-configuration engines are
+/// independent (each programs its own crossbars and owns its own PJRT
+/// runtime), so the sweep points of each model fan out over the worker pool
+/// — each engine programs its tiles serially to keep the machine shared
+/// across the concurrent sweep points.
 pub fn run(
     artifacts_dir: &str,
     models: &[ModelKind],
     eta_signed: f64,
     geometry: TileGeometry,
+    sweep_parallel: ParallelConfig,
     results_dir: &Path,
 ) -> Result<Vec<Fig6Row>> {
     // Larger in-distribution eval split (same prototypes as the artifact
@@ -60,16 +69,19 @@ pub fn run(
 
     let mut rows = Vec::new();
     for &model in models {
-        for (label, strategy, noisy) in configurations() {
+        let configs = configurations();
+        let accuracies = parallel::try_map(&sweep_parallel, &configs, |(_, strategy, noisy)| {
             let cfg = EngineConfig {
                 model,
                 strategy: strategy_by_name(strategy)?,
-                eta_signed: if noisy { eta_signed } else { 0.0 },
+                eta_signed: if *noisy { eta_signed } else { 0.0 },
                 geometry,
                 fwd_batch: 16,
+                solver_parallel: ParallelConfig::serial(),
             };
-            let engine = Engine::program(artifacts_dir, cfg)?;
-            let accuracy = engine.accuracy(&test)?;
+            Engine::program(artifacts_dir, cfg)?.accuracy(&test)
+        })?;
+        for ((label, _, _), accuracy) in configs.iter().zip(accuracies) {
             rows.push(Fig6Row {
                 model: model.weights_name().to_string(),
                 config: label.to_string(),
@@ -98,6 +110,7 @@ pub fn run_eta_sweep(
     model: ModelKind,
     etas: &[f64],
     geometry: TileGeometry,
+    sweep_parallel: ParallelConfig,
     results_dir: &Path,
 ) -> Result<Vec<(f64, String, f64)>> {
     let test = crate::dataset::fresh_eval_split(EVAL_N, 4242);
@@ -107,22 +120,31 @@ pub fn run_eta_sweep(
         ("sort_only", "sort_only"),
         ("reversed_only", "reversed"),
     ];
-    let mut out = Vec::new();
-    for &eta in etas {
-        for (label, strategy) in configs {
-            let engine = Engine::program(
-                artifacts_dir,
-                EngineConfig {
-                    model,
-                    strategy: strategy_by_name(strategy)?,
-                    eta_signed: eta,
-                    geometry,
-                    fwd_batch: 16,
-                },
-            )?;
-            out.push((eta, label.to_string(), engine.accuracy(&test)?));
-        }
-    }
+    // Flatten the (eta × config) grid so every sweep point is one unit of
+    // parallel work.
+    let grid: Vec<(f64, &str, &str)> = etas
+        .iter()
+        .flat_map(|&eta| configs.iter().map(move |&(label, strategy)| (eta, label, strategy)))
+        .collect();
+    let accs = parallel::try_map(&sweep_parallel, &grid, |&(eta, _, strategy)| {
+        let engine = Engine::program(
+            artifacts_dir,
+            EngineConfig {
+                model,
+                strategy: strategy_by_name(strategy)?,
+                eta_signed: eta,
+                geometry,
+                fwd_batch: 16,
+                solver_parallel: ParallelConfig::serial(),
+            },
+        )?;
+        engine.accuracy(&test)
+    })?;
+    let out: Vec<(f64, String, f64)> = grid
+        .iter()
+        .zip(accs)
+        .map(|(&(eta, label, _), acc)| (eta, label.to_string(), acc))
+        .collect();
     let csv: Vec<Vec<String>> = out
         .iter()
         .map(|(e, l, a)| vec![format!("{e:e}"), l.clone(), format!("{a:.4}")])

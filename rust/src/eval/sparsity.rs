@@ -14,6 +14,7 @@ use std::path::Path;
 /// Per-model sparsity row.
 #[derive(Debug, Clone)]
 pub struct SparsityRow {
+    /// Zoo model name.
     pub model: String,
     /// Fraction of zero cells across sampled bit-sliced layers.
     pub sparsity: f64,

@@ -213,6 +213,7 @@ pub fn fault_aware_row_remap(sliced: &BitSlicedMatrix, faults: &FaultMap) -> Res
 /// to one physical crossbar; using it on another tile is a bug).
 #[derive(Debug, Clone)]
 pub struct FaultAware {
+    /// Stuck-at fault sites measured on the target crossbar.
     pub faults: FaultMap,
 }
 

@@ -20,9 +20,17 @@
 //! Python never runs on the request path: `runtime` loads the AOT HLO
 //! artifacts through PJRT and `coordinator` drives them from Rust threads.
 //!
+//! Evaluation is parallel by default: the per-tile circuit solves, NF
+//! scoring, and tile programming fan out over a deterministic
+//! [`parallel`] worker pool (`--threads` / `[runtime] threads`), with
+//! results bitwise identical to a serial run at any thread count.
+//!
 //! See `rust/DESIGN.md` for the system inventory, the mapping/pipeline API,
 //! and the per-experiment index; module-level docs ([`mdm`], [`pipeline`],
-//! [`crossbar`], [`coordinator`]) carry the per-subsystem detail.
+//! [`crossbar`], [`coordinator`], [`parallel`]) carry the per-subsystem
+//! detail.
+
+#![warn(missing_docs)]
 
 pub mod circuit;
 pub mod config;
@@ -35,6 +43,7 @@ pub mod mdm;
 pub mod models;
 pub mod nf;
 pub mod noise;
+pub mod parallel;
 pub mod pipeline;
 pub mod quant;
 pub mod report;

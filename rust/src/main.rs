@@ -11,6 +11,7 @@
 //! mdm sparsity  [--models a,b,..]               E5 / Theorem 1
 //! mdm ablation  <tilesize|sparsity|ratio|roworder>   A1–A3
 //! mdm serve     [--model m] [--strategy s] ...  serving driver
+//! mdm bench     [--tiles N] [--tile N] ...      parallel-vs-serial NF bench
 //! mdm strategies                                mapping-strategy registry
 //! mdm netlist   [--rows J] [--cols K]           SPICE deck export
 //! mdm info                                      artifact/manifest summary
@@ -107,6 +108,13 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.flags.get("strategy") {
         cfg.strategy = v.clone();
     }
+    if let Some(v) = args.flags.get("threads") {
+        cfg.threads = v.parse().context("--threads")?;
+    }
+    // Make the resolved worker count the process default so every parallel
+    // path (circuit solves, NF scoring, tile programming, sweep points)
+    // picks it up without threading it through each call site.
+    mdm_cim::parallel::install_global(cfg.threads);
     Ok(cfg)
 }
 
@@ -136,6 +144,7 @@ fn main() -> Result<()> {
         "sparsity" => cmd_sparsity(&args),
         "ablation" => cmd_ablation(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "strategies" => cmd_strategies(&args),
         "netlist" => cmd_netlist(&args),
         "info" => cmd_info(&args),
@@ -203,6 +212,7 @@ commands (paper experiment in brackets):
   ablation       tilesize | sparsity | ratio | roworder |
                  global | variation | faults | adc              [A1-A9]
   serve          batched serving driver with metrics
+  bench          parallel vs serial NF sweep -> BENCH_parallel_nf.json
   strategies     list the registered mapping strategies
   netlist        export a SPICE .cir deck of a crossbar
   info           artifact manifest summary
@@ -210,6 +220,8 @@ commands (paper experiment in brackets):
 
 common flags: --config f.toml --results DIR --artifacts DIR --seed N
               --eta X --tile N --models a,b,c --strategy NAME
+              --threads N (solver worker pool; default = all cores,
+              also `[runtime] threads` in a config file)
 ";
 
 fn cmd_strategies(_args: &Args) -> Result<()> {
@@ -248,6 +260,7 @@ fn cmd_fit(args: &Args) -> Result<()> {
         sparsity: args.f64_or("sparsity", 0.8),
         physics: CrossbarPhysics::default(),
         seed: cfg.seed,
+        parallel: mdm_cim::parallel::ParallelConfig::default(),
     };
     println!(
         "Fig. 4 — fitting the Manhattan Hypothesis on {} random {}x{} tiles @ {:.0}% sparsity",
@@ -278,6 +291,7 @@ fn cmd_nf(args: &Args) -> Result<()> {
         tiles_per_layer: args.usize_or("tiles", 32),
         seed: cfg.seed,
         artifacts_dir: Some(cfg.artifacts_dir.clone()),
+        parallel: mdm_cim::parallel::ParallelConfig::default(),
     };
     println!("Fig. 5 — NF reduction with MDM (tile {0}x{0})", cfg.tile_size);
     let rows = eval::fig5::run(&f5, Path::new(&cfg.results_dir))?;
@@ -320,6 +334,7 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
                 *model,
                 &etas,
                 TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?,
+                mdm_cim::parallel::ParallelConfig::default(),
                 Path::new(&cfg.results_dir),
             )?;
             let t: Vec<Vec<String>> = rows
@@ -341,6 +356,7 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
         &models,
         cfg.eta_signed,
         TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?,
+        mdm_cim::parallel::ParallelConfig::default(),
         Path::new(&cfg.results_dir),
     )?;
     let table: Vec<Vec<String>> = rows
@@ -570,12 +586,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .or_else(|| args.flags.get("mapping"))
         .cloned()
         .unwrap_or_else(|| cfg.strategy.clone());
+    // Crossbar-programming threads are pinned separately from the request
+    // workers: `--solver-threads` > `--threads`/config > all cores.
+    let solver_parallel = match args.flags.get("solver-threads") {
+        Some(v) => mdm_cim::parallel::ParallelConfig::with_threads(
+            v.parse().context("--solver-threads")?,
+        ),
+        None => mdm_cim::parallel::ParallelConfig::default(),
+    };
     let engine_cfg = EngineConfig {
         model,
         strategy: strategy_by_name(&strategy_name)?,
         eta_signed: cfg.eta_signed,
         geometry: TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?,
         fwd_batch: 16,
+        solver_parallel,
     };
     println!(
         "serving {} with {} workers, strategy {strategy_name}, eta {:.1e} ...",
@@ -617,6 +642,117 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.adc_conversions,
         snap.sync_events
     );
+    Ok(())
+}
+
+/// `mdm bench` — the parallel-vs-serial NF sweep harness that records the
+/// perf trajectory (`BENCH_parallel_nf.json`).
+///
+/// Workload: the Fig.-4-style per-tile evaluation on a synthetic layer —
+/// one full Kirchhoff circuit solve plus one Eq.-16 score per random tile —
+/// run once on a single worker and once on the configured pool
+/// (`--threads`, default all cores). The parallel NF vector must be bitwise
+/// identical to the serial one; the JSON records wall times, speedup,
+/// thread count, and tiles/sec.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use mdm_cim::parallel::ParallelConfig;
+    use mdm_cim::report::Json;
+
+    let cfg = experiment_config(args)?;
+    let n_tiles = args.usize_or("tiles", 64);
+    let tile = args.usize_or("tile", cfg.tile_size);
+    let sparsity = args.f64_or("sparsity", 0.8);
+    let repeats = args.usize_or("repeats", 3);
+    let out_path = args.str_or("out", "BENCH_parallel_nf.json");
+    let physics = CrossbarPhysics::default();
+    let parallel = ParallelConfig::default();
+
+    // Synthetic tile population, drawn once and shared by both passes (the
+    // Fig. 4 procedure: ~80% sparsity with a ±5-point band per tile).
+    let mut rng = mdm_cim::rng::Xoshiro256::seeded(cfg.seed);
+    let tiles: Vec<mdm_cim::tensor::Tensor> = (0..n_tiles)
+        .map(|_| {
+            let sp = (sparsity + rng.uniform_range(-0.05, 0.05)).clamp(0.01, 0.99);
+            mdm_cim::eval::random_planes(tile, tile, 1.0 - sp, &mut rng)
+        })
+        .collect();
+
+    println!(
+        "bench: {n_tiles} random {tile}x{tile} tiles, 1 vs {} worker(s), best of {repeats}",
+        parallel.threads
+    );
+    let run_pass = |p: &ParallelConfig| -> Result<(f64, Vec<f64>, Vec<f64>)> {
+        let mut best = f64::INFINITY;
+        let mut series = None;
+        for _ in 0..repeats.max(1) {
+            let t0 = std::time::Instant::now();
+            let measured = mdm_cim::circuit::measure_tile_nfs(&tiles, physics, p)?;
+            let calculated =
+                mdm_cim::nf::manhattan_nf_sum_batch(&tiles, physics.parasitic_ratio(), p);
+            best = best.min(t0.elapsed().as_secs_f64());
+            series = Some((measured, calculated));
+        }
+        let (measured, calculated) = series.expect("at least one repeat");
+        Ok((best, measured, calculated))
+    };
+
+    let (serial_s, serial_nf, serial_calc) = run_pass(&ParallelConfig::serial())?;
+    let (parallel_s, parallel_nf, parallel_calc) = run_pass(&parallel)?;
+
+    let bitwise_identical = serial_nf.len() == parallel_nf.len()
+        && serial_nf.iter().zip(&parallel_nf).all(|(a, b)| a.to_bits() == b.to_bits())
+        && serial_calc.iter().zip(&parallel_calc).all(|(a, b)| a.to_bits() == b.to_bits());
+    let speedup = serial_s / parallel_s.max(f64::MIN_POSITIVE);
+    let tiles_per_sec_serial = n_tiles as f64 / serial_s.max(f64::MIN_POSITIVE);
+    let tiles_per_sec_parallel = n_tiles as f64 / parallel_s.max(f64::MIN_POSITIVE);
+
+    println!(
+        "{}",
+        report::table(
+            &["pass", "threads", "wall s", "tiles/s"],
+            &[
+                vec![
+                    "serial".into(),
+                    "1".into(),
+                    format!("{serial_s:.4}"),
+                    format!("{tiles_per_sec_serial:.1}"),
+                ],
+                vec![
+                    "parallel".into(),
+                    parallel.threads.to_string(),
+                    format!("{parallel_s:.4}"),
+                    format!("{tiles_per_sec_parallel:.1}"),
+                ],
+            ],
+        )
+    );
+    println!(
+        "speedup {speedup:.2}x on {} thread(s); parallel NF bitwise identical to serial: \
+         {bitwise_identical}",
+        parallel.threads
+    );
+    anyhow::ensure!(bitwise_identical, "parallel NF diverged from the serial reference");
+
+    report::write_json_object(
+        &out_path,
+        &[
+            ("benchmark", Json::Str("parallel_nf_sweep".into())),
+            ("workload", Json::Str("per-tile circuit solve + Eq.16 NF".into())),
+            ("tile", Json::Int(tile as i64)),
+            ("n_tiles", Json::Int(n_tiles as i64)),
+            ("sparsity", Json::Num(sparsity)),
+            ("seed", Json::Int(cfg.seed as i64)),
+            ("repeats", Json::Int(repeats as i64)),
+            ("threads", Json::Int(parallel.threads as i64)),
+            ("serial_wall_s", Json::Num(serial_s)),
+            ("parallel_wall_s", Json::Num(parallel_s)),
+            ("speedup", Json::Num(speedup)),
+            ("tiles_per_sec_serial", Json::Num(tiles_per_sec_serial)),
+            ("tiles_per_sec_parallel", Json::Num(tiles_per_sec_parallel)),
+            ("bitwise_identical", Json::Bool(bitwise_identical)),
+        ],
+    )?;
+    println!("json: {out_path}");
     Ok(())
 }
 

@@ -99,6 +99,7 @@ pub fn row_magnitudes(tile: &SlicedTile) -> Vec<f64> {
 /// dataflow.
 #[derive(Debug, Clone, Copy)]
 pub struct Identity {
+    /// Column placement (conventional or reversed).
     pub dataflow: Dataflow,
 }
 
@@ -135,6 +136,7 @@ impl MappingStrategy for Identity {
 /// column-distance sum), canonically at the reversed dataflow.
 #[derive(Debug, Clone, Copy)]
 pub struct Mdm {
+    /// Column placement (reversed is the paper's MDM).
     pub dataflow: Dataflow,
 }
 
@@ -170,10 +172,12 @@ impl MappingStrategy for Mdm {
 /// Paper-literal variant: rows ascending by `Σ_k δ_k · k`.
 #[derive(Debug, Clone, Copy)]
 pub struct ManhattanAsc {
+    /// Column placement (conventional or reversed).
     pub dataflow: Dataflow,
 }
 
 impl ManhattanAsc {
+    /// The registered configuration: reversed dataflow.
     pub fn reversed() -> Self {
         Self { dataflow: Dataflow::Reversed }
     }
@@ -197,10 +201,12 @@ impl MappingStrategy for ManhattanAsc {
 /// descending dequantized magnitude mass.
 #[derive(Debug, Clone, Copy)]
 pub struct MagnitudeDesc {
+    /// Column placement (conventional or reversed).
     pub dataflow: Dataflow,
 }
 
 impl MagnitudeDesc {
+    /// The registered configuration: reversed dataflow.
     pub fn reversed() -> Self {
         Self { dataflow: Dataflow::Reversed }
     }
@@ -227,11 +233,14 @@ impl MappingStrategy for MagnitudeDesc {
 /// Uniformly random row placement (control).
 #[derive(Debug, Clone, Copy)]
 pub struct Random {
+    /// Column placement (conventional or reversed).
     pub dataflow: Dataflow,
+    /// Seed of the control permutation.
     pub seed: u64,
 }
 
 impl Random {
+    /// The registered configuration: conventional dataflow at `seed`.
     pub fn conventional(seed: u64) -> Self {
         Self { dataflow: Dataflow::Conventional, seed }
     }
@@ -257,10 +266,12 @@ impl MappingStrategy for Random {
 /// score-free placement alternative used as a literature baseline.
 #[derive(Debug, Clone, Copy)]
 pub struct XChangrRotate {
+    /// Column placement (conventional or reversed).
     pub dataflow: Dataflow,
 }
 
 impl XChangrRotate {
+    /// The registered configuration: conventional dataflow.
     pub fn conventional() -> Self {
         Self { dataflow: Dataflow::Conventional }
     }
@@ -383,6 +394,21 @@ pub fn strategy_names() -> Vec<(&'static str, &'static str)> {
 
 /// Resolve a strategy by registry name (or alias). `"random:SEED"` selects
 /// the random control with an explicit seed.
+///
+/// ```
+/// use mdm_cim::mdm::{strategy_by_name, strategy_names};
+///
+/// let mdm = strategy_by_name("mdm")?;
+/// assert_eq!(mdm.name(), "mdm");
+/// // Aliases resolve to their canonical configuration ...
+/// assert_eq!(strategy_by_name("identity")?.name(), "conventional");
+/// // ... seeds ride along on the random control ...
+/// assert_eq!(strategy_by_name("random:31")?.name(), "random");
+/// // ... and unknown names fail with the registry listing.
+/// assert!(strategy_by_name("bogus").is_err());
+/// assert!(strategy_names().iter().any(|(name, _)| *name == "xchangr"));
+/// # anyhow::Ok(())
+/// ```
 pub fn strategy_by_name(name: &str) -> Result<Arc<dyn MappingStrategy>> {
     let key = name.trim();
     if let Some(seed) = key.strip_prefix("random:") {

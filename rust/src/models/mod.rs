@@ -29,6 +29,7 @@ use std::path::Path;
 /// A model with materialized layer weight matrices (fan_in × fan_out).
 #[derive(Debug, Clone)]
 pub struct ModelWeights {
+    /// Zoo descriptor the weights were materialized for.
     pub desc: ModelDesc,
     /// One matrix per layer, `[fan_in, fan_out]`, signed.
     pub layers: Vec<Tensor>,

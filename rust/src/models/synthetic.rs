@@ -31,6 +31,7 @@ pub enum DistributionKind {
 /// Weight distribution profile of an architecture family.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WeightProfile {
+    /// Distribution family of the weights.
     pub kind: DistributionKind,
     /// Scale parameter (b for Laplace, σ for Gaussian, base b for mixture).
     pub scale: f64,

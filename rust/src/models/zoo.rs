@@ -20,6 +20,7 @@ pub enum LayerKind {
 /// One (possibly repeated) layer shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LayerDesc {
+    /// Layer type (conv / linear / attention).
     pub kind: LayerKind,
     /// Rows of the unrolled weight matrix.
     pub fan_in: usize,
@@ -48,9 +49,13 @@ impl LayerDesc {
 /// A model entry in the zoo.
 #[derive(Debug, Clone)]
 pub struct ModelDesc {
+    /// Zoo name (what `model_by_name` resolves).
     pub name: &'static str,
+    /// Architecture family (`cnn` / `transformer` / ...).
     pub family: &'static str,
+    /// Weight distribution profile for synthesis.
     pub profile: WeightProfile,
+    /// Layer shapes with repeat counts.
     pub layers: Vec<LayerDesc>,
 }
 

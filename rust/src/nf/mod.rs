@@ -75,6 +75,27 @@ pub fn manhattan_nf_per_col(planes: &Tensor, parasitic_ratio: f64) -> Vec<f64> {
         .collect()
 }
 
+/// Eq. 16 (sum form) over many independent tiles, fanned out over the
+/// worker pool; `out[i]` is `manhattan_nf_sum(&planes[i], ratio)` with the
+/// exact same bits as the serial loop.
+pub fn manhattan_nf_sum_batch(
+    planes: &[Tensor],
+    parasitic_ratio: f64,
+    parallel: &crate::parallel::ParallelConfig,
+) -> Vec<f64> {
+    crate::parallel::map(parallel, planes, |p| manhattan_nf_sum(p, parasitic_ratio))
+}
+
+/// Mean-form NF over many independent tiles (parallel counterpart of
+/// [`manhattan_nf_mean`]); order- and bit-identical to the serial loop.
+pub fn manhattan_nf_mean_batch(
+    planes: &[Tensor],
+    parasitic_ratio: f64,
+    parallel: &crate::parallel::ParallelConfig,
+) -> Vec<f64> {
+    crate::parallel::map(parallel, planes, |p| manhattan_nf_mean(p, parasitic_ratio))
+}
+
 /// The distance matrix `d_M(j,k) = j + k` as a tensor — fed to the L1
 /// kernel / noisy-forward HLO as an input so one compiled executable serves
 /// every mapping.
@@ -155,6 +176,27 @@ mod tests {
         // col 1: active at j=1 (d=2) -> 2.0
         assert!((nf[0] - 1.0).abs() < 1e-12);
         assert!((nf[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_forms_match_scalar_forms_bitwise() {
+        let mut rng = crate::rng::Xoshiro256::seeded(5);
+        let tiles: Vec<Tensor> = (0..9)
+            .map(|_| {
+                let data: Vec<f32> = (0..64)
+                    .map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 })
+                    .collect();
+                Tensor::new(&[8, 8], data).unwrap()
+            })
+            .collect();
+        let ratio = 2.5 / 300e3;
+        let cfg = crate::parallel::ParallelConfig::with_threads(4);
+        let sums = manhattan_nf_sum_batch(&tiles, ratio, &cfg);
+        let means = manhattan_nf_mean_batch(&tiles, ratio, &cfg);
+        for (i, t) in tiles.iter().enumerate() {
+            assert_eq!(sums[i].to_bits(), manhattan_nf_sum(t, ratio).to_bits());
+            assert_eq!(means[i].to_bits(), manhattan_nf_mean(t, ratio).to_bits());
+        }
     }
 
     #[test]

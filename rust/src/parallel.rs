@@ -1,0 +1,218 @@
+//! Deterministic parallel execution for the evaluation stack.
+//!
+//! The paper's headline experiments (Fig. 5 NF sweeps, Fig. 6
+//! accuracy-under-distortion) solve one independent parasitic-resistance
+//! circuit per tile per bit-plane — embarrassingly parallel work. This
+//! module provides the worker-pool primitives those paths share:
+//!
+//! * [`ParallelConfig`] — the worker-count knob, settable process-wide from
+//!   the CLI (`--threads`) or a config file (`[runtime] threads`) via
+//!   [`install_global`], defaulting to the machine's available parallelism;
+//! * [`map`] / [`try_map`] / [`map_indexed`] / [`try_map_indexed`] — ordered
+//!   parallel maps over slices or index ranges.
+//!
+//! No `rayon` offline (rust/DESIGN.md §5), so the pool is built on
+//! `std::thread::scope`: the input range is split into contiguous chunks,
+//! one scoped worker per chunk, and results are re-assembled **in input
+//! order**. Because every item's result lands at its original index and all
+//! reductions downstream stay sequential, a parallel run is **bitwise
+//! identical** to a serial one at any thread count — the determinism the
+//! `bench` subcommand and `tests/integration_parallel.rs` assert.
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide default worker count; 0 = auto (available parallelism).
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Worker-count configuration for the parallel evaluation paths.
+///
+/// `threads == 1` degenerates to a plain serial loop on the calling thread
+/// (no spawning); any other count fans work out over scoped threads. Either
+/// way the output order — and, for floating-point reductions performed by
+/// the caller in that order, the bits — matches the serial result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Number of worker threads (≥ 1).
+    pub threads: usize,
+}
+
+impl Default for ParallelConfig {
+    /// The installed process-wide default ([`install_global`]), or the
+    /// machine's available parallelism when nothing was installed.
+    fn default() -> Self {
+        let installed = GLOBAL_THREADS.load(Ordering::Relaxed);
+        if installed >= 1 {
+            Self { threads: installed }
+        } else {
+            Self { threads: available_threads() }
+        }
+    }
+}
+
+impl ParallelConfig {
+    /// Exactly one worker: run everything on the calling thread.
+    pub fn serial() -> Self {
+        Self { threads: 1 }
+    }
+
+    /// A fixed worker count (clamped up to 1).
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// Worker count actually used for `n` items (never more workers than
+    /// items).
+    pub fn effective_threads(&self, n: usize) -> usize {
+        self.threads.clamp(1, n.max(1))
+    }
+}
+
+/// The machine's available parallelism (1 when it cannot be determined).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Install a process-wide default worker count (what `--threads N` and
+/// `[runtime] threads = N` resolve to); 0 restores auto-detection.
+/// The [`ParallelConfig`] default picks this up everywhere a caller does
+/// not pass an explicit configuration.
+pub fn install_global(threads: usize) {
+    GLOBAL_THREADS.store(threads, Ordering::Relaxed);
+}
+
+/// Map `f` over `0..n` in parallel, returning results in index order.
+///
+/// Work is split into `effective_threads(n)` contiguous chunks; chunk
+/// results are concatenated in chunk order, so `map_indexed(cfg, n, f)`
+/// equals `(0..n).map(f).collect()` element-for-element at any thread
+/// count. Panics in `f` propagate to the caller.
+pub fn map_indexed<R, F>(cfg: &ParallelConfig, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let workers = cfg.effective_threads(n);
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let per = n.div_ceil(workers);
+    let mut chunks: Vec<Vec<R>> = Vec::with_capacity(workers);
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (0..workers)
+            .map(|t| {
+                let lo = (t * per).min(n);
+                let hi = ((t + 1) * per).min(n);
+                s.spawn(move || (lo..hi).map(f).collect::<Vec<R>>())
+            })
+            .collect();
+        for h in handles {
+            chunks.push(h.join().expect("parallel worker panicked"));
+        }
+    });
+    chunks.into_iter().flatten().collect()
+}
+
+/// Fallible [`map_indexed`]: the first error (lowest index) wins and is
+/// returned after all workers finish; otherwise results come back in index
+/// order.
+pub fn try_map_indexed<R, F>(cfg: &ParallelConfig, n: usize, f: F) -> Result<Vec<R>>
+where
+    R: Send,
+    F: Fn(usize) -> Result<R> + Sync,
+{
+    let per_item = map_indexed(cfg, n, f);
+    let mut out = Vec::with_capacity(n);
+    for r in per_item {
+        out.push(r?);
+    }
+    Ok(out)
+}
+
+/// Map `f` over a slice in parallel, preserving input order.
+pub fn map<T, R, F>(cfg: &ParallelConfig, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    map_indexed(cfg, items.len(), |i| f(&items[i]))
+}
+
+/// Fallible [`map`]: first error (by input order) wins.
+pub fn try_map<T, R, F>(cfg: &ParallelConfig, items: &[T], f: F) -> Result<Vec<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> Result<R> + Sync,
+{
+    try_map_indexed(cfg, items.len(), |i| f(&items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_indexed_preserves_order_at_any_thread_count() {
+        for threads in [1usize, 2, 3, 7, 16] {
+            let cfg = ParallelConfig::with_threads(threads);
+            let got = map_indexed(&cfg, 23, |i| i * i);
+            let want: Vec<usize> = (0..23).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn map_matches_serial_iterator() {
+        let items: Vec<f64> = (0..50).map(|i| i as f64 * 0.37).collect();
+        let cfg = ParallelConfig::with_threads(4);
+        let par = map(&cfg, &items, |x| (x.sin() * 1e6).to_bits());
+        let ser: Vec<u64> = items.iter().map(|x| (x.sin() * 1e6).to_bits()).collect();
+        // Bitwise identical — the determinism contract.
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let cfg = ParallelConfig::with_threads(8);
+        assert!(map_indexed(&cfg, 0, |i| i).is_empty());
+        assert_eq!(map_indexed(&cfg, 1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn try_map_returns_first_error_by_index() {
+        let cfg = ParallelConfig::with_threads(4);
+        let r = try_map_indexed(&cfg, 16, |i| {
+            if i == 3 || i == 12 {
+                anyhow::bail!("boom at {i}")
+            }
+            Ok(i)
+        });
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("boom at 3"), "{msg}");
+    }
+
+    #[test]
+    fn try_map_ok_collects_in_order() {
+        let cfg = ParallelConfig::with_threads(3);
+        let items = [5usize, 6, 7, 8];
+        let out = try_map(&cfg, &items, |&x| Ok(x * 2)).unwrap();
+        assert_eq!(out, vec![10, 12, 14, 16]);
+    }
+
+    #[test]
+    fn effective_threads_never_exceeds_items() {
+        let cfg = ParallelConfig::with_threads(8);
+        assert_eq!(cfg.effective_threads(3), 3);
+        assert_eq!(cfg.effective_threads(0), 1);
+        assert_eq!(ParallelConfig::serial().effective_threads(100), 1);
+    }
+
+    #[test]
+    fn more_workers_than_items_is_fine() {
+        let cfg = ParallelConfig::with_threads(64);
+        assert_eq!(map_indexed(&cfg, 5, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -26,6 +26,7 @@ use crate::crossbar::{CostModel, LayerTiling, TileCost, TileGeometry};
 use crate::mdm::{strategy_by_name, MappingPlan, MappingStrategy};
 use crate::nf::manhattan_nf_mean;
 use crate::noise::distorted_weights;
+use crate::parallel::{self, ParallelConfig};
 use crate::quant::{Quantizer, SignSplit};
 use crate::rng::Xoshiro256;
 use crate::tensor::Tensor;
@@ -36,7 +37,24 @@ use std::sync::Arc;
 /// Builder for the quantize → bit-slice → tile → map → distort chain.
 ///
 /// Defaults: per-part fitted quantizer, `"conventional"` (identity)
-/// strategy, paper-default physics, `eta_signed = 0.0` (no distortion).
+/// strategy, paper-default physics, `eta_signed = 0.0` (no distortion),
+/// process-default worker pool for the per-tile work.
+///
+/// ```
+/// use mdm_cim::crossbar::TileGeometry;
+/// use mdm_cim::pipeline::Pipeline;
+/// use mdm_cim::tensor::Tensor;
+///
+/// let w = Tensor::new(&[4, 2], vec![0.5, -0.25, 1.0, 0.125, -0.75, 0.25, 0.5, -1.0])?;
+/// let layer = Pipeline::new(TileGeometry::new(4, 16, 8)?)
+///     .strategy("mdm")?              // any registered MappingStrategy name
+///     .eta_signed(-2e-3)             // Eq.-17 PR distortion
+///     .compile(&w)?;
+/// assert_eq!(layer.strategy, "mdm");
+/// assert_eq!(layer.n_tiles(), 2);    // one tile per sign part here
+/// assert_eq!(layer.effective_weights().shape(), &[4, 2]);
+/// # anyhow::Ok(())
+/// ```
 #[derive(Clone)]
 pub struct Pipeline {
     geometry: TileGeometry,
@@ -45,6 +63,7 @@ pub struct Pipeline {
     physics: CrossbarPhysics,
     eta_signed: f64,
     cost_model: CostModel,
+    parallel: ParallelConfig,
 }
 
 impl Pipeline {
@@ -57,6 +76,7 @@ impl Pipeline {
             physics: CrossbarPhysics::default(),
             eta_signed: 0.0,
             cost_model: CostModel::default(),
+            parallel: ParallelConfig::default(),
         }
     }
 
@@ -99,6 +119,17 @@ impl Pipeline {
         self
     }
 
+    /// Worker pool for the per-tile compile work (plan + distortion) and
+    /// the sampled-NF statistics. Defaults to the process-wide
+    /// [`ParallelConfig`] default; the serving path pins this separately
+    /// from its request workers via
+    /// [`crate::coordinator::EngineConfig::solver_parallel`]. Results are
+    /// bitwise independent of the thread count.
+    pub fn parallel(mut self, parallel: ParallelConfig) -> Self {
+        self.parallel = parallel;
+        self
+    }
+
     /// Quantizer for one non-negative part: the shared override, or a fresh
     /// fit.
     fn part_quantizer(&self, part: &Tensor) -> Result<Quantizer> {
@@ -129,28 +160,35 @@ impl Pipeline {
     }
 
     /// Program one **non-negative** part (half of the differential pair).
+    ///
+    /// Each tile's programming (mapping plan + Eq.-17 distortion) is
+    /// independent, so the per-tile work fans out over the configured
+    /// [`ParallelConfig`]; tiles cover disjoint regions of the part, so the
+    /// ordered re-assembly below is bitwise identical to the serial loop.
     pub fn compile_nonneg(&self, w: &Tensor) -> Result<ProgrammedPart> {
         let quant = self.part_quantizer(w)?;
         let tiling = LayerTiling::partition_with(w, self.geometry, quant)?;
         // Price the part while the tiling is in hand, so callers never need
         // a second partition pass just for cost accounting.
         let cost = self.cost_model.layer_cost(&tiling, 1);
-        let mut tiles = Vec::with_capacity(tiling.n_tiles());
+        let tiles: Vec<ProgrammedTile> =
+            parallel::try_map(&self.parallel, &tiling.tiles, |tile| {
+                let plan = tile.plan(self.strategy.as_ref());
+                let weights = distorted_weights(&tile.sliced, &plan, self.eta_signed)?;
+                Ok(ProgrammedTile {
+                    row_start: tile.row_start,
+                    col_start: tile.col_start,
+                    plan,
+                    weights,
+                })
+            })?;
         let mut effective = Tensor::zeros(&[tiling.fan_in, tiling.fan_out]);
-        for tile in &tiling.tiles {
-            let plan = tile.plan(self.strategy.as_ref());
-            let weights = distorted_weights(&tile.sliced, &plan, self.eta_signed)?;
-            for r in 0..weights.rows() {
-                let src = weights.row(r).to_vec();
+        for tile in &tiles {
+            for r in 0..tile.weights.rows() {
+                let src = tile.weights.row(r).to_vec();
                 let dst = effective.row_mut(tile.row_start + r);
                 dst[tile.col_start..tile.col_start + src.len()].copy_from_slice(&src);
             }
-            tiles.push(ProgrammedTile {
-                row_start: tile.row_start,
-                col_start: tile.col_start,
-                plan,
-                weights,
-            });
         }
         Ok(ProgrammedPart {
             fan_in: tiling.fan_in,
@@ -196,15 +234,22 @@ impl Pipeline {
             let quant = self.part_quantizer(part)?;
             let (gr, gc) = LayerTiling::grid_for(part.rows(), part.cols(), self.geometry);
             let total = gr * gc;
+            // Indices are drawn serially (the rng stream is part of the
+            // experiment's reproducibility contract); the per-tile slicing +
+            // scoring then fans out, and the sum below runs in index order
+            // so the result is bitwise identical to the serial loop.
             let idx: Vec<usize> = if total <= tiles_per_part {
                 (0..total).collect()
             } else {
                 rng.choose_k(total, tiles_per_part)
             };
-            for &i in &idx {
+            let nfs = parallel::try_map(&self.parallel, &idx, |&i| {
                 let tile = LayerTiling::build_tile(part, self.geometry, quant, i / gc, i % gc)?;
                 let plan = tile.plan(self.strategy.as_ref());
-                acc += manhattan_nf_mean(&plan.apply(&tile.sliced.planes)?, 1.0);
+                Ok(manhattan_nf_mean(&plan.apply(&tile.sliced.planes)?, 1.0))
+            })?;
+            for nf in nfs {
+                acc += nf;
                 n += 1;
             }
         }
@@ -219,6 +264,7 @@ impl std::fmt::Debug for Pipeline {
             .field("strategy", &self.strategy.name())
             .field("eta_signed", &self.eta_signed)
             .field("quantizer", &self.quantizer)
+            .field("parallel", &self.parallel)
             .finish()
     }
 }
@@ -240,7 +286,9 @@ pub struct ProgrammedTile {
 /// One programmed sign part of a layer.
 #[derive(Debug, Clone)]
 pub struct ProgrammedPart {
+    /// Layer fan-in (input rows) covered by this part.
     pub fan_in: usize,
+    /// Layer fan-out (weight columns) covered by this part.
     pub fan_out: usize,
     /// Quantizer shared by every tile of the part.
     pub quant: Quantizer,
@@ -257,12 +305,17 @@ pub struct ProgrammedPart {
 /// assembled effective weight matrix the forward graph multiplies by.
 #[derive(Debug, Clone)]
 pub struct ProgrammedLayer {
+    /// Tile geometry the layer was programmed at.
     pub geometry: TileGeometry,
+    /// Crossbar physics recorded with the artifact.
     pub physics: CrossbarPhysics,
+    /// Signed Eq.-17 distortion coefficient used at program time.
     pub eta_signed: f64,
     /// Registry name of the strategy that programmed the layer.
     pub strategy: &'static str,
+    /// Programmed positive sign part.
     pub pos: ProgrammedPart,
+    /// Programmed negative sign part.
     pub neg: ProgrammedPart,
     effective: Tensor,
 }
@@ -434,6 +487,59 @@ mod tests {
             .compile(&w)
             .unwrap();
         assert_eq!(p.physics, physics);
+    }
+
+    #[test]
+    fn parallel_compile_is_bitwise_serial() {
+        use crate::parallel::ParallelConfig;
+        let w = random_signed(96, 24, 11);
+        let g = TileGeometry::new(16, 32, 8).unwrap();
+        let serial = Pipeline::new(g)
+            .strategy("mdm")
+            .unwrap()
+            .eta_signed(-2e-3)
+            .parallel(ParallelConfig::serial())
+            .compile(&w)
+            .unwrap();
+        let par = Pipeline::new(g)
+            .strategy("mdm")
+            .unwrap()
+            .eta_signed(-2e-3)
+            .parallel(ParallelConfig::with_threads(4))
+            .compile(&w)
+            .unwrap();
+        assert_eq!(serial.n_tiles(), par.n_tiles());
+        let serial_data = serial.effective_weights().data();
+        for (a, b) in serial_data.iter().zip(par.effective_weights().data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (ta, tb) in serial.pos.tiles.iter().zip(&par.pos.tiles) {
+            assert_eq!(ta.row_start, tb.row_start);
+            assert_eq!(ta.plan, tb.plan);
+        }
+    }
+
+    #[test]
+    fn parallel_sampled_nf_is_bitwise_serial() {
+        use crate::parallel::ParallelConfig;
+        let w = random_signed(256, 32, 12);
+        let g = TileGeometry::paper_eval();
+        let mut r1 = Xoshiro256::seeded(13);
+        let mut r2 = Xoshiro256::seeded(13);
+        let (a, n1) = Pipeline::new(g)
+            .strategy("mdm")
+            .unwrap()
+            .parallel(ParallelConfig::serial())
+            .sampled_nf(&w, 8, &mut r1)
+            .unwrap();
+        let (b, n2) = Pipeline::new(g)
+            .strategy("mdm")
+            .unwrap()
+            .parallel(ParallelConfig::with_threads(4))
+            .sampled_nf(&w, 8, &mut r2)
+            .unwrap();
+        assert_eq!(n1, n2);
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 
     #[test]

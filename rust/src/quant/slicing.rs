@@ -9,7 +9,9 @@ use anyhow::{ensure, Result};
 /// (differential columns; outputs subtract).
 #[derive(Debug, Clone)]
 pub struct SignSplit {
+    /// Non-negative positive part (`max(w, 0)`).
     pub pos: Tensor,
+    /// Non-negative negative part (`max(-w, 0)`).
     pub neg: Tensor,
 }
 

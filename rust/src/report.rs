@@ -132,6 +132,76 @@ pub fn write_csv(
     Ok(())
 }
 
+/// Minimal JSON value for benchmark/report emission (no `serde` offline —
+/// rust/DESIGN.md §5).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// A number (non-finite values serialize as `null`).
+    Num(f64),
+    /// An integer.
+    Int(i64),
+    /// A boolean.
+    Bool(bool),
+    /// A string (escaped on write).
+    Str(String),
+}
+
+impl Json {
+    fn render(&self) -> String {
+        match self {
+            Json::Num(v) if v.is_finite() => format!("{v}"),
+            Json::Num(_) => "null".into(),
+            Json::Int(v) => format!("{v}"),
+            Json::Bool(b) => format!("{b}"),
+            Json::Str(s) => {
+                let mut out = String::with_capacity(s.len() + 2);
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+                out
+            }
+        }
+    }
+}
+
+/// Render a flat JSON object (one `"key": value` pair per line, keys in the
+/// given order).
+pub fn json_object(pairs: &[(&str, Json)]) -> String {
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        let _ = write!(out, "  {}: {}", Json::Str(k.to_string()).render(), v.render());
+        out.push_str(if i + 1 < pairs.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Write a flat JSON object to a file (creates parent directories) — the
+/// `BENCH_*.json` emission path of `mdm bench`.
+pub fn write_json_object(path: impl AsRef<Path>, pairs: &[(&str, Json)]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, json_object(pairs))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 /// Format a float with engineering-friendly precision.
 pub fn fmt_g(v: f64) -> String {
     if v == 0.0 {
@@ -190,6 +260,33 @@ mod tests {
         write_csv(&p, &["a", "b"], &[vec!["1,2".into(), "x\"y".into()]]).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text, "a,b\n\"1,2\",\"x\"\"y\"\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_object_renders_and_escapes() {
+        let s = json_object(&[
+            ("name", Json::Str("nf \"sweep\"\n".into())),
+            ("threads", Json::Int(4)),
+            ("speedup", Json::Num(2.5)),
+            ("bitwise_identical", Json::Bool(true)),
+            ("bad", Json::Num(f64::NAN)),
+        ]);
+        assert!(s.starts_with("{\n"));
+        assert!(s.ends_with("}\n"));
+        assert!(s.contains("\"name\": \"nf \\\"sweep\\\"\\n\""));
+        assert!(s.contains("\"threads\": 4,"));
+        assert!(s.contains("\"speedup\": 2.5,"));
+        assert!(s.contains("\"bitwise_identical\": true,"));
+        assert!(s.contains("\"bad\": null\n"));
+    }
+
+    #[test]
+    fn json_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("json_test_{}", std::process::id()));
+        let p = dir.join("bench.json");
+        write_json_object(&p, &[("ok", Json::Bool(false))]).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\n  \"ok\": false\n}\n");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -11,15 +11,20 @@ use std::sync::Mutex;
 /// One line of `manifest.txt`: `name \t file \t input-shapes \t note`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ManifestEntry {
+    /// Artifact name (what `ArtifactStore::load` resolves).
     pub name: String,
+    /// HLO text file under the artifacts directory.
     pub file: String,
+    /// Human-readable input shape listing.
     pub input_shapes: String,
+    /// Free-form provenance note.
     pub note: String,
 }
 
 /// Parsed `manifest.txt`.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// One entry per artifact, in manifest order.
     pub entries: Vec<ManifestEntry>,
 }
 

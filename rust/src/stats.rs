@@ -5,11 +5,15 @@
 /// Summary statistics of a sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
     /// Population standard deviation (the paper reports σ of the fit error).
     pub std: f64,
+    /// Minimum value.
     pub min: f64,
+    /// Maximum value.
     pub max: f64,
 }
 
@@ -48,8 +52,11 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// the range are clamped into the edge buckets.
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Lower edge of the range.
     pub lo: f64,
+    /// Upper edge of the range.
     pub hi: f64,
+    /// Per-bucket sample counts.
     pub counts: Vec<usize>,
 }
 
@@ -87,7 +94,9 @@ impl Histogram {
 /// Result of a 1-D ordinary-least-squares fit `y ≈ slope·x + intercept`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OlsFit {
+    /// Fitted slope.
     pub slope: f64,
+    /// Fitted intercept.
     pub intercept: f64,
     /// Coefficient of determination.
     pub r2: f64,

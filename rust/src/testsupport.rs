@@ -12,9 +12,13 @@ use std::time::Instant;
 /// Timing statistics of one benchmark.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchStats {
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean wall time per iteration, seconds.
     pub mean_s: f64,
+    /// Standard deviation of the iteration wall time, seconds.
     pub std_s: f64,
+    /// Fastest iteration, seconds.
     pub min_s: f64,
 }
 

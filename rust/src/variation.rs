@@ -42,8 +42,11 @@ impl Default for VariationModel {
 pub struct VariedCrossbar {
     /// Per-cell resistance (ohms), row-major.
     pub r_cell: Vec<f64>,
+    /// Crossbar rows.
     pub rows: usize,
+    /// Crossbar columns.
     pub cols: usize,
+    /// Nominal physics the variation is drawn around.
     pub physics: CrossbarPhysics,
 }
 

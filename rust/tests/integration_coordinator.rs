@@ -172,6 +172,7 @@ fn engine_cost_scales_with_tile_size() {
             eta_signed: -2e-3,
             geometry: TileGeometry::new(tile, tile, 8).unwrap(),
             fwd_batch: 16,
+            solver_parallel: mdm_cim::parallel::ParallelConfig::default(),
         };
         Engine::program("artifacts", cfg).unwrap()
     };

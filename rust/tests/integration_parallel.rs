@@ -1,0 +1,91 @@
+//! Determinism contract of the parallel evaluation engine: every parallel
+//! path must produce **bitwise identical** results to its serial
+//! counterpart at any thread count (the same contract `mdm bench` enforces
+//! before emitting `BENCH_parallel_nf.json`).
+
+use mdm_cim::circuit::{measure_tile_nfs, single_cell_nf_map_with};
+use mdm_cim::crossbar::TileGeometry;
+use mdm_cim::eval::random_planes;
+use mdm_cim::nf::manhattan_nf_sum_batch;
+use mdm_cim::parallel::ParallelConfig;
+use mdm_cim::pipeline::Pipeline;
+use mdm_cim::rng::Xoshiro256;
+use mdm_cim::tensor::Tensor;
+use mdm_cim::CrossbarPhysics;
+
+fn random_tiles(n: usize, side: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n).map(|_| random_planes(side, side, 0.2, &mut rng)).collect()
+}
+
+/// Measured (circuit-solved) NF of a tile population: parallel == serial,
+/// bit for bit, across several thread counts.
+#[test]
+fn measured_nf_bitwise_identical_across_thread_counts() {
+    let tiles = random_tiles(10, 16, 1);
+    let physics = CrossbarPhysics::default();
+    let reference = measure_tile_nfs(&tiles, physics, &ParallelConfig::serial()).unwrap();
+    for threads in [2usize, 3, 4, 8] {
+        let par =
+            measure_tile_nfs(&tiles, physics, &ParallelConfig::with_threads(threads)).unwrap();
+        assert_eq!(par.len(), reference.len());
+        for (i, (a, b)) in reference.iter().zip(&par).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "tile {i} diverged at {threads} threads");
+        }
+    }
+}
+
+/// Analytical (Eq. 16) NF batch: same contract.
+#[test]
+fn analytical_nf_bitwise_identical_across_thread_counts() {
+    let tiles = random_tiles(17, 32, 2);
+    let ratio = CrossbarPhysics::default().parasitic_ratio();
+    let reference = manhattan_nf_sum_batch(&tiles, ratio, &ParallelConfig::serial());
+    for threads in [2usize, 5, 16] {
+        let par = manhattan_nf_sum_batch(&tiles, ratio, &ParallelConfig::with_threads(threads));
+        for (a, b) in reference.iter().zip(&par) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+/// The Fig. 2 single-cell sweep (Sherman–Morrison toggles off one shared
+/// factorization): parallel == serial.
+#[test]
+fn single_cell_map_bitwise_identical() {
+    let physics = CrossbarPhysics { r_off: f64::INFINITY, ..CrossbarPhysics::default() };
+    let serial = single_cell_nf_map_with(9, 7, physics, &ParallelConfig::serial()).unwrap();
+    let par = single_cell_nf_map_with(9, 7, physics, &ParallelConfig::with_threads(4)).unwrap();
+    assert_eq!(serial.shape(), par.shape());
+    for (a, b) in serial.data().iter().zip(par.data()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// Whole-pipeline programming (plan + Eq.-17 distortion per tile): the
+/// effective weight matrix is bitwise identical however many workers
+/// programmed it.
+#[test]
+fn programmed_layer_bitwise_identical() {
+    let mut rng = Xoshiro256::seeded(3);
+    let data: Vec<f32> = (0..128 * 16).map(|_| rng.laplace(0.2) as f32).collect();
+    let w = Tensor::new(&[128, 16], data).unwrap();
+    let g = TileGeometry::new(32, 32, 8).unwrap();
+    let compile = |threads: usize| {
+        Pipeline::new(g)
+            .strategy("mdm")
+            .unwrap()
+            .eta_signed(-2e-3)
+            .parallel(ParallelConfig::with_threads(threads))
+            .compile(&w)
+            .unwrap()
+    };
+    let reference = compile(1);
+    let ref_data = reference.effective_weights().data();
+    for threads in [2usize, 4] {
+        let par = compile(threads);
+        for (a, b) in ref_data.iter().zip(par.effective_weights().data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads diverged");
+        }
+    }
+}
