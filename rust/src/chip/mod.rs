@@ -1,0 +1,565 @@
+//! Chip-level tile placement and wave scheduling (rust/DESIGN.md §8).
+//!
+//! The paper's system argument (§I) says PR forces DNN matrices into many
+//! small crossbar tiles; [`crate::crossbar`] prices one tiled layer and
+//! [`crate::coordinator`] serves requests, but nothing in between models
+//! the **chip** that physically holds the tile fleet. This module adds that
+//! missing layer:
+//!
+//! * [`ChipModel`] — a physical chip as a 2-D array of crossbar slots with
+//!   shared-ADC groups, a routing-distance model, an IR-drop-style PR
+//!   impact gradient across the die, and area/energy parameters.
+//! * [`TileBlock`] / [`ChipWorkload`] — the placement request: each layer's
+//!   tile grid (both differential sign parts), split into chip-sized
+//!   fragments, annotated with an NF sensitivity weight.
+//! * [`Placer`] implementations ([`placer_by_name`]) — greedy first-fit,
+//!   skyline and max-rects bin packing (the rpack family of heuristics),
+//!   and an NF-aware placer that parks high-NF-sensitivity fragments in
+//!   low-PR-impact slots.
+//! * [`Placement`] — the validated assignment (no overlap, every fragment
+//!   placed, spill to extra chips or to time-multiplexed reuse rounds per
+//!   [`SpillPolicy`]).
+//! * [`Scheduler`] — converts a placement plus the layer dependency chain
+//!   into execution [`Wave`]s and rolls them through
+//!   [`crate::crossbar::CostModel`] into a [`ChipReport`] (end-to-end
+//!   latency, energy, ADC conversions, utilization, chip count).
+//!
+//! Entry points: `mdm place` sweeps tile sizes × placers × strategies,
+//! [`crate::pipeline::ProgrammedLayer::place`] places one compiled layer,
+//! and [`crate::coordinator::Engine::place_on`] places a whole programmed
+//! model for per-worker cost attribution.
+
+mod placer;
+mod schedule;
+
+pub use placer::{placer_by_name, placer_names, FirstFit, MaxRects, NfAware, Placer, Skyline};
+pub use schedule::{fragment_cost, ChipReport, Scheduler, Wave};
+
+use crate::config::ChipSettings;
+use crate::crossbar::{LayerTiling, TileGeometry};
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Result};
+use std::fmt;
+use std::str::FromStr;
+
+/// What happens when a workload does not fit on one chip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillPolicy {
+    /// Spill onto additional parallel chips (region index = chip index).
+    MoreChips,
+    /// Time-multiplex one chip: region index = reuse round; rounds execute
+    /// sequentially and each later round pays a reprogramming cost.
+    Reuse,
+}
+
+impl fmt::Display for SpillPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            SpillPolicy::MoreChips => "chips",
+            SpillPolicy::Reuse => "reuse",
+        })
+    }
+}
+
+impl FromStr for SpillPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "chips" | "more_chips" | "spill" => Ok(SpillPolicy::MoreChips),
+            "reuse" | "rounds" => Ok(SpillPolicy::Reuse),
+            other => bail!("unknown spill policy {other:?} (chips|reuse)"),
+        }
+    }
+}
+
+/// A physical CIM chip: a `slot_rows × slot_cols` array of crossbar slots,
+/// each holding one tile of `geometry`, with ISAAC-style shared ADCs and an
+/// on-die routing/PR-impact model. Absolute constants are indicative (as in
+/// [`crate::crossbar::CostModel`]); the *relative* effect of tile size and
+/// placement is what the harness reports.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChipModel {
+    /// Crossbar slots per chip column (vertical).
+    pub slot_rows: usize,
+    /// Crossbar slots per chip row (horizontal).
+    pub slot_cols: usize,
+    /// Tile geometry of every slot's crossbar.
+    pub geometry: TileGeometry,
+    /// Consecutive slots in a chip row sharing one ADC; conversions of
+    /// co-active slots in a group serialize.
+    pub adc_group: usize,
+    /// Peak extra PR impact at the far corner of the die relative to the
+    /// I/O corner (IR-drop-style gradient; 0 = uniform die).
+    pub pr_gradient: f64,
+    /// Routing latency per slot hop from the I/O corner, nanoseconds.
+    pub route_ns_per_hop: f64,
+    /// Routing energy per byte per slot hop, picojoules.
+    pub route_pj_per_byte_hop: f64,
+    /// Latency of reprogramming the chip for one reuse round, nanoseconds.
+    pub reprogram_ns: f64,
+    /// Energy of reprogramming one crossbar cell, picojoules.
+    pub reprogram_pj_per_cell: f64,
+    /// Die area of one crossbar slot, mm².
+    pub slot_area_mm2: f64,
+    /// Die area of one shared ADC, mm².
+    pub adc_area_mm2: f64,
+    /// What to do when the workload exceeds one chip.
+    pub spill: SpillPolicy,
+}
+
+impl Default for ChipModel {
+    fn default() -> Self {
+        Self {
+            slot_rows: 16,
+            slot_cols: 16,
+            geometry: TileGeometry::paper_eval(),
+            adc_group: 4,
+            pr_gradient: 0.5,
+            route_ns_per_hop: 2.0,
+            route_pj_per_byte_hop: 0.05,
+            reprogram_ns: 1e5,
+            reprogram_pj_per_cell: 10.0,
+            slot_area_mm2: 0.002,
+            adc_area_mm2: 0.0012,
+            spill: SpillPolicy::MoreChips,
+        }
+    }
+}
+
+impl ChipModel {
+    /// Build a chip from the `[chip]` config section (geometry stays at the
+    /// paper default; sweeps override it per tile size).
+    pub fn from_settings(s: &ChipSettings) -> Result<Self> {
+        let chip = Self {
+            slot_rows: s.rows,
+            slot_cols: s.cols,
+            adc_group: s.adc_group,
+            pr_gradient: s.pr_gradient,
+            spill: s.spill.parse()?,
+            ..Self::default()
+        };
+        chip.validate()?;
+        Ok(chip)
+    }
+
+    /// Validate the slot grid and group parameters.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.slot_rows >= 1 && self.slot_cols >= 1, "degenerate chip slot grid");
+        ensure!(self.adc_group >= 1, "adc_group must be >= 1");
+        ensure!(self.pr_gradient >= 0.0, "pr_gradient must be >= 0");
+        Ok(())
+    }
+
+    /// Crossbar slots per chip.
+    pub fn n_slots(&self) -> usize {
+        self.slot_rows * self.slot_cols
+    }
+
+    /// Shared ADCs per chip (`adc_group` slots of each chip row share one).
+    pub fn adc_groups_per_chip(&self) -> usize {
+        self.slot_rows * self.slot_cols.div_ceil(self.adc_group)
+    }
+
+    /// Manhattan hop distance of a slot from the chip's I/O corner (0, 0).
+    pub fn hops(&self, slot_row: usize, slot_col: usize) -> usize {
+        slot_row + slot_col
+    }
+
+    /// PR impact factor of a slot: 1 at the I/O corner, `1 + pr_gradient`
+    /// at the far corner, linear in hop distance in between.
+    pub fn slot_pr_factor(&self, slot_row: usize, slot_col: usize) -> f64 {
+        let span = (self.slot_rows + self.slot_cols).saturating_sub(2).max(1) as f64;
+        1.0 + self.pr_gradient * self.hops(slot_row, slot_col) as f64 / span
+    }
+
+    /// Die area of `chips` physical chips, mm² (slots + shared ADCs).
+    pub fn area_mm2(&self, chips: usize) -> f64 {
+        chips as f64
+            * (self.n_slots() as f64 * self.slot_area_mm2
+                + self.adc_groups_per_chip() as f64 * self.adc_area_mm2)
+    }
+}
+
+/// One placement request fragment: a rectangular piece of a layer's tile
+/// grid that fits within a single chip's slot array.
+#[derive(Debug, Clone)]
+pub struct TileBlock {
+    /// Human-readable origin, e.g. `conv3.p[0,2]` (sign part + grid chunk).
+    pub label: String,
+    /// Dependency stage: fragments of stage `n + 1` consume stage `n`.
+    pub layer: usize,
+    /// Origin of this fragment in its part's tile grid (row-chunk,
+    /// col-chunk).
+    pub grid_origin: (usize, usize),
+    /// Fragment height in slots (tile-grid rows covered).
+    pub rows: usize,
+    /// Fragment width in slots (tile-grid columns covered).
+    pub cols: usize,
+    /// Fan-in of the sign part this fragment belongs to.
+    pub fan_in: usize,
+    /// Fan-out of the sign part this fragment belongs to.
+    pub fan_out: usize,
+    /// Per-slot NF sensitivity weight (higher = suffers more from
+    /// high-PR-impact slots); see [`Placement::nf_weighted_cost`].
+    pub nf_weight: f64,
+}
+
+impl TileBlock {
+    /// Slots this fragment occupies.
+    pub fn n_slots(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Everything a [`Placer`] needs: the chip and the fragment list.
+#[derive(Debug, Clone)]
+pub struct ChipWorkload {
+    /// The chip the fragments are placed onto.
+    pub chip: ChipModel,
+    /// Fragments to place (chip-sized by construction).
+    pub blocks: Vec<TileBlock>,
+}
+
+impl ChipWorkload {
+    /// Start an empty workload on a chip.
+    pub fn new(chip: ChipModel) -> Result<Self> {
+        chip.validate()?;
+        Ok(Self { chip, blocks: Vec::new() })
+    }
+
+    /// Add one signed layer: both differential sign parts are tiled at the
+    /// chip's geometry ([`LayerTiling::grid_for`]) and split into fragments
+    /// of at most `slot_rows × slot_cols`, all sharing `nf_weight`.
+    pub fn add_layer(
+        &mut self,
+        label: &str,
+        layer: usize,
+        fan_in: usize,
+        fan_out: usize,
+        nf_weight: f64,
+    ) -> Result<()> {
+        ensure!(fan_in >= 1 && fan_out >= 1, "degenerate layer {fan_in}x{fan_out}");
+        let (grid_rows, grid_cols) = LayerTiling::grid_for(fan_in, fan_out, self.chip.geometry);
+        for part in ["p", "n"] {
+            let mut r0 = 0;
+            while r0 < grid_rows {
+                let h = (grid_rows - r0).min(self.chip.slot_rows);
+                let mut c0 = 0;
+                while c0 < grid_cols {
+                    let w = (grid_cols - c0).min(self.chip.slot_cols);
+                    self.blocks.push(TileBlock {
+                        label: format!("{label}.{part}[{r0},{c0}]"),
+                        layer,
+                        grid_origin: (r0, c0),
+                        rows: h,
+                        cols: w,
+                        fan_in,
+                        fan_out,
+                        nf_weight,
+                    });
+                    c0 += w;
+                }
+                r0 += h;
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of dependency stages (`max layer + 1`; 0 when empty).
+    pub fn n_layers(&self) -> usize {
+        self.blocks.iter().map(|b| b.layer + 1).max().unwrap_or(0)
+    }
+
+    /// Total slots requested by all fragments.
+    pub fn total_slots(&self) -> usize {
+        self.blocks.iter().map(|b| b.n_slots()).sum()
+    }
+}
+
+/// Where one fragment landed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlacedBlock {
+    /// Index into [`Placement::blocks`].
+    pub block: usize,
+    /// Region: chip index under [`SpillPolicy::MoreChips`], reuse round
+    /// under [`SpillPolicy::Reuse`].
+    pub region: usize,
+    /// Slot row of the fragment's origin.
+    pub row: usize,
+    /// Slot column of the fragment's origin.
+    pub col: usize,
+}
+
+/// A complete tile→slot assignment produced by a [`Placer`].
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// The chip the fragments were placed onto.
+    pub chip: ChipModel,
+    /// The fragments (copied from the workload).
+    pub blocks: Vec<TileBlock>,
+    /// One entry per fragment.
+    pub placed: Vec<PlacedBlock>,
+    /// Registry name of the placer that produced this assignment.
+    pub placer: &'static str,
+    /// Regions used (chips or reuse rounds per the spill policy).
+    pub regions: usize,
+}
+
+impl Placement {
+    /// Check the assignment: every fragment placed exactly once, in bounds,
+    /// and no two fragments overlapping within a region.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.placed.len() == self.blocks.len(),
+            "{} fragments placed, {} requested",
+            self.placed.len(),
+            self.blocks.len()
+        );
+        let (rows, cols) = (self.chip.slot_rows, self.chip.slot_cols);
+        let mut seen = vec![false; self.blocks.len()];
+        let mut occ = vec![false; self.regions * rows * cols];
+        for p in &self.placed {
+            ensure!(p.block < self.blocks.len(), "placed unknown fragment {}", p.block);
+            ensure!(!seen[p.block], "fragment {} placed twice", p.block);
+            seen[p.block] = true;
+            ensure!(p.region < self.regions, "fragment {} in unknown region {}", p.block, p.region);
+            let b = &self.blocks[p.block];
+            ensure!(b.rows >= 1 && b.cols >= 1, "degenerate fragment {} ({})", p.block, b.label);
+            ensure!(
+                p.row + b.rows <= rows && p.col + b.cols <= cols,
+                "fragment {} ({}) out of bounds at ({}, {})",
+                p.block,
+                b.label,
+                p.row,
+                p.col
+            );
+            for r in p.row..p.row + b.rows {
+                for c in p.col..p.col + b.cols {
+                    let idx = (p.region * rows + r) * cols + c;
+                    ensure!(!occ[idx], "fragment {} ({}) overlaps at ({r}, {c})", p.block, b.label);
+                    occ[idx] = true;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Slots occupied across all regions.
+    pub fn occupied_slots(&self) -> usize {
+        self.blocks.iter().map(|b| b.n_slots()).sum()
+    }
+
+    /// Occupied fraction of the provisioned slot capacity.
+    pub fn utilization(&self) -> f64 {
+        let cap = self.regions.max(1) * self.chip.n_slots();
+        self.occupied_slots() as f64 / cap as f64
+    }
+
+    /// Physical chips used (1 under [`SpillPolicy::Reuse`]).
+    pub fn chips(&self) -> usize {
+        match self.chip.spill {
+            SpillPolicy::MoreChips => self.regions.max(1),
+            SpillPolicy::Reuse => 1,
+        }
+    }
+
+    /// Sequential reuse rounds (1 under [`SpillPolicy::MoreChips`]).
+    pub fn rounds(&self) -> usize {
+        match self.chip.spill {
+            SpillPolicy::MoreChips => 1,
+            SpillPolicy::Reuse => self.regions.max(1),
+        }
+    }
+
+    /// Total NF-weighted placement cost: for each fragment,
+    /// `nf_weight × Σ slot_pr_factor` over the slots it occupies — the
+    /// objective the NF-aware placer minimizes (lower is better).
+    pub fn nf_weighted_cost(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for p in &self.placed {
+            let b = &self.blocks[p.block];
+            let mut factors = 0.0f64;
+            for r in p.row..p.row + b.rows {
+                for c in p.col..p.col + b.cols {
+                    factors += self.chip.slot_pr_factor(r, c);
+                }
+            }
+            acc += b.nf_weight * factors;
+        }
+        acc
+    }
+}
+
+/// A placement-priority proxy for a layer's NF sensitivity, computed from
+/// its signed weight matrix alone: the mean in-tile Manhattan distance of
+/// each nonzero weight's bit-column span center at the given geometry.
+/// (The exact bit-plane NF needs quantization — [`crate::pipeline::Pipeline::sampled_nf`];
+/// this proxy ranks layers without it, which is all placement needs.)
+pub fn weight_nf_proxy(w: &Tensor, geometry: TileGeometry) -> f64 {
+    assert_eq!(w.ndim(), 2, "layer matrix must be 2-D");
+    let wpr = geometry.weights_per_row();
+    let half = (geometry.k_bits - 1) as f64 / 2.0;
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for r in 0..w.rows() {
+        let j = (r % geometry.rows) as f64;
+        for (c, &v) in w.row(r).iter().enumerate() {
+            if v != 0.0 {
+                let wc = c % wpr;
+                acc += j + (wc * geometry.k_bits) as f64 + half;
+                n += 1;
+            }
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        acc / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_defaults_are_valid() {
+        let chip = ChipModel::default();
+        chip.validate().unwrap();
+        assert_eq!(chip.n_slots(), 256);
+        assert_eq!(chip.adc_groups_per_chip(), 16 * 4);
+        assert!((chip.slot_pr_factor(0, 0) - 1.0).abs() < 1e-12);
+        assert!(
+            (chip.slot_pr_factor(15, 15) - (1.0 + chip.pr_gradient)).abs() < 1e-12,
+            "far corner factor"
+        );
+        assert!(chip.area_mm2(2) > chip.area_mm2(1));
+    }
+
+    #[test]
+    fn spill_policy_parses_and_displays() {
+        assert_eq!("chips".parse::<SpillPolicy>().unwrap(), SpillPolicy::MoreChips);
+        assert_eq!("reuse".parse::<SpillPolicy>().unwrap(), SpillPolicy::Reuse);
+        assert!("nope".parse::<SpillPolicy>().is_err());
+        assert_eq!(SpillPolicy::Reuse.to_string(), "reuse");
+    }
+
+    #[test]
+    fn workload_fragments_cover_the_grid_exactly() {
+        let chip = ChipModel {
+            slot_rows: 4,
+            slot_cols: 4,
+            geometry: TileGeometry::new(16, 32, 8).unwrap(), // 4 weights/row
+            ..ChipModel::default()
+        };
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        // 96x24 layer: grid 6 x 6 per part -> fragments 2x2 per part of
+        // sizes {4,2} x {4,2}.
+        wl.add_layer("l0", 0, 96, 24, 1.0).unwrap();
+        assert_eq!(wl.blocks.len(), 8); // 4 fragments per sign part
+        assert_eq!(wl.total_slots(), 2 * 6 * 6);
+        assert_eq!(wl.n_layers(), 1);
+        // Every grid cell of each part covered exactly once.
+        for part in ["p", "n"] {
+            let mut covered = vec![vec![false; 6]; 6];
+            for b in wl.blocks.iter().filter(|b| b.label.contains(&format!(".{part}["))) {
+                assert!(b.rows <= 4 && b.cols <= 4, "{b:?}");
+                for r in b.grid_origin.0..b.grid_origin.0 + b.rows {
+                    for c in b.grid_origin.1..b.grid_origin.1 + b.cols {
+                        assert!(!covered[r][c], "double cover at ({r},{c})");
+                        covered[r][c] = true;
+                    }
+                }
+            }
+            assert!(covered.iter().all(|row| row.iter().all(|&x| x)), "{part} part gap");
+        }
+    }
+
+    #[test]
+    fn placement_validation_catches_overlap_and_missing() {
+        let chip = ChipModel { slot_rows: 2, slot_cols: 2, ..ChipModel::default() };
+        let block = |label: &str| TileBlock {
+            label: label.into(),
+            layer: 0,
+            grid_origin: (0, 0),
+            rows: 1,
+            cols: 2,
+            fan_in: 64,
+            fan_out: 8,
+            nf_weight: 1.0,
+        };
+        let blocks = vec![block("a"), block("b")];
+        let ok = Placement {
+            chip,
+            blocks: blocks.clone(),
+            placed: vec![
+                PlacedBlock { block: 0, region: 0, row: 0, col: 0 },
+                PlacedBlock { block: 1, region: 0, row: 1, col: 0 },
+            ],
+            placer: "test",
+            regions: 1,
+        };
+        ok.validate().unwrap();
+        assert_eq!(ok.occupied_slots(), 4);
+        assert!((ok.utilization() - 1.0).abs() < 1e-12);
+
+        let overlapping = Placement {
+            placed: vec![
+                PlacedBlock { block: 0, region: 0, row: 0, col: 0 },
+                PlacedBlock { block: 1, region: 0, row: 0, col: 0 },
+            ],
+            ..ok.clone()
+        };
+        assert!(overlapping.validate().is_err());
+
+        let missing = Placement {
+            placed: vec![PlacedBlock { block: 0, region: 0, row: 0, col: 0 }],
+            ..ok.clone()
+        };
+        assert!(missing.validate().is_err());
+
+        let oob = Placement {
+            placed: vec![
+                PlacedBlock { block: 0, region: 0, row: 0, col: 1 },
+                PlacedBlock { block: 1, region: 0, row: 1, col: 0 },
+            ],
+            ..ok
+        };
+        assert!(oob.validate().is_err());
+    }
+
+    #[test]
+    fn nf_weighted_cost_prefers_the_io_corner() {
+        let chip = ChipModel { slot_rows: 4, slot_cols: 4, ..ChipModel::default() };
+        let blocks = vec![TileBlock {
+            label: "a".into(),
+            layer: 0,
+            grid_origin: (0, 0),
+            rows: 1,
+            cols: 1,
+            fan_in: 64,
+            fan_out: 8,
+            nf_weight: 2.0,
+        }];
+        let at = |row, col| Placement {
+            chip,
+            blocks: blocks.clone(),
+            placed: vec![PlacedBlock { block: 0, region: 0, row, col }],
+            placer: "test",
+            regions: 1,
+        };
+        assert!(at(0, 0).nf_weighted_cost() < at(3, 3).nf_weighted_cost());
+        assert!((at(0, 0).nf_weighted_cost() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_nf_proxy_ranks_far_columns_higher() {
+        let g = TileGeometry::new(8, 16, 8).unwrap(); // 2 weights/row
+        // One weight in logical column 0 vs one in column 1.
+        let near = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 0.0]).unwrap();
+        let far = Tensor::new(&[2, 2], vec![0.0, 1.0, 0.0, 0.0]).unwrap();
+        assert!(weight_nf_proxy(&far, g) > weight_nf_proxy(&near, g));
+        assert_eq!(weight_nf_proxy(&Tensor::zeros(&[2, 2]), g), 0.0);
+    }
+}

@@ -1,0 +1,560 @@
+//! Placement heuristics: tile-grid fragments → chip slots.
+//!
+//! Four [`Placer`]s are registered (resolved by string via
+//! [`placer_by_name`], mirroring the mapping-strategy registry):
+//!
+//! | name | heuristic |
+//! |---|---|
+//! | `firstfit` | greedy first-fit in input order, row-major scan |
+//! | `skyline` | bottom-left skyline packing (the rpack/texture-packer default) |
+//! | `maxrects` | max-rects with best-short-side-fit splitting |
+//! | `nf_aware` | sensitivity-ordered min-PR-impact greedy; never worse than `firstfit` on [`Placement::nf_weighted_cost`] by construction |
+//!
+//! All placers fill open regions before spilling to a new one (a new chip
+//! or a new reuse round per [`super::SpillPolicy`]), and all are fully
+//! deterministic: blocks are ordered by explicit keys with stable
+//! tie-breaks, so repeated runs — and runs inside the [`crate::parallel`]
+//! fan-out — produce bitwise-identical placements.
+
+use super::{ChipWorkload, PlacedBlock, Placement};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// A placement heuristic: assigns every fragment of a [`ChipWorkload`] to a
+/// slot rectangle, spilling to new regions when a chip fills up.
+pub trait Placer: std::fmt::Debug + Send + Sync {
+    /// Registry name of the placer.
+    fn name(&self) -> &'static str;
+    /// One-line description for `mdm place` listings.
+    fn description(&self) -> &'static str;
+    /// Place the workload; the result passes [`Placement::validate`].
+    fn place(&self, workload: &ChipWorkload) -> Result<Placement>;
+}
+
+/// Resolve a placer by registry name.
+pub fn placer_by_name(name: &str) -> Result<Arc<dyn Placer>> {
+    match name {
+        "firstfit" | "first_fit" | "greedy" => Ok(Arc::new(FirstFit)),
+        "skyline" => Ok(Arc::new(Skyline)),
+        "maxrects" | "max_rects" => Ok(Arc::new(MaxRects)),
+        "nf_aware" | "nfaware" | "nf" => Ok(Arc::new(NfAware)),
+        other => anyhow::bail!(
+            "unknown placer {other:?}; known: firstfit, skyline, maxrects, nf_aware"
+        ),
+    }
+}
+
+/// Registered placer names with descriptions (for CLI listings).
+pub fn placer_names() -> Vec<(&'static str, &'static str)> {
+    vec![
+        (FirstFit.name(), FirstFit.description()),
+        (Skyline.name(), Skyline.description()),
+        (MaxRects.name(), MaxRects.description()),
+        (NfAware.name(), NfAware.description()),
+    ]
+}
+
+/// Occupancy grid of one region.
+struct SlotGrid {
+    rows: usize,
+    cols: usize,
+    occ: Vec<bool>,
+    free: usize,
+}
+
+impl SlotGrid {
+    fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, occ: vec![false; rows * cols], free: rows * cols }
+    }
+
+    fn fits(&self, r: usize, c: usize, h: usize, w: usize) -> bool {
+        if r + h > self.rows || c + w > self.cols {
+            return false;
+        }
+        for i in r..r + h {
+            for j in c..c + w {
+                if self.occ[i * self.cols + j] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    fn mark(&mut self, r: usize, c: usize, h: usize, w: usize) {
+        for i in r..r + h {
+            for j in c..c + w {
+                debug_assert!(!self.occ[i * self.cols + j]);
+                self.occ[i * self.cols + j] = true;
+            }
+        }
+        self.free -= h * w;
+    }
+}
+
+/// Check that every fragment individually fits an empty chip (guaranteed by
+/// [`ChipWorkload::add_layer`], but placers accept hand-built workloads).
+fn check_fragment_bounds(workload: &ChipWorkload) -> Result<()> {
+    let chip = &workload.chip;
+    for b in &workload.blocks {
+        ensure!(
+            b.rows >= 1
+                && b.cols >= 1
+                && b.rows <= chip.slot_rows
+                && b.cols <= chip.slot_cols,
+            "fragment {} ({}x{}) exceeds the {}x{} slot array",
+            b.label,
+            b.rows,
+            b.cols,
+            chip.slot_rows,
+            chip.slot_cols
+        );
+    }
+    Ok(())
+}
+
+/// Greedy first-fit: fragments in input order, first free rectangle in
+/// (region, row, col) scan order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FirstFit;
+
+impl Placer for FirstFit {
+    fn name(&self) -> &'static str {
+        "firstfit"
+    }
+
+    fn description(&self) -> &'static str {
+        "greedy first-fit in input order (row-major scan, spill on overflow)"
+    }
+
+    fn place(&self, workload: &ChipWorkload) -> Result<Placement> {
+        check_fragment_bounds(workload)?;
+        let chip = workload.chip;
+        let mut regions = vec![SlotGrid::new(chip.slot_rows, chip.slot_cols)];
+        let mut placed = Vec::with_capacity(workload.blocks.len());
+        for (bi, b) in workload.blocks.iter().enumerate() {
+            let mut spot = None;
+            'search: for (gi, g) in regions.iter().enumerate() {
+                if g.free < b.n_slots() {
+                    continue;
+                }
+                for r in 0..=chip.slot_rows - b.rows {
+                    for c in 0..=chip.slot_cols - b.cols {
+                        if g.fits(r, c, b.rows, b.cols) {
+                            spot = Some((gi, r, c));
+                            break 'search;
+                        }
+                    }
+                }
+            }
+            let (gi, r, c) = spot.unwrap_or_else(|| {
+                regions.push(SlotGrid::new(chip.slot_rows, chip.slot_cols));
+                (regions.len() - 1, 0, 0)
+            });
+            regions[gi].mark(r, c, b.rows, b.cols);
+            placed.push(PlacedBlock { block: bi, region: gi, row: r, col: c });
+        }
+        Ok(Placement {
+            chip,
+            blocks: workload.blocks.clone(),
+            placed,
+            placer: self.name(),
+            regions: regions.len(),
+        })
+    }
+}
+
+/// Bottom-left skyline packing (the heuristic behind rpack's
+/// texture-packer): per region, keep one fill height per slot column; place
+/// each fragment (tallest first) at the lowest feasible skyline position.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Skyline;
+
+impl Placer for Skyline {
+    fn name(&self) -> &'static str {
+        "skyline"
+    }
+
+    fn description(&self) -> &'static str {
+        "bottom-left skyline packing, tallest fragment first (a la rpack)"
+    }
+
+    fn place(&self, workload: &ChipWorkload) -> Result<Placement> {
+        check_fragment_bounds(workload)?;
+        let chip = workload.chip;
+        let mut order: Vec<usize> = (0..workload.blocks.len()).collect();
+        order.sort_by_key(|&i| {
+            let b = &workload.blocks[i];
+            (std::cmp::Reverse(b.rows), std::cmp::Reverse(b.cols), i)
+        });
+        let mut lines: Vec<Vec<usize>> = vec![vec![0; chip.slot_cols]];
+        let mut placed = vec![None; workload.blocks.len()];
+        for &bi in &order {
+            let b = &workload.blocks[bi];
+            let mut spot = None;
+            for (gi, heights) in lines.iter().enumerate() {
+                let mut best: Option<(usize, usize)> = None; // (y, x)
+                for x in 0..=chip.slot_cols - b.cols {
+                    let y = heights[x..x + b.cols].iter().copied().max().unwrap_or(0);
+                    let better = match best {
+                        None => true,
+                        Some((by, _)) => y < by,
+                    };
+                    if y + b.rows <= chip.slot_rows && better {
+                        best = Some((y, x));
+                    }
+                }
+                if let Some((y, x)) = best {
+                    spot = Some((gi, y, x));
+                    break;
+                }
+            }
+            let (gi, y, x) = spot.unwrap_or_else(|| {
+                lines.push(vec![0; chip.slot_cols]);
+                (lines.len() - 1, 0, 0)
+            });
+            for h in &mut lines[gi][x..x + b.cols] {
+                *h = y + b.rows;
+            }
+            placed[bi] = Some(PlacedBlock { block: bi, region: gi, row: y, col: x });
+        }
+        Ok(Placement {
+            chip,
+            blocks: workload.blocks.clone(),
+            placed: placed.into_iter().map(|p| p.expect("every fragment placed")).collect(),
+            placer: self.name(),
+            regions: lines.len(),
+        })
+    }
+}
+
+/// A maximal free rectangle `(row, col, height, width)`.
+type Rect = (usize, usize, usize, usize);
+
+fn rect_contains(outer: &Rect, inner: &Rect) -> bool {
+    outer.0 <= inner.0
+        && outer.1 <= inner.1
+        && outer.0 + outer.2 >= inner.0 + inner.2
+        && outer.1 + outer.3 >= inner.1 + inner.3
+}
+
+/// Max-rects packing with best-short-side-fit: per region, maintain the set
+/// of maximal free rectangles; place each fragment (tallest first) into the
+/// free rectangle leaving the smallest short-side leftover, then split and
+/// prune the free set.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MaxRects;
+
+impl Placer for MaxRects {
+    fn name(&self) -> &'static str {
+        "maxrects"
+    }
+
+    fn description(&self) -> &'static str {
+        "max-rects packing, best-short-side-fit split rule"
+    }
+
+    fn place(&self, workload: &ChipWorkload) -> Result<Placement> {
+        check_fragment_bounds(workload)?;
+        let chip = workload.chip;
+        let full: Rect = (0, 0, chip.slot_rows, chip.slot_cols);
+        let mut order: Vec<usize> = (0..workload.blocks.len()).collect();
+        order.sort_by_key(|&i| {
+            let b = &workload.blocks[i];
+            (std::cmp::Reverse(b.rows), std::cmp::Reverse(b.cols), i)
+        });
+        let mut regions: Vec<Vec<Rect>> = vec![vec![full]];
+        let mut placed = vec![None; workload.blocks.len()];
+        for &bi in &order {
+            let b = &workload.blocks[bi];
+            let (h, w) = (b.rows, b.cols);
+            let mut spot = None;
+            for (gi, frees) in regions.iter().enumerate() {
+                // Best-short-side-fit with (short, long, row, col) tie-break.
+                let mut best: Option<(usize, usize, usize, usize)> = None;
+                for &(fr, fc, fh, fw) in frees {
+                    if h <= fh && w <= fw {
+                        let s = (fh - h).min(fw - w);
+                        let l = (fh - h).max(fw - w);
+                        let key = (s, l, fr, fc);
+                        let better = match best {
+                            None => true,
+                            Some(k) => key < k,
+                        };
+                        if better {
+                            best = Some(key);
+                        }
+                    }
+                }
+                if let Some((_, _, r, c)) = best {
+                    spot = Some((gi, r, c));
+                    break;
+                }
+            }
+            let (gi, r, c) = spot.unwrap_or_else(|| {
+                regions.push(vec![full]);
+                (regions.len() - 1, 0, 0)
+            });
+            // Split every free rect the placed rect intersects, then prune
+            // rects contained in another.
+            let mut split: Vec<Rect> = Vec::new();
+            for &(fr, fc, fh, fw) in &regions[gi] {
+                let disjoint = r + h <= fr || fr + fh <= r || c + w <= fc || fc + fw <= c;
+                if disjoint {
+                    split.push((fr, fc, fh, fw));
+                    continue;
+                }
+                if fr < r {
+                    split.push((fr, fc, r - fr, fw));
+                }
+                if fr + fh > r + h {
+                    split.push((r + h, fc, fr + fh - (r + h), fw));
+                }
+                if fc < c {
+                    split.push((fr, fc, fh, c - fc));
+                }
+                if fc + fw > c + w {
+                    split.push((fr, c + w, fh, fc + fw - (c + w)));
+                }
+            }
+            split.sort_unstable();
+            split.dedup();
+            let mut pruned: Vec<Rect> = Vec::with_capacity(split.len());
+            for (i, a) in split.iter().enumerate() {
+                let contained =
+                    split.iter().enumerate().any(|(j, other)| j != i && rect_contains(other, a));
+                if !contained {
+                    pruned.push(*a);
+                }
+            }
+            regions[gi] = pruned;
+            placed[bi] = Some(PlacedBlock { block: bi, region: gi, row: r, col: c });
+        }
+        Ok(Placement {
+            chip,
+            blocks: workload.blocks.clone(),
+            placed: placed.into_iter().map(|p| p.expect("every fragment placed")).collect(),
+            placer: self.name(),
+            regions: regions.len(),
+        })
+    }
+}
+
+/// NF-aware placement: fragments in descending NF-sensitivity order, each
+/// to the feasible rectangle with the lowest total
+/// [`super::ChipModel::slot_pr_factor`] — high-sensitivity tiles end up in
+/// low-PR-impact slots near the I/O corner. The result is compared against
+/// [`FirstFit`] under [`Placement::nf_weighted_cost`] and the cheaper of
+/// the two is returned, so `nf_aware` is never worse than the greedy
+/// baseline on that objective.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NfAware;
+
+impl Placer for NfAware {
+    fn name(&self) -> &'static str {
+        "nf_aware"
+    }
+
+    fn description(&self) -> &'static str {
+        "high-NF-sensitivity fragments into low-PR-impact slots (<= firstfit cost)"
+    }
+
+    fn place(&self, workload: &ChipWorkload) -> Result<Placement> {
+        check_fragment_bounds(workload)?;
+        let chip = workload.chip;
+        let mut order: Vec<usize> = (0..workload.blocks.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (ba, bb) = (&workload.blocks[a], &workload.blocks[b]);
+            bb.nf_weight
+                .total_cmp(&ba.nf_weight)
+                .then_with(|| bb.n_slots().cmp(&ba.n_slots()))
+                .then_with(|| a.cmp(&b))
+        });
+        let mut regions = vec![SlotGrid::new(chip.slot_rows, chip.slot_cols)];
+        let mut placed = vec![None; workload.blocks.len()];
+        for &bi in &order {
+            let b = &workload.blocks[bi];
+            let mut best: Option<(f64, usize, usize, usize)> = None; // (cost, gi, r, c)
+            for (gi, g) in regions.iter().enumerate() {
+                if g.free < b.n_slots() {
+                    continue;
+                }
+                for r in 0..=chip.slot_rows - b.rows {
+                    for c in 0..=chip.slot_cols - b.cols {
+                        if !g.fits(r, c, b.rows, b.cols) {
+                            continue;
+                        }
+                        let mut cost = 0.0f64;
+                        for rr in r..r + b.rows {
+                            for cc in c..c + b.cols {
+                                cost += chip.slot_pr_factor(rr, cc);
+                            }
+                        }
+                        let better = match best {
+                            None => true,
+                            Some((bc, bg, br, bcc)) => {
+                                cost < bc
+                                    || (cost == bc && (gi, r, c) < (bg, br, bcc))
+                            }
+                        };
+                        if better {
+                            best = Some((cost, gi, r, c));
+                        }
+                    }
+                }
+            }
+            let (gi, r, c) = match best {
+                Some((_, gi, r, c)) => (gi, r, c),
+                None => {
+                    regions.push(SlotGrid::new(chip.slot_rows, chip.slot_cols));
+                    (regions.len() - 1, 0, 0)
+                }
+            };
+            regions[gi].mark(r, c, b.rows, b.cols);
+            placed[bi] = Some(PlacedBlock { block: bi, region: gi, row: r, col: c });
+        }
+        let own = Placement {
+            chip,
+            blocks: workload.blocks.clone(),
+            placed: placed.into_iter().map(|p| p.expect("every fragment placed")).collect(),
+            placer: self.name(),
+            regions: regions.len(),
+        };
+        // Guarantee: never worse than the greedy baseline on the NF
+        // objective (the sensitivity-first order can occasionally pack
+        // worse; take the cheaper assignment).
+        let baseline = FirstFit.place(workload)?;
+        if baseline.nf_weighted_cost() < own.nf_weighted_cost() {
+            Ok(Placement { placer: self.name(), ..baseline })
+        } else {
+            Ok(own)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::{ChipModel, SpillPolicy};
+    use crate::crossbar::TileGeometry;
+    use crate::rng::Xoshiro256;
+
+    fn random_workload(seed: u64, n: usize, chip: ChipModel) -> ChipWorkload {
+        // Hand-built fragments (not via add_layer) to cover odd shapes.
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        for i in 0..n {
+            let rows = 1 + rng.below(chip.slot_rows as u64) as usize;
+            let cols = 1 + rng.below(chip.slot_cols as u64) as usize;
+            wl.blocks.push(crate::chip::TileBlock {
+                label: format!("b{i}"),
+                layer: i / 4,
+                grid_origin: (0, 0),
+                rows,
+                cols,
+                fan_in: rows * chip.geometry.rows,
+                fan_out: cols * chip.geometry.weights_per_row(),
+                nf_weight: rng.uniform(),
+            });
+        }
+        wl
+    }
+
+    fn test_chip() -> ChipModel {
+        ChipModel {
+            slot_rows: 8,
+            slot_cols: 8,
+            geometry: TileGeometry::new(16, 32, 8).unwrap(),
+            ..ChipModel::default()
+        }
+    }
+
+    #[test]
+    fn all_placers_produce_valid_placements() {
+        for seed in [1u64, 2, 3] {
+            let wl = random_workload(seed, 23, test_chip());
+            for (name, _) in placer_names() {
+                let p = placer_by_name(name).unwrap().place(&wl).unwrap();
+                p.validate().unwrap_or_else(|e| panic!("{name} seed {seed}: {e:#}"));
+                assert_eq!(p.placed.len(), wl.blocks.len(), "{name}");
+                assert!(p.regions >= 1);
+                assert_eq!(p.placer, name);
+            }
+        }
+    }
+
+    #[test]
+    fn packers_never_use_more_regions_than_slot_count_demands() {
+        let wl = random_workload(7, 30, test_chip());
+        let lower_bound = wl.total_slots().div_ceil(wl.chip.n_slots());
+        for name in ["firstfit", "skyline", "maxrects", "nf_aware"] {
+            let p = placer_by_name(name).unwrap().place(&wl).unwrap();
+            assert!(p.regions >= lower_bound, "{name}: {} < {lower_bound}", p.regions);
+            // Generous upper bound: the degenerate one-fragment-per-region
+            // packing.
+            assert!(p.regions <= wl.blocks.len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn nf_aware_never_costlier_than_firstfit() {
+        for seed in [11u64, 12, 13, 14, 15] {
+            let wl = random_workload(seed, 19, test_chip());
+            let ff = FirstFit.place(&wl).unwrap();
+            let nf = NfAware.place(&wl).unwrap();
+            assert!(
+                nf.nf_weighted_cost() <= ff.nf_weighted_cost() + 1e-9,
+                "seed {seed}: nf {} vs ff {}",
+                nf.nf_weighted_cost(),
+                ff.nf_weighted_cost()
+            );
+        }
+    }
+
+    #[test]
+    fn placers_are_deterministic() {
+        let wl = random_workload(21, 17, test_chip());
+        for (name, _) in placer_names() {
+            let placer = placer_by_name(name).unwrap();
+            let a = placer.place(&wl).unwrap();
+            let b = placer.place(&wl).unwrap();
+            assert_eq!(a.placed, b.placed, "{name}");
+            assert_eq!(a.regions, b.regions, "{name}");
+        }
+    }
+
+    #[test]
+    fn oversized_fragment_is_rejected() {
+        let chip = test_chip();
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.blocks.push(crate::chip::TileBlock {
+            label: "huge".into(),
+            layer: 0,
+            grid_origin: (0, 0),
+            rows: chip.slot_rows + 1,
+            cols: 1,
+            fan_in: 64,
+            fan_out: 8,
+            nf_weight: 1.0,
+        });
+        for (name, _) in placer_names() {
+            assert!(placer_by_name(name).unwrap().place(&wl).is_err(), "{name}");
+        }
+    }
+
+    #[test]
+    fn reuse_spill_keeps_one_chip_many_rounds() {
+        let chip = ChipModel { spill: SpillPolicy::Reuse, ..test_chip() };
+        let wl = random_workload(5, 25, chip);
+        let p = FirstFit.place(&wl).unwrap();
+        p.validate().unwrap();
+        assert!(p.regions > 1, "workload should overflow one chip");
+        assert_eq!(p.chips(), 1);
+        assert_eq!(p.rounds(), p.regions);
+    }
+
+    #[test]
+    fn unknown_placer_is_an_error() {
+        assert!(placer_by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,447 @@
+//! Wave scheduling: a validated [`Placement`] plus the layer dependency
+//! chain → execution waves → chip-level cost roll-up.
+//!
+//! A feed-forward model executes layer by layer; all fragments of a layer
+//! that are resident at the same time form one **wave** and run
+//! concurrently. Under [`SpillPolicy::MoreChips`] every layer is a single
+//! wave (extra chips run in parallel); under [`SpillPolicy::Reuse`] a
+//! layer's fragments may be split across sequential reuse rounds, each
+//! paying a reprogramming cost. Per-wave cost comes from the same
+//! [`CostModel`] that prices single-layer tilings, extended with the
+//! chip-level effects the tiling model cannot see: shared-ADC
+//! serialization, routing distance, and reprogramming.
+
+use super::{ChipModel, Placement, SpillPolicy, TileBlock};
+use crate::crossbar::{CostModel, TileCost};
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+
+/// Closed-form [`CostModel::layer_cost`] for one fragment of a part's tile
+/// grid, without materializing any tiles: per covered grid cell the tile
+/// dimensions follow from the geometry and the part's `fan_in`/`fan_out`,
+/// so summing fragment costs over a part's fragments reproduces the tiled
+/// layer cost exactly (adc/sync/io; asserted in tests). `latency_ns` is the
+/// fragment's un-shared serial slot time — [`Scheduler::schedule`] replaces
+/// it with the slot-level wave time under ADC sharing and routing.
+pub fn fragment_cost(
+    chip: &ChipModel,
+    block: &TileBlock,
+    cost: &CostModel,
+    batch: usize,
+) -> TileCost {
+    let g = chip.geometry;
+    let wpr = g.weights_per_row();
+    let b = batch as u64;
+    let mut adc = 0u64;
+    let mut io = 0u64;
+    let mut sync = 0u64;
+    let mut max_cols = 0u64;
+    for gc in block.grid_origin.1..block.grid_origin.1 + block.cols {
+        let nw = wpr.min(block.fan_out.saturating_sub(gc * wpr));
+        let tile_cols = (nw * g.k_bits) as u64;
+        max_cols = max_cols.max(tile_cols);
+        for gr in block.grid_origin.0..block.grid_origin.0 + block.rows {
+            let tile_rows = g.rows.min(block.fan_in.saturating_sub(gr * g.rows)) as u64;
+            adc += tile_cols * b;
+            io += (tile_rows as f64 * cost.bytes_per_input) as u64 * b
+                + (tile_cols as f64 * cost.bytes_per_output) as u64 * b;
+            if gr > 0 {
+                // Merge of this row-chunk's partial into the previous one.
+                sync += b;
+            }
+        }
+    }
+    TileCost {
+        adc_conversions: adc,
+        sync_events: sync,
+        io_bytes: io,
+        latency_ns: (cost.tile_settle_ns + max_cols as f64 * cost.adc.time_per_conv_ns)
+            * batch as f64,
+        energy_pj: adc as f64 * cost.adc.energy_per_conv_pj,
+    }
+}
+
+/// One execution wave: fragments resident and running concurrently.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Wave {
+    /// Dependency stage this wave executes.
+    pub layer: usize,
+    /// Reuse round (always 0 under [`SpillPolicy::MoreChips`]).
+    pub round: usize,
+    /// Fragments in the wave.
+    pub blocks: usize,
+    /// Slots occupied by the wave.
+    pub occupied_slots: usize,
+    /// ADC conversions performed by the wave (whole batch).
+    pub adc_conversions: u64,
+    /// Partial-sum merge events performed by the wave (whole batch).
+    pub sync_events: u64,
+    /// I/O bytes moved by the wave (whole batch).
+    pub io_bytes: u64,
+    /// Wave wall time, nanoseconds (slot-parallel, ADC-group-serialized,
+    /// plus routing, merge chain, and reprogramming where applicable).
+    pub latency_ns: f64,
+    /// Wave energy, picojoules (conversions + routing + reprogramming).
+    pub energy_pj: f64,
+}
+
+/// End-to-end roll-up of a placement: per-wave and total cost plus the
+/// chip-provisioning figures (`mdm place` reports these per sweep point).
+#[derive(Debug, Clone)]
+pub struct ChipReport {
+    /// Placer that produced the underlying assignment.
+    pub placer: String,
+    /// Execution waves in dependency order.
+    pub waves: Vec<Wave>,
+    /// Summed cost across waves (latency = end-to-end, waves serialize).
+    pub total: TileCost,
+    /// Regions of the placement (chips or reuse rounds).
+    pub regions: usize,
+    /// Physical chips provisioned.
+    pub chips: usize,
+    /// Sequential reuse rounds.
+    pub rounds: usize,
+    /// Occupied fraction of the provisioned slots.
+    pub utilization: f64,
+    /// Total die area, mm².
+    pub area_mm2: f64,
+    /// NF-weighted placement cost ([`Placement::nf_weighted_cost`]).
+    pub nf_weighted_cost: f64,
+}
+
+/// Converts a [`Placement`] into execution [`Wave`]s and prices them.
+#[derive(Debug, Clone, Copy)]
+pub struct Scheduler {
+    /// Cost constants shared with the single-layer tiling model.
+    pub cost: CostModel,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self { cost: CostModel::default() }
+    }
+}
+
+impl Scheduler {
+    /// Schedule a batch through the placement and report end-to-end cost.
+    ///
+    /// Waves are ordered by `(layer, round)`. Per wave, slots run in
+    /// parallel; a slot's conversion time is serialized by the number of
+    /// co-active slots in its ADC group and extended by its routing
+    /// distance; the wave takes the slowest slot. The final wave of each
+    /// layer appends the layer's partial-sum merge chain
+    /// (`(grid_rows − 1) · sync_ns`, as in [`CostModel::layer_cost`]), and
+    /// each switch of the resident reuse round pays the chip reprogramming
+    /// cost once (consecutive waves sharing a round pay nothing extra).
+    pub fn schedule(&self, placement: &Placement, batch: usize) -> Result<ChipReport> {
+        ensure!(batch >= 1, "batch must be >= 1");
+        placement.validate()?;
+        let chip = placement.chip;
+        let g = chip.geometry;
+        let wpr = g.weights_per_row();
+
+        // Group fragments into waves keyed by (layer, round).
+        let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        for (pi, p) in placement.placed.iter().enumerate() {
+            let round = match chip.spill {
+                SpillPolicy::Reuse => p.region,
+                SpillPolicy::MoreChips => 0,
+            };
+            groups.entry((placement.blocks[p.block].layer, round)).or_default().push(pi);
+        }
+        // Final round per layer (keys ascend, so the last insert wins).
+        let mut last_round: BTreeMap<usize, usize> = BTreeMap::new();
+        for &(layer, round) in groups.keys() {
+            last_round.insert(layer, round);
+        }
+
+        // Slots resident per reuse round (a round is written in full each
+        // time the chip switches to it, regardless of how many layers'
+        // waves then execute from it).
+        let mut round_slots: BTreeMap<usize, usize> = BTreeMap::new();
+        if chip.spill == SpillPolicy::Reuse {
+            for p in &placement.placed {
+                *round_slots.entry(p.region).or_insert(0) +=
+                    placement.blocks[p.block].n_slots();
+            }
+        }
+        // Round 0 is resident after initial programming (not charged, as in
+        // the single-layer cost model).
+        let mut resident_round = 0usize;
+
+        let mut waves = Vec::with_capacity(groups.len());
+        let mut total = TileCost::default();
+        for (&(layer, round), members) in &groups {
+            // Co-active slots per shared-ADC group in this wave.
+            let mut occ: BTreeMap<(usize, usize, usize), u64> = BTreeMap::new();
+            for &pi in members {
+                let p = &placement.placed[pi];
+                let blk = &placement.blocks[p.block];
+                for r in p.row..p.row + blk.rows {
+                    for c in p.col..p.col + blk.cols {
+                        *occ.entry((p.region, r, c / chip.adc_group)).or_insert(0) += 1;
+                    }
+                }
+            }
+
+            let mut adc = 0u64;
+            let mut sync = 0u64;
+            let mut io = 0u64;
+            let mut energy = 0.0f64;
+            let mut exec_ns = 0.0f64;
+            let mut slots = 0usize;
+            for &pi in members {
+                let p = &placement.placed[pi];
+                let blk = &placement.blocks[p.block];
+                let fc = fragment_cost(&chip, blk, &self.cost, batch);
+                adc += fc.adc_conversions;
+                sync += fc.sync_events;
+                io += fc.io_bytes;
+                energy += fc.energy_pj;
+                slots += blk.n_slots();
+                // Routing energy at the fragment's mean hop distance.
+                let mean_hops = p.row as f64
+                    + p.col as f64
+                    + (blk.rows - 1) as f64 / 2.0
+                    + (blk.cols - 1) as f64 / 2.0;
+                energy += fc.io_bytes as f64 * chip.route_pj_per_byte_hop * mean_hops;
+                // Slowest slot under ADC-group serialization + routing.
+                for c in p.col..p.col + blk.cols {
+                    let gc = blk.grid_origin.1 + (c - p.col);
+                    let nw = wpr.min(blk.fan_out.saturating_sub(gc * wpr));
+                    let tile_cols = (nw * g.k_bits) as f64;
+                    for r in p.row..p.row + blk.rows {
+                        let share = occ[&(p.region, r, c / chip.adc_group)] as f64;
+                        let t = self.cost.tile_settle_ns
+                            + tile_cols * self.cost.adc.time_per_conv_ns * share
+                            + chip.hops(r, c) as f64 * chip.route_ns_per_hop;
+                        if t > exec_ns {
+                            exec_ns = t;
+                        }
+                    }
+                }
+            }
+
+            // The layer's merge chain completes with its final wave.
+            let mut per_input = exec_ns;
+            if last_round.get(&layer) == Some(&round) {
+                let fan_in = members
+                    .iter()
+                    .map(|&pi| placement.blocks[placement.placed[pi].block].fan_in)
+                    .max()
+                    .unwrap_or(1);
+                let grid_rows = fan_in.div_ceil(g.rows);
+                per_input += grid_rows.saturating_sub(1) as f64 * self.cost.sync_ns;
+            }
+            let mut latency = per_input * batch as f64;
+            // Reprogram the chip when the wave sequence switches rounds —
+            // charged once per switch (waves of different layers sharing a
+            // round pay nothing extra; revisiting an evicted round pays
+            // again).
+            if round != resident_round {
+                let incoming = round_slots.get(&round).copied().unwrap_or(slots);
+                latency += chip.reprogram_ns;
+                energy +=
+                    incoming as f64 * (g.rows * g.cols) as f64 * chip.reprogram_pj_per_cell;
+                resident_round = round;
+            }
+
+            let wave = Wave {
+                layer,
+                round,
+                blocks: members.len(),
+                occupied_slots: slots,
+                adc_conversions: adc,
+                sync_events: sync,
+                io_bytes: io,
+                latency_ns: latency,
+                energy_pj: energy,
+            };
+            total.add(&TileCost {
+                adc_conversions: adc,
+                sync_events: sync,
+                io_bytes: io,
+                latency_ns: latency,
+                energy_pj: energy,
+            });
+            waves.push(wave);
+        }
+
+        Ok(ChipReport {
+            placer: placement.placer.to_string(),
+            waves,
+            total,
+            regions: placement.regions,
+            chips: placement.chips(),
+            rounds: placement.rounds(),
+            utilization: placement.utilization(),
+            area_mm2: chip.area_mm2(placement.chips()),
+            nf_weighted_cost: placement.nf_weighted_cost(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::{placer_by_name, ChipWorkload, FirstFit, Placer};
+    use crate::crossbar::{LayerTiling, TileGeometry};
+    use crate::quant::SignSplit;
+    use crate::rng::Xoshiro256;
+    use crate::tensor::Tensor;
+
+    fn random_signed(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seeded(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.laplace(0.2) as f32).collect();
+        Tensor::new(&[rows, cols], data).unwrap()
+    }
+
+    fn small_chip(spill: SpillPolicy) -> ChipModel {
+        ChipModel {
+            slot_rows: 2,
+            slot_cols: 2,
+            geometry: TileGeometry::new(16, 32, 8).unwrap(),
+            spill,
+            ..ChipModel::default()
+        }
+    }
+
+    #[test]
+    fn fragment_costs_sum_to_the_tiled_layer_cost() {
+        // 40x10 layer at 16x32x8 tiles: 3x3 grid per part, fragmented onto
+        // a 2x2 chip. The closed form must reproduce CostModel::layer_cost.
+        let w = random_signed(40, 10, 1);
+        let split = SignSplit::of(&w);
+        let chip = small_chip(SpillPolicy::MoreChips);
+        let cost = CostModel::default();
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.add_layer("l0", 0, 40, 10, 1.0).unwrap();
+        for batch in [1usize, 3] {
+            let tiling = LayerTiling::partition(&split.pos, chip.geometry).unwrap();
+            let reference = cost.layer_cost(&tiling, batch);
+            let mut acc = TileCost::default();
+            for b in wl.blocks.iter().filter(|b| b.label.contains(".p[")) {
+                acc.add(&fragment_cost(&chip, b, &cost, batch));
+            }
+            assert_eq!(acc.adc_conversions, reference.adc_conversions, "batch {batch}");
+            assert_eq!(acc.sync_events, reference.sync_events, "batch {batch}");
+            assert_eq!(acc.io_bytes, reference.io_bytes, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn waves_follow_layer_order_and_totals_accumulate() {
+        let chip = ChipModel {
+            slot_rows: 8,
+            slot_cols: 8,
+            geometry: TileGeometry::new(16, 32, 8).unwrap(),
+            ..ChipModel::default()
+        };
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.add_layer("l0", 0, 64, 16, 1.0).unwrap();
+        wl.add_layer("l1", 1, 16, 8, 1.0).unwrap();
+        let placement = FirstFit.place(&wl).unwrap();
+        let report = Scheduler::default().schedule(&placement, 1).unwrap();
+        assert_eq!(report.waves.len(), 2);
+        assert_eq!(report.waves[0].layer, 0);
+        assert_eq!(report.waves[1].layer, 1);
+        assert!(report.total.latency_ns > 0.0);
+        assert!(report.total.energy_pj > 0.0);
+        let wave_adc: u64 = report.waves.iter().map(|w| w.adc_conversions).sum();
+        assert_eq!(report.total.adc_conversions, wave_adc);
+        assert_eq!(report.chips, 1);
+        assert_eq!(report.rounds, 1);
+        assert!(report.utilization > 0.0 && report.utilization <= 1.0);
+    }
+
+    #[test]
+    fn adc_sharing_serializes_conversions() {
+        let base = ChipModel {
+            slot_rows: 4,
+            slot_cols: 4,
+            geometry: TileGeometry::new(16, 32, 8).unwrap(),
+            ..ChipModel::default()
+        };
+        let mut latencies = Vec::new();
+        for group in [1usize, 4] {
+            let chip = ChipModel { adc_group: group, ..base };
+            let mut wl = ChipWorkload::new(chip).unwrap();
+            wl.add_layer("l0", 0, 64, 16, 1.0).unwrap();
+            let placement = FirstFit.place(&wl).unwrap();
+            let report = Scheduler::default().schedule(&placement, 1).unwrap();
+            latencies.push(report.total.latency_ns);
+        }
+        assert!(latencies[1] > latencies[0], "sharing must cost latency: {latencies:?}");
+    }
+
+    #[test]
+    fn reuse_rounds_serialize_and_pay_reprogramming() {
+        let mut wl_chips = ChipWorkload::new(small_chip(SpillPolicy::MoreChips)).unwrap();
+        wl_chips.add_layer("l0", 0, 96, 24, 1.0).unwrap();
+        let mut wl_reuse = ChipWorkload::new(small_chip(SpillPolicy::Reuse)).unwrap();
+        wl_reuse.add_layer("l0", 0, 96, 24, 1.0).unwrap();
+
+        let p_chips = FirstFit.place(&wl_chips).unwrap();
+        let p_reuse = FirstFit.place(&wl_reuse).unwrap();
+        assert!(p_reuse.regions > 1, "workload must overflow the 2x2 chip");
+
+        let s = Scheduler::default();
+        let r_chips = s.schedule(&p_chips, 1).unwrap();
+        let r_reuse = s.schedule(&p_reuse, 1).unwrap();
+        assert_eq!(r_reuse.chips, 1);
+        assert!(r_reuse.rounds > 1);
+        assert_eq!(r_chips.rounds, 1);
+        assert!(r_reuse.waves.len() > r_chips.waves.len());
+        assert!(
+            r_reuse.total.latency_ns > r_chips.total.latency_ns,
+            "reuse {} vs chips {}",
+            r_reuse.total.latency_ns,
+            r_chips.total.latency_ns
+        );
+        // Same arithmetic either way.
+        assert_eq!(r_reuse.total.adc_conversions, r_chips.total.adc_conversions);
+        assert_eq!(r_reuse.total.sync_events, r_chips.total.sync_events);
+    }
+
+    #[test]
+    fn round_shared_by_two_layers_reprograms_once() {
+        // 2x2 chip under Reuse. Layer 0 fills rounds 0 and 1 (one 2x2
+        // fragment per sign part); layers 1 and 2 are one slot per part and
+        // end up sharing round 2. Only the switches 0->1 and 1->2 pay the
+        // reprogramming cost — the second layer executing from round 2 must
+        // not be charged again.
+        let chip = small_chip(SpillPolicy::Reuse);
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.add_layer("l0", 0, 32, 8, 1.0).unwrap(); // 2x2 grid per part
+        wl.add_layer("l1", 1, 16, 4, 1.0).unwrap(); // 1x1 grid per part
+        wl.add_layer("l2", 2, 16, 4, 1.0).unwrap(); // 1x1 grid per part
+        let placement = FirstFit.place(&wl).unwrap();
+        placement.validate().unwrap();
+        assert_eq!(placement.regions, 3, "{placement:?}");
+        let report = Scheduler::default().schedule(&placement, 1).unwrap();
+        // Waves: (l0, r0), (l0, r1), (l1, r2), (l2, r2).
+        assert_eq!(report.waves.len(), 4);
+        let reprogrammed =
+            report.waves.iter().filter(|w| w.latency_ns >= chip.reprogram_ns).count();
+        assert_eq!(reprogrammed, 2, "{:?}", report.waves);
+    }
+
+    #[test]
+    fn batch_scales_work_linearly_without_reuse() {
+        let chip = ChipModel {
+            slot_rows: 8,
+            slot_cols: 8,
+            geometry: TileGeometry::new(16, 32, 8).unwrap(),
+            ..ChipModel::default()
+        };
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.add_layer("l0", 0, 64, 16, 1.0).unwrap();
+        let placement = placer_by_name("maxrects").unwrap().place(&wl).unwrap();
+        let s = Scheduler::default();
+        let r1 = s.schedule(&placement, 1).unwrap();
+        let r3 = s.schedule(&placement, 3).unwrap();
+        assert_eq!(r3.total.adc_conversions, 3 * r1.total.adc_conversions);
+        assert_eq!(r3.total.sync_events, 3 * r1.total.sync_events);
+        assert!((r3.total.latency_ns - 3.0 * r1.total.latency_ns).abs() < 1e-6);
+    }
+}

@@ -217,6 +217,55 @@ impl ExperimentConfig {
     }
 }
 
+/// Typed chip-model configuration (`[chip]` section), consumed by
+/// [`crate::chip::ChipModel::from_settings`]. Geometry is not configured
+/// here — sweeps set it per tile size.
+#[derive(Debug, Clone)]
+pub struct ChipSettings {
+    /// Crossbar slots per chip column.
+    pub rows: usize,
+    /// Crossbar slots per chip row.
+    pub cols: usize,
+    /// Consecutive slots sharing one ADC.
+    pub adc_group: usize,
+    /// Peak extra PR impact at the far die corner (0 = uniform).
+    pub pr_gradient: f64,
+    /// Spill policy name (`chips` | `reuse`).
+    pub spill: String,
+    /// Placer registry name (see `chip::placer_by_name`) — used where one
+    /// placer is applied (`mdm serve --chip` attribution); `mdm place`
+    /// sweeps its `--placer` list instead.
+    pub placer: String,
+}
+
+impl Default for ChipSettings {
+    fn default() -> Self {
+        Self {
+            rows: 16,
+            cols: 16,
+            adc_group: 4,
+            pr_gradient: 0.5,
+            spill: "chips".into(),
+            placer: "nf_aware".into(),
+        }
+    }
+}
+
+impl ChipSettings {
+    /// Build from `[chip]` section with defaults.
+    pub fn from_config(c: &Config) -> Self {
+        let d = Self::default();
+        Self {
+            rows: c.int_or("chip", "rows", d.rows as i64).max(1) as usize,
+            cols: c.int_or("chip", "cols", d.cols as i64).max(1) as usize,
+            adc_group: c.int_or("chip", "adc_group", d.adc_group as i64).max(1) as usize,
+            pr_gradient: c.float_or("chip", "pr_gradient", d.pr_gradient),
+            spill: c.str_or("chip", "spill", &d.spill),
+            placer: c.str_or("chip", "placer", &d.placer),
+        }
+    }
+}
+
 /// Typed server (coordinator) configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -313,6 +362,21 @@ label = "a # not a comment"
         assert_eq!(ServerConfig::from_config(&c).workers, 8);
         // Unspecified keys fall back.
         assert_eq!(ServerConfig::from_config(&c).max_batch, 16);
+    }
+
+    #[test]
+    fn chip_section_parsed_with_defaults() {
+        let c = Config::parse("[chip]\nrows = 8\ncols = 4\nspill = \"reuse\"").unwrap();
+        let s = ChipSettings::from_config(&c);
+        assert_eq!(s.rows, 8);
+        assert_eq!(s.cols, 4);
+        assert_eq!(s.spill, "reuse");
+        // Unspecified keys fall back to the defaults.
+        assert_eq!(s.adc_group, 4);
+        assert_eq!(s.placer, "nf_aware");
+        let d = ChipSettings::from_config(&Config::default());
+        assert_eq!(d.rows, 16);
+        assert_eq!(d.spill, "chips");
     }
 
     #[test]

@@ -170,6 +170,50 @@ impl Engine {
         &self.cost
     }
 
+    /// Place the whole programmed model onto chips: every layer's tile grid
+    /// (both sign parts) becomes a placement request, weighted by
+    /// [`crate::chip::weight_nf_proxy`] of its programmed weights so the
+    /// `nf_aware` placer keeps PR-sensitive layers near the I/O corner.
+    /// Each worker serves from an identical chip plan, so the resulting
+    /// [`crate::chip::Placement`] attributes per-worker cost directly.
+    pub fn place_on(
+        &self,
+        chip: &crate::chip::ChipModel,
+        placer: &dyn crate::chip::Placer,
+    ) -> Result<crate::chip::Placement> {
+        ensure!(
+            chip.geometry == self.config.geometry,
+            "chip geometry {:?} does not match engine geometry {:?}",
+            chip.geometry,
+            self.config.geometry
+        );
+        let mut workload = crate::chip::ChipWorkload::new(*chip)?;
+        for (i, w) in self.programmed.iter().enumerate() {
+            workload.add_layer(
+                &format!("layer{i}"),
+                i,
+                w.rows(),
+                w.cols(),
+                crate::chip::weight_nf_proxy(w, self.config.geometry),
+            )?;
+        }
+        placer.place(&workload)
+    }
+
+    /// [`Self::place_on`] rolled through the wave [`crate::chip::Scheduler`]:
+    /// the end-to-end chip-level cost of serving `batch` inputs from this
+    /// engine's placement (per-worker attribution — every worker owns one
+    /// such chip plan).
+    pub fn chip_report(
+        &self,
+        chip: &crate::chip::ChipModel,
+        placer: &dyn crate::chip::Placer,
+        batch: usize,
+    ) -> Result<crate::chip::ChipReport> {
+        let placement = self.place_on(chip, placer)?;
+        crate::chip::Scheduler::default().schedule(&placement, batch)
+    }
+
     /// Run a batch of inputs `[n, 256]` (padded/chunked internally to the
     /// AOT batch size). Returns `[n, 10]` logits.
     pub fn infer(&self, x: &Tensor) -> Result<Tensor> {

@@ -177,4 +177,67 @@ mod tests {
         let c = CostModel::default().layer_cost(&t, 3);
         assert_eq!(c.sync_events, 0);
     }
+
+    /// Property: for any fixed layer, shrinking the tile size never
+    /// decreases ADC conversions, sync events, or I/O traffic — the
+    /// scalability invariant behind the paper's system argument (§I) and
+    /// the `chip` subsystem's tile-size sweeps.
+    #[test]
+    fn shrinking_tiles_monotonically_increase_adc_sync_io() {
+        use crate::testsupport::{propcheck, PropConfig};
+
+        struct Case {
+            fan_in: usize,
+            fan_out: usize,
+            small: usize,
+            big: usize,
+            batch: usize,
+            seed: u64,
+        }
+
+        propcheck(
+            PropConfig { cases: 24, seed: 0xC057, max_size: 48 },
+            |rng, size| {
+                let small = 8 * (1 + rng.below(3)) as usize; // 8, 16, 24
+                let big = small + 8 * (1 + rng.below(6)) as usize; // > small
+                Case {
+                    fan_in: 8 + rng.below(4 * size as u64 + 1) as usize,
+                    fan_out: 4 + rng.below(size as u64 + 1) as usize,
+                    small,
+                    big,
+                    batch: 1 + rng.below(3) as usize,
+                    seed: rng.below(1 << 32),
+                }
+            },
+            |case| {
+                let mut rng = Xoshiro256::seeded(case.seed);
+                let data: Vec<f32> =
+                    (0..case.fan_in * case.fan_out).map(|_| rng.uniform() as f32).collect();
+                let w = Tensor::new(&[case.fan_in, case.fan_out], data)
+                    .map_err(|e| e.to_string())?;
+                let m = CostModel::default();
+                let cost_at = |tile: usize| -> Result<TileCost, String> {
+                    let g = TileGeometry::new(tile, tile, 8).map_err(|e| e.to_string())?;
+                    let t = LayerTiling::partition(&w, g).map_err(|e| e.to_string())?;
+                    Ok(m.layer_cost(&t, case.batch))
+                };
+                let cs = cost_at(case.small)?;
+                let cb = cost_at(case.big)?;
+                let ctx = format!(
+                    "layer {}x{} tiles {}/{} batch {}",
+                    case.fan_in, case.fan_out, case.small, case.big, case.batch
+                );
+                if cs.adc_conversions < cb.adc_conversions {
+                    return Err(format!("adc not monotone ({ctx}): {cs:?} vs {cb:?}"));
+                }
+                if cs.sync_events < cb.sync_events {
+                    return Err(format!("sync not monotone ({ctx}): {cs:?} vs {cb:?}"));
+                }
+                if cs.io_bytes < cb.io_bytes {
+                    return Err(format!("io not monotone ({ctx}): {cs:?} vs {cb:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
 }

@@ -8,12 +8,17 @@
 //! * `roworder_compare` — the MDM strategy vs every other registered
 //!   placement (paper-literal ascending-Manhattan, random, magnitude-sorted
 //!   SWS-like, X-CHANGR-style rotation).
+//! * `placement_sweep` / `placement_compare` — chip-level tile placement:
+//!   placers × tile sizes × mapping strategies on a synthetic model
+//!   workload, rolled through the wave scheduler (`mdm place`,
+//!   `mdm ablation placement`; see [`crate::chip`]).
 //!
 //! All mappings are constructed through [`MappingStrategy`] implementations
 //! (by registry name where the canonical configuration applies, directly
 //! where a specific dataflow is pinned).
 
 use super::random_planes;
+use crate::chip::{self, Placer as _};
 use crate::circuit::measure_tile_nfs;
 use crate::crossbar::{CostModel, LayerTiling, TileGeometry};
 use crate::mdm::{
@@ -22,6 +27,7 @@ use crate::mdm::{
 };
 use crate::nf::{fit_hypothesis, manhattan_nf_mean, manhattan_nf_mean_batch};
 use crate::parallel::{self, ParallelConfig};
+use crate::pipeline::Pipeline;
 use crate::quant::SignSplit;
 use crate::report;
 use crate::rng::Xoshiro256;
@@ -534,6 +540,229 @@ pub fn global_sort_compare(
     Ok(rows)
 }
 
+/// Configuration of the chip-placement sweep (`mdm place`).
+#[derive(Debug, Clone)]
+pub struct PlacementSweepConfig {
+    /// Zoo model supplying the layer shapes (weights are synthesized from
+    /// the model's profile — the "ResNet-shaped synthetic layers" setup).
+    pub model: String,
+    /// Tile side lengths to sweep (square tiles).
+    pub tiles: Vec<usize>,
+    /// Placer registry names to sweep ([`chip::placer_by_name`]).
+    pub placers: Vec<String>,
+    /// Mapping-strategy names to sweep (they set the NF-sensitivity weights
+    /// the `nf_aware` placer ranks by).
+    pub strategies: Vec<String>,
+    /// Chip parameters; the geometry field is overridden per tile size.
+    pub chip: chip::ChipModel,
+    /// Fractional bits per weight.
+    pub k_bits: usize,
+    /// Tiles sampled per sign part for the NF-sensitivity estimate.
+    pub nf_tiles: usize,
+    /// Activation vectors scheduled through each placement.
+    pub batch: usize,
+    /// Seed for weight synthesis and NF sampling.
+    pub seed: u64,
+    /// Worker pool the sweep points fan out over (bitwise-deterministic at
+    /// any thread count: workload rngs are drawn serially up front).
+    pub parallel: ParallelConfig,
+}
+
+impl Default for PlacementSweepConfig {
+    fn default() -> Self {
+        Self {
+            model: "resnet18".into(),
+            tiles: vec![32, 64, 128],
+            placers: vec!["firstfit".into(), "maxrects".into(), "nf_aware".into()],
+            strategies: vec!["conventional".into(), "mdm".into()],
+            chip: chip::ChipModel::default(),
+            k_bits: 8,
+            nf_tiles: 4,
+            batch: 1,
+            seed: 42,
+            parallel: ParallelConfig::default(),
+        }
+    }
+}
+
+/// One chip-placement sweep point: tile size × placer × strategy.
+#[derive(Debug, Clone)]
+pub struct PlacementRow {
+    /// Tile side length of the point.
+    pub tile: usize,
+    /// Placer registry name.
+    pub placer: String,
+    /// Mapping-strategy registry name.
+    pub strategy: String,
+    /// Fragments placed.
+    pub blocks: usize,
+    /// Regions used (chips or reuse rounds).
+    pub regions: usize,
+    /// Physical chips provisioned.
+    pub chips: usize,
+    /// Sequential reuse rounds.
+    pub rounds: usize,
+    /// Execution waves scheduled.
+    pub waves: usize,
+    /// Occupied fraction of the provisioned slots.
+    pub utilization: f64,
+    /// NF-weighted placement cost (lower is better).
+    pub nf_weighted_cost: f64,
+    /// End-to-end latency, nanoseconds.
+    pub latency_ns: f64,
+    /// End-to-end energy, picojoules.
+    pub energy_pj: f64,
+    /// Total ADC conversions.
+    pub adc_conversions: u64,
+    /// Total partial-sum merge events.
+    pub sync_events: u64,
+}
+
+/// Chip-placement sweep: for every (tile size, strategy) a placement
+/// workload is built from the model's layer shapes — synthesized weights,
+/// NF sensitivity via [`Pipeline::sampled_nf`] under that strategy — then
+/// every placer places it and the wave scheduler prices the result. The
+/// (tile, strategy, placer) points fan out over the configured pool; all
+/// rng streams are drawn serially during workload construction, so the
+/// rows are bitwise identical at any thread count.
+pub fn placement_sweep(
+    cfg: &PlacementSweepConfig,
+    results_dir: &Path,
+) -> Result<Vec<PlacementRow>> {
+    let desc = crate::models::model_by_name(&cfg.model)?;
+    let mut workloads = Vec::with_capacity(cfg.tiles.len() * cfg.strategies.len());
+    for (ti, &tile) in cfg.tiles.iter().enumerate() {
+        let geometry = TileGeometry::new(tile, tile, cfg.k_bits)?;
+        let chip_model = chip::ChipModel { geometry, ..cfg.chip };
+        for (si, strategy) in cfg.strategies.iter().enumerate() {
+            let pipeline = Pipeline::new(geometry).strategy(strategy)?;
+            let mut rng = Xoshiro256::seeded(
+                cfg.seed ^ ((ti as u64) << 8) ^ ((si as u64) << 16) ^ 0xC41F,
+            );
+            let mut workload = chip::ChipWorkload::new(chip_model)?;
+            let mut stage = 0usize;
+            for (li, layer) in desc.layers.iter().enumerate() {
+                let w = crate::models::generate_layer_weights(
+                    layer.fan_in,
+                    layer.fan_out,
+                    &desc.profile,
+                    cfg.seed ^ ((li as u64) << 24),
+                )?;
+                let (nf_sum, n) = pipeline.sampled_nf(&w, cfg.nf_tiles, &mut rng)?;
+                let nf_weight = nf_sum / n.max(1) as f64;
+                for rep in 0..layer.count {
+                    workload.add_layer(
+                        &format!("l{li}r{rep}"),
+                        stage,
+                        layer.fan_in,
+                        layer.fan_out,
+                        nf_weight,
+                    )?;
+                    stage += 1;
+                }
+            }
+            workloads.push(workload);
+        }
+    }
+
+    let mut combos = Vec::new();
+    for ti in 0..cfg.tiles.len() {
+        for si in 0..cfg.strategies.len() {
+            for pi in 0..cfg.placers.len() {
+                combos.push((ti, si, pi));
+            }
+        }
+    }
+    let rows = parallel::try_map(&cfg.parallel, &combos, |&(ti, si, pi)| {
+        let workload = &workloads[ti * cfg.strategies.len() + si];
+        let placer = chip::placer_by_name(&cfg.placers[pi])?;
+        let placement = placer.place(workload)?;
+        // Scheduler::schedule validates the placement (no overlap, every
+        // fragment placed) before pricing it.
+        let report = chip::Scheduler::default().schedule(&placement, cfg.batch)?;
+        Ok(PlacementRow {
+            tile: cfg.tiles[ti],
+            placer: cfg.placers[pi].clone(),
+            strategy: cfg.strategies[si].clone(),
+            blocks: workload.blocks.len(),
+            regions: report.regions,
+            chips: report.chips,
+            rounds: report.rounds,
+            waves: report.waves.len(),
+            utilization: report.utilization,
+            nf_weighted_cost: report.nf_weighted_cost,
+            latency_ns: report.total.latency_ns,
+            energy_pj: report.total.energy_pj,
+            adc_conversions: report.total.adc_conversions,
+            sync_events: report.total.sync_events,
+        })
+    })?;
+
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.tile.to_string(),
+                r.placer.clone(),
+                r.strategy.clone(),
+                r.blocks.to_string(),
+                r.regions.to_string(),
+                r.chips.to_string(),
+                r.rounds.to_string(),
+                r.waves.to_string(),
+                format!("{:.4}", r.utilization),
+                format!("{:.4}", r.nf_weighted_cost),
+                format!("{:.1}", r.latency_ns),
+                format!("{:.1}", r.energy_pj),
+                r.adc_conversions.to_string(),
+                r.sync_events.to_string(),
+            ]
+        })
+        .collect();
+    report::write_csv(
+        results_dir.join("chip_placement.csv"),
+        &[
+            "tile",
+            "placer",
+            "strategy",
+            "blocks",
+            "regions",
+            "chips",
+            "rounds",
+            "waves",
+            "utilization",
+            "nf_weighted_cost",
+            "latency_ns",
+            "energy_pj",
+            "adc_conversions",
+            "sync_events",
+        ],
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+/// The `placement` ablation: every registered placer on the ResNet-shaped
+/// synthetic miniresnet workload at one tile size (MDM mapping, 8x8 chip).
+pub fn placement_compare(
+    tile: usize,
+    k_bits: usize,
+    seed: u64,
+    results_dir: &Path,
+) -> Result<Vec<PlacementRow>> {
+    let cfg = PlacementSweepConfig {
+        model: "miniresnet".into(),
+        tiles: vec![tile],
+        placers: chip::placer_names().iter().map(|(n, _)| n.to_string()).collect(),
+        strategies: vec!["mdm".into()],
+        chip: chip::ChipModel { slot_rows: 8, slot_cols: 8, ..chip::ChipModel::default() },
+        k_bits,
+        seed,
+        ..PlacementSweepConfig::default()
+    };
+    placement_sweep(&cfg, results_dir)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -611,6 +840,29 @@ mod tests {
         let nf = |s: &str| rows.iter().find(|r| r.scheme == s).unwrap().nf_mean;
         assert!(nf("per_tile_mdm") < nf("identity"));
         assert!(nf("global_mdm") <= nf("per_tile_mdm") + 1e-9, "{rows:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn placement_ablation_nf_aware_bounded_by_firstfit() {
+        let dir = tmp("pl");
+        let rows = placement_compare(32, 8, 7, &dir).unwrap();
+        assert_eq!(rows.len(), chip::placer_names().len());
+        let get = |p: &str| rows.iter().find(|r| r.placer == p).unwrap();
+        // The acceptance bound: NF-aware never costlier than greedy.
+        assert!(
+            get("nf_aware").nf_weighted_cost <= get("firstfit").nf_weighted_cost + 1e-9,
+            "nf_aware {} vs firstfit {}",
+            get("nf_aware").nf_weighted_cost,
+            get("firstfit").nf_weighted_cost
+        );
+        for r in &rows {
+            assert!(r.blocks > 0 && r.regions > 0, "{r:?}");
+            assert!(r.utilization > 0.0 && r.utilization <= 1.0, "{r:?}");
+            assert!(r.latency_ns > 0.0 && r.energy_pj > 0.0, "{r:?}");
+            assert!(r.waves >= 4, "one wave per miniresnet layer at least: {r:?}");
+        }
+        assert!(dir.join("chip_placement.csv").exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -8,6 +8,8 @@
 //!   [`mdm::MappingStrategy`] registry and the [`pipeline::Pipeline`]
 //!   compile chain (quantize → bit-slice → tile → map → distort), a
 //!   crossbar-unit scheduler with digital accumulation and an ADC model, a
+//!   chip-level tile placement and wave scheduling layer ([`chip`]:
+//!   placers, spill/reuse, end-to-end latency/energy/area roll-up), a
 //!   circuit-level parasitic-resistance simulator (the SPICE substitute),
 //!   and the full experiment/benchmark harness for every figure in the
 //!   paper.
@@ -32,6 +34,7 @@
 
 #![warn(missing_docs)]
 
+pub mod chip;
 pub mod circuit;
 pub mod config;
 pub mod coordinator;

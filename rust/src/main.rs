@@ -12,6 +12,7 @@
 //! mdm ablation  <tilesize|sparsity|ratio|roworder>   A1–A3
 //! mdm serve     [--model m] [--strategy s] ...  serving driver
 //! mdm bench     [--tiles N] [--tile N] ...      parallel-vs-serial NF bench
+//! mdm place     [--tiles a,b] [--placer p,q]    chip placement sweep
 //! mdm strategies                                mapping-strategy registry
 //! mdm netlist   [--rows J] [--cols K]           SPICE deck export
 //! mdm info                                      artifact/manifest summary
@@ -22,7 +23,7 @@
 //! parser below (rust/DESIGN.md §5).
 
 use anyhow::{bail, Context, Result};
-use mdm_cim::config::{Config, ExperimentConfig, ServerConfig};
+use mdm_cim::config::{ChipSettings, Config, ExperimentConfig, ServerConfig};
 use mdm_cim::coordinator::{EngineConfig, ModelKind, Server};
 use mdm_cim::crossbar::TileGeometry;
 use mdm_cim::mdm::{plan_tile, strategy_by_name, strategy_names};
@@ -145,6 +146,7 @@ fn main() -> Result<()> {
         "ablation" => cmd_ablation(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
+        "place" => cmd_place(&args),
         "strategies" => cmd_strategies(&args),
         "netlist" => cmd_netlist(&args),
         "info" => cmd_info(&args),
@@ -210,9 +212,16 @@ commands (paper experiment in brackets):
   calibrate-eta  calibrate the Eq.-17 noise coefficient        [\u{a7}V-C]
   sparsity       bit-level sparsity across the zoo             [Thm. 1]
   ablation       tilesize | sparsity | ratio | roworder |
-                 global | variation | faults | adc              [A1-A9]
+                 global | variation | faults | adc | placement   [A1-A10]
   serve          batched serving driver with metrics
+                 (persists <results>/serve_metrics.json; --chip adds
+                 per-worker chip placement attribution)
   bench          parallel vs serial NF sweep -> BENCH_parallel_nf.json
+  place          chip placement sweep: tile sizes x placers x strategies
+                 -> BENCH_chip_place.json (--tiles 32,64 --placer
+                 firstfit,skyline,maxrects,nf_aware --strategies a,b
+                 --model NAME --chip-rows N --chip-cols N --adc-group N
+                 --spill chips|reuse, also `[chip]` in a config file)
   strategies     list the registered mapping strategies
   netlist        export a SPICE .cir deck of a crossbar
   info           artifact manifest summary
@@ -558,9 +567,37 @@ fn cmd_ablation(args: &Args) -> Result<()> {
                 rows.iter().map(|r| vec![r.scheme.clone(), format!("{:.4}", r.nf_mean)]).collect();
             println!("{}", report::table(&["scheme", "mean NF"], &t));
         }
+        Some("placement") => {
+            let rows = eval::ablations::placement_compare(
+                cfg.tile_size,
+                cfg.k_bits,
+                cfg.seed,
+                results,
+            )?;
+            let t: Vec<Vec<String>> = rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.placer.clone(),
+                        r.chips.to_string(),
+                        r.rounds.to_string(),
+                        format!("{:.1}%", 100.0 * r.utilization),
+                        format!("{:.2}", r.nf_weighted_cost),
+                        format!("{:.3e}", r.latency_ns),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                report::table(
+                    &["placer", "chips", "rounds", "util", "NF cost", "latency ns"],
+                    &t
+                )
+            );
+        }
         other => bail!(
             "ablation {:?} unknown \
-             (tilesize|sparsity|ratio|roworder|global|variation|faults|adc)",
+             (tilesize|sparsity|ratio|roworder|global|variation|faults|adc|placement)",
             other
         ),
     }
@@ -612,6 +649,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let test = store.data("test")?;
     drop(store);
 
+    // Optional chip-level cost attribution: program one probe engine, place
+    // its layers on the configured chip, and report the per-worker figures
+    // (every worker serves from an identical placement).
+    let chip_attr = if args.flags.contains_key("chip") {
+        let settings = chip_settings(args)?;
+        let chip = mdm_cim::chip::ChipModel {
+            geometry: engine_cfg.geometry,
+            ..mdm_cim::chip::ChipModel::from_settings(&settings)?
+        };
+        let placer = mdm_cim::chip::placer_by_name(&settings.placer)?;
+        let probe = mdm_cim::coordinator::Engine::program(&cfg.artifacts_dir, engine_cfg.clone())?;
+        let r = probe.chip_report(&chip, placer.as_ref(), 1)?;
+        println!(
+            "chip plan ({}): {} chip(s) x {} round(s), {} wave(s), util {:.1}%, \
+             per-input latency {:.3e} ns, energy {:.3e} pJ, area {:.3} mm^2 (per worker)",
+            r.placer,
+            r.chips,
+            r.rounds,
+            r.waves.len(),
+            100.0 * r.utilization,
+            r.total.latency_ns,
+            r.total.energy_pj,
+            r.area_mm2
+        );
+        Some(r)
+    } else {
+        None
+    };
+
+    let workers = server_cfg.workers;
     let t0 = std::time::Instant::now();
     let server = Server::start(&cfg.artifacts_dir, engine_cfg, server_cfg)?;
     let mut receivers = Vec::new();
@@ -642,7 +709,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.adc_conversions,
         snap.sync_events
     );
+
+    // Persist the snapshot so serving runs are comparable across commits
+    // (same escaping/formatting path as every other emitted artifact).
+    {
+        use mdm_cim::report::Json;
+        let elapsed_s = elapsed.as_secs_f64().max(f64::MIN_POSITIVE);
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("model", Json::Str(args.str_or("model", "miniresnet"))),
+            ("strategy", Json::Str(strategy_name.clone())),
+            ("workers", Json::Int(workers as i64)),
+            ("requests_submitted", Json::Int(n_requests as i64)),
+            ("responses_ok", Json::Int(ok as i64)),
+            ("requests_accepted", Json::Int(snap.requests as i64)),
+            ("rejected", Json::Int(snap.rejected as i64)),
+            ("completed", Json::Int(snap.completed as i64)),
+            ("batches", Json::Int(snap.batches as i64)),
+            ("rows", Json::Int(snap.rows as i64)),
+            ("adc_conversions", Json::Int(snap.adc_conversions as i64)),
+            ("sync_events", Json::Int(snap.sync_events as i64)),
+            ("latency_p50_us", Json::Int(snap.latency_p50_us as i64)),
+            ("latency_p99_us", Json::Int(snap.latency_p99_us as i64)),
+            ("latency_mean_us", Json::Num(snap.latency_mean_us)),
+            ("elapsed_s", Json::Num(elapsed.as_secs_f64())),
+            ("req_per_s", Json::Num(ok as f64 / elapsed_s)),
+            ("rows_per_s", Json::Num(snap.rows as f64 / elapsed_s)),
+        ];
+        if let Some(r) = &chip_attr {
+            pairs.push(("chip_placer", Json::Str(r.placer.clone())));
+            pairs.push(("chip_chips", Json::Int(r.chips as i64)));
+            pairs.push(("chip_rounds", Json::Int(r.rounds as i64)));
+            pairs.push(("chip_waves", Json::Int(r.waves.len() as i64)));
+            pairs.push(("chip_utilization", Json::Num(r.utilization)));
+            pairs.push(("chip_latency_ns_per_input", Json::Num(r.total.latency_ns)));
+            pairs.push(("chip_energy_pj_per_input", Json::Num(r.total.energy_pj)));
+            pairs.push(("chip_area_mm2", Json::Num(r.area_mm2)));
+            pairs.push(("chip_nf_weighted_cost", Json::Num(r.nf_weighted_cost)));
+        }
+        let metrics_path = Path::new(&cfg.results_dir).join("serve_metrics.json");
+        report::write_json_object(&metrics_path, &pairs)?;
+        println!("metrics json: {}", metrics_path.display());
+    }
     Ok(())
+}
+
+/// Resolve the `[chip]` settings (config file + `--chip-rows`,
+/// `--chip-cols`, `--adc-group`, `--pr-gradient`, `--spill`, `--placer`
+/// flag overrides).
+fn chip_settings(args: &Args) -> Result<ChipSettings> {
+    let mut s = if let Some(path) = args.flags.get("config") {
+        ChipSettings::from_config(&Config::load(path)?)
+    } else {
+        ChipSettings::default()
+    };
+    if let Some(v) = args.flags.get("chip-rows") {
+        s.rows = v.parse().context("--chip-rows")?;
+    }
+    if let Some(v) = args.flags.get("chip-cols") {
+        s.cols = v.parse().context("--chip-cols")?;
+    }
+    if let Some(v) = args.flags.get("adc-group") {
+        s.adc_group = v.parse().context("--adc-group")?;
+    }
+    if let Some(v) = args.flags.get("pr-gradient") {
+        s.pr_gradient = v.parse().context("--pr-gradient")?;
+    }
+    if let Some(v) = args.flags.get("spill") {
+        s.spill = v.clone();
+    }
+    if let Some(v) = args.flags.get("placer") {
+        s.placer = v.clone();
+    }
+    Ok(s)
 }
 
 /// `mdm bench` — the parallel-vs-serial NF sweep harness that records the
@@ -753,6 +891,129 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ],
     )?;
     println!("json: {out_path}");
+    Ok(())
+}
+
+/// `mdm place` — the chip-level placement sweep: tile sizes × placers ×
+/// mapping strategies on a synthetic model workload (default: ResNet-18
+/// shaped layers), each point placed, validated, and rolled through the
+/// wave scheduler. Emits `BENCH_chip_place.json` plus
+/// `<results>/chip_placement.csv`. The sweep points fan out over the
+/// process-default worker pool with bitwise-deterministic results.
+fn cmd_place(args: &Args) -> Result<()> {
+    use mdm_cim::eval::ablations::{placement_sweep, PlacementSweepConfig};
+    use mdm_cim::report::Json;
+
+    let cfg = experiment_config(args)?;
+    let list = |key: &str, default: &str| -> Vec<String> {
+        args.flags
+            .get(key)
+            .map(String::as_str)
+            .unwrap_or(default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    let tiles: Vec<usize> = list("tiles", "32,64,128")
+        .iter()
+        .map(|t| t.parse::<usize>().with_context(|| format!("--tiles entry {t:?}")))
+        .collect::<Result<_>>()?;
+    let placers = list("placer", "firstfit,maxrects,nf_aware");
+    let strategies = list("strategies", "conventional,mdm");
+    let settings = chip_settings(args)?;
+    let chip = mdm_cim::chip::ChipModel::from_settings(&settings)?;
+
+    let sweep_cfg = PlacementSweepConfig {
+        model: args.str_or("model", "resnet18"),
+        tiles,
+        placers,
+        strategies,
+        chip,
+        k_bits: cfg.k_bits,
+        nf_tiles: args.usize_or("nf-tiles", 4),
+        batch: args.usize_or("batch", 1),
+        seed: cfg.seed,
+        parallel: mdm_cim::parallel::ParallelConfig::default(),
+    };
+    println!(
+        "chip placement sweep: {} on {}x{} slot chips (adc group {}, spill {}): \
+         {} tile size(s) x {} placer(s) x {} strategy(ies)",
+        sweep_cfg.model,
+        settings.rows,
+        settings.cols,
+        settings.adc_group,
+        settings.spill,
+        sweep_cfg.tiles.len(),
+        sweep_cfg.placers.len(),
+        sweep_cfg.strategies.len(),
+    );
+    let rows = placement_sweep(&sweep_cfg, Path::new(&cfg.results_dir))?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.tile.to_string(),
+                r.placer.clone(),
+                r.strategy.clone(),
+                r.chips.to_string(),
+                r.rounds.to_string(),
+                format!("{:.1}%", 100.0 * r.utilization),
+                format!("{:.1}", r.nf_weighted_cost),
+                format!("{:.3e}", r.latency_ns),
+                format!("{:.3e}", r.energy_pj),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(
+            &[
+                "tile", "placer", "strategy", "chips", "rounds", "util", "NF cost",
+                "latency ns", "energy pJ",
+            ],
+            &table
+        )
+    );
+
+    let out_path = args.str_or("out", "BENCH_chip_place.json");
+    let sweep: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                ("tile".into(), Json::Int(r.tile as i64)),
+                ("placer".into(), Json::Str(r.placer.clone())),
+                ("strategy".into(), Json::Str(r.strategy.clone())),
+                ("blocks".into(), Json::Int(r.blocks as i64)),
+                ("regions".into(), Json::Int(r.regions as i64)),
+                ("chips".into(), Json::Int(r.chips as i64)),
+                ("rounds".into(), Json::Int(r.rounds as i64)),
+                ("waves".into(), Json::Int(r.waves as i64)),
+                ("utilization".into(), Json::Num(r.utilization)),
+                ("nf_weighted_cost".into(), Json::Num(r.nf_weighted_cost)),
+                ("latency_ns".into(), Json::Num(r.latency_ns)),
+                ("energy_pj".into(), Json::Num(r.energy_pj)),
+                ("adc_conversions".into(), Json::Int(r.adc_conversions as i64)),
+                ("sync_events".into(), Json::Int(r.sync_events as i64)),
+            ])
+        })
+        .collect();
+    report::write_json_object(
+        &out_path,
+        &[
+            ("benchmark", Json::Str("chip_place_sweep".into())),
+            ("model", Json::Str(sweep_cfg.model.clone())),
+            ("seed", Json::Int(cfg.seed as i64)),
+            ("batch", Json::Int(sweep_cfg.batch as i64)),
+            ("chip_rows", Json::Int(settings.rows as i64)),
+            ("chip_cols", Json::Int(settings.cols as i64)),
+            ("adc_group", Json::Int(settings.adc_group as i64)),
+            ("spill", Json::Str(settings.spill.clone())),
+            ("combos", Json::Int(rows.len() as i64)),
+            ("sweep", Json::Arr(sweep)),
+        ],
+    )?;
+    println!("json: {out_path}  csv: {}/chip_placement.csv", cfg.results_dir);
     Ok(())
 }
 

@@ -21,6 +21,11 @@
 //! [`MappingPlan`]s and distorted conductances are computed **once** at
 //! program time (like flashing a real crossbar chip) and reused by every
 //! inference, so no mapping work is left on the serving hot path.
+//!
+//! Programmed layers can go one step further down the stack:
+//! [`ProgrammedLayer::place`] assigns the layer's tile grid to the slots of
+//! a physical [`crate::chip::ChipModel`], weighted by the layer's measured
+//! NF sensitivity (see [`crate::chip`]).
 
 use crate::crossbar::{CostModel, LayerTiling, TileCost, TileGeometry};
 use crate::mdm::{strategy_by_name, MappingPlan, MappingStrategy};
@@ -283,6 +288,40 @@ pub struct ProgrammedTile {
     pub weights: Tensor,
 }
 
+impl ProgrammedTile {
+    /// Mean physical Manhattan distance of the cells holding this tile's
+    /// nonzero weights, **after** the mapping plan: each active weight
+    /// contributes the mean [`MappingPlan::logical_cell_distance`] of its
+    /// `k_bits` bit columns. This is the NF-sensitivity signal chip
+    /// placement ranks tiles by (bit-level sparsity inside a weight is
+    /// ignored, which only scales the ranking).
+    pub fn mean_active_distance(&self) -> f64 {
+        let n_weights = self.weights.cols();
+        if n_weights == 0 {
+            return 0.0;
+        }
+        let k_bits = self.plan.cols() / n_weights;
+        let d = self.plan.logical_distance_matrix();
+        let mut acc = 0.0f64;
+        let mut n = 0usize;
+        for r in 0..self.weights.rows() {
+            for (wc, &v) in self.weights.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    for b in 0..k_bits {
+                        acc += d.at2(r, wc * k_bits + b) as f64;
+                    }
+                    n += k_bits;
+                }
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            acc / n as f64
+        }
+    }
+}
+
 /// One programmed sign part of a layer.
 #[derive(Debug, Clone)]
 pub struct ProgrammedPart {
@@ -343,6 +382,51 @@ impl ProgrammedLayer {
         let mut c = self.pos.cost;
         c.add(&self.neg.cost);
         c
+    }
+
+    /// Mean NF sensitivity of the programmed layer: the average
+    /// [`ProgrammedTile::mean_active_distance`] over the tiles of both sign
+    /// parts. Chip placement uses this to decide which layers deserve the
+    /// low-PR-impact slots.
+    pub fn nf_sensitivity(&self) -> f64 {
+        let mut acc = 0.0f64;
+        let mut n = 0usize;
+        for tile in self.pos.tiles.iter().chain(&self.neg.tiles) {
+            acc += tile.mean_active_distance();
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            acc / n as f64
+        }
+    }
+
+    /// The `place()` step: assign this layer's tile grid (both sign parts)
+    /// to crossbar slots of a chip. The workload is weighted by
+    /// [`Self::nf_sensitivity`], so the `nf_aware` placer parks the layer's
+    /// fragments in low-PR-impact slots. The chip's geometry must match the
+    /// geometry the layer was programmed at.
+    pub fn place(
+        &self,
+        chip: &crate::chip::ChipModel,
+        placer: &dyn crate::chip::Placer,
+    ) -> Result<crate::chip::Placement> {
+        ensure!(
+            chip.geometry == self.geometry,
+            "chip geometry {:?} does not match programmed geometry {:?}",
+            chip.geometry,
+            self.geometry
+        );
+        let mut workload = crate::chip::ChipWorkload::new(*chip)?;
+        workload.add_layer(
+            "layer",
+            0,
+            self.pos.fan_in,
+            self.pos.fan_out,
+            self.nf_sensitivity(),
+        )?;
+        placer.place(&workload)
     }
 
     /// Serve a batch through the programmed layer: `x [B, fan_in] @ W_eff`.
@@ -540,6 +624,27 @@ mod tests {
             .unwrap();
         assert_eq!(n1, n2);
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn programmed_layer_places_onto_a_chip() {
+        use crate::chip::{placer_by_name, ChipModel};
+        let w = random_signed(96, 24, 21);
+        let g = TileGeometry::new(16, 32, 8).unwrap(); // 6x6 tile grid per part
+        let layer =
+            Pipeline::new(g).strategy("mdm").unwrap().eta_signed(-2e-3).compile(&w).unwrap();
+        assert!(layer.nf_sensitivity() > 0.0);
+        let chip = ChipModel { slot_rows: 4, slot_cols: 4, geometry: g, ..ChipModel::default() };
+        for name in ["firstfit", "nf_aware"] {
+            let placement = layer.place(&chip, placer_by_name(name).unwrap().as_ref()).unwrap();
+            placement.validate().unwrap();
+            assert_eq!(placement.blocks.len(), placement.placed.len());
+            // 6x6 grid per part on a 4x4 chip -> 4 fragments per part.
+            assert_eq!(placement.blocks.len(), 8);
+        }
+        // Geometry mismatch is rejected.
+        let wrong = ChipModel { geometry: TileGeometry::paper_eval(), ..chip };
+        assert!(layer.place(&wrong, placer_by_name("firstfit").unwrap().as_ref()).is_err());
     }
 
     #[test]

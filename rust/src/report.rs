@@ -144,6 +144,10 @@ pub enum Json {
     Bool(bool),
     /// A string (escaped on write).
     Str(String),
+    /// An array (rendered inline).
+    Arr(Vec<Json>),
+    /// A nested object, keys in the given order (rendered inline).
+    Obj(Vec<(String, Json)>),
 }
 
 impl Json {
@@ -171,6 +175,19 @@ impl Json {
                 }
                 out.push('"');
                 out
+            }
+            Json::Arr(items) => {
+                let inner: Vec<String> = items.iter().map(Json::render).collect();
+                format!("[{}]", inner.join(", "))
+            }
+            Json::Obj(pairs) => {
+                let inner: Vec<String> = pairs
+                    .iter()
+                    .map(|(k, v)| {
+                        format!("{}: {}", Json::Str(k.clone()).render(), v.render())
+                    })
+                    .collect();
+                format!("{{{}}}", inner.join(", "))
             }
         }
     }
@@ -279,6 +296,26 @@ mod tests {
         assert!(s.contains("\"speedup\": 2.5,"));
         assert!(s.contains("\"bitwise_identical\": true,"));
         assert!(s.contains("\"bad\": null\n"));
+    }
+
+    #[test]
+    fn json_nested_arrays_and_objects_render() {
+        let s = json_object(&[(
+            "sweep",
+            Json::Arr(vec![
+                Json::Obj(vec![
+                    ("tile".into(), Json::Int(64)),
+                    ("placer".into(), Json::Str("nf_aware".into())),
+                ]),
+                Json::Obj(vec![("tile".into(), Json::Int(32))]),
+            ]),
+        )]);
+        assert!(
+            s.contains(
+                "\"sweep\": [{\"tile\": 64, \"placer\": \"nf_aware\"}, {\"tile\": 32}]"
+            ),
+            "{s}"
+        );
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Integration tests of the chip-level placement & wave scheduling
+//! subsystem: placement validity across placers, the NF-aware cost bound on
+//! the synthetic ResNet workload, determinism of the placement sweep at any
+//! thread count, spill/reuse scheduling, and the fragment-cost/CostModel
+//! cross-check. No artifacts are required.
+
+use mdm_cim::chip::{
+    fragment_cost, placer_by_name, placer_names, ChipModel, ChipWorkload, Placer, Scheduler,
+    SpillPolicy,
+};
+use mdm_cim::crossbar::{CostModel, LayerTiling, TileCost, TileGeometry};
+use mdm_cim::eval::ablations::{placement_compare, placement_sweep, PlacementSweepConfig};
+use mdm_cim::parallel::ParallelConfig;
+use mdm_cim::pipeline::Pipeline;
+use mdm_cim::quant::SignSplit;
+use mdm_cim::rng::Xoshiro256;
+use mdm_cim::tensor::Tensor;
+
+fn random_signed(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut rng = Xoshiro256::seeded(seed);
+    let data: Vec<f32> = (0..rows * cols).map(|_| rng.laplace(0.2) as f32).collect();
+    Tensor::new(&[rows, cols], data).unwrap()
+}
+
+/// The ResNet-shaped synthetic workload (miniresnet layer shapes) placed by
+/// every registered placer: each placement must be valid — no slot overlap,
+/// every fragment placed — and the NF-aware placer must achieve at most the
+/// greedy (first-fit) placer's total NF-weighted cost.
+#[test]
+fn resnet_workload_placements_valid_and_nf_aware_bounded() {
+    let dir = std::env::temp_dir().join(format!("chip_it_{}", std::process::id()));
+    let rows = placement_compare(32, 8, 42, &dir).unwrap();
+    assert_eq!(rows.len(), placer_names().len());
+    let cost_of = |p: &str| rows.iter().find(|r| r.placer == p).unwrap().nf_weighted_cost;
+    assert!(
+        cost_of("nf_aware") <= cost_of("firstfit") + 1e-9,
+        "nf_aware {} must not exceed firstfit {}",
+        cost_of("nf_aware"),
+        cost_of("firstfit")
+    );
+    for r in &rows {
+        // Scheduler::schedule validates every placement before pricing it;
+        // the row existing at all means validation passed. Sanity on top:
+        assert!(r.blocks > 0 && r.regions >= 1, "{r:?}");
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0, "{r:?}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Every placer yields a structurally valid placement on a hand-built
+/// workload, including when the workload overflows into spill regions.
+#[test]
+fn all_placers_place_every_fragment_without_overlap() {
+    let chip = ChipModel {
+        slot_rows: 4,
+        slot_cols: 4,
+        geometry: TileGeometry::new(16, 32, 8).unwrap(),
+        ..ChipModel::default()
+    };
+    let mut wl = ChipWorkload::new(chip).unwrap();
+    wl.add_layer("a", 0, 96, 24, 2.0).unwrap(); // 6x6 grid per part
+    wl.add_layer("b", 1, 48, 12, 1.0).unwrap(); // 3x3 grid per part
+    wl.add_layer("c", 2, 16, 4, 3.0).unwrap(); // 1x1 grid per part
+    for (name, _) in placer_names() {
+        let placement = placer_by_name(name).unwrap().place(&wl).unwrap();
+        placement.validate().unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(placement.placed.len(), wl.blocks.len(), "{name}");
+        assert!(placement.regions > 1, "{name}: 92 slots cannot fit one 16-slot chip");
+    }
+}
+
+/// The placement sweep fans out over the `parallel` module and must be
+/// bitwise identical at any thread count.
+#[test]
+fn placement_sweep_bitwise_deterministic_across_thread_counts() {
+    let dir = std::env::temp_dir().join(format!("chip_det_{}", std::process::id()));
+    let base = PlacementSweepConfig {
+        model: "miniresnet".into(),
+        tiles: vec![16, 32],
+        placers: vec!["firstfit".into(), "skyline".into(), "nf_aware".into()],
+        strategies: vec!["conventional".into(), "mdm".into()],
+        chip: ChipModel { slot_rows: 8, slot_cols: 8, ..ChipModel::default() },
+        k_bits: 8,
+        nf_tiles: 2,
+        batch: 2,
+        seed: 9,
+        parallel: ParallelConfig::serial(),
+    };
+    let serial = placement_sweep(&base, &dir).unwrap();
+    for threads in [2usize, 4] {
+        let cfg = PlacementSweepConfig {
+            parallel: ParallelConfig::with_threads(threads),
+            ..base.clone()
+        };
+        let par = placement_sweep(&cfg, &dir).unwrap();
+        assert_eq!(par.len(), serial.len());
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.tile, b.tile);
+            assert_eq!(a.placer, b.placer);
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.regions, b.regions, "{a:?} vs {b:?}");
+            assert_eq!(a.adc_conversions, b.adc_conversions);
+            assert_eq!(a.sync_events, b.sync_events);
+            assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+            assert_eq!(a.nf_weighted_cost.to_bits(), b.nf_weighted_cost.to_bits());
+            assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Under `SpillPolicy::Reuse` an overflowing workload stays on one chip,
+/// schedules across sequential rounds, and pays for it in latency; the
+/// arithmetic work (conversions, merges) is identical either way.
+#[test]
+fn reuse_spill_schedules_rounds_on_one_chip() {
+    let geometry = TileGeometry::new(16, 32, 8).unwrap();
+    let mk = |spill: SpillPolicy| {
+        let chip =
+            ChipModel { slot_rows: 2, slot_cols: 2, geometry, spill, ..ChipModel::default() };
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.add_layer("l0", 0, 96, 24, 1.0).unwrap();
+        wl.add_layer("l1", 1, 24, 8, 1.0).unwrap();
+        let placement = placer_by_name("firstfit").unwrap().place(&wl).unwrap();
+        placement.validate().unwrap();
+        Scheduler::default().schedule(&placement, 1).unwrap()
+    };
+    let chips = mk(SpillPolicy::MoreChips);
+    let reuse = mk(SpillPolicy::Reuse);
+    assert!(chips.chips > 1);
+    assert_eq!(chips.rounds, 1);
+    assert_eq!(reuse.chips, 1);
+    assert!(reuse.rounds > 1);
+    assert!(reuse.waves.len() > chips.waves.len());
+    assert!(reuse.total.latency_ns > chips.total.latency_ns);
+    assert_eq!(reuse.total.adc_conversions, chips.total.adc_conversions);
+    assert_eq!(reuse.total.sync_events, chips.total.sync_events);
+    // Reuse provisions one chip's area; parallel spill pays for all of them.
+    assert!(reuse.area_mm2 < chips.area_mm2);
+}
+
+/// The closed-form fragment cost reproduces `CostModel::layer_cost` exactly
+/// when summed over a part's fragments — the scheduler and the single-layer
+/// tiling model price the same arithmetic.
+#[test]
+fn fragment_costs_cross_check_against_cost_model() {
+    let geometry = TileGeometry::new(16, 32, 8).unwrap();
+    let chip = ChipModel { slot_rows: 3, slot_cols: 3, geometry, ..ChipModel::default() };
+    let cost = CostModel::default();
+    for (fan_in, fan_out, seed) in [(96usize, 24usize, 1u64), (40, 10, 2), (130, 17, 3)] {
+        let w = random_signed(fan_in, fan_out, seed);
+        let split = SignSplit::of(&w);
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.add_layer("l", 0, fan_in, fan_out, 1.0).unwrap();
+        for (part, tag) in [(&split.pos, ".p["), (&split.neg, ".n[")] {
+            let tiling = LayerTiling::partition(part, geometry).unwrap();
+            let reference = cost.layer_cost(&tiling, 2);
+            let mut acc = TileCost::default();
+            for b in wl.blocks.iter().filter(|b| b.label.contains(tag)) {
+                acc.add(&fragment_cost(&chip, b, &cost, 2));
+            }
+            assert_eq!(acc.adc_conversions, reference.adc_conversions, "{fan_in}x{fan_out}");
+            assert_eq!(acc.sync_events, reference.sync_events, "{fan_in}x{fan_out}");
+            assert_eq!(acc.io_bytes, reference.io_bytes, "{fan_in}x{fan_out}");
+        }
+    }
+}
+
+/// `ProgrammedLayer::place` end-to-end: compile a layer through the
+/// pipeline, place it, schedule it.
+#[test]
+fn compiled_layer_places_and_schedules() {
+    let g = TileGeometry::new(16, 32, 8).unwrap();
+    let w = random_signed(64, 16, 5);
+    let layer = Pipeline::new(g).strategy("mdm").unwrap().eta_signed(-2e-3).compile(&w).unwrap();
+    let chip = ChipModel { slot_rows: 4, slot_cols: 4, geometry: g, ..ChipModel::default() };
+    let placer = placer_by_name("nf_aware").unwrap();
+    let placement = layer.place(&chip, placer.as_ref()).unwrap();
+    placement.validate().unwrap();
+    let report = Scheduler::default().schedule(&placement, 4).unwrap();
+    assert_eq!(report.waves.len(), 1, "single layer, no reuse -> one wave");
+    assert!(report.total.latency_ns > 0.0);
+    // Both sign parts' conversions are accounted for.
+    let tiling = LayerTiling::partition(&SignSplit::of(&w).pos, g).unwrap();
+    let one_part = CostModel::default().layer_cost(&tiling, 4);
+    assert!(report.total.adc_conversions >= 2 * one_part.adc_conversions);
+}
+
+/// Placers are honest `Placer` trait objects: name and description surface
+/// through the registry.
+#[test]
+fn placer_registry_is_consistent() {
+    for (name, desc) in placer_names() {
+        let p = placer_by_name(name).unwrap();
+        assert_eq!(p.name(), name);
+        assert!(!desc.is_empty());
+    }
+    assert!(placer_by_name("definitely_not_a_placer").is_err());
+}
