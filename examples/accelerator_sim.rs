@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
             let engine_cfg = EngineConfig {
                 model: ModelKind::MiniResNet,
                 strategy: strategy_by_name(label)?,
+                estimator: mdm_cim::nf::estimator::estimator_by_name("analytic")?,
                 eta_signed: -2e-3,
                 geometry: TileGeometry::new(tile, tile, 8)?,
                 fwd_batch: 16,

@@ -96,6 +96,7 @@ fn main() -> anyhow::Result<()> {
             EngineConfig {
                 model: ModelKind::MiniResNet,
                 strategy: strategy_by_name(strategy)?,
+                estimator: mdm_cim::nf::estimator::estimator_by_name("analytic")?,
                 eta_signed,
                 geometry,
                 fwd_batch: 16,

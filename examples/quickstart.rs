@@ -56,8 +56,8 @@ fn main() -> anyhow::Result<()> {
     };
     let nf_conv = nf("conventional")?;
     let nf_mdm = nf("mdm")?;
-    println!("\nNF (conventional) = {:.3}", nf_conv);
-    println!("NF (MDM)          = {:.3}", nf_mdm);
+    println!("\nNF (conventional) = {:.3e}", nf_conv);
+    println!("NF (MDM)          = {:.3e}", nf_mdm);
     println!("reduction         = {:.1}%", 100.0 * (1.0 - nf_mdm / nf_conv));
 
     // 3. What the accelerator actually serves: distortion of the effective

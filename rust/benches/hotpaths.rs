@@ -114,6 +114,7 @@ fn main() -> anyhow::Result<()> {
             EngineConfig {
                 model: ModelKind::MiniResNet,
                 strategy: mdm.clone(),
+                estimator: mdm_cim::nf::estimator::estimator_by_name("analytic")?,
                 eta_signed: -2e-3,
                 geometry: TileGeometry::paper_eval(),
                 fwd_batch: 16,
@@ -132,6 +133,7 @@ fn main() -> anyhow::Result<()> {
                 EngineConfig {
                     model: ModelKind::MiniResNet,
                     strategy: mdm.clone(),
+                    estimator: mdm_cim::nf::estimator::estimator_by_name("analytic").unwrap(),
                     eta_signed: -2e-3,
                     geometry: TileGeometry::paper_eval(),
                     fwd_batch: 16,

@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     let mut fig4 = None;
     let cfg4 = eval::fig4::Fig4Config { n_tiles: 100, tile: 64, ..Default::default() };
     let s = bench("fig4_fit_100x64x64", 0, 1, || {
-        fig4 = Some(eval::fig4::run(cfg4, out).unwrap());
+        fig4 = Some(eval::fig4::run(cfg4.clone(), out).unwrap());
     });
     record("fig4_fit_100x64x64", s);
     let f4 = fig4.unwrap();

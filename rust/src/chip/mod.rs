@@ -394,8 +394,10 @@ impl Placement {
 /// A placement-priority proxy for a layer's NF sensitivity, computed from
 /// its signed weight matrix alone: the mean in-tile Manhattan distance of
 /// each nonzero weight's bit-column span center at the given geometry.
-/// (The exact bit-plane NF needs quantization — [`crate::pipeline::Pipeline::sampled_nf`];
-/// this proxy ranks layers without it, which is all placement needs.)
+/// (The exact bit-plane NF needs quantization — that path is
+/// [`crate::pipeline::Pipeline::sampled_nf`] under any registered
+/// [`crate::nf::estimator::NfEstimator`] backend; this proxy ranks layers
+/// without it, which is all placement needs.)
 pub fn weight_nf_proxy(w: &Tensor, geometry: TileGeometry) -> f64 {
     assert_eq!(w.ndim(), 2, "layer matrix must be 2-D");
     let wpr = geometry.weights_per_row();

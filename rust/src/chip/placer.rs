@@ -15,6 +15,13 @@
 //! deterministic: blocks are ordered by explicit keys with stable
 //! tie-breaks, so repeated runs — and runs inside the [`crate::parallel`]
 //! fan-out — produce bitwise-identical placements.
+//!
+//! The NF-sensitivity weights `nf_aware` ranks by come from the unified
+//! estimation layer: sweep workloads score them through
+//! [`crate::pipeline::Pipeline::sampled_nf`] under the configured
+//! [`crate::nf::estimator::NfEstimator`] backend, so swapping `analytic`
+//! for `cached:circuit` upgrades placement priorities to exact (deduped)
+//! measurements without touching any placer.
 
 use super::{ChipWorkload, PlacedBlock, Placement};
 use anyhow::{ensure, Result};

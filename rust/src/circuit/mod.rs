@@ -78,6 +78,37 @@ impl NodeMap {
     fn b(&self, j: usize, k: usize) -> Option<usize> {
         self.b_idx[j * self.k_cols + k]
     }
+
+    /// Exact structural half-bandwidth of the mesh system under this node
+    /// ordering (independent of the device conductances — couplings are
+    /// purely structural, so the bound can be computed once per tile shape
+    /// and reused across solves). Dimensions are derived from the map
+    /// itself, so the bound always matches the map it was built from.
+    fn bandwidth(&self) -> usize {
+        let k_cols = self.k_cols;
+        if k_cols == 0 {
+            return 0;
+        }
+        let j_rows = self.t_idx.len() / k_cols;
+        let mut bw = 0usize;
+        let mut consider = |a: Option<usize>, b: Option<usize>| {
+            if let (Some(i), Some(j)) = (a, b) {
+                bw = bw.max(i.abs_diff(j));
+            }
+        };
+        for j in 0..j_rows {
+            for k in 0..k_cols {
+                if k + 1 < k_cols {
+                    consider(self.t(j, k), self.t(j, k + 1));
+                }
+                if j + 1 < j_rows {
+                    consider(self.b(j, k), self.b(j + 1, k));
+                }
+                consider(self.t(j, k), self.b(j, k));
+            }
+        }
+        bw
+    }
 }
 
 /// Solution of one crossbar solve.
@@ -172,13 +203,7 @@ impl CrossbarCircuit {
 
     /// Device conductance at `(j,k)`.
     fn g_dev(&self, j: usize, k: usize) -> f64 {
-        if self.active[j * self.k_cols + k] {
-            1.0 / self.physics.r_on
-        } else if self.physics.r_off.is_finite() {
-            1.0 / self.physics.r_off
-        } else {
-            0.0
-        }
+        two_level_conductance(self.active[j * self.k_cols + k], &self.physics)
     }
 
     /// Ideal (`r = 0`) output current of each column: `i₀_k = V_in Σ_j g_jk`.
@@ -204,29 +229,9 @@ impl CrossbarCircuit {
     /// Recover per-column output currents from the solved node voltages.
     fn currents_from_solution(&self, map: &NodeMap, v: &[f64]) -> Vec<f64> {
         let gw = 1.0 / self.physics.r_wire;
-        let vin = self.physics.v_in;
-        let vt = |j: usize, k: usize| -> f64 {
-            match map.t(j, k) {
-                Some(i) => v[i],
-                None => vin,
-            }
-        };
-        let vb = |j: usize, k: usize| -> f64 {
-            match map.b(j, k) {
-                Some(i) => v[i],
-                None => 0.0,
-            }
-        };
+        let g = |j: usize, k: usize| self.g_dev(j, k);
         (0..self.k_cols)
-            .map(|k| {
-                // Current into the B[0,k] ground: from the device at (0,k)
-                // plus the column-wire segment from B[1,k].
-                let mut i = self.g_dev(0, k) * (vt(0, k) - 0.0);
-                if self.j_rows >= 2 {
-                    i += gw * (vb(1, k) - 0.0);
-                }
-                i
-            })
+            .map(|k| sensed_col_current(map, v, &g, gw, self.physics.v_in, self.j_rows, k))
             .collect()
     }
 
@@ -292,30 +297,28 @@ fn assemble_mesh(
     vin: f64,
 ) -> (NodeMap, BandedSpd, Vec<f64>) {
     let map = NodeMap::build(j_rows, k_cols);
-
-    // First pass: collect couplings to find the exact bandwidth.
-    // (Couplings are structural; the bound is ~2K + 2.)
-    let mut bw = 0usize;
-    let mut consider = |a: Option<usize>, b: Option<usize>| {
-        if let (Some(i), Some(j)) = (a, b) {
-            bw = bw.max(i.abs_diff(j));
-        }
-    };
-    for j in 0..j_rows {
-        for k in 0..k_cols {
-            if k + 1 < k_cols {
-                consider(map.t(j, k), map.t(j, k + 1));
-            }
-            if j + 1 < j_rows {
-                consider(map.b(j, k), map.b(j + 1, k));
-            }
-            consider(map.t(j, k), map.b(j, k));
-        }
-    }
-
+    let bw = map.bandwidth();
     let mut a = BandedSpd::zeros(map.n_unknowns, bw);
     let mut rhs = vec![0.0; map.n_unknowns];
+    assemble_mesh_into(j_rows, k_cols, g_dev, gw, vin, &map, &mut a, &mut rhs);
+    (map, a, rhs)
+}
 
+/// Stamp the mesh conductances into pre-sized storage — the buffer-reusing
+/// core of [`assemble_mesh`] that [`SolverWorkspace`] calls with its own
+/// (already reset) matrix and rhs. The stamp order is identical to the
+/// allocating path, so both assemble the same bits.
+#[allow(clippy::too_many_arguments)]
+fn assemble_mesh_into(
+    j_rows: usize,
+    k_cols: usize,
+    g_dev: impl Fn(usize, usize) -> f64,
+    gw: f64,
+    vin: f64,
+    map: &NodeMap,
+    a: &mut BandedSpd,
+    rhs: &mut [f64],
+) {
     // Generic two-terminal conductance stamp between nodes with optional
     // fixed voltages.
     let mut stamp = |na: Option<usize>, va: f64, nb: Option<usize>, vb: f64, g: f64| {
@@ -354,7 +357,221 @@ fn assemble_mesh(
             stamp(map.t(j, k), vin, map.b(j, k), 0.0, g_dev(j, k));
         }
     }
-    (map, a, rhs)
+}
+
+/// A reusable circuit-solver workspace: node map, band matrix, rhs, and
+/// solution buffers that survive across solves so the steady-state path
+/// (many tiles of one shape, the Fig. 4 / `mdm bench` / `cached:circuit`
+/// workload) performs **zero allocations** per tile — assembly,
+/// factorization, and both triangular solves all run in place.
+///
+/// One workspace lives per worker thread (see [`with_workspace`]); results
+/// are bitwise identical to the allocating [`CrossbarCircuit::solve`] path
+/// because both share the same assembly order and the same factorization /
+/// substitution kernels.
+#[derive(Debug)]
+pub struct SolverWorkspace {
+    /// Tile shape the cached node map was built for.
+    dims: (usize, usize),
+    map: NodeMap,
+    bw: usize,
+    a: BandedSpd,
+    rhs: Vec<f64>,
+    sol: Vec<f64>,
+}
+
+impl Default for SolverWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SolverWorkspace {
+    /// Fresh workspace (no buffers reserved yet; they grow on first use).
+    pub fn new() -> Self {
+        Self {
+            dims: (0, 0),
+            map: NodeMap::build(0, 0),
+            bw: 0,
+            a: BandedSpd::zeros(0, 0),
+            rhs: Vec::new(),
+            sol: Vec::new(),
+        }
+    }
+
+    /// Point the workspace at a tile shape: rebuild the node map only when
+    /// the shape changed, then re-zero the (reused) matrix and rhs storage.
+    fn prepare(&mut self, j_rows: usize, k_cols: usize) {
+        if self.dims != (j_rows, k_cols) {
+            self.map = NodeMap::build(j_rows, k_cols);
+            self.bw = self.map.bandwidth();
+            self.dims = (j_rows, k_cols);
+        }
+        let n = self.map.n_unknowns;
+        self.a.reset(n, self.bw);
+        self.rhs.clear();
+        self.rhs.resize(n, 0.0);
+    }
+
+    /// Assemble, factor, and solve the mesh for the given active-cell
+    /// planes; on success `self.sol` holds the node voltages.
+    fn solve_planes(&mut self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<()> {
+        ensure!(planes.ndim() == 2, "planes must be 2-D");
+        let (j_rows, k_cols) = (planes.rows(), planes.cols());
+        ensure!(j_rows >= 1 && k_cols >= 1, "crossbar must be at least 1x1");
+        ensure!(
+            physics.r_wire > 0.0 && physics.r_on > 0.0,
+            "resistances must be positive"
+        );
+        self.prepare(j_rows, k_cols);
+        let g = device_conductance_fn(planes, physics);
+        assemble_mesh_into(
+            j_rows,
+            k_cols,
+            g,
+            1.0 / physics.r_wire,
+            physics.v_in,
+            &self.map,
+            &mut self.a,
+            &mut self.rhs,
+        );
+        self.sol.clear();
+        self.sol.extend_from_slice(&self.rhs);
+        if self.map.n_unknowns > 0 {
+            self.a
+                .factorize_in_place()
+                .context("crossbar conductance matrix factorization")?;
+            self.a.solve_factored(&mut self.sol);
+        }
+        Ok(())
+    }
+
+    /// Sensed current into the `B[0,k]` ground after [`Self::solve_planes`]
+    /// — the same shared recovery every solve path uses.
+    fn col_current(&self, planes: &Tensor, physics: &CrossbarPhysics, k: usize) -> f64 {
+        let g = device_conductance_fn(planes, physics);
+        sensed_col_current(
+            &self.map,
+            &self.sol,
+            &g,
+            1.0 / physics.r_wire,
+            physics.v_in,
+            planes.rows(),
+            k,
+        )
+    }
+
+    /// Aggregate measured NF `|Σ Δi| / Σ i₀` (Eq. 1 over the tile) of the
+    /// planes — one full Kirchhoff solve, allocation-free in steady state.
+    /// Bitwise identical to
+    /// `CrossbarCircuit::from_planes(planes, physics)?.solve()?.nf()`.
+    pub fn nf(&mut self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<f64> {
+        self.solve_planes(planes, physics)?;
+        let g = device_conductance_fn(planes, physics);
+        let (j_rows, k_cols) = (planes.rows(), planes.cols());
+        // One column pass, both accumulators advanced in column order — the
+        // same per-accumulator summation order as Solution::nf, so the bits
+        // match the allocating path while scanning the conductances once.
+        let mut i0_total = 0.0f64;
+        let mut di = 0.0f64;
+        for k in 0..k_cols {
+            let i0 = (0..j_rows).map(|j| g(j, k)).sum::<f64>() * physics.v_in;
+            i0_total += i0;
+            di += self.col_current(planes, physics, k) - i0;
+        }
+        if i0_total == 0.0 {
+            return Ok(0.0);
+        }
+        Ok((di / i0_total).abs())
+    }
+
+    /// Per-column measured NF `|Δi_k / i₀_k|` (0 where the ideal current is
+    /// 0) — the workspace counterpart of [`Solution::nf_per_col`].
+    pub fn nf_per_col(
+        &mut self,
+        planes: &Tensor,
+        physics: &CrossbarPhysics,
+    ) -> Result<Vec<f64>> {
+        self.solve_planes(planes, physics)?;
+        let g = device_conductance_fn(planes, physics);
+        let (j_rows, k_cols) = (planes.rows(), planes.cols());
+        Ok((0..k_cols)
+            .map(|k| {
+                let i0 = (0..j_rows).map(|j| g(j, k)).sum::<f64>() * physics.v_in;
+                if i0 == 0.0 {
+                    0.0
+                } else {
+                    ((self.col_current(planes, physics, k) - i0) / i0).abs()
+                }
+            })
+            .collect())
+    }
+}
+
+/// The two-level device conductance rule — the single definition behind
+/// [`CrossbarCircuit::g_dev`] and the workspace path, so every solve
+/// assembles identical systems.
+fn two_level_conductance(active: bool, physics: &CrossbarPhysics) -> f64 {
+    if active {
+        1.0 / physics.r_on
+    } else if physics.r_off.is_finite() {
+        1.0 / physics.r_off
+    } else {
+        0.0
+    }
+}
+
+/// Two-level device conductance of a binary plane tensor under the given
+/// physics (nonzero entry = active), as a per-cell function.
+fn device_conductance_fn<'a>(
+    planes: &'a Tensor,
+    physics: &'a CrossbarPhysics,
+) -> impl Fn(usize, usize) -> f64 + 'a {
+    move |j, k| two_level_conductance(planes.at2(j, k) != 0.0, physics)
+}
+
+/// Sensed current into the `B[0,k]` ground given solved node voltages:
+/// the device at `(0,k)` plus the column-wire segment from `B[1,k]` — the
+/// single current-recovery definition shared by [`CrossbarCircuit`], the
+/// varied-mesh Monte-Carlo path, and [`SolverWorkspace`], so all solve
+/// paths stay bitwise identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn sensed_col_current(
+    map: &NodeMap,
+    v: &[f64],
+    g_dev: &impl Fn(usize, usize) -> f64,
+    gw: f64,
+    vin: f64,
+    j_rows: usize,
+    k: usize,
+) -> f64 {
+    let vt = match map.t(0, k) {
+        Some(i) => v[i],
+        None => vin,
+    };
+    let mut cur = g_dev(0, k) * vt;
+    if j_rows >= 2 {
+        let vb = match map.b(1, k) {
+            Some(i) => v[i],
+            None => 0.0,
+        };
+        cur += gw * vb;
+    }
+    cur
+}
+
+thread_local! {
+    /// One [`SolverWorkspace`] per thread: the `parallel` pool spawns scoped
+    /// workers, so each worker reuses its own workspace across every tile of
+    /// its chunk — zero steady-state allocations without any locking.
+    static TL_WORKSPACE: std::cell::RefCell<SolverWorkspace> =
+        std::cell::RefCell::new(SolverWorkspace::new());
+}
+
+/// Run `f` with this thread's [`SolverWorkspace`]. Panics if re-entered
+/// (`f` must not call `with_workspace` recursively).
+pub fn with_workspace<R>(f: impl FnOnce(&mut SolverWorkspace) -> R) -> R {
+    TL_WORKSPACE.with(|ws| f(&mut ws.borrow_mut()))
 }
 
 /// Solve a mesh whose per-cell resistances are given explicitly (the
@@ -383,25 +600,10 @@ pub fn solve_varied_mesh(
         a.cholesky().context("varied mesh factorization")?.solve(&rhs)
     };
     let gw = 1.0 / r_wire;
-    let vt = |j: usize, k: usize| -> f64 {
-        match map.t(j, k) {
-            Some(i) => v[i],
-            None => vin,
-        }
-    };
-    let vb = |j: usize, k: usize| -> f64 {
-        match map.b(j, k) {
-            Some(i) => v[i],
-            None => 0.0,
-        }
-    };
     let mut di = 0.0f64;
     let mut i0_total = 0.0f64;
     for k in 0..k_cols {
-        let mut i = g(0, k) * vt(0, k);
-        if j_rows >= 2 {
-            i += gw * vb(1, k);
-        }
+        let i = sensed_col_current(&map, &v, &g, gw, vin, j_rows, k);
         let i0: f64 = (0..j_rows).map(|j| g(j, k)).sum::<f64>() * vin;
         di += i - i0;
         i0_total += i0;
@@ -531,15 +733,16 @@ pub fn single_cell_nf_map_with(
 /// banded-Cholesky solve per tile, fanned out over the worker pool. The
 /// result at index `i` is the NF of `planes[i]`; the output order (and the
 /// bits) match a serial loop — this is the hot path of Fig. 4, the ratio
-/// ablation, and the `mdm bench` parallel-vs-serial harness.
+/// ablation, and the `mdm bench` harness. Each worker thread solves through
+/// its own reusable [`SolverWorkspace`] (see [`with_workspace`]), so the
+/// steady-state path performs no per-tile allocations; the bits are
+/// identical to per-tile [`CrossbarCircuit::solve`] calls.
 pub fn measure_tile_nfs(
     planes: &[Tensor],
     physics: CrossbarPhysics,
     parallel: &crate::parallel::ParallelConfig,
 ) -> Result<Vec<f64>> {
-    crate::parallel::try_map(parallel, planes, |p| {
-        CrossbarCircuit::from_planes(p, physics)?.solve().map(|s| s.nf())
-    })
+    crate::parallel::try_map(parallel, planes, |p| with_workspace(|ws| ws.nf(p, &physics)))
 }
 
 #[cfg(test)]
@@ -687,6 +890,49 @@ mod tests {
             let direct = CrossbarCircuit::from_planes(t, p).unwrap().solve().unwrap().nf();
             assert_eq!(nf.to_bits(), direct.to_bits());
         }
+    }
+
+    #[test]
+    fn workspace_nf_matches_full_solve_across_shapes() {
+        // One workspace reused across tiles of *different* shapes must
+        // rebuild its node map transparently and stay bitwise identical to
+        // the allocating solve path.
+        let p = phys();
+        let mut rng = crate::rng::Xoshiro256::seeded(23);
+        let shapes = [(8usize, 8usize), (6, 10), (8, 8), (1, 5), (12, 3), (8, 8)];
+        let mut ws = SolverWorkspace::new();
+        for &(r, c) in &shapes {
+            let planes = crate::eval::random_planes(r, c, 0.3, &mut rng);
+            let fast = ws.nf(&planes, &p).unwrap();
+            let slow = CrossbarCircuit::from_planes(&planes, p).unwrap().solve().unwrap().nf();
+            assert_eq!(fast.to_bits(), slow.to_bits(), "shape {r}x{c}");
+        }
+    }
+
+    #[test]
+    fn workspace_per_col_matches_full_solve() {
+        let p = phys();
+        let mut rng = crate::rng::Xoshiro256::seeded(29);
+        let planes = crate::eval::random_planes(9, 7, 0.25, &mut rng);
+        let mut ws = SolverWorkspace::new();
+        let fast = ws.nf_per_col(&planes, &p).unwrap();
+        let slow =
+            CrossbarCircuit::from_planes(&planes, p).unwrap().solve().unwrap().nf_per_col();
+        assert_eq!(fast.len(), slow.len());
+        for (a, b) in fast.iter().zip(&slow) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn workspace_rejects_degenerate_planes() {
+        let mut ws = SolverWorkspace::new();
+        // 1x1 with the only cell at the I/O corner still solves (0 unknowns).
+        let one = Tensor::new(&[1, 1], vec![1.0]).unwrap();
+        assert!(ws.nf(&one, &phys_open()).unwrap() < 1e-12);
+        // Non-2-D input is an error, not a panic.
+        let bad = Tensor::from_vec(vec![1.0, 0.0]);
+        assert!(ws.nf(&bad, &phys()).is_err());
     }
 
     #[test]

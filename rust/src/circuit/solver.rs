@@ -34,6 +34,18 @@ impl BandedSpd {
         Self { n, bw, band: vec![0.0; (bw + 1) * n] }
     }
 
+    /// Re-zero this matrix at (possibly new) dimensions, **reusing the band
+    /// allocation**. After `reset` the matrix is indistinguishable from
+    /// `BandedSpd::zeros(n, bw)` but no allocation happens once the buffer
+    /// has grown to its steady-state size — the
+    /// [`super::SolverWorkspace`] hot path.
+    pub fn reset(&mut self, n: usize, bw: usize) {
+        self.n = n;
+        self.bw = bw;
+        self.band.clear();
+        self.band.resize((bw + 1) * n, 0.0);
+    }
+
     /// Matrix dimension.
     pub fn n(&self) -> usize {
         self.n
@@ -95,38 +107,97 @@ impl BandedSpd {
     /// Returns the factor; fails if the matrix is not positive definite
     /// (which for a conductance matrix indicates a floating node).
     pub fn cholesky(mut self) -> Result<BandedCholesky> {
-        let (n, bw) = (self.n, self.bw);
-        let w = bw + 1;
-        let band = &mut self.band;
-        for j in 0..n {
-            let cj = j * w;
-            let d = band[cj];
-            if d <= 0.0 || !d.is_finite() {
-                bail!("matrix not positive definite at column {j} (d = {d})");
-            }
-            let dj = d.sqrt();
-            band[cj] = dj;
-            let m = bw.min(n - 1 - j);
-            let inv = 1.0 / dj;
-            for r in 1..=m {
-                band[cj + r] *= inv;
-            }
-            // Rank-1 trailing update: A[j+c .. j+m, j+c] -= L[j+c,j] * L[..,j].
-            for c in 1..=m {
-                let l_c = band[cj + c];
-                if l_c != 0.0 {
-                    let ct = (j + c) * w;
-                    // split_at_mut to borrow source (col j) and dest (col j+c).
-                    let (src_part, dst_part) = band.split_at_mut(ct);
-                    let src = &src_part[cj + c..cj + m + 1];
-                    let dst = &mut dst_part[..m - c + 1];
-                    for (dv, sv) in dst.iter_mut().zip(src.iter()) {
-                        *dv -= l_c * sv;
-                    }
+        cholesky_in_place(self.n, self.bw, &mut self.band)?;
+        Ok(BandedCholesky { n: self.n, bw: self.bw, band: self.band })
+    }
+
+    /// Factor in place without consuming the storage (the zero-allocation
+    /// [`super::SolverWorkspace`] path). After a successful return the band
+    /// holds `L`; use [`Self::solve_factored`]. Runs the exact same
+    /// arithmetic as [`Self::cholesky`], so results are bitwise identical.
+    pub fn factorize_in_place(&mut self) -> Result<()> {
+        cholesky_in_place(self.n, self.bw, &mut self.band)
+    }
+
+    /// Solve `A·x = b` in place on a band previously factored by
+    /// [`Self::factorize_in_place`] (`x` holds `b` on entry, the solution on
+    /// return). Bitwise identical to [`BandedCholesky::solve`].
+    pub fn solve_factored(&self, x: &mut [f64]) {
+        banded_solve_in_place(self.n, self.bw, &self.band, x);
+    }
+}
+
+/// The shared right-looking factorization kernel behind
+/// [`BandedSpd::cholesky`] and [`BandedSpd::factorize_in_place`] — one code
+/// path, so the consuming and the workspace-reusing entries produce the
+/// same bits.
+fn cholesky_in_place(n: usize, bw: usize, band: &mut [f64]) -> Result<()> {
+    let w = bw + 1;
+    for j in 0..n {
+        let cj = j * w;
+        let d = band[cj];
+        if d <= 0.0 || !d.is_finite() {
+            bail!("matrix not positive definite at column {j} (d = {d})");
+        }
+        let dj = d.sqrt();
+        band[cj] = dj;
+        let m = bw.min(n - 1 - j);
+        let inv = 1.0 / dj;
+        for r in 1..=m {
+            band[cj + r] *= inv;
+        }
+        // Rank-1 trailing update: A[j+c .. j+m, j+c] -= L[j+c,j] * L[..,j].
+        for c in 1..=m {
+            let l_c = band[cj + c];
+            if l_c != 0.0 {
+                let ct = (j + c) * w;
+                // split_at_mut to borrow source (col j) and dest (col j+c).
+                let (src_part, dst_part) = band.split_at_mut(ct);
+                let src = &src_part[cj + c..cj + m + 1];
+                let dst = &mut dst_part[..m - c + 1];
+                for (dv, sv) in dst.iter_mut().zip(src.iter()) {
+                    *dv -= l_c * sv;
                 }
             }
         }
-        Ok(BandedCholesky { n, bw, band: self.band })
+    }
+    Ok(())
+}
+
+/// Forward + backward substitution on a factored band, in place on `x`
+/// (`b` on entry, `A⁻¹b` on return) — the shared kernel behind
+/// [`BandedCholesky::solve`] and [`BandedSpd::solve_factored`].
+fn banded_solve_in_place(n: usize, bw: usize, band: &[f64], x: &mut [f64]) {
+    assert_eq!(x.len(), n);
+    let w = bw + 1;
+    // Forward: L y = b. With a sparse rhs (the Sherman–Morrison update
+    // vectors are 1–2 nonzeros) y stays zero before the first nonzero,
+    // so start there.
+    let start = x.iter().position(|&v| v != 0.0).unwrap_or(n);
+    for j in start..n {
+        let cj = j * w;
+        let yj = x[j] / band[cj];
+        x[j] = yj;
+        if yj != 0.0 {
+            let m = bw.min(n - 1 - j);
+            let col = &band[cj + 1..cj + m + 1];
+            let dst = &mut x[j + 1..j + m + 1];
+            for (dv, lv) in dst.iter_mut().zip(col.iter()) {
+                *dv -= lv * yj;
+            }
+        }
+    }
+    // Backward: L^T x = y.
+    for j in (0..n).rev() {
+        let cj = j * w;
+        let m = bw.min(n - 1 - j);
+        let mut s = x[j];
+        let col = &band[cj + 1..cj + m + 1];
+        let xs = &x[j + 1..j + m + 1];
+        for (lv, xv) in col.iter().zip(xs.iter()) {
+            s -= lv * xv;
+        }
+        x[j] = s / band[cj];
     }
 }
 
@@ -147,40 +218,8 @@ impl BandedCholesky {
     /// Solve `A·x = b` via forward + backward substitution. Both passes
     /// stream each band column contiguously.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        assert_eq!(b.len(), self.n);
-        let (n, bw) = (self.n, self.bw);
-        let w = bw + 1;
-        // Forward: L y = b. With a sparse rhs (the Sherman–Morrison update
-        // vectors are 1–2 nonzeros) y stays zero before the first nonzero,
-        // so start there.
-        let mut y = b.to_vec();
-        let start = y.iter().position(|&v| v != 0.0).unwrap_or(n);
-        for j in start..n {
-            let cj = j * w;
-            let yj = y[j] / self.band[cj];
-            y[j] = yj;
-            if yj != 0.0 {
-                let m = bw.min(n - 1 - j);
-                let col = &self.band[cj + 1..cj + m + 1];
-                let dst = &mut y[j + 1..j + m + 1];
-                for (dv, lv) in dst.iter_mut().zip(col.iter()) {
-                    *dv -= lv * yj;
-                }
-            }
-        }
-        // Backward: L^T x = y.
-        let mut x = y;
-        for j in (0..n).rev() {
-            let cj = j * w;
-            let m = bw.min(n - 1 - j);
-            let mut s = x[j];
-            let col = &self.band[cj + 1..cj + m + 1];
-            let xs = &x[j + 1..j + m + 1];
-            for (lv, xv) in col.iter().zip(xs.iter()) {
-                s -= lv * xv;
-            }
-            x[j] = s / self.band[cj];
-        }
+        let mut x = b.to_vec();
+        banded_solve_in_place(self.n, self.bw, &self.band, &mut x);
         x
     }
 }

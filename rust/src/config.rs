@@ -170,6 +170,11 @@ pub struct ExperimentConfig {
     /// Mapping-strategy registry name (resolved by
     /// `mdm::strategy_by_name` at the point of use).
     pub strategy: String,
+    /// NF-estimation backend registry name (`[nf] estimator` /
+    /// `--estimator`; resolved by `nf::estimator::estimator_by_name` at the
+    /// point of use — `analytic`, `circuit`, `circuit_cg`, `sampled[:N]`,
+    /// or `cached:<inner>`).
+    pub estimator: String,
     /// Seed for all randomized pieces.
     pub seed: u64,
     /// Output directory for CSVs.
@@ -189,6 +194,7 @@ impl Default for ExperimentConfig {
             k_bits: 8,
             eta_signed: -2e-3,
             strategy: "mdm".into(),
+            estimator: "analytic".into(),
             seed: 42,
             results_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
@@ -207,6 +213,7 @@ impl ExperimentConfig {
             k_bits: c.int_or("experiment", "k_bits", d.k_bits as i64) as usize,
             eta_signed: c.float_or("experiment", "eta_signed", d.eta_signed),
             strategy: c.str_or("experiment", "strategy", &d.strategy),
+            estimator: c.str_or("nf", "estimator", &d.estimator),
             seed: c.int_or("experiment", "seed", d.seed as i64) as u64,
             results_dir: c.str_or("experiment", "results_dir", &d.results_dir),
             artifacts_dir: c.str_or("experiment", "artifacts_dir", &d.artifacts_dir),
@@ -377,6 +384,16 @@ label = "a # not a comment"
         let d = ChipSettings::from_config(&Config::default());
         assert_eq!(d.rows, 16);
         assert_eq!(d.spill, "chips");
+    }
+
+    #[test]
+    fn nf_estimator_key_parsed_with_analytic_default() {
+        let c = Config::parse("[nf]\nestimator = \"cached:circuit\"").unwrap();
+        assert_eq!(ExperimentConfig::from_config(&c).estimator, "cached:circuit");
+        // Absent key falls back to the closed-form analytic backend.
+        let c = Config::parse("[experiment]\ntile_size = 16").unwrap();
+        assert_eq!(ExperimentConfig::from_config(&c).estimator, "analytic");
+        assert_eq!(ExperimentConfig::default().estimator, "analytic");
     }
 
     #[test]

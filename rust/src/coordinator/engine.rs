@@ -12,12 +12,13 @@
 
 use crate::crossbar::{TileCost, TileGeometry};
 use crate::mdm::{strategy_by_name, MappingStrategy};
+use crate::nf::estimator::{estimator_by_name, NfEstimator};
 use crate::parallel::ParallelConfig;
 use crate::pipeline::Pipeline;
 use crate::runtime::{ArtifactStore, CompiledModule};
 use crate::tensor::Tensor;
 use anyhow::{ensure, Context, Result};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Which trained model the engine serves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,6 +67,13 @@ pub struct EngineConfig {
     /// Mapping strategy programming every layer's tiles (select by name via
     /// [`strategy_by_name`]).
     pub strategy: Arc<dyn MappingStrategy>,
+    /// NF-estimation backend scoring each programmed layer's NF
+    /// sensitivity (lazily, at the first [`Engine::place_on`]) — the
+    /// weights the `nf_aware` chip placer ranks by (select by name via
+    /// [`estimator_by_name`]; CLI `mdm serve --estimator NAME`). Shared
+    /// across a server's workers, so a caching backend dedupes the scored
+    /// tiles fleet-wide.
+    pub estimator: Arc<dyn NfEstimator>,
     /// Signed Eq.-17 coefficient; 0.0 = ideal (no distortion).
     pub eta_signed: f64,
     /// Tile geometry the crossbars are programmed at.
@@ -87,6 +95,7 @@ impl EngineConfig {
         Self {
             model,
             strategy: strategy_by_name("conventional").expect("baseline strategy registered"),
+            estimator: estimator_by_name("analytic").expect("analytic estimator registered"),
             eta_signed: 0.0,
             geometry: TileGeometry::paper_eval(),
             fwd_batch: 16,
@@ -99,6 +108,7 @@ impl EngineConfig {
         Ok(Self {
             model,
             strategy: strategy_by_name(strategy)?,
+            estimator: estimator_by_name("analytic").expect("analytic estimator registered"),
             eta_signed,
             geometry: TileGeometry::paper_eval(),
             fwd_batch: 16,
@@ -107,12 +117,24 @@ impl EngineConfig {
     }
 }
 
+/// Tiles sampled per sign part when scoring a layer's NF sensitivity for
+/// chip placement (the statistics converge in a few dozen tiles; placement
+/// only needs a ranking).
+const NF_TILES_PER_PART: usize = 4;
+
 /// A ready-to-serve engine.
 pub struct Engine {
     config: EngineConfig,
     fwd: Arc<CompiledModule>,
     /// Programmed (distorted) layer matrices, in forward-graph input order.
     programmed: Vec<Tensor>,
+    /// The compile pipeline the engine programmed with (kept for the lazy
+    /// placement scoring below).
+    pipeline: Pipeline,
+    /// Per-layer NF sensitivity of the programmed weights, scored through
+    /// [`EngineConfig::estimator`] on first placement (chip-placement
+    /// weights; engines that never place pay nothing).
+    nf_weights: OnceLock<Vec<f64>>,
     /// Aggregate per-input analog cost of the programmed model.
     cost: TileCost,
 }
@@ -131,6 +153,7 @@ impl Engine {
 
         let pipeline = Pipeline::new(config.geometry)
             .strategy_impl(config.strategy.clone())
+            .estimator_impl(config.estimator.clone())
             .eta_signed(config.eta_signed)
             .parallel(config.solver_parallel);
         let mut programmed = Vec::with_capacity(desc.layers.len());
@@ -157,7 +180,26 @@ impl Engine {
             };
             programmed.push(eff);
         }
-        Ok(Self { config, fwd, programmed, cost })
+        Ok(Self { config, fwd, programmed, pipeline, nf_weights: OnceLock::new(), cost })
+    }
+
+    /// Per-layer NF sensitivity of the **programmed** (effective) weights,
+    /// scored through [`EngineConfig::estimator`] on first use and cached —
+    /// placement-only work, so Fig. 6 accuracy engines and `mdm serve`
+    /// without `--chip` never pay for it. Fixed per-layer seeds keep the
+    /// weights bitwise reproducible across runs and workers (concurrent
+    /// initializers compute identical values; the first set wins).
+    fn layer_nf_weights(&self) -> Result<&[f64]> {
+        if self.nf_weights.get().is_none() {
+            let mut computed = Vec::with_capacity(self.programmed.len());
+            for (i, w) in self.programmed.iter().enumerate() {
+                let mut rng = crate::rng::Xoshiro256::seeded(0xE571 ^ ((i as u64) << 8));
+                let (nf_sum, n) = self.pipeline.sampled_nf(w, NF_TILES_PER_PART, &mut rng)?;
+                computed.push(nf_sum / n.max(1) as f64);
+            }
+            let _ = self.nf_weights.set(computed);
+        }
+        Ok(self.nf_weights.get().expect("just initialized").as_slice())
     }
 
     /// The engine's configuration.
@@ -171,8 +213,9 @@ impl Engine {
     }
 
     /// Place the whole programmed model onto chips: every layer's tile grid
-    /// (both sign parts) becomes a placement request, weighted by
-    /// [`crate::chip::weight_nf_proxy`] of its programmed weights so the
+    /// (both sign parts) becomes a placement request, weighted by the NF
+    /// sensitivity scored through [`EngineConfig::estimator`] (computed
+    /// lazily on first placement and cached), so the
     /// `nf_aware` placer keeps PR-sensitive layers near the I/O corner.
     /// Each worker serves from an identical chip plan, so the resulting
     /// [`crate::chip::Placement`] attributes per-worker cost directly.
@@ -187,15 +230,10 @@ impl Engine {
             chip.geometry,
             self.config.geometry
         );
+        let nf_weights = self.layer_nf_weights()?;
         let mut workload = crate::chip::ChipWorkload::new(*chip)?;
         for (i, w) in self.programmed.iter().enumerate() {
-            workload.add_layer(
-                &format!("layer{i}"),
-                i,
-                w.rows(),
-                w.cols(),
-                crate::chip::weight_nf_proxy(w, self.config.geometry),
-            )?;
+            workload.add_layer(&format!("layer{i}"), i, w.rows(), w.cols(), nf_weights[i])?;
         }
         placer.place(&workload)
     }

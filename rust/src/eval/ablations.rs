@@ -19,13 +19,13 @@
 
 use super::random_planes;
 use crate::chip::{self, Placer as _};
-use crate::circuit::measure_tile_nfs;
 use crate::crossbar::{CostModel, LayerTiling, TileGeometry};
 use crate::mdm::{
     plan_tile, strategy_by_name, Dataflow, Identity, MagnitudeDesc, ManhattanAsc, MapContext,
     MappingStrategy, Mdm, Random, SlicedTile, XChangrRotate,
 };
-use crate::nf::{fit_hypothesis, manhattan_nf_mean, manhattan_nf_mean_batch};
+use crate::nf::estimator::{Analytic, Circuit, NfEstimator};
+use crate::nf::fit_hypothesis;
 use crate::parallel::{self, ParallelConfig};
 use crate::pipeline::Pipeline;
 use crate::quant::SignSplit;
@@ -77,10 +77,15 @@ pub fn tile_size_sweep(
             adc += c.adc_conversions;
             sync += c.sync_events;
             for (i, strategy) in strategies.iter().enumerate() {
+                // Stream one mapped tile at a time through the estimator
+                // (same bits as the batch entry point, O(1) tile storage —
+                // the layer can tile into thousands of planes at small
+                // sizes).
                 let mut acc = 0.0;
                 for t in &tiling.tiles {
                     let plan = t.plan(strategy.as_ref());
-                    acc += manhattan_nf_mean(&plan.apply(&t.sliced.planes)?, 1.0);
+                    acc += Analytic
+                        .nf_mean(&plan.apply(&t.sliced.planes)?, &CrossbarPhysics::unit())?;
                 }
                 nf[i] += acc / tiling.n_tiles() as f64 / 2.0;
             }
@@ -153,8 +158,8 @@ pub fn sparsity_sweep(
         let cp = plan_tile(conv.as_ref(), &t);
         let mp = plan_tile(mdm.as_ref(), &t);
         Ok((
-            manhattan_nf_mean(&cp.apply(planes)?, 1.0),
-            manhattan_nf_mean(&mp.apply(planes)?, 1.0),
+            Analytic.nf_mean(&cp.apply(planes)?, &CrossbarPhysics::unit())?,
+            Analytic.nf_mean(&mp.apply(planes)?, &CrossbarPhysics::unit())?,
         ))
     })?;
     let mut rows = Vec::new();
@@ -224,8 +229,8 @@ pub fn ratio_sweep(
         let mut rng = Xoshiro256::seeded(seed);
         let planes: Vec<crate::tensor::Tensor> =
             (0..n_tiles).map(|_| random_planes(tile, tile, 0.2, &mut rng)).collect();
-        let calc = manhattan_nf_mean_batch(&planes, physics.parasitic_ratio(), &pool);
-        let meas = measure_tile_nfs(&planes, physics, &pool)?;
+        let calc = Analytic.nf_mean_batch(&planes, &physics, &pool)?;
+        let meas = Circuit.nf_mean_batch(&planes, &physics, &pool)?;
         let fit = fit_hypothesis(&calc, &meas);
         rows.push(RatioRow {
             r_wire,
@@ -294,7 +299,7 @@ pub fn roworder_compare(
         let ctx = MapContext { magnitudes: Some(crate::mdm::row_magnitudes(&sliced)) };
         for (i, strategy) in strategies.iter().enumerate() {
             let plan = strategy.plan(&sliced, &ctx);
-            sums[i] += manhattan_nf_mean(&plan.apply(&sliced.planes)?, 1.0);
+            sums[i] += Analytic.nf_mean(&plan.apply(&sliced.planes)?, &CrossbarPhysics::unit())?;
         }
     }
     let rows: Vec<RowOrderRow> = strategies
@@ -515,7 +520,7 @@ pub fn global_sort_compare(
             } else {
                 chunk
             };
-            acc += manhattan_nf_mean(&placed, 1.0);
+            acc += Analytic.nf_mean(&placed, &CrossbarPhysics::unit())?;
         }
         Ok(acc / n_chunks as f64)
     };
@@ -553,6 +558,9 @@ pub struct PlacementSweepConfig {
     /// Mapping-strategy names to sweep (they set the NF-sensitivity weights
     /// the `nf_aware` placer ranks by).
     pub strategies: Vec<String>,
+    /// NF-estimation backend scoring the sampled tiles (registry name; the
+    /// `nf_aware` placer's priorities inherit it).
+    pub estimator: String,
     /// Chip parameters; the geometry field is overridden per tile size.
     pub chip: chip::ChipModel,
     /// Fractional bits per weight.
@@ -575,6 +583,7 @@ impl Default for PlacementSweepConfig {
             tiles: vec![32, 64, 128],
             placers: vec!["firstfit".into(), "maxrects".into(), "nf_aware".into()],
             strategies: vec!["conventional".into(), "mdm".into()],
+            estimator: "analytic".into(),
             chip: chip::ChipModel::default(),
             k_bits: 8,
             nf_tiles: 4,
@@ -635,7 +644,8 @@ pub fn placement_sweep(
         let geometry = TileGeometry::new(tile, tile, cfg.k_bits)?;
         let chip_model = chip::ChipModel { geometry, ..cfg.chip };
         for (si, strategy) in cfg.strategies.iter().enumerate() {
-            let pipeline = Pipeline::new(geometry).strategy(strategy)?;
+            let pipeline =
+                Pipeline::new(geometry).strategy(strategy)?.estimator(&cfg.estimator)?;
             let mut rng = Xoshiro256::seeded(
                 cfg.seed ^ ((ti as u64) << 8) ^ ((si as u64) << 16) ^ 0xC41F,
             );
@@ -711,7 +721,7 @@ pub fn placement_sweep(
                 r.rounds.to_string(),
                 r.waves.to_string(),
                 format!("{:.4}", r.utilization),
-                format!("{:.4}", r.nf_weighted_cost),
+                format!("{:.4e}", r.nf_weighted_cost),
                 format!("{:.1}", r.latency_ns),
                 format!("{:.1}", r.energy_pj),
                 r.adc_conversions.to_string(),

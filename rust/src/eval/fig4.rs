@@ -7,8 +7,8 @@
 //! distribution of the fit (paper: μ = −0.126%, σ = 11.2%).
 
 use super::random_planes;
-use crate::circuit::measure_tile_nfs;
-use crate::nf::{fit_hypothesis, manhattan_nf_sum_batch, HypothesisFit};
+use crate::nf::estimator::{estimator_by_name, Analytic, NfEstimator};
+use crate::nf::{fit_hypothesis, HypothesisFit};
 use crate::parallel::ParallelConfig;
 use crate::report;
 use crate::rng::Xoshiro256;
@@ -19,7 +19,7 @@ use anyhow::Result;
 use std::path::Path;
 
 /// Fig. 4 configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct Fig4Config {
     /// Number of random tiles to fit over (paper: 500).
     pub n_tiles: usize,
@@ -31,6 +31,13 @@ pub struct Fig4Config {
     pub physics: CrossbarPhysics,
     /// Seed for the random tile population.
     pub seed: u64,
+    /// Registry name of the **measuring** NF backend the hypothesis is
+    /// fitted against (see [`crate::nf::estimator::estimator_names`];
+    /// default `circuit` = the paper's SPICE-equivalent; `cached:circuit`
+    /// dedupes identical tiles, `circuit_cg` cross-checks the direct
+    /// solver). The *calculated* side is always the analytic Eq.-16 model —
+    /// that is the hypothesis being tested.
+    pub estimator: String,
     /// Worker pool for the per-tile circuit solves (the experiment's hot
     /// path — one banded-Cholesky factorization per tile).
     pub parallel: ParallelConfig,
@@ -44,6 +51,7 @@ impl Default for Fig4Config {
             sparsity: 0.8,
             physics: CrossbarPhysics::default(),
             seed: 42,
+            estimator: "circuit".into(),
             parallel: ParallelConfig::default(),
         }
     }
@@ -68,7 +76,6 @@ pub struct Fig4Result {
 /// identical at any thread count.
 pub fn run(cfg: Fig4Config, results_dir: &Path) -> Result<Fig4Result> {
     let mut rng = Xoshiro256::seeded(cfg.seed);
-    let ratio = cfg.physics.parasitic_ratio();
     let tiles: Vec<Tensor> = (0..cfg.n_tiles)
         .map(|_| {
             // "approximately 80% sparsity" (§V-A): per-tile sparsity is
@@ -80,10 +87,16 @@ pub fn run(cfg: Fig4Config, results_dir: &Path) -> Result<Fig4Result> {
             random_planes(cfg.tile, cfg.tile, 1.0 - sp, &mut rng)
         })
         .collect();
-    // Calculated: Eq. 16 exactly as written (sum form).
-    let calculated = manhattan_nf_sum_batch(&tiles, ratio, &cfg.parallel);
-    // Measured: full Kirchhoff solve of each tile.
-    let measured = measure_tile_nfs(&tiles, cfg.physics, &cfg.parallel)?;
+    // Calculated: Eq. 16 exactly as written (sum form), via the analytic
+    // estimator's batch entry point.
+    let calculated = Analytic.nf_sum_batch(&tiles, &cfg.physics, &cfg.parallel)?;
+    // Measured: the configured measuring backend (default: one full
+    // Kirchhoff solve per tile through the thread-local workspaces).
+    let measured = estimator_by_name(&cfg.estimator)?.nf_mean_batch(
+        &tiles,
+        &cfg.physics,
+        &cfg.parallel,
+    )?;
     let fit = fit_hypothesis(&calculated, &measured);
     let spread = 3.0 * fit.error_summary.std;
     let histogram = Histogram::build(
@@ -140,7 +153,7 @@ mod tests {
             parallel: ParallelConfig::serial(),
             ..Default::default()
         };
-        let serial = run(base, &dir).unwrap();
+        let serial = run(base.clone(), &dir).unwrap();
         let par =
             run(Fig4Config { parallel: ParallelConfig::with_threads(4), ..base }, &dir).unwrap();
         for (a, b) in serial.measured.iter().zip(&par.measured) {
@@ -149,6 +162,25 @@ mod tests {
         for (a, b) in serial.calculated.iter().zip(&par.calculated) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fig4_cached_estimator_is_bitwise_identical_to_circuit() {
+        let dir = std::env::temp_dir().join(format!("fig4_est_{}", std::process::id()));
+        let base = Fig4Config { n_tiles: 10, tile: 16, ..Default::default() };
+        let plain = run(base.clone(), &dir).unwrap();
+        let cached =
+            run(Fig4Config { estimator: "cached:circuit".into(), ..base }, &dir).unwrap();
+        for (a, b) in plain.measured.iter().zip(&cached.measured) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Unknown measuring backends fail cleanly.
+        assert!(run(
+            Fig4Config { estimator: "nope".into(), n_tiles: 2, tile: 8, ..Default::default() },
+            &dir
+        )
+        .is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

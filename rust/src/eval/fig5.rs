@@ -6,7 +6,9 @@
 //! four configurations {conventional, reversed} × {identity, MDM row sort}
 //! — selected **by name** from the strategy registry — a
 //! [`Pipeline`] samples tiles of every layer lazily and scores their NF
-//! with Eq. 16. Reported per model: mean NF per configuration and the MDM
+//! through the configured [`crate::nf::estimator::NfEstimator`] (default:
+//! the analytic Eq.-16 backend). Reported per model: mean NF per
+//! configuration and the MDM
 //! reduction per dataflow (the paper's headline: up to 46% NF reduction;
 //! reversed dataflow improves MDM by up to 50% over conventional).
 
@@ -68,6 +70,12 @@ pub struct Fig5Config {
     /// Load trained weights for miniresnet/tinyvit from this artifacts dir
     /// when available.
     pub artifacts_dir: Option<String>,
+    /// NF-estimation backend the sampled tiles are scored with (registry
+    /// name, see [`crate::nf::estimator::estimator_names`]). The default
+    /// `analytic` keeps the paper's closed-form Eq.-16 sweep;
+    /// `cached:circuit` upgrades the same sweep to deduplicated exact
+    /// measurements.
+    pub estimator: String,
     /// Worker pool, split across the four {dataflow} × {row order} sweep
     /// points (each point's tile sampling runs on its share of the pool).
     pub parallel: ParallelConfig,
@@ -81,6 +89,7 @@ impl Default for Fig5Config {
             tiles_per_layer: 32,
             seed: 42,
             artifacts_dir: None,
+            estimator: "analytic".into(),
             parallel: ParallelConfig::default(),
         }
     }
@@ -137,7 +146,10 @@ pub fn run(cfg: &Fig5Config, results_dir: &Path) -> Result<Vec<Fig5Row>> {
         // (floor division so the total stays within the requested budget).
         let share = ParallelConfig::with_threads(cfg.parallel.threads / GRID.len());
         let nf = parallel::try_map(&cfg.parallel, &GRID, |strategy| {
-            let pipeline = Pipeline::new(cfg.geometry).strategy(strategy)?.parallel(share);
+            let pipeline = Pipeline::new(cfg.geometry)
+                .strategy(strategy)?
+                .estimator(&cfg.estimator)?
+                .parallel(share);
             let mut rng = Xoshiro256::seeded(cfg.seed ^ 0xF165);
             model_nf(&weights, &pipeline, cfg.tiles_per_layer, &mut rng)
         })?;
@@ -155,10 +167,10 @@ pub fn run(cfg: &Fig5Config, results_dir: &Path) -> Result<Vec<Fig5Row>> {
         .map(|r| {
             vec![
                 r.model.clone(),
-                format!("{:.6}", r.nf_conv_identity),
-                format!("{:.6}", r.nf_conv_mdm),
-                format!("{:.6}", r.nf_rev_identity),
-                format!("{:.6}", r.nf_rev_mdm),
+                format!("{:.6e}", r.nf_conv_identity),
+                format!("{:.6e}", r.nf_conv_mdm),
+                format!("{:.6e}", r.nf_rev_identity),
+                format!("{:.6e}", r.nf_rev_mdm),
                 format!("{:.2}", r.reduction_conventional()),
                 format!("{:.2}", r.reduction_reversed()),
                 format!("{:.2}", r.reduction_full()),

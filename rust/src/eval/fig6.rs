@@ -13,6 +13,7 @@
 use crate::coordinator::{Engine, EngineConfig, ModelKind};
 use crate::crossbar::TileGeometry;
 use crate::mdm::strategy_by_name;
+use crate::nf::estimator::estimator_by_name;
 use crate::parallel::{self, ParallelConfig};
 use crate::report;
 use anyhow::Result;
@@ -74,6 +75,7 @@ pub fn run(
             let cfg = EngineConfig {
                 model,
                 strategy: strategy_by_name(strategy)?,
+                estimator: estimator_by_name("analytic")?,
                 eta_signed: if *noisy { eta_signed } else { 0.0 },
                 geometry,
                 fwd_batch: 16,
@@ -132,6 +134,7 @@ pub fn run_eta_sweep(
             EngineConfig {
                 model,
                 strategy: strategy_by_name(strategy)?,
+                estimator: estimator_by_name("analytic")?,
                 eta_signed: eta,
                 geometry,
                 fwd_batch: 16,

@@ -11,6 +11,9 @@
 //!   chip-level tile placement and wave scheduling layer ([`chip`]:
 //!   placers, spill/reuse, end-to-end latency/energy/area roll-up), a
 //!   circuit-level parasitic-resistance simulator (the SPICE substitute),
+//!   the unified [`nf::estimator`] registry every NF consumer scores
+//!   through (analytic / exact circuit / CG / distortion draws /
+//!   content-addressed cache, selected by `--estimator NAME`),
 //!   and the full experiment/benchmark harness for every figure in the
 //!   paper.
 //! * **L2 (python/compile)** — JAX model graphs (MiniResNet, TinyViT) and a
@@ -86,6 +89,17 @@ impl CrossbarPhysics {
     pub fn parasitic_ratio(&self) -> f64 {
         self.r_wire / self.r_on
     }
+
+    /// Unit-parasitic-ratio physics (`r/R_on = 1`, open off-devices): the
+    /// scale-free operating point the dimensionless **analytic** ablation
+    /// scores pass to a [`nf::estimator::NfEstimator`] — multiply the
+    /// result by a real `parasitic_ratio()` for physical units. Only
+    /// meaningful for the ratio-linear analytic backend; circuit-backed
+    /// estimators should be scored at real physics (as
+    /// [`pipeline::Pipeline::sampled_nf`] does).
+    pub fn unit() -> Self {
+        Self { r_wire: 1.0, r_on: 1.0, r_off: f64::INFINITY, v_in: 1.0 }
+    }
 }
 
 #[cfg(test)]
@@ -99,5 +113,12 @@ mod tests {
         assert_eq!(p.r_on, 300e3);
         assert_eq!(p.r_off, 3e6);
         assert!((p.parasitic_ratio() - 2.5 / 300e3).abs() < 1e-18);
+    }
+
+    #[test]
+    fn unit_physics_has_exact_unit_ratio() {
+        let p = CrossbarPhysics::unit();
+        assert_eq!(p.parasitic_ratio(), 1.0);
+        assert!(p.r_off.is_infinite());
     }
 }

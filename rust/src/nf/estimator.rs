@@ -1,0 +1,707 @@
+//! The unified NF-estimation layer: one pluggable trait in front of every
+//! way this repo scores nonideality.
+//!
+//! The paper's whole contribution is *ranking mappings by NF*, and the repo
+//! historically computed that number three disjoint ways — the analytic
+//! Manhattan model ([`crate::nf`]), exact Kirchhoff circuit solves
+//! ([`crate::circuit`]), and distortion-model scoring on the compile
+//! pipeline — each with its own call shape. [`NfEstimator`] unifies them:
+//! every consumer (pipeline compile/sampled-NF, the eval figures and
+//! ablations, chip placement weighting, the serving engine, `mdm bench`)
+//! asks one trait for `nf_mean` / `nf_sum` / `nf_per_col` over bit-plane
+//! tensors, or for the batch forms that fan out over the
+//! [`crate::parallel`] pool. Backends are selected **by name** through
+//! [`estimator_by_name`], mirroring the `mdm strategies` and chip-placer
+//! registries:
+//!
+//! | name | backend |
+//! |---|---|
+//! | `analytic` | Manhattan model, Eq. 16 (sum) / density-normalized mean |
+//! | `circuit` | exact banded-Cholesky Kirchhoff solve via the thread-local [`crate::circuit::SolverWorkspace`] |
+//! | `circuit_cg` | Jacobi-preconditioned conjugate-gradient cross-check |
+//! | `sampled` | Eq.-17 distortion draws over random driven-row subsets |
+//! | `cached:<inner>` | content-addressed memo decorating any backend |
+//!
+//! `cached:<inner>` exploits the bit-level structured sparsity MDM itself
+//! relies on (Theorem 1): high-order bit planes are near-empty, so a large
+//! fraction of a model's tiles share **identical active-cell bitmasks** and
+//! exact solves are massively deduplicable. The cache key is the tile's
+//! active-cell bitmask plus the physics parameters — content addressing, so
+//! a hit is bitwise indistinguishable from a recompute.
+//!
+//! ## NF conventions
+//!
+//! * `nf_mean` — the aggregate NF `|Δi/i₀|` of Eq. 1: what a measurement
+//!   reports. The analytic backend returns the density-normalized mean form
+//!   (which matches the aggregate to first order — see [`crate::nf`]).
+//! * `nf_sum` — the Eq.-16 sum-form scale: `nf_mean × active-cell count`
+//!   for measuring backends, the literal `(r/R_on)·Σδ(j+k)` for `analytic`.
+//! * `nf_per_col` — per-column `|Δi_k/i₀_k|`.
+//!
+//! All scalar methods take the [`CrossbarPhysics`] the estimate is for (the
+//! analytic model only consumes `parasitic_ratio()`). Analytic-only
+//! dimensionless scores may pass [`CrossbarPhysics::unit`]; pluggable paths
+//! ([`crate::pipeline::Pipeline::sampled_nf`]) score at real physics so
+//! circuit-backed estimators stay in the physical perturbative regime.
+//! Batch methods are required to be
+//! bitwise identical to the scalar loop at any thread count — the default
+//! implementations inherit that from [`crate::parallel`]'s determinism
+//! contract.
+
+use crate::parallel::{self, ParallelConfig};
+use crate::rng::Xoshiro256;
+use crate::tensor::Tensor;
+use crate::CrossbarPhysics;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Hit/miss counters of a caching estimator (see [`NfEstimator::cache_stats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that had to run the inner backend.
+    pub misses: u64,
+    /// Memoized results currently held, summed across the per-method maps
+    /// (a tile probed through `k` different methods counts `k` times).
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups answered from the cache (0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A nonideality-factor estimation backend over bit-plane tensors.
+///
+/// Implementations must be deterministic: the same planes + physics always
+/// produce the same bits, so caches, parallel fan-out, and cross-backend
+/// comparisons stay exact.
+pub trait NfEstimator: std::fmt::Debug + Send + Sync {
+    /// Registry name of this configuration (what `--estimator` matches and
+    /// what artifacts record as provenance).
+    fn name(&self) -> String;
+
+    /// One-line description for `mdm estimators`.
+    fn description(&self) -> String;
+
+    /// Aggregate NF `|Δi/i₀|` (Eq. 1) of one tile's active-cell planes.
+    fn nf_mean(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<f64>;
+
+    /// Eq.-16 sum-form NF. Default: `nf_mean × active-cell count` (the
+    /// analytic backend overrides with the literal Eq. 16 accumulation).
+    fn nf_sum(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<f64> {
+        Ok(self.nf_mean(planes, physics)? * crate::nf::active_count(planes) as f64)
+    }
+
+    /// Whether `nf_sum` is exactly the default derivation `nf_mean ×
+    /// active-cell count`. Caching decorators use this to serve `nf_sum`
+    /// from a memoized mean (one solve per tile across both entry points)
+    /// without changing a single bit; backends that override `nf_sum` with
+    /// different arithmetic (the analytic literal Eq.-16 accumulation) must
+    /// return `false`.
+    fn sum_derives_from_mean(&self) -> bool {
+        true
+    }
+
+    /// Per-column NF `|Δi_k/i₀_k|` (0 where the ideal current is 0).
+    fn nf_per_col(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<Vec<f64>>;
+
+    /// Batch entry point: `out[i] = nf_mean(&planes[i])`, fanned out over
+    /// the worker pool with bitwise-serial results.
+    fn nf_mean_batch(
+        &self,
+        planes: &[Tensor],
+        physics: &CrossbarPhysics,
+        parallel: &ParallelConfig,
+    ) -> Result<Vec<f64>> {
+        parallel::try_map(parallel, planes, |p| self.nf_mean(p, physics))
+    }
+
+    /// Batch entry point: `out[i] = nf_sum(&planes[i])`, fanned out over
+    /// the worker pool with bitwise-serial results.
+    fn nf_sum_batch(
+        &self,
+        planes: &[Tensor],
+        physics: &CrossbarPhysics,
+        parallel: &ParallelConfig,
+    ) -> Result<Vec<f64>> {
+        parallel::try_map(parallel, planes, |p| self.nf_sum(p, physics))
+    }
+
+    /// Cache counters, for caching decorators only (`None` otherwise).
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
+}
+
+/// The Manhattan model (Eq. 16): `NF ≈ (r/R_on)·Σ δ(j+k)` and its
+/// density-normalized mean / per-column forms. O(cells), no solve.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Analytic;
+
+impl NfEstimator for Analytic {
+    fn name(&self) -> String {
+        "analytic".into()
+    }
+
+    fn description(&self) -> String {
+        "Manhattan model (Eq. 16): (r/R_on) x aggregate cell distance, no circuit solve".into()
+    }
+
+    fn nf_mean(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<f64> {
+        ensure!(planes.ndim() == 2, "planes must be 2-D");
+        Ok(crate::nf::manhattan_nf_mean(planes, physics.parasitic_ratio()))
+    }
+
+    fn nf_sum(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<f64> {
+        ensure!(planes.ndim() == 2, "planes must be 2-D");
+        Ok(crate::nf::manhattan_nf_sum(planes, physics.parasitic_ratio()))
+    }
+
+    fn nf_per_col(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<Vec<f64>> {
+        ensure!(planes.ndim() == 2, "planes must be 2-D");
+        Ok(crate::nf::manhattan_nf_per_col(planes, physics.parasitic_ratio()))
+    }
+
+    fn sum_derives_from_mean(&self) -> bool {
+        // `nf_sum` is the literal Eq.-16 accumulation, not mean × count
+        // (same value, different rounding) — caches must not derive it.
+        false
+    }
+}
+
+/// Exact circuit measurement: one full-Kirchhoff banded-Cholesky solve per
+/// call, run through this thread's reusable
+/// [`crate::circuit::SolverWorkspace`] (zero steady-state allocations).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Circuit;
+
+impl NfEstimator for Circuit {
+    fn name(&self) -> String {
+        "circuit".into()
+    }
+
+    fn description(&self) -> String {
+        "exact Kirchhoff solve (banded Cholesky, thread-local reusable workspace)".into()
+    }
+
+    fn nf_mean(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<f64> {
+        crate::circuit::with_workspace(|ws| ws.nf(planes, physics))
+    }
+
+    fn nf_per_col(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<Vec<f64>> {
+        crate::circuit::with_workspace(|ws| ws.nf_per_col(planes, physics))
+    }
+}
+
+/// Iterative cross-check: the same mesh solved with Jacobi-preconditioned
+/// conjugate gradient instead of the direct factorization. Slower; exists to
+/// validate `circuit` independently (and for very large meshes where the
+/// band cost dominates).
+#[derive(Debug, Clone, Copy)]
+pub struct CircuitCg {
+    /// Relative residual tolerance of the CG solve.
+    pub tol: f64,
+}
+
+impl Default for CircuitCg {
+    fn default() -> Self {
+        Self { tol: 1e-10 }
+    }
+}
+
+impl NfEstimator for CircuitCg {
+    fn name(&self) -> String {
+        "circuit_cg".into()
+    }
+
+    fn description(&self) -> String {
+        "Jacobi-preconditioned conjugate-gradient Kirchhoff solve (cross-check)".into()
+    }
+
+    fn nf_mean(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<f64> {
+        let c = crate::circuit::CrossbarCircuit::from_planes(planes, *physics)?;
+        Ok(c.solve_cg(self.tol)?.nf())
+    }
+
+    fn nf_per_col(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<Vec<f64>> {
+        let c = crate::circuit::CrossbarCircuit::from_planes(planes, *physics)?;
+        Ok(c.solve_cg(self.tol)?.nf_per_col())
+    }
+}
+
+/// Default driven-row probability of the [`Sampled`] backend's random draws.
+const SAMPLED_ROW_DENSITY: f64 = 0.5;
+
+/// Eq.-17 distortion draws: score the tile by the relative current error
+/// the calibrated PR-distortion model (`w_eff = w·(1 + η·d_M)`,
+/// `η = −r/R_on`) predicts, averaged over random driven-row subsets. Draw 0
+/// always drives every row (the full-tile estimate); later draws sample
+/// rows at 50% so partially-driven operating points contribute. Fully
+/// deterministic: the rng is re-seeded per call.
+#[derive(Debug, Clone, Copy)]
+pub struct Sampled {
+    /// Number of input draws averaged (≥ 1; draw 0 is the all-rows input).
+    pub draws: usize,
+    /// Seed of the per-call rng stream.
+    pub seed: u64,
+}
+
+impl Default for Sampled {
+    fn default() -> Self {
+        Self { draws: 8, seed: 0x5A11D }
+    }
+}
+
+impl Sampled {
+    /// Per-draw driven-row masks (draw 0 = all rows), drawn deterministically.
+    fn driven_masks(&self, rows: usize) -> Vec<Vec<bool>> {
+        let draws = self.draws.max(1);
+        let mut rng = Xoshiro256::seeded(self.seed);
+        (0..draws)
+            .map(|d| {
+                (0..rows)
+                    .map(|_| d == 0 || rng.bernoulli(SAMPLED_ROW_DENSITY))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+impl NfEstimator for Sampled {
+    fn name(&self) -> String {
+        // Include the draw count so registry-built instances round-trip
+        // through `estimator_by_name` with identical behaviour. (A
+        // programmatically constructed non-default `seed` is NOT encoded —
+        // record it separately if it matters.)
+        format!("sampled:{}", self.draws.max(1))
+    }
+
+    fn description(&self) -> String {
+        format!(
+            "Eq.-17 distortion draws over {} random driven-row subsets",
+            self.draws.max(1)
+        )
+    }
+
+    fn nf_mean(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<f64> {
+        ensure!(planes.ndim() == 2, "planes must be 2-D");
+        let (rows, cols) = (planes.rows(), planes.cols());
+        let eta = -physics.parasitic_ratio();
+        let masks = self.driven_masks(rows);
+        let mut acc = 0.0f64;
+        for mask in &masks {
+            let mut i0 = 0.0f64;
+            let mut di = 0.0f64;
+            for (j, &driven) in mask.iter().enumerate() {
+                if !driven {
+                    continue;
+                }
+                for k in 0..cols {
+                    if planes.at2(j, k) != 0.0 {
+                        i0 += 1.0;
+                        di += eta * (j + k) as f64;
+                    }
+                }
+            }
+            acc += if i0 == 0.0 { 0.0 } else { (di / i0).abs() };
+        }
+        Ok(acc / masks.len() as f64)
+    }
+
+    fn nf_per_col(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<Vec<f64>> {
+        ensure!(planes.ndim() == 2, "planes must be 2-D");
+        let (rows, cols) = (planes.rows(), planes.cols());
+        let eta = -physics.parasitic_ratio();
+        let masks = self.driven_masks(rows);
+        let mut out = vec![0.0f64; cols];
+        for mask in &masks {
+            for (k, slot) in out.iter_mut().enumerate() {
+                let mut i0 = 0.0f64;
+                let mut di = 0.0f64;
+                for (j, &driven) in mask.iter().enumerate() {
+                    if driven && planes.at2(j, k) != 0.0 {
+                        i0 += 1.0;
+                        di += eta * (j + k) as f64;
+                    }
+                }
+                *slot += if i0 == 0.0 { 0.0 } else { (di / i0).abs() };
+            }
+        }
+        let n = masks.len() as f64;
+        for v in &mut out {
+            *v /= n;
+        }
+        Ok(out)
+    }
+}
+
+/// Exact cache key: tile shape, active-cell bitmask, and the physics
+/// parameters' f64 bits. Content addressing with full keys (not digests),
+/// so a hit can never alias a different tile.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct TileKey {
+    rows: usize,
+    cols: usize,
+    physics: [u64; 4],
+    mask: Vec<u64>,
+}
+
+impl TileKey {
+    /// Key of a tile. Errs (rather than panicking in `rows()`) on non-2-D
+    /// input, so the cache stays as Result-clean as the backends it wraps.
+    fn of(planes: &Tensor, physics: &CrossbarPhysics) -> Result<Self> {
+        ensure!(planes.ndim() == 2, "planes must be 2-D");
+        let (rows, cols) = (planes.rows(), planes.cols());
+        let mut mask = vec![0u64; planes.len().div_ceil(64)];
+        for (i, &v) in planes.data().iter().enumerate() {
+            if v != 0.0 {
+                mask[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        Ok(Self {
+            rows,
+            cols,
+            physics: [
+                physics.r_wire.to_bits(),
+                physics.r_on.to_bits(),
+                physics.r_off.to_bits(),
+                physics.v_in.to_bits(),
+            ],
+            mask,
+        })
+    }
+}
+
+/// Content-addressed memo around any inner backend: identical active-cell
+/// bitmasks at identical physics reuse the inner result. Thread-safe; under
+/// concurrent misses of the same key both workers compute the (identical)
+/// value, so results stay bitwise deterministic at any thread count.
+#[derive(Debug)]
+pub struct Cached {
+    inner: Arc<dyn NfEstimator>,
+    mean: Mutex<HashMap<TileKey, f64>>,
+    sum: Mutex<HashMap<TileKey, f64>>,
+    per_col: Mutex<HashMap<TileKey, Vec<f64>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Cached {
+    /// Wrap an inner backend.
+    pub fn new(inner: Arc<dyn NfEstimator>) -> Self {
+        Self {
+            inner,
+            mean: Mutex::new(HashMap::new()),
+            sum: Mutex::new(HashMap::new()),
+            per_col: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn lookup_scalar(
+        &self,
+        map: &Mutex<HashMap<TileKey, f64>>,
+        key: TileKey,
+        compute: impl FnOnce() -> Result<f64>,
+    ) -> Result<f64> {
+        if let Some(&v) = map.lock().expect("nf cache lock").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(v);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let v = compute()?;
+        map.lock().expect("nf cache lock").insert(key, v);
+        Ok(v)
+    }
+}
+
+impl NfEstimator for Cached {
+    fn name(&self) -> String {
+        format!("cached:{}", self.inner.name())
+    }
+
+    fn description(&self) -> String {
+        format!(
+            "content-addressed memo (bitmask + physics key) over `{}`",
+            self.inner.name()
+        )
+    }
+
+    fn nf_mean(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<f64> {
+        self.lookup_scalar(&self.mean, TileKey::of(planes, physics)?, || {
+            self.inner.nf_mean(planes, physics)
+        })
+    }
+
+    fn nf_sum(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<f64> {
+        if self.inner.sum_derives_from_mean() {
+            // Bit-identical to the inner default (`mean × count`) while
+            // sharing the mean memo — one exact solve per tile even when a
+            // workload probes both entry points.
+            return Ok(self.nf_mean(planes, physics)?
+                * crate::nf::active_count(planes) as f64);
+        }
+        self.lookup_scalar(&self.sum, TileKey::of(planes, physics)?, || {
+            self.inner.nf_sum(planes, physics)
+        })
+    }
+
+    fn nf_per_col(&self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<Vec<f64>> {
+        let key = TileKey::of(planes, physics)?;
+        if let Some(v) = self.per_col.lock().expect("nf cache lock").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(v.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let v = self.inner.nf_per_col(planes, physics)?;
+        self.per_col.lock().expect("nf cache lock").insert(key, v.clone());
+        Ok(v)
+    }
+
+    fn sum_derives_from_mean(&self) -> bool {
+        self.inner.sum_derives_from_mean()
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        Some(CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.mean.lock().expect("nf cache lock").len()
+                + self.sum.lock().expect("nf cache lock").len()
+                + self.per_col.lock().expect("nf cache lock").len(),
+        })
+    }
+}
+
+/// All registered estimator names with one-line descriptions (CLI listing).
+pub fn estimator_names() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("analytic", "Manhattan model (Eq. 16), no circuit solve — the fast ranking default"),
+        ("circuit", "exact Kirchhoff solve (banded Cholesky, thread-local workspace)"),
+        ("circuit_cg", "conjugate-gradient Kirchhoff solve — iterative cross-check"),
+        ("sampled[:N]", "Eq.-17 distortion draws over N random driven-row subsets"),
+        ("cached:<inner>", "content-addressed memo over any backend, e.g. cached:circuit"),
+    ]
+}
+
+/// Resolve an estimator by registry name. `cached:<inner>` wraps any other
+/// name (recursively), `sampled:N` pins the draw count.
+///
+/// ```
+/// use mdm_cim::nf::estimator::{estimator_by_name, estimator_names};
+///
+/// assert_eq!(estimator_by_name("circuit")?.name(), "circuit");
+/// // The cache decorator composes by name ...
+/// assert_eq!(estimator_by_name("cached:circuit")?.name(), "cached:circuit");
+/// // ... and unknown names fail with the registry listing.
+/// assert!(estimator_by_name("bogus").is_err());
+/// assert!(estimator_names().iter().any(|(name, _)| *name == "analytic"));
+/// # anyhow::Ok(())
+/// ```
+pub fn estimator_by_name(name: &str) -> Result<Arc<dyn NfEstimator>> {
+    let key = name.trim();
+    if let Some(inner) = key.strip_prefix("cached:") {
+        return Ok(Arc::new(Cached::new(estimator_by_name(inner)?)));
+    }
+    if let Some(draws) = key.strip_prefix("sampled:") {
+        let draws: usize = draws
+            .parse()
+            .with_context(|| format!("bad draw count in estimator {key:?}"))?;
+        ensure!(draws >= 1, "estimator {key:?} needs at least one draw");
+        return Ok(Arc::new(Sampled { draws, ..Sampled::default() }));
+    }
+    match key {
+        "analytic" | "manhattan" | "eq16" => Ok(Arc::new(Analytic)),
+        "circuit" | "exact" | "cholesky" => Ok(Arc::new(Circuit)),
+        "circuit_cg" | "cg" => Ok(Arc::new(CircuitCg::default())),
+        "sampled" | "distortion" => Ok(Arc::new(Sampled::default())),
+        other => bail!(
+            "unknown NF estimator {other:?} (known: analytic, circuit, circuit_cg, \
+             sampled[:N], cached:<inner>)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::ParallelConfig;
+
+    fn random_tiles(n: usize, rows: usize, cols: usize, seed: u64) -> Vec<Tensor> {
+        let mut rng = Xoshiro256::seeded(seed);
+        (0..n).map(|_| crate::eval::random_planes(rows, cols, 0.25, &mut rng)).collect()
+    }
+
+    #[test]
+    fn registry_resolves_every_base_name() {
+        for name in ["analytic", "circuit", "circuit_cg", "sampled", "sampled:3"] {
+            let e = estimator_by_name(name).unwrap();
+            assert!(!e.description().is_empty());
+        }
+        assert!(estimator_by_name("nope").is_err());
+        assert!(estimator_by_name("cached:nope").is_err());
+        assert!(estimator_by_name("sampled:0").is_err());
+        assert_eq!(
+            estimator_by_name("cached:cached:analytic").unwrap().name(),
+            "cached:cached:analytic"
+        );
+    }
+
+    #[test]
+    fn analytic_matches_manhattan_functions_bitwise() {
+        let physics = CrossbarPhysics::default();
+        for t in random_tiles(4, 10, 10, 3) {
+            let ratio = physics.parasitic_ratio();
+            assert_eq!(
+                Analytic.nf_sum(&t, &physics).unwrap().to_bits(),
+                crate::nf::manhattan_nf_sum(&t, ratio).to_bits()
+            );
+            assert_eq!(
+                Analytic.nf_mean(&t, &physics).unwrap().to_bits(),
+                crate::nf::manhattan_nf_mean(&t, ratio).to_bits()
+            );
+            let per = Analytic.nf_per_col(&t, &physics).unwrap();
+            for (a, b) in per.iter().zip(crate::nf::manhattan_nf_per_col(&t, ratio)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn circuit_matches_direct_solve_bitwise() {
+        let physics = CrossbarPhysics::default();
+        for t in random_tiles(4, 8, 8, 5) {
+            let direct =
+                crate::circuit::CrossbarCircuit::from_planes(&t, physics).unwrap().solve().unwrap();
+            assert_eq!(
+                Circuit.nf_mean(&t, &physics).unwrap().to_bits(),
+                direct.nf().to_bits()
+            );
+            let per = Circuit.nf_per_col(&t, &physics).unwrap();
+            for (a, b) in per.iter().zip(direct.nf_per_col()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn circuit_cg_close_to_circuit() {
+        let physics = CrossbarPhysics::default();
+        for t in random_tiles(3, 8, 8, 7) {
+            let a = Circuit.nf_mean(&t, &physics).unwrap();
+            let b = CircuitCg { tol: 1e-13 }.nf_mean(&t, &physics).unwrap();
+            assert!((a - b).abs() <= 1e-10 + a.abs() * 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sampled_is_deterministic_and_tracks_analytic() {
+        let physics = CrossbarPhysics::default();
+        let tiles = random_tiles(1, 16, 16, 11);
+        let t = &tiles[0];
+        let s = Sampled::default();
+        let a = s.nf_mean(t, &physics).unwrap();
+        let b = s.nf_mean(t, &physics).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
+        // Draw 0 is the full-tile input, so the estimate stays within a
+        // small factor of the analytic mean on a dense-enough tile.
+        let reference = Analytic.nf_mean(t, &physics).unwrap();
+        assert!(a > 0.25 * reference && a < 4.0 * reference, "{a} vs {reference}");
+    }
+
+    #[test]
+    fn cached_is_bitwise_identical_and_counts_hits() {
+        let physics = CrossbarPhysics::default();
+        let mut tiles = random_tiles(3, 8, 8, 13);
+        // Force duplicates: repeat the population.
+        let dup = tiles.clone();
+        tiles.extend(dup);
+        let cached = Cached::new(Arc::new(Circuit));
+        let pool = ParallelConfig::serial();
+        let a = cached.nf_mean_batch(&tiles, &physics, &pool).unwrap();
+        let b = Circuit.nf_mean_batch(&tiles, &physics, &pool).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let stats = cached.cache_stats().unwrap();
+        assert_eq!(stats.misses, 3);
+        assert_eq!(stats.hits, 3);
+        assert_eq!(stats.entries, 3);
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_sum_shares_the_mean_memo_for_deriving_backends() {
+        let physics = CrossbarPhysics::default();
+        let tiles = random_tiles(2, 8, 8, 19);
+        let cached = Cached::new(Arc::new(Circuit));
+        for t in &tiles {
+            let mean = cached.nf_mean(t, &physics).unwrap();
+            let sum = cached.nf_sum(t, &physics).unwrap();
+            assert_eq!(
+                sum.to_bits(),
+                (mean * crate::nf::active_count(t) as f64).to_bits()
+            );
+            assert_eq!(sum.to_bits(), Circuit.nf_sum(t, &physics).unwrap().to_bits());
+        }
+        let stats = cached.cache_stats().unwrap();
+        // Both entry points probed per tile, but only one solve (miss) each
+        // and only the mean map populated.
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.hits, 2);
+        assert_eq!(stats.entries, 2);
+        // The analytic literal Eq.-16 override is preserved through the
+        // cache (no mean-derivation shortcut).
+        let ca = Cached::new(Arc::new(Analytic));
+        for t in &tiles {
+            assert_eq!(
+                ca.nf_sum(t, &physics).unwrap().to_bits(),
+                Analytic.nf_sum(t, &physics).unwrap().to_bits()
+            );
+        }
+        assert_eq!(ca.cache_stats().unwrap().entries, 2); // sum map used
+    }
+
+    #[test]
+    fn cache_key_separates_physics_and_shape() {
+        let t = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let p1 = CrossbarPhysics::default();
+        let p2 = CrossbarPhysics { r_wire: 5.0, ..CrossbarPhysics::default() };
+        let key = |t: &Tensor, p: &CrossbarPhysics| TileKey::of(t, p).unwrap();
+        assert_ne!(key(&t, &p1), key(&t, &p2));
+        // Same bit payload, different shape -> different key.
+        let wide = Tensor::new(&[1, 4], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert_ne!(key(&t, &p1), key(&wide, &p1));
+        assert_eq!(key(&t, &p1), key(&t.clone(), &p1));
+        // Non-2-D input is an Err, not a panic (the cache must stay as
+        // Result-clean as the backends it wraps).
+        assert!(TileKey::of(&Tensor::from_vec(vec![1.0, 0.0]), &p1).is_err());
+    }
+
+    #[test]
+    fn batch_entries_match_scalar_loop_bitwise_at_any_thread_count() {
+        let physics = CrossbarPhysics::default();
+        let tiles = random_tiles(9, 8, 8, 17);
+        let serial: Vec<f64> =
+            tiles.iter().map(|t| Analytic.nf_sum(t, &physics).unwrap()).collect();
+        for threads in [1usize, 2, 4, 8] {
+            let pool = ParallelConfig::with_threads(threads);
+            let par = Analytic.nf_sum_batch(&tiles, &physics, &pool).unwrap();
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads {threads}");
+            }
+        }
+    }
+}

@@ -12,6 +12,14 @@
 //! (`NF = Δi/i₀` aggregates over active cells, so dividing by the active
 //! count matches the measured aggregate NF up to the fitted constant — the
 //! paper itself calibrates the linear map by least squares, Fig. 4).
+//!
+//! These closed-form scores are the `analytic` backend of the unified
+//! [`estimator`] layer; consumers select backends (analytic, exact circuit,
+//! CG cross-check, distortion draws, content-addressed cache) by name
+//! through [`estimator::estimator_by_name`] instead of calling the model
+//! functions directly.
+
+pub mod estimator;
 
 use crate::stats::{ols, relative_error_pct, summary, OlsFit, Summary};
 use crate::tensor::Tensor;
@@ -75,25 +83,47 @@ pub fn manhattan_nf_per_col(planes: &Tensor, parasitic_ratio: f64) -> Vec<f64> {
         .collect()
 }
 
-/// Eq. 16 (sum form) over many independent tiles, fanned out over the
-/// worker pool; `out[i]` is `manhattan_nf_sum(&planes[i], ratio)` with the
-/// exact same bits as the serial loop.
+/// Physics whose `parasitic_ratio()` is exactly the given ratio (`r_on = 1`,
+/// so `ratio / 1.0 == ratio` bit-for-bit) — the adapter behind the
+/// ratio-keyed thin wrappers below.
+fn physics_at_ratio(parasitic_ratio: f64) -> crate::CrossbarPhysics {
+    crate::CrossbarPhysics {
+        r_wire: parasitic_ratio,
+        r_on: 1.0,
+        r_off: f64::INFINITY,
+        v_in: 1.0,
+    }
+}
+
+/// Eq. 16 (sum form) over many independent tiles. **Thin wrapper** over the
+/// [`estimator::Analytic`] backend's batch entry point
+/// ([`estimator::NfEstimator::nf_sum_batch`]) kept for ratio-keyed callers;
+/// `out[i]` is `manhattan_nf_sum(&planes[i], ratio)` with the exact same
+/// bits as the serial loop.
 pub fn manhattan_nf_sum_batch(
     planes: &[Tensor],
     parasitic_ratio: f64,
     parallel: &crate::parallel::ParallelConfig,
 ) -> Vec<f64> {
-    crate::parallel::map(parallel, planes, |p| manhattan_nf_sum(p, parasitic_ratio))
+    use estimator::NfEstimator as _;
+    estimator::Analytic
+        .nf_sum_batch(planes, &physics_at_ratio(parasitic_ratio), parallel)
+        .expect("analytic NF estimation is infallible")
 }
 
-/// Mean-form NF over many independent tiles (parallel counterpart of
-/// [`manhattan_nf_mean`]); order- and bit-identical to the serial loop.
+/// Mean-form NF over many independent tiles. **Thin wrapper** over the
+/// [`estimator::Analytic`] backend's batch entry point (parallel
+/// counterpart of [`manhattan_nf_mean`]); order- and bit-identical to the
+/// serial loop.
 pub fn manhattan_nf_mean_batch(
     planes: &[Tensor],
     parasitic_ratio: f64,
     parallel: &crate::parallel::ParallelConfig,
 ) -> Vec<f64> {
-    crate::parallel::map(parallel, planes, |p| manhattan_nf_mean(p, parasitic_ratio))
+    use estimator::NfEstimator as _;
+    estimator::Analytic
+        .nf_mean_batch(planes, &physics_at_ratio(parasitic_ratio), parallel)
+        .expect("analytic NF estimation is infallible")
 }
 
 /// The distance matrix `d_M(j,k) = j + k` as a tensor — fed to the L1

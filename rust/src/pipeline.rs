@@ -29,7 +29,7 @@
 
 use crate::crossbar::{CostModel, LayerTiling, TileCost, TileGeometry};
 use crate::mdm::{strategy_by_name, MappingPlan, MappingStrategy};
-use crate::nf::manhattan_nf_mean;
+use crate::nf::estimator::{estimator_by_name, NfEstimator};
 use crate::noise::distorted_weights;
 use crate::parallel::{self, ParallelConfig};
 use crate::quant::{Quantizer, SignSplit};
@@ -65,6 +65,7 @@ pub struct Pipeline {
     geometry: TileGeometry,
     quantizer: Option<Quantizer>,
     strategy: Arc<dyn MappingStrategy>,
+    estimator: Arc<dyn NfEstimator>,
     physics: CrossbarPhysics,
     eta_signed: f64,
     cost_model: CostModel,
@@ -78,6 +79,7 @@ impl Pipeline {
             geometry,
             quantizer: None,
             strategy: strategy_by_name("conventional").expect("baseline strategy registered"),
+            estimator: estimator_by_name("analytic").expect("analytic estimator registered"),
             physics: CrossbarPhysics::default(),
             eta_signed: 0.0,
             cost_model: CostModel::default(),
@@ -95,6 +97,22 @@ impl Pipeline {
     /// Select an explicit (possibly stateful) strategy implementation.
     pub fn strategy_impl(mut self, strategy: Arc<dyn MappingStrategy>) -> Self {
         self.strategy = strategy;
+        self
+    }
+
+    /// Select the NF-estimation backend by registry name (see
+    /// [`crate::nf::estimator::estimator_names`]) — used by
+    /// [`Self::sampled_nf`]. Defaults to `analytic`.
+    pub fn estimator(mut self, name: &str) -> Result<Self> {
+        self.estimator = estimator_by_name(name)?;
+        Ok(self)
+    }
+
+    /// Select an explicit estimator implementation (e.g. a shared
+    /// [`crate::nf::estimator::Cached`] whose memo should survive across
+    /// pipelines).
+    pub fn estimator_impl(mut self, estimator: Arc<dyn NfEstimator>) -> Self {
+        self.estimator = estimator;
         self
     }
 
@@ -219,12 +237,17 @@ impl Pipeline {
         Ok(cost)
     }
 
-    /// Mean-per-tile Manhattan NF (at unit parasitic ratio — multiply by
-    /// `physics.parasitic_ratio()` for physical units) over up to
+    /// Mean-per-tile NF under the configured [`NfEstimator`], scored under
+    /// the pipeline's [`CrossbarPhysics`] (physical units: the default
+    /// `analytic` backend returns Eq.-16 mean × `parasitic_ratio()`; divide
+    /// by the ratio for the dimensionless score), over up to
     /// `tiles_per_part` sampled tiles of each sign part, without
     /// materializing the full tile grid (huge layers have O(10^5) tiles; the
     /// statistics need a few dozen). Returns `(nf_sum, n_tiles)` so callers
-    /// can weight across layers.
+    /// can weight across layers. `--estimator circuit` (or `cached:circuit`)
+    /// upgrades the same statistics to exact Kirchhoff measurements at the
+    /// same physics, so backends stay comparable and circuit solves stay in
+    /// the physical perturbative regime.
     pub fn sampled_nf(
         &self,
         w_signed: &Tensor,
@@ -251,7 +274,7 @@ impl Pipeline {
             let nfs = parallel::try_map(&self.parallel, &idx, |&i| {
                 let tile = LayerTiling::build_tile(part, self.geometry, quant, i / gc, i % gc)?;
                 let plan = tile.plan(self.strategy.as_ref());
-                Ok(manhattan_nf_mean(&plan.apply(&tile.sliced.planes)?, 1.0))
+                self.estimator.nf_mean(&plan.apply(&tile.sliced.planes)?, &self.physics)
             })?;
             for nf in nfs {
                 acc += nf;
@@ -267,6 +290,7 @@ impl std::fmt::Debug for Pipeline {
         f.debug_struct("Pipeline")
             .field("geometry", &self.geometry)
             .field("strategy", &self.strategy.name())
+            .field("estimator", &self.estimator.name())
             .field("eta_signed", &self.eta_signed)
             .field("quantizer", &self.quantizer)
             .field("parallel", &self.parallel)
@@ -650,6 +674,24 @@ mod tests {
     #[test]
     fn unknown_strategy_name_is_an_error() {
         assert!(Pipeline::new(TileGeometry::paper_eval()).strategy("nope").is_err());
+    }
+
+    #[test]
+    fn sampled_nf_estimator_is_pluggable() {
+        let w = random_signed(64, 8, 14);
+        let g = TileGeometry::new(16, 32, 8).unwrap();
+        let mut r1 = Xoshiro256::seeded(9);
+        let mut r2 = Xoshiro256::seeded(9);
+        let (analytic, n1) = Pipeline::new(g).sampled_nf(&w, 4, &mut r1).unwrap();
+        let (sampled, n2) = Pipeline::new(g)
+            .estimator("sampled:2")
+            .unwrap()
+            .sampled_nf(&w, 4, &mut r2)
+            .unwrap();
+        assert_eq!(n1, n2);
+        assert!(analytic > 0.0 && sampled > 0.0);
+        // Unknown estimator names fail like unknown strategies do.
+        assert!(Pipeline::new(g).estimator("nope").is_err());
     }
 
     #[test]

@@ -175,6 +175,26 @@ impl BitSlicedMatrix {
     pub fn active(&self, j: usize, c: usize) -> bool {
         self.planes.at2(j, c) != 0.0
     }
+
+    /// Extract one bit plane as its own `[J, N]` binary matrix: entry
+    /// `(j, w)` is bit `b` (0 = highest order) of weight `(j, w)`. This is
+    /// the plane-level view Theorem 1 reasons about — high-order planes of
+    /// bell-shaped weights are near-empty, so plane tensors repeat across
+    /// tiles, which is exactly what the `cached:<inner>` NF estimator
+    /// deduplicates (`mdm bench --estimator`).
+    pub fn bit_plane(&self, b: usize) -> Result<Tensor> {
+        ensure!(b < self.k_bits, "bit {b} out of range (k_bits = {})", self.k_bits);
+        let (j_rows, n, k) = (self.rows(), self.n_weights, self.k_bits);
+        let mut data = vec![0.0f32; j_rows * n];
+        for j in 0..j_rows {
+            for w in 0..n {
+                if self.planes.at2(j, w * k + b) != 0.0 {
+                    data[j * n + w] = 1.0;
+                }
+            }
+        }
+        Tensor::new(&[j_rows, n], data)
+    }
 }
 
 #[cfg(test)]
@@ -269,6 +289,22 @@ mod tests {
         // Non-binary input rejected.
         let bad = Tensor::new(&[1, 2], vec![0.5, 1.0]).unwrap();
         assert!(BitSlicedMatrix::from_planes(bad).is_err());
+    }
+
+    #[test]
+    fn bit_plane_extraction_roundtrips_the_interleaved_layout() {
+        let w = Tensor::new(&[2, 2], vec![0.75, 0.25, 0.5, 1.0]).unwrap();
+        let s = BitSlicedMatrix::slice(&w, 4).unwrap();
+        for b in 0..4 {
+            let plane = s.bit_plane(b).unwrap();
+            assert_eq!(plane.shape(), &[2, 2]);
+            for j in 0..2 {
+                for wc in 0..2 {
+                    assert_eq!(plane.at2(j, wc), s.planes.at2(j, wc * 4 + b));
+                }
+            }
+        }
+        assert!(s.bit_plane(4).is_err());
     }
 
     #[test]

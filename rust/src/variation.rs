@@ -132,7 +132,7 @@ pub fn monte_carlo(
     seed: u64,
 ) -> Result<VariationReport> {
     use crate::mdm::{plan_tile, Identity, Mdm, SlicedTile};
-    use crate::nf::manhattan_nf_sum;
+    use crate::nf::estimator::{Analytic, NfEstimator};
     let mut rng = Xoshiro256::seeded(seed);
     let mut calc = Vec::new();
     let mut meas = Vec::new();
@@ -141,7 +141,7 @@ pub fn monte_carlo(
         // Density varies tile-to-tile (as in Fig. 4).
         let d = (density + rng.uniform_range(-0.05, 0.05)).clamp(0.02, 0.9);
         let planes = crate::eval::random_planes(tile, tile, d, &mut rng);
-        calc.push(manhattan_nf_sum(&planes, physics.parasitic_ratio()));
+        calc.push(Analytic.nf_sum(&planes, &physics)?);
         let varied = VariedCrossbar::sample(&planes, physics, model, seed ^ (t as u64) << 16);
         meas.push(varied.nf()?);
 

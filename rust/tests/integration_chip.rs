@@ -79,6 +79,7 @@ fn placement_sweep_bitwise_deterministic_across_thread_counts() {
         tiles: vec![16, 32],
         placers: vec!["firstfit".into(), "skyline".into(), "nf_aware".into()],
         strategies: vec!["conventional".into(), "mdm".into()],
+        estimator: "analytic".into(),
         chip: ChipModel { slot_rows: 8, slot_cols: 8, ..ChipModel::default() },
         k_bits: 8,
         nf_tiles: 2,

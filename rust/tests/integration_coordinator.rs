@@ -169,6 +169,7 @@ fn engine_cost_scales_with_tile_size() {
         let cfg = EngineConfig {
             model: ModelKind::MiniResNet,
             strategy: strategy_by_name("mdm").unwrap(),
+            estimator: mdm_cim::nf::estimator::estimator_by_name("analytic").unwrap(),
             eta_signed: -2e-3,
             geometry: TileGeometry::new(tile, tile, 8).unwrap(),
             fwd_batch: 16,

@@ -1,0 +1,201 @@
+//! Integration suite for the unified NF-estimation layer
+//! (`nf::estimator`): cross-backend identity, cache behaviour on a
+//! bit-sliced miniresnet layer, and analytic-vs-circuit ranking sanity.
+
+use mdm_cim::crossbar::{LayerTiling, TileGeometry};
+use mdm_cim::nf::estimator::{estimator_by_name, estimator_names, Analytic, NfEstimator};
+use mdm_cim::parallel::ParallelConfig;
+use mdm_cim::quant::SignSplit;
+use mdm_cim::rng::Xoshiro256;
+use mdm_cim::tensor::Tensor;
+use mdm_cim::CrossbarPhysics;
+
+fn random_planes(rows: usize, cols: usize, density: f64, rng: &mut Xoshiro256) -> Tensor {
+    let data: Vec<f32> =
+        (0..rows * cols).map(|_| if rng.bernoulli(density) { 1.0 } else { 0.0 }).collect();
+    Tensor::new(&[rows, cols], data).unwrap()
+}
+
+/// Tile population with deliberate duplicates (every tile appears twice).
+fn duplicated_tiles(n_unique: usize, side: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let unique: Vec<Tensor> = (0..n_unique)
+        .map(|_| {
+            let d = rng.uniform_range(0.1, 0.4);
+            random_planes(side, side, d, &mut rng)
+        })
+        .collect();
+    let mut all = unique.clone();
+    all.extend(unique);
+    all
+}
+
+/// Property: `cached:circuit` is bitwise identical to `circuit` at any
+/// thread count — the cache must be a pure memo, invisible in the bits.
+#[test]
+fn cached_circuit_bitwise_identical_to_circuit_at_any_thread_count() {
+    let physics = CrossbarPhysics::default();
+    let tiles = duplicated_tiles(6, 12, 101);
+    let reference = estimator_by_name("circuit")
+        .unwrap()
+        .nf_mean_batch(&tiles, &physics, &ParallelConfig::serial())
+        .unwrap();
+    for threads in [1usize, 2, 3, 4, 8] {
+        // A fresh cache per thread count: hits within the run must not
+        // perturb the bits either.
+        let cached = estimator_by_name("cached:circuit").unwrap();
+        let got = cached
+            .nf_mean_batch(&tiles, &physics, &ParallelConfig::with_threads(threads))
+            .unwrap();
+        assert_eq!(got.len(), reference.len());
+        for (a, b) in got.iter().zip(&reference) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads = {threads}");
+        }
+        let stats = cached.cache_stats().unwrap();
+        assert!(stats.hits + stats.misses >= tiles.len() as u64);
+    }
+}
+
+/// The same property for the sum form and per-column outputs.
+#[test]
+fn cached_circuit_sum_and_per_col_match_circuit() {
+    let physics = CrossbarPhysics::default();
+    let tiles = duplicated_tiles(4, 10, 103);
+    let circuit = estimator_by_name("circuit").unwrap();
+    let cached = estimator_by_name("cached:circuit").unwrap();
+    for t in &tiles {
+        assert_eq!(
+            cached.nf_sum(t, &physics).unwrap().to_bits(),
+            circuit.nf_sum(t, &physics).unwrap().to_bits()
+        );
+        let a = cached.nf_per_col(t, &physics).unwrap();
+        let b = circuit.nf_per_col(t, &physics).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+/// Cache hit-rate is strictly positive on a bit-sliced miniresnet layer:
+/// bell-shaped weights leave high-order bit planes near-empty, so plane
+/// tensors repeat across tiles (Theorem 1) and exact solves dedupe.
+#[test]
+fn cache_hits_on_bit_sliced_miniresnet_layer() {
+    let physics = CrossbarPhysics::default();
+    let desc = mdm_cim::models::model_by_name("miniresnet").unwrap();
+    let layer = &desc.layers[0]; // 256 x 128 stem
+    let w = mdm_cim::models::generate_layer_weights(layer.fan_in, layer.fan_out, &desc.profile, 7)
+        .unwrap();
+    let split = SignSplit::of(&w);
+    let geometry = TileGeometry::new(64, 64, 8).unwrap();
+    let mut planes = Vec::new();
+    for part in [&split.pos, &split.neg] {
+        let tiling = LayerTiling::partition(part, geometry).unwrap();
+        for t in &tiling.tiles {
+            for b in 0..t.sliced.k_bits {
+                planes.push(t.sliced.bit_plane(b).unwrap());
+            }
+        }
+    }
+    assert!(planes.len() >= 64, "workload too small: {}", planes.len());
+
+    let cached = estimator_by_name("cached:circuit").unwrap();
+    let got = cached.nf_mean_batch(&planes, &physics, &ParallelConfig::with_threads(4)).unwrap();
+    let stats = cached.cache_stats().unwrap();
+    assert!(stats.hits > 0, "expected duplicate bit planes to hit: {stats:?}");
+    assert_eq!(stats.hits + stats.misses, planes.len() as u64);
+    assert!(stats.hit_rate() > 0.0 && stats.hit_rate() < 1.0);
+
+    // And the memoized answers still match the uncached backend bitwise.
+    let reference = estimator_by_name("circuit")
+        .unwrap()
+        .nf_mean_batch(&planes, &physics, &ParallelConfig::with_threads(4))
+        .unwrap();
+    for (a, b) in got.iter().zip(&reference) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// Spearman rank correlation between two series.
+fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    fn ranks(xs: &[f64]) -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+        let mut r = vec![0.0f64; xs.len()];
+        for (rank, &i) in idx.iter().enumerate() {
+            r[i] = rank as f64;
+        }
+        r
+    }
+    mdm_cim::stats::pearson(&ranks(a), &ranks(b))
+}
+
+/// Analytic (Eq. 16) and exact circuit NF must rank random tiles almost
+/// identically — the Manhattan-Hypothesis sanity gate on the estimator pair.
+#[test]
+fn analytic_and_circuit_rank_tiles_consistently() {
+    let physics = CrossbarPhysics::default();
+    let mut rng = Xoshiro256::seeded(271);
+    let tiles: Vec<Tensor> = (0..40)
+        .map(|_| {
+            let d = rng.uniform_range(0.05, 0.5);
+            random_planes(16, 16, d, &mut rng)
+        })
+        .collect();
+    let pool = ParallelConfig::default();
+    let calc = Analytic.nf_sum_batch(&tiles, &physics, &pool).unwrap();
+    let meas = estimator_by_name("circuit").unwrap().nf_mean_batch(&tiles, &physics, &pool).unwrap();
+    let rho = spearman(&calc, &meas);
+    assert!(rho > 0.9, "rank correlation {rho}");
+}
+
+/// The registry lists every base backend, and listed base names resolve.
+#[test]
+fn registry_listing_and_resolution_agree() {
+    let names = estimator_names();
+    for expected in ["analytic", "circuit", "circuit_cg"] {
+        assert!(names.iter().any(|(n, _)| *n == expected), "{expected} missing");
+        assert!(estimator_by_name(expected).is_ok());
+    }
+    // The parameterized entries resolve through their canonical spellings.
+    assert!(estimator_by_name("sampled").is_ok());
+    assert!(estimator_by_name("sampled:4").is_ok());
+    assert!(estimator_by_name("cached:analytic").is_ok());
+    assert!(estimator_by_name("cached:sampled:4").is_ok());
+    assert!(estimator_by_name("not-a-backend").is_err());
+}
+
+/// `measure_tile_nfs` (now workspace-backed) stays bitwise identical across
+/// a population of mixed tile shapes — the workspace rebuilds its node map
+/// between shapes without contaminating results.
+#[test]
+fn workspace_backed_measurement_handles_mixed_shapes() {
+    let physics = CrossbarPhysics::default();
+    let mut rng = Xoshiro256::seeded(307);
+    let mut tiles = Vec::new();
+    for &(r, c) in &[(8usize, 8usize), (12, 5), (8, 8), (3, 9), (16, 16), (8, 8)] {
+        tiles.push(random_planes(r, c, 0.3, &mut rng));
+    }
+    let serial =
+        mdm_cim::circuit::measure_tile_nfs(&tiles, physics, &ParallelConfig::serial()).unwrap();
+    for threads in [2usize, 4] {
+        let par = mdm_cim::circuit::measure_tile_nfs(
+            &tiles,
+            physics,
+            &ParallelConfig::with_threads(threads),
+        )
+        .unwrap();
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    for (t, &nf) in tiles.iter().zip(&serial) {
+        let direct = mdm_cim::circuit::CrossbarCircuit::from_planes(t, physics)
+            .unwrap()
+            .solve()
+            .unwrap()
+            .nf();
+        assert_eq!(nf.to_bits(), direct.to_bits());
+    }
+}
