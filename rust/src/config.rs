@@ -306,6 +306,45 @@ impl ServerConfig {
     }
 }
 
+/// Typed serving-tier configuration (`[serve]` section), consumed by
+/// `mdm serve` / `mdm loadtest` when building a
+/// [`crate::serve::ServeTier`]. The legacy `[server]` section keeps
+/// configuring the coordinator's fixed-window batcher.
+#[derive(Debug, Clone)]
+pub struct ServeSettings {
+    /// Worker threads per resident model.
+    pub workers_per_model: usize,
+    /// Maximum rows per continuous-batching wave.
+    pub wave_rows: usize,
+    /// Per-tenant outstanding-request quota (queued + in-flight).
+    pub tenant_quota: usize,
+    /// Tier-wide queued-row bound; admission past it sheds with a typed
+    /// `Overloaded` error.
+    pub shed_rows: usize,
+}
+
+impl Default for ServeSettings {
+    fn default() -> Self {
+        Self { workers_per_model: 2, wave_rows: 16, tenant_quota: 64, shed_rows: 256 }
+    }
+}
+
+impl ServeSettings {
+    /// Build from `[serve]` section with defaults.
+    pub fn from_config(c: &Config) -> Self {
+        let d = Self::default();
+        Self {
+            workers_per_model: c
+                .int_or("serve", "workers_per_model", d.workers_per_model as i64)
+                .max(1) as usize,
+            wave_rows: c.int_or("serve", "wave_rows", d.wave_rows as i64).max(1) as usize,
+            tenant_quota: c.int_or("serve", "tenant_quota", d.tenant_quota as i64).max(1)
+                as usize,
+            shed_rows: c.int_or("serve", "shed_rows", d.shed_rows as i64).max(1) as usize,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -384,6 +423,23 @@ label = "a # not a comment"
         let d = ChipSettings::from_config(&Config::default());
         assert_eq!(d.rows, 16);
         assert_eq!(d.spill, "chips");
+    }
+
+    #[test]
+    fn serve_section_parsed_with_defaults() {
+        let c = Config::parse("[serve]\nworkers_per_model = 3\nshed_rows = 32").unwrap();
+        let s = ServeSettings::from_config(&c);
+        assert_eq!(s.workers_per_model, 3);
+        assert_eq!(s.shed_rows, 32);
+        // Unspecified keys fall back to the defaults.
+        assert_eq!(s.wave_rows, 16);
+        assert_eq!(s.tenant_quota, 64);
+        let d = ServeSettings::from_config(&Config::default());
+        assert_eq!(d.workers_per_model, 2);
+        assert_eq!(d.shed_rows, 256);
+        // Nonsense values clamp to 1 instead of wrapping.
+        let c = Config::parse("[serve]\nwave_rows = -4").unwrap();
+        assert_eq!(ServeSettings::from_config(&c).wave_rows, 1);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! degenerates to this under our per-request row granularity).
 
 use super::InferenceRequest;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -44,6 +45,69 @@ pub fn next_batch(
                 requests.push(req);
             }
             Err(mpsc::RecvTimeoutError::Timeout) => break,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(Batch { requests, rows })
+}
+
+/// [`next_batch`] with a shutdown flag: blocks for the first request in
+/// `poll`-sized slices so `stop` is observed promptly, and keeps forming
+/// batches from already-queued requests after `stop` is raised — returning
+/// `None` only once the server is stopping **and** the queue is drained
+/// (or the channel disconnected and drained). This is the server's drain
+/// barrier: no admitted request is abandoned by shutdown.
+pub fn next_batch_until(
+    rx: &mpsc::Receiver<InferenceRequest>,
+    max_rows: usize,
+    window: Duration,
+    poll: Duration,
+    stop: &AtomicBool,
+) -> Option<Batch> {
+    let first = loop {
+        match rx.recv_timeout(poll) {
+            Ok(req) => break req,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Acquire) {
+                    // One last non-blocking sweep: a request admitted just
+                    // before the flag was raised must still be served.
+                    match rx.try_recv() {
+                        Ok(req) => break req,
+                        Err(_) => return None,
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return None,
+        }
+    };
+    let mut rows = first.x.rows();
+    let mut requests = vec![first];
+    let deadline = Instant::now() + window;
+    while rows < max_rows {
+        // Once stopping, ship immediately with whatever is already queued —
+        // no point holding a window open for arrivals that can't come.
+        if stop.load(Ordering::Acquire) {
+            match rx.try_recv() {
+                Ok(req) => {
+                    rows += req.x.rows();
+                    requests.push(req);
+                    continue;
+                }
+                Err(_) => break,
+            }
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        // Block in poll-sized slices so a stop raised mid-window is
+        // observed within `poll`, not after the full window.
+        match rx.recv_timeout(poll.min(deadline - now)) {
+            Ok(req) => {
+                rows += req.x.rows();
+                requests.push(req);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {} // re-check stop/deadline
             Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
     }
@@ -182,6 +246,77 @@ mod tests {
         let _h2 = late.join().unwrap();
         let b2 = next_batch(&rx, 100, Duration::from_millis(30)).unwrap();
         assert_eq!(b2.requests[0].id, 2);
+    }
+
+    #[test]
+    fn next_batch_until_drains_queue_after_stop() {
+        // The drain-barrier contract: requests queued before the stop flag
+        // was raised keep coming out as batches; None only once empty.
+        let (tx, rx) = mpsc::channel();
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            let (r, h) = req(i, 1);
+            tx.send(r).unwrap();
+            keep.push(h);
+        }
+        let stop = AtomicBool::new(true);
+        let poll = Duration::from_millis(5);
+        let b1 = next_batch_until(&rx, 2, Duration::from_secs(5), poll, &stop).unwrap();
+        assert_eq!(b1.rows, 2);
+        let b2 = next_batch_until(&rx, 2, Duration::from_secs(5), poll, &stop).unwrap();
+        assert_eq!(b2.rows, 1);
+        let t0 = Instant::now();
+        assert!(next_batch_until(&rx, 2, Duration::from_secs(5), poll, &stop).is_none());
+        // ... and promptly: one poll slice, not the 5 s batch window.
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        drop(tx);
+    }
+
+    #[test]
+    fn next_batch_until_observes_stop_while_blocked() {
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let flagger = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            stop2.store(true, Ordering::Release);
+        });
+        let t0 = Instant::now();
+        let b = next_batch_until(
+            &rx,
+            4,
+            Duration::from_secs(5),
+            Duration::from_millis(5),
+            &stop,
+        );
+        assert!(b.is_none(), "empty stopped queue must yield None");
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "stop flag not observed while blocked: {:?}",
+            t0.elapsed()
+        );
+        flagger.join().unwrap();
+        drop(tx);
+    }
+
+    #[test]
+    fn next_batch_until_without_stop_matches_next_batch() {
+        let (tx, rx) = mpsc::channel();
+        let (r1, _h1) = req(1, 1);
+        let (r2, _h2) = req(2, 1);
+        tx.send(r1).unwrap();
+        tx.send(r2).unwrap();
+        let stop = AtomicBool::new(false);
+        let b = next_batch_until(
+            &rx,
+            4,
+            Duration::from_millis(20),
+            Duration::from_millis(5),
+            &stop,
+        )
+        .unwrap();
+        assert_eq!(b.requests.len(), 2);
+        assert_eq!(b.rows, 2);
     }
 
     #[test]

@@ -52,6 +52,10 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     /// Completed requests.
     pub completed: AtomicU64,
+    /// Admitted requests that failed in a worker (engine init or inference
+    /// error). Their responders are dropped, so callers see a disconnect
+    /// instead of a hang.
+    pub failed: AtomicU64,
     /// Batches dispatched to workers.
     pub batches: AtomicU64,
     /// Total input rows (images) processed.
@@ -76,11 +80,13 @@ impl Metrics {
             requests: self.requests.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             rows: self.rows.load(Ordering::Relaxed),
             adc_conversions: self.adc_conversions.load(Ordering::Relaxed),
             sync_events: self.sync_events.load(Ordering::Relaxed),
             latency_p50_us: self.latency.percentile(50.0),
+            latency_p95_us: self.latency.percentile(95.0),
             latency_p99_us: self.latency.percentile(99.0),
             latency_mean_us: self.latency.mean(),
         }
@@ -96,6 +102,8 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     /// Requests answered.
     pub completed: u64,
+    /// Admitted requests failed in a worker.
+    pub failed: u64,
     /// Batches formed by the batcher.
     pub batches: u64,
     /// Input rows served.
@@ -106,6 +114,8 @@ pub struct MetricsSnapshot {
     pub sync_events: u64,
     /// Median end-to-end latency, microseconds.
     pub latency_p50_us: u64,
+    /// 95th-percentile end-to-end latency, microseconds.
+    pub latency_p95_us: u64,
     /// 99th-percentile end-to-end latency, microseconds.
     pub latency_p99_us: u64,
     /// Mean end-to-end latency, microseconds.
@@ -145,6 +155,8 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.requests, 3);
         assert_eq!(s.completed, 2);
+        assert_eq!(s.failed, 0);
         assert_eq!(s.latency_p50_us, 100);
+        assert_eq!(s.latency_p95_us, 100);
     }
 }

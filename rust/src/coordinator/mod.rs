@@ -15,7 +15,14 @@
 //!   `max_batch` rows or until `batch_window_us` elapses.
 //! * [`server`] — the thread topology: clients → bounded queue → batcher →
 //!   worker pool → responses; with [`metrics`] counters throughout.
+//!   Shutdown drains: every request admitted before [`server::Server::shutdown`]
+//!   is answered (or failed with a dropped responder) before it returns.
 //! * [`metrics`] — throughput/latency/ADC accounting.
+//!
+//! The continuous-batching multi-tenant serving tier ([`crate::serve`])
+//! builds on these engines; this module remains the single-model,
+//! fixed-window request path it superseded (and the engine registry both
+//! share).
 
 pub mod batcher;
 pub mod engine;

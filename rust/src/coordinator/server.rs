@@ -13,8 +13,17 @@
 //! Backpressure: `submit` fails fast when the ingress queue holds
 //! `queue_depth` outstanding requests (the client sees the rejection, as in
 //! any production serving stack).
+//!
+//! Shutdown is a **drain barrier**: [`Server::shutdown`] stops admission
+//! (both on the server and on every live [`ServerHandle`] clone), lets the
+//! batcher flush every already-queued request into batches, and joins the
+//! workers only after the work queue is empty — no admitted request is
+//! abandoned. Requests a worker cannot serve (engine init or inference
+//! failure) are *failed*, not stranded: their responders are dropped so the
+//! client's `recv()` returns a disconnect error promptly, and the `failed`
+//! counter records them.
 
-use super::batcher::{concat_inputs, next_batch};
+use super::batcher::{concat_inputs, next_batch_until};
 use super::engine::{Engine, EngineConfig};
 use super::metrics::Metrics;
 use super::{InferenceRequest, InferenceResponse};
@@ -35,10 +44,12 @@ pub struct Server {
 }
 
 /// Cloneable client handle.
+#[derive(Clone)]
 pub struct ServerHandle {
     ingress: mpsc::SyncSender<InferenceRequest>,
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
+    stopping: Arc<AtomicBool>,
 }
 
 impl Server {
@@ -59,21 +70,29 @@ impl Server {
 
         let mut threads = Vec::new();
 
-        // Batcher thread.
+        // Batcher thread. Polls the stop flag between blocking slices, and
+        // on shutdown keeps flushing already-queued requests into batches
+        // before exiting — the first half of the drain barrier.
         {
             let metrics = metrics.clone();
+            let stopping = stopping.clone();
             let max_batch = cfg.max_batch;
             let window = Duration::from_micros(cfg.batch_window_us);
+            let poll = Duration::from_millis(10);
             threads.push(
                 std::thread::Builder::new()
                     .name("mdm-batcher".into())
                     .spawn(move || {
-                        while let Some(batch) = next_batch(&ingress_rx, max_batch, window) {
+                        while let Some(batch) =
+                            next_batch_until(&ingress_rx, max_batch, window, poll, &stopping)
+                        {
                             Metrics::bump(&metrics.batches, 1);
                             if work_tx.send(batch).is_err() {
                                 break;
                             }
                         }
+                        // work_tx drops here; workers drain the remaining
+                        // batches and then see the disconnect.
                     })
                     .context("spawning batcher")?,
             );
@@ -89,14 +108,21 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("mdm-worker{w}"))
                     .spawn(move || {
+                        // An init failure must not strand batches: the
+                        // worker stays in the loop as a "failer", consuming
+                        // its share of the work queue and failing each
+                        // request (responders drop → clients see a
+                        // disconnect, not a hang), so the drain barrier
+                        // still completes.
                         let engine = match Engine::program(&dir, engine_cfg) {
-                            Ok(e) => e,
+                            Ok(e) => Some(e),
                             Err(err) => {
                                 eprintln!("worker{w}: engine init failed: {err:#}");
-                                return;
+                                None
                             }
                         };
-                        let unit_cost = *engine.unit_cost();
+                        let unit_cost =
+                            engine.as_ref().map(|e| *e.unit_cost()).unwrap_or_default();
                         loop {
                             let batch = {
                                 let rx = work_rx.lock().expect("work queue lock");
@@ -104,6 +130,10 @@ impl Server {
                                     Ok(b) => b,
                                     Err(_) => break,
                                 }
+                            };
+                            let Some(engine) = engine.as_ref() else {
+                                Metrics::bump(&metrics.failed, batch.requests.len() as u64);
+                                continue;
                             };
                             let x = concat_inputs(&batch);
                             match engine.infer(&x) {
@@ -139,6 +169,12 @@ impl Server {
                                 }
                                 Err(err) => {
                                     eprintln!("worker{w}: inference failed: {err:#}");
+                                    // Fail the whole batch: dropping the
+                                    // requests drops their responders.
+                                    Metrics::bump(
+                                        &metrics.failed,
+                                        batch.requests.len() as u64,
+                                    );
                                 }
                             }
                         }
@@ -162,6 +198,7 @@ impl Server {
             ingress: self.ingress.clone(),
             metrics: self.metrics.clone(),
             next_id: Arc::new(AtomicU64::new(1_000_000)),
+            stopping: self.stopping.clone(),
         }
     }
 
@@ -171,16 +208,24 @@ impl Server {
     }
 
     /// Submit a request; returns the response receiver. Fails fast when the
-    /// ingress queue is full (backpressure).
+    /// ingress queue is full (backpressure) or the server is stopping.
     pub fn submit(&self, x: Tensor) -> Result<mpsc::Receiver<InferenceResponse>> {
-        submit_via(&self.ingress, &self.metrics, &self.next_id, x)
+        submit_via(&self.ingress, &self.metrics, &self.next_id, &self.stopping, x)
     }
 
-    /// Graceful shutdown: stop accepting, drain, join workers.
+    /// Graceful shutdown with a **drain barrier**: stop admission (here and
+    /// on every live [`ServerHandle`] clone, whose submits now fail with
+    /// "server stopped"), let the batcher flush every queued request, and
+    /// join the threads — the batcher exits only once the ingress queue is
+    /// drained, and its exit closes the work queue, so the workers finish
+    /// every formed batch before stopping. Every admitted request is
+    /// answered (or failed with a dropped responder) before this returns.
     pub fn shutdown(mut self) {
         self.stopping.store(true, Ordering::SeqCst);
-        // Closing the ingress lets the batcher finish, whose exit closes the
-        // work queue, which stops the workers.
+        // Also close our ingress sender: once live handles drop theirs too,
+        // the channel disconnects — but the drain no longer depends on it
+        // (the batcher polls the stop flag), so a forgotten handle clone
+        // can't wedge shutdown anymore.
         drop(std::mem::replace(&mut self.ingress, {
             let (tx, _rx) = mpsc::sync_channel(1);
             tx
@@ -194,7 +239,7 @@ impl Server {
 impl ServerHandle {
     /// Submit a request through the handle.
     pub fn submit(&self, x: Tensor) -> Result<mpsc::Receiver<InferenceResponse>> {
-        submit_via(&self.ingress, &self.metrics, &self.next_id, x)
+        submit_via(&self.ingress, &self.metrics, &self.next_id, &self.stopping, x)
     }
 }
 
@@ -202,9 +247,13 @@ fn submit_via(
     ingress: &mpsc::SyncSender<InferenceRequest>,
     metrics: &Metrics,
     next_id: &AtomicU64,
+    stopping: &AtomicBool,
     x: Tensor,
 ) -> Result<mpsc::Receiver<InferenceResponse>> {
     ensure!(x.ndim() == 2 && x.rows() >= 1, "request must be [n>=1, features]");
+    // Checked before enqueueing so a request can never slip in after the
+    // drain barrier started (the race the shutdown regression test covers).
+    ensure!(!stopping.load(Ordering::SeqCst), "server stopped");
     let (tx, rx) = mpsc::channel();
     let req = InferenceRequest {
         id: next_id.fetch_add(1, Ordering::Relaxed),

@@ -24,6 +24,10 @@
 //!
 //! Python never runs on the request path: `runtime` loads the AOT HLO
 //! artifacts through PJRT and `coordinator` drives them from Rust threads.
+//! On top of the coordinator sits the [`serve`] tier — continuous batching
+//! (waves refill as workers drain them), multi-model tenancy with
+//! per-tenant quotas and typed overload shedding, and the `mdm loadtest`
+//! SLO harness (`BENCH_serve_slo.json`).
 //!
 //! Evaluation is parallel by default: the per-tile circuit solves, NF
 //! scoring, and tile programming fan out over a deterministic
@@ -55,6 +59,7 @@ pub mod quant;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod tensor;
 pub mod testsupport;

@@ -10,7 +10,8 @@
 //! mdm calibrate-eta [--tiles N] [--tile N]      E6
 //! mdm sparsity  [--models a,b,..]               E5 / Theorem 1
 //! mdm ablation  <tilesize|sparsity|ratio|roworder>   A1–A3
-//! mdm serve     [--model m] [--strategy s] ...  serving driver
+//! mdm serve     [--models a,b] [--strategy s] ... continuous-batching tier
+//! mdm loadtest  [--rates r1,r2] [--smoke]      SLO sweep -> BENCH_serve_slo.json
 //! mdm bench     [--tiles N] [--tile N] ...      parallel-vs-serial NF bench
 //! mdm place     [--tiles a,b] [--placer p,q]    chip placement sweep
 //! mdm strategies                                mapping-strategy registry
@@ -23,9 +24,10 @@
 //! parser below (rust/DESIGN.md §5).
 
 use anyhow::{bail, Context, Result};
-use mdm_cim::config::{ChipSettings, Config, ExperimentConfig, ServerConfig};
-use mdm_cim::coordinator::{EngineConfig, ModelKind, Server};
+use mdm_cim::config::{ChipSettings, Config, ExperimentConfig, ServeSettings};
+use mdm_cim::coordinator::{EngineConfig, ModelKind};
 use mdm_cim::crossbar::TileGeometry;
+use mdm_cim::serve;
 use mdm_cim::mdm::{plan_tile, strategy_by_name, strategy_names};
 use mdm_cim::report;
 use mdm_cim::{eval, CrossbarPhysics};
@@ -148,6 +150,7 @@ fn main() -> Result<()> {
         "sparsity" => cmd_sparsity(&args),
         "ablation" => cmd_ablation(&args),
         "serve" => cmd_serve(&args),
+        "loadtest" => cmd_loadtest(&args),
         "bench" => cmd_bench(&args),
         "place" => cmd_place(&args),
         "strategies" => cmd_strategies(&args),
@@ -217,9 +220,19 @@ commands (paper experiment in brackets):
   sparsity       bit-level sparsity across the zoo             [Thm. 1]
   ablation       tilesize | sparsity | ratio | roworder |
                  global | variation | faults | adc | placement   [A1-A10]
-  serve          batched serving driver with metrics
-                 (persists <results>/serve_metrics.json; --chip adds
+  serve          continuous-batching serving tier over the PJRT engines:
+                 --models a,b makes several models resident (one tenant
+                 each), waves refill as workers drain them, per-tenant
+                 quotas + queue-depth shedding (--workers --wave-rows
+                 --quota --shed-rows, also `[serve]` in a config file;
+                 persists <results>/serve_metrics.json; --chip adds
                  per-worker chip placement attribution)
+  loadtest       SLO sweep of the serving tier on synthetic pipeline
+                 models (no artifacts needed): open-loop Poisson rates +
+                 closed-loop clients -> BENCH_serve_slo.json with
+                 p50/p95/p99, saturation throughput, shed rate, and
+                 ADC/energy per request priced through the wave scheduler
+                 (--rates 50,100 --duration-ms N --clients N --smoke)
   bench          parallel vs serial NF sweep -> BENCH_parallel_nf.json;
                  with an explicit --estimator NAME flag: backend comparison
                  vs uncached `circuit` on a bit-sliced synthetic workload
@@ -648,16 +661,45 @@ fn cmd_ablation(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the `[serve]` settings (config file + `--workers`,
+/// `--wave-rows`, `--quota`, `--shed-rows` flag overrides; the legacy
+/// `--max-batch` / `--queue` spellings are kept as aliases).
+fn serve_settings(args: &Args) -> Result<ServeSettings> {
+    let mut s = if let Some(path) = args.flags.get("config") {
+        ServeSettings::from_config(&Config::load(path)?)
+    } else {
+        ServeSettings::default()
+    };
+    if let Some(v) = args.flags.get("workers") {
+        s.workers_per_model = v.parse().context("--workers")?;
+    }
+    if let Some(v) = args.flags.get("wave-rows").or_else(|| args.flags.get("max-batch")) {
+        s.wave_rows = v.parse().context("--wave-rows")?;
+    }
+    if let Some(v) = args.flags.get("quota") {
+        s.tenant_quota = v.parse().context("--quota")?;
+    }
+    if let Some(v) = args.flags.get("shed-rows").or_else(|| args.flags.get("queue")) {
+        s.shed_rows = v.parse().context("--shed-rows")?;
+    }
+    Ok(s)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = experiment_config(args)?;
-    let model = ModelKind::parse(&args.str_or("model", "miniresnet"))?;
+    // Resident models (one tenant each): `--models a,b` or the legacy
+    // singular `--model`.
+    let model_names: Vec<String> = match args.flags.get("models") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => vec![args.str_or("model", "miniresnet")],
+    };
     let n_requests = args.usize_or("requests", 64);
     let rows_per_req = args.usize_or("rows", 4);
-    let server_cfg = ServerConfig {
-        workers: args.usize_or("workers", 2),
-        max_batch: args.usize_or("max-batch", 16),
-        batch_window_us: args.usize_or("window-us", 200) as u64,
-        queue_depth: args.usize_or("queue", 256),
+    let settings = serve_settings(args)?;
+    let tier_cfg = serve::ServeConfig {
+        workers_per_model: settings.workers_per_model,
+        wave_rows: settings.wave_rows,
+        shed_rows: settings.shed_rows,
     };
     // Strategy precedence: --strategy > deprecated --mapping > config file.
     let strategy_name = args
@@ -674,62 +716,104 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
         None => mdm_cim::parallel::ParallelConfig::default(),
     };
-    let engine_cfg = EngineConfig {
-        model,
-        strategy: strategy_by_name(&strategy_name)?,
-        estimator: mdm_cim::nf::estimator::estimator_by_name(&cfg.estimator)?,
-        eta_signed: cfg.eta_signed,
-        geometry: TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?,
-        fwd_batch: 16,
-        solver_parallel,
-    };
+    let geometry = TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?;
     println!(
-        "serving {} with {} workers, strategy {strategy_name}, estimator {}, eta {:.1e} ...",
-        args.str_or("model", "miniresnet"),
-        server_cfg.workers,
+        "serving [{}] with {} worker(s)/model, wave {} rows, quota {}, shed at {} rows, \
+         strategy {strategy_name}, estimator {}, eta {:.1e} ...",
+        model_names.join(", "),
+        tier_cfg.workers_per_model,
+        tier_cfg.wave_rows,
+        settings.tenant_quota,
+        tier_cfg.shed_rows,
         cfg.estimator,
-        engine_cfg.eta_signed
+        cfg.eta_signed
     );
     let store = mdm_cim::runtime::ArtifactStore::open(&cfg.artifacts_dir)?;
     let test = store.data("test")?;
     drop(store);
 
-    // Optional chip-level cost attribution: program one probe engine, place
-    // its layers on the configured chip, and report the per-worker figures
-    // (every worker serves from an identical placement).
-    let chip_attr = if args.flags.contains_key("chip") {
+    // Optional chip-level cost attribution target (placement is per worker:
+    // every worker of a model serves from an identical placement).
+    let chip_target = if args.flags.contains_key("chip") {
         let settings = chip_settings(args)?;
         let chip = mdm_cim::chip::ChipModel {
-            geometry: engine_cfg.geometry,
+            geometry,
             ..mdm_cim::chip::ChipModel::from_settings(&settings)?
         };
-        let placer = mdm_cim::chip::placer_by_name(&settings.placer)?;
-        let probe = mdm_cim::coordinator::Engine::program(&cfg.artifacts_dir, engine_cfg.clone())?;
-        let r = probe.chip_report(&chip, placer.as_ref(), 1)?;
-        println!(
-            "chip plan ({}): {} chip(s) x {} round(s), {} wave(s), util {:.1}%, \
-             per-input latency {:.3e} ns, energy {:.3e} pJ, area {:.3} mm^2 (per worker)",
-            r.placer,
-            r.chips,
-            r.rounds,
-            r.waves.len(),
-            100.0 * r.utilization,
-            r.total.latency_ns,
-            r.total.energy_pj,
-            r.area_mm2
-        );
-        Some(r)
+        Some((chip, settings.placer.clone()))
     } else {
         None
     };
 
-    let workers = server_cfg.workers;
+    // Probe one engine per model on the main thread for cost metadata (and
+    // the chip attribution of the first model), then hand each model a
+    // factory that programs fresh engines *inside* the worker threads —
+    // PJRT engines never cross threads.
+    let mut specs = Vec::with_capacity(model_names.len());
+    let mut chip_attr = None;
+    for name in &model_names {
+        let engine_cfg = EngineConfig {
+            model: ModelKind::parse(name)?,
+            strategy: strategy_by_name(&strategy_name)?,
+            estimator: mdm_cim::nf::estimator::estimator_by_name(&cfg.estimator)?,
+            eta_signed: cfg.eta_signed,
+            geometry,
+            fwd_batch: 16,
+            solver_parallel,
+        };
+        let probe = mdm_cim::coordinator::Engine::program(&cfg.artifacts_dir, engine_cfg.clone())?;
+        let unit = *probe.unit_cost();
+        if let (Some((chip, placer_name)), None) = (&chip_target, &chip_attr) {
+            let placer = mdm_cim::chip::placer_by_name(placer_name)?;
+            let r = probe.chip_report(chip, placer.as_ref(), 1)?;
+            println!(
+                "chip plan ({}, {name}): {} chip(s) x {} round(s), {} wave(s), util {:.1}%, \
+                 per-input latency {:.3e} ns, energy {:.3e} pJ, area {:.3} mm^2 (per worker)",
+                r.placer,
+                r.chips,
+                r.rounds,
+                r.waves.len(),
+                100.0 * r.utilization,
+                r.total.latency_ns,
+                r.total.energy_pj,
+                r.area_mm2
+            );
+            chip_attr = Some(r);
+        }
+        drop(probe);
+        let dir = cfg.artifacts_dir.clone();
+        specs.push(serve::ModelSpec::per_worker(
+            name.clone(),
+            mdm_cim::dataset::N_FEATURES,
+            mdm_cim::dataset::N_CLASSES,
+            unit,
+            move |_worker| {
+                Ok(Box::new(serve::EngineBackend::program(&dir, engine_cfg.clone())?)
+                    as Box<dyn serve::ModelBackend>)
+            },
+        ));
+    }
+    let tenants: Vec<serve::TenantSpec> = model_names
+        .iter()
+        .enumerate()
+        .map(|(i, name)| serve::TenantSpec {
+            name: name.clone(),
+            model: i,
+            quota: settings.tenant_quota,
+        })
+        .collect();
+
     let t0 = std::time::Instant::now();
-    let server = Server::start(&cfg.artifacts_dir, engine_cfg, server_cfg)?;
+    let tier = serve::ServeTier::start(specs, tenants, tier_cfg)?;
     let mut receivers = Vec::new();
+    let mut shed = 0usize;
     for i in 0..n_requests {
         let (x, _) = test.batch(i * rows_per_req, rows_per_req);
-        receivers.push(server.submit(x)?);
+        match tier.submit(i % model_names.len(), x) {
+            Ok(rx) => receivers.push(rx),
+            Err(serve::ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => return Err(e.into()),
+        }
     }
     let mut ok = 0;
     for rx in receivers {
@@ -738,22 +822,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let elapsed = t0.elapsed();
-    let snap = server.metrics().snapshot();
-    server.shutdown();
+    // The drain barrier: shutdown() answers every admitted request before
+    // returning (see the tier-level regression tests).
+    let snap = tier.shutdown();
     println!(
-        "{ok}/{n_requests} responses in {:.2}s  ({:.1} req/s, {:.1} rows/s)",
+        "{ok}/{n_requests} responses ({shed} shed) in {:.2}s  ({:.1} req/s, {:.1} rows/s)",
         elapsed.as_secs_f64(),
         ok as f64 / elapsed.as_secs_f64(),
         snap.rows as f64 / elapsed.as_secs_f64()
     );
     println!(
-        "batches {}  latency p50/p99 {:.1}/{:.1} ms  ADC conversions {}  sync events {}",
-        snap.batches,
+        "waves {}  latency p50/p95/p99 {:.1}/{:.1}/{:.1} ms  ADC conversions {}  energy {} pJ",
+        snap.waves,
         snap.latency_p50_us as f64 / 1000.0,
+        snap.latency_p95_us as f64 / 1000.0,
         snap.latency_p99_us as f64 / 1000.0,
         snap.adc_conversions,
-        snap.sync_events
+        snap.energy_pj
     );
+    for t in &snap.tenants {
+        println!(
+            "  tenant {}: submitted {}  shed {}  completed {}",
+            t.name, t.submitted, t.shed, t.completed
+        );
+    }
 
     // Persist the snapshot so serving runs are comparable across commits
     // (same escaping/formatting path as every other emitted artifact).
@@ -761,25 +853,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
         use mdm_cim::report::Json;
         let elapsed_s = elapsed.as_secs_f64().max(f64::MIN_POSITIVE);
         let mut pairs: Vec<(&str, Json)> = vec![
-            ("model", Json::Str(args.str_or("model", "miniresnet"))),
+            (
+                "models",
+                Json::Arr(model_names.iter().map(|m| Json::Str(m.clone())).collect()),
+            ),
             ("strategy", Json::Str(strategy_name.clone())),
             ("estimator", Json::Str(cfg.estimator.clone())),
-            ("workers", Json::Int(workers as i64)),
+            ("workers_per_model", Json::Int(tier_cfg.workers_per_model as i64)),
+            ("wave_rows", Json::Int(tier_cfg.wave_rows as i64)),
+            ("tenant_quota", Json::Int(settings.tenant_quota as i64)),
+            ("shed_rows", Json::Int(tier_cfg.shed_rows as i64)),
             ("requests_submitted", Json::Int(n_requests as i64)),
             ("responses_ok", Json::Int(ok as i64)),
-            ("requests_accepted", Json::Int(snap.requests as i64)),
-            ("rejected", Json::Int(snap.rejected as i64)),
+            ("admitted", Json::Int(snap.admitted as i64)),
+            ("shed_quota", Json::Int(snap.shed_quota as i64)),
+            ("shed_queue", Json::Int(snap.shed_queue as i64)),
+            ("shed_rate", Json::Num(snap.shed_rate)),
             ("completed", Json::Int(snap.completed as i64)),
-            ("batches", Json::Int(snap.batches as i64)),
+            ("failed", Json::Int(snap.failed as i64)),
+            ("waves", Json::Int(snap.waves as i64)),
             ("rows", Json::Int(snap.rows as i64)),
             ("adc_conversions", Json::Int(snap.adc_conversions as i64)),
-            ("sync_events", Json::Int(snap.sync_events as i64)),
+            ("energy_pj", Json::Int(snap.energy_pj as i64)),
             ("latency_p50_us", Json::Int(snap.latency_p50_us as i64)),
+            ("latency_p95_us", Json::Int(snap.latency_p95_us as i64)),
             ("latency_p99_us", Json::Int(snap.latency_p99_us as i64)),
             ("latency_mean_us", Json::Num(snap.latency_mean_us)),
             ("elapsed_s", Json::Num(elapsed.as_secs_f64())),
             ("req_per_s", Json::Num(ok as f64 / elapsed_s)),
             ("rows_per_s", Json::Num(snap.rows as f64 / elapsed_s)),
+            (
+                "tenants",
+                Json::Arr(
+                    snap.tenants
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("name", Json::Str(t.name.clone())),
+                                ("submitted", Json::Int(t.submitted as i64)),
+                                ("shed", Json::Int(t.shed as i64)),
+                                ("completed", Json::Int(t.completed as i64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ];
         if let Some(r) = &chip_attr {
             pairs.push(("chip_placer", Json::Str(r.placer.clone())));
@@ -796,6 +914,132 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report::write_json_object(&metrics_path, &pairs)?;
         println!("metrics json: {}", metrics_path.display());
     }
+    Ok(())
+}
+
+/// `mdm loadtest` — the SLO sweep harness (DESIGN.md §10).
+///
+/// Runs entirely on synthetic pipeline-compiled models, so it needs no
+/// artifacts and exercises the real serving tier: a fresh tier per sweep
+/// point, open-loop Poisson arrivals at each `--rates` entry, then a
+/// closed-loop stage whose clients measure saturation throughput. ADC and
+/// energy per request are priced through the chip wave scheduler
+/// ([`mdm_cim::chip::Scheduler`]). Emits `BENCH_serve_slo.json` (CI gates
+/// on a nonzero completed-request count via `--smoke`).
+fn cmd_loadtest(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let settings = serve_settings(args)?;
+    let smoke = args.flags.contains_key("smoke");
+    // The smoke preset keeps CI wall-clock low: one small model, two short
+    // low-rate points, one closed-loop client. Explicit flags still win.
+    let tile = if smoke && !args.flags.contains_key("tile") { 32 } else { cfg.tile_size };
+    let geometry = TileGeometry::new(tile, tile, cfg.k_bits)?;
+    let chip_set = chip_settings(args)?;
+    let chip = mdm_cim::chip::ChipModel {
+        geometry,
+        ..mdm_cim::chip::ChipModel::from_settings(&chip_set)?
+    };
+    let defaults = serve::LoadtestConfig::default();
+    let rates: Vec<f64> = match args.flags.get("rates") {
+        Some(list) => {
+            let mut v = Vec::new();
+            for part in list.split(',') {
+                v.push(part.trim().parse::<f64>().with_context(|| format!("--rates {part:?}"))?);
+            }
+            v
+        }
+        None if smoke => vec![30.0, 60.0],
+        None => defaults.rates.clone(),
+    };
+    // Default: both zoo models resident (two tenants). Smoke: just one.
+    let models = if smoke && !args.flags.contains_key("models") {
+        vec!["miniresnet".to_string()]
+    } else {
+        models_flag(args, false)
+    };
+    let lt = serve::LoadtestConfig {
+        models,
+        rates,
+        duration_ms: args.usize_or("duration-ms", if smoke { 400 } else { 1000 }) as u64,
+        rows_per_request: args.usize_or("rows", 1),
+        closed_clients: args.usize_or("clients", if smoke { 1 } else { 4 }),
+        tenant_quota: settings.tenant_quota,
+        serve: serve::ServeConfig {
+            workers_per_model: settings.workers_per_model,
+            wave_rows: settings.wave_rows,
+            shed_rows: settings.shed_rows,
+        },
+        synth: serve::SyntheticModelConfig {
+            strategy: cfg.strategy.clone(),
+            eta_signed: cfg.eta_signed,
+            geometry,
+            seed: cfg.seed,
+            parallel: mdm_cim::parallel::ParallelConfig::default(),
+            chip: Some(chip),
+            placer: chip_set.placer.clone(),
+        },
+        seed: cfg.seed,
+    };
+    println!(
+        "loadtest [{}]: {} open-loop rate(s) x {} ms, {} closed client(s), \
+         {} worker(s)/model, wave {} rows, quota {}, shed at {} rows ...",
+        lt.models.join(", "),
+        lt.rates.len(),
+        lt.duration_ms,
+        lt.closed_clients,
+        lt.serve.workers_per_model,
+        lt.serve.wave_rows,
+        lt.tenant_quota,
+        lt.serve.shed_rows
+    );
+    let t0 = std::time::Instant::now();
+    let rep = serve::run_loadtest(&lt)?;
+    let fmt_point = |label: String, p: &serve::RatePoint| -> Vec<String> {
+        vec![
+            label,
+            format!("{:.1}", p.throughput_rps),
+            format!("{:.2}", p.snap.latency_p50_us as f64 / 1000.0),
+            format!("{:.2}", p.snap.latency_p95_us as f64 / 1000.0),
+            format!("{:.2}", p.snap.latency_p99_us as f64 / 1000.0),
+            format!("{:.3}", p.snap.shed_rate),
+            format!("{}", p.snap.completed),
+            report::fmt_g(p.adc_per_request),
+            report::fmt_g(p.energy_pj_per_request),
+        ]
+    };
+    let mut rows: Vec<Vec<String>> = rep
+        .open_loop
+        .iter()
+        .map(|p| fmt_point(format!("open @{:.0}/s", p.offered_rps), p))
+        .collect();
+    if let Some(p) = &rep.closed_loop {
+        rows.push(fmt_point(format!("closed x{}", lt.closed_clients), p));
+    }
+    print!(
+        "{}",
+        report::table(
+            &[
+                "point",
+                "rps",
+                "p50_ms",
+                "p95_ms",
+                "p99_ms",
+                "shed",
+                "done",
+                "adc/req",
+                "pJ/req",
+            ],
+            &rows
+        )
+    );
+    println!(
+        "saturation {:.1} req/s; swept in {:.2}s",
+        rep.saturation_rps,
+        t0.elapsed().as_secs_f64()
+    );
+    let out_path = args.str_or("out", "BENCH_serve_slo.json");
+    serve::loadtest::write_report(&out_path, &lt, &rep)?;
+    println!("report json: {out_path}");
     Ok(())
 }
 

@@ -465,6 +465,153 @@ impl ProgrammedLayer {
     }
 }
 
+/// A whole model programmed through one [`Pipeline`]: the multi-model
+/// compile handle the serving tier keeps resident per tenant-visible model.
+///
+/// One [`ProgrammedLayer`] is compiled per distinct layer shape of the
+/// zoo descriptor (the `count` multiplier collapses — repeated blocks are
+/// programmed identically, exactly as the NF statistics weight them), with
+/// weights synthesized deterministically from the descriptor's
+/// [`crate::models::WeightProfile`] and the given seed.
+#[derive(Debug, Clone)]
+pub struct ProgrammedModel {
+    /// Zoo name of the programmed model.
+    pub name: String,
+    /// Programmed layers, in forward order.
+    pub layers: Vec<ProgrammedLayer>,
+}
+
+impl Pipeline {
+    /// Program every layer of a zoo model with synthetic weights
+    /// (deterministic in `seed`; see
+    /// [`crate::models::ModelWeights::synthesize`]).
+    pub fn compile_model(
+        &self,
+        desc: &crate::models::ModelDesc,
+        seed: u64,
+    ) -> Result<ProgrammedModel> {
+        ensure!(!desc.layers.is_empty(), "model {} has no layers", desc.name);
+        let weights = crate::models::ModelWeights::synthesize(desc, seed)?;
+        let mut layers = Vec::with_capacity(weights.layers.len());
+        for w in &weights.layers {
+            layers.push(self.compile(w)?);
+        }
+        Ok(ProgrammedModel { name: desc.name.to_string(), layers })
+    }
+}
+
+/// Cycle activations to a layer's fan-in when consecutive zoo shapes do not
+/// chain directly (e.g. attention blocks folded to one matrix): column `j`
+/// of the adapted matrix reads column `j % cols` of the source. Identity
+/// when the widths already match.
+fn adapt_width(x: &Tensor, want: usize) -> Result<Tensor> {
+    if x.cols() == want {
+        return Ok(x.clone());
+    }
+    let rows = x.rows();
+    let mut data = Vec::with_capacity(rows * want);
+    for r in 0..rows {
+        let src = x.row(r);
+        for j in 0..want {
+            data.push(src[j % src.len()]);
+        }
+    }
+    Tensor::new(&[rows, want], data)
+}
+
+impl ProgrammedModel {
+    /// Number of programmed layers.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Fan-in of the first layer (what a request row must provide).
+    pub fn input_features(&self) -> usize {
+        self.layers[0].pos.fan_in
+    }
+
+    /// Fan-out of the last layer (logit width).
+    pub fn output_features(&self) -> usize {
+        self.layers[self.layers.len() - 1].pos.fan_out
+    }
+
+    /// Per-input analog cost of one forward pass: the sum of every layer's
+    /// compile-time [`ProgrammedLayer::cost`].
+    pub fn unit_cost(&self) -> TileCost {
+        let mut total = TileCost::default();
+        for layer in &self.layers {
+            total.add(&layer.cost());
+        }
+        total
+    }
+
+    /// Forward a batch `[B, input_features]` through the programmed stack:
+    /// effective-weight matmul per layer with ReLU between layers (none
+    /// after the last), adapting activation width where consecutive zoo
+    /// shapes do not chain. Each output row depends only on the same input
+    /// row, so results are bitwise independent of batch composition — the
+    /// property the serving tier's determinism contract rests on.
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        ensure!(
+            x.ndim() == 2 && x.cols() == self.input_features(),
+            "activations {:?} do not match model fan_in {}",
+            x.shape(),
+            self.input_features()
+        );
+        let mut a = x.clone();
+        let n = self.layers.len();
+        for (i, layer) in self.layers.iter().enumerate() {
+            let a_in = adapt_width(&a, layer.pos.fan_in)?;
+            let mut y = a_in.matmul(layer.effective_weights())?;
+            if i + 1 < n {
+                for v in y.data_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            a = y;
+        }
+        Ok(a)
+    }
+
+    /// The whole model as one chip workload: one entry per layer (stage =
+    /// forward index) weighted by that layer's NF sensitivity, so placement
+    /// parks the PR-sensitive layers in low-impact slots.
+    pub fn workload(&self, chip: &crate::chip::ChipModel) -> Result<crate::chip::ChipWorkload> {
+        let mut workload = crate::chip::ChipWorkload::new(*chip)?;
+        for (i, layer) in self.layers.iter().enumerate() {
+            ensure!(
+                chip.geometry == layer.geometry,
+                "chip geometry {:?} does not match programmed geometry {:?}",
+                chip.geometry,
+                layer.geometry
+            );
+            workload.add_layer(
+                &format!("{}:{i}", self.name),
+                i,
+                layer.pos.fan_in,
+                layer.pos.fan_out,
+                layer.nf_sensitivity(),
+            )?;
+        }
+        Ok(workload)
+    }
+
+    /// Place the model on a chip and price one batch through the wave
+    /// [`crate::chip::Scheduler`] — the serving tier's cost oracle for
+    /// ADC/energy per request.
+    pub fn chip_report(
+        &self,
+        chip: &crate::chip::ChipModel,
+        placer: &dyn crate::chip::Placer,
+        batch: usize,
+    ) -> Result<crate::chip::ChipReport> {
+        let placement = placer.place(&self.workload(chip)?)?;
+        crate::chip::Scheduler::default().schedule(&placement, batch)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -701,5 +848,94 @@ mod tests {
         let q = Quantizer { k_bits: 8, scale: 10.0 };
         let part = Pipeline::new(g).quantizer(q).compile_nonneg(&w).unwrap();
         assert_eq!(part.quant, q);
+    }
+
+    fn small_pipeline() -> Pipeline {
+        Pipeline::new(TileGeometry::new(16, 32, 8).unwrap())
+            .strategy("mdm")
+            .unwrap()
+            .eta_signed(-2e-3)
+    }
+
+    #[test]
+    fn compile_model_programs_every_layer() {
+        let desc = crate::models::model_by_name("miniresnet").unwrap();
+        let m = small_pipeline().compile_model(&desc, 42).unwrap();
+        assert_eq!(m.n_layers(), desc.layers.len());
+        assert_eq!(m.input_features(), desc.layers[0].fan_in);
+        assert_eq!(m.output_features(), 10);
+        let cost = m.unit_cost();
+        assert!(cost.adc_conversions > 0);
+        assert!(cost.energy_pj > 0.0);
+        // Determinism in the seed.
+        let again = small_pipeline().compile_model(&desc, 42).unwrap();
+        for (a, b) in m.layers.iter().zip(&again.layers) {
+            assert_eq!(
+                a.effective_weights().data(),
+                b.effective_weights().data()
+            );
+        }
+    }
+
+    #[test]
+    fn programmed_model_forward_shapes_and_determinism() {
+        let desc = crate::models::model_by_name("miniresnet").unwrap();
+        let m = small_pipeline().compile_model(&desc, 7).unwrap();
+        let mut rng = Xoshiro256::seeded(11);
+        let xdata: Vec<f32> =
+            (0..3 * m.input_features()).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let x = Tensor::new(&[3, m.input_features()], xdata).unwrap();
+        let y = m.forward(&x).unwrap();
+        assert_eq!(y.shape(), &[3, 10]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        // Row independence: forwarding one row alone is bitwise identical to
+        // its row inside the batch (the serving determinism contract).
+        let solo = Tensor::new(&[1, m.input_features()], x.row(1).to_vec()).unwrap();
+        let y_solo = m.forward(&solo).unwrap();
+        for (a, b) in y_solo.data().iter().zip(y.row(1)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Wrong width is rejected.
+        assert!(m.forward(&Tensor::zeros(&[1, 3])).is_err());
+    }
+
+    #[test]
+    fn programmed_model_adapts_non_chaining_widths() {
+        // tinyvit's zoo shapes do not chain (attention folded to one
+        // matrix); forward must still produce logits via width adaptation.
+        let desc = crate::models::model_by_name("tinyvit").unwrap();
+        let m = small_pipeline().compile_model(&desc, 3).unwrap();
+        let x = Tensor::full(&[2, m.input_features()], 0.5);
+        let y = m.forward(&x).unwrap();
+        assert_eq!(y.shape(), &[2, 10]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn adapt_width_cycles_columns() {
+        let x = Tensor::new(&[1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        let wide = adapt_width(&x, 5).unwrap();
+        assert_eq!(wide.data(), &[1.0, 2.0, 3.0, 1.0, 2.0]);
+        let same = adapt_width(&x, 3).unwrap();
+        assert_eq!(same.data(), x.data());
+    }
+
+    #[test]
+    fn programmed_model_prices_through_the_wave_scheduler() {
+        use crate::chip::{placer_by_name, ChipModel};
+        let desc = crate::models::model_by_name("miniresnet").unwrap();
+        let g = TileGeometry::new(16, 32, 8).unwrap();
+        let m = Pipeline::new(g).strategy("mdm").unwrap().eta_signed(-2e-3)
+            .compile_model(&desc, 42)
+            .unwrap();
+        let chip = ChipModel { geometry: g, ..ChipModel::default() };
+        let placer = placer_by_name("nf_aware").unwrap();
+        let report = m.chip_report(&chip, placer.as_ref(), 1).unwrap();
+        assert!(!report.waves.is_empty());
+        assert!(report.total.adc_conversions > 0);
+        assert!(report.total.energy_pj > 0.0);
+        // Geometry mismatch is rejected, same as ProgrammedLayer::place.
+        let wrong = ChipModel { geometry: TileGeometry::paper_eval(), ..chip };
+        assert!(m.chip_report(&wrong, placer.as_ref(), 1).is_err());
     }
 }

@@ -151,6 +151,12 @@ pub enum Json {
 }
 
 impl Json {
+    /// Build a nested object from `&str` keys — sugar over [`Json::Obj`]
+    /// for sweep-point emission (`mdm loadtest`, `mdm bench`).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
     fn render(&self) -> String {
         match self {
             Json::Num(v) if v.is_finite() => format!("{v}"),
@@ -316,6 +322,16 @@ mod tests {
             ),
             "{s}"
         );
+    }
+
+    #[test]
+    fn json_obj_sugar_matches_obj() {
+        let a = Json::obj(vec![("k", Json::Int(1)), ("s", Json::Str("v".into()))]);
+        let b = Json::Obj(vec![
+            ("k".into(), Json::Int(1)),
+            ("s".into(), Json::Str("v".into())),
+        ]);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,0 +1,377 @@
+//! The SLO loadtest harness behind `mdm loadtest`.
+//!
+//! Sweeps offered arrival rates against a fresh [`ServeTier`] per point:
+//!
+//! * **Open loop** — a Poisson arrival process (exponential inter-arrival
+//!   times from the deterministic [`Xoshiro256`] stream) submits without
+//!   waiting for answers, the regime where queues actually build and the
+//!   shedder must engage to keep p99 bounded.
+//! * **Closed loop** — N clients in submit→wait loops, which measures the
+//!   tier's saturation throughput (each client backs off briefly when
+//!   shed).
+//!
+//! Every point reports p50/p95/p99/mean latency, throughput, shed rate,
+//! and ADC conversions / analog energy per request priced through the
+//! models' unit costs (wave-[`crate::chip::Scheduler`]-derived when
+//! [`SyntheticModelConfig::chip`] is set). [`write_report`] emits the
+//! `BENCH_serve_slo.json` schema CI gates on.
+
+use super::model::{SyntheticModel, SyntheticModelConfig};
+use super::tier::{ModelSpec, ServeConfig, ServeTier, TenantSpec};
+use super::metrics::ServeSnapshot;
+use super::ServeError;
+use crate::report::{write_json_object, Json};
+use crate::rng::Xoshiro256;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Loadtest sweep configuration.
+#[derive(Debug, Clone)]
+pub struct LoadtestConfig {
+    /// Zoo models made resident (one tenant per model).
+    pub models: Vec<String>,
+    /// Offered open-loop arrival rates, requests/second (one sweep point
+    /// each). Empty skips the open-loop stage.
+    pub rates: Vec<f64>,
+    /// Wall-clock duration of each sweep point, milliseconds.
+    pub duration_ms: u64,
+    /// Input rows per request.
+    pub rows_per_request: usize,
+    /// Closed-loop client threads (0 skips the closed-loop stage).
+    pub closed_clients: usize,
+    /// Per-tenant admission quota.
+    pub tenant_quota: usize,
+    /// Tier topology (workers per model, wave rows, shed threshold).
+    pub serve: ServeConfig,
+    /// How the resident models are programmed and priced.
+    pub synth: SyntheticModelConfig,
+    /// Seed for arrivals and request payloads.
+    pub seed: u64,
+}
+
+impl Default for LoadtestConfig {
+    fn default() -> Self {
+        Self {
+            models: vec!["miniresnet".into()],
+            rates: vec![50.0, 100.0, 200.0, 400.0],
+            duration_ms: 1000,
+            rows_per_request: 1,
+            closed_clients: 4,
+            tenant_quota: 64,
+            serve: ServeConfig::default(),
+            synth: SyntheticModelConfig::default(),
+            seed: 42,
+        }
+    }
+}
+
+/// One measured sweep point.
+#[derive(Debug, Clone)]
+pub struct RatePoint {
+    /// Offered arrival rate, requests/s (0.0 for the closed-loop point,
+    /// where the clients themselves set the pace).
+    pub offered_rps: f64,
+    /// Measured wall-clock of the point (submission window + drain), s.
+    pub elapsed_s: f64,
+    /// Completed requests per second of elapsed time.
+    pub throughput_rps: f64,
+    /// ADC conversions per completed request.
+    pub adc_per_request: f64,
+    /// Analog energy per completed request, picojoules.
+    pub energy_pj_per_request: f64,
+    /// Full tier metrics at drain.
+    pub snap: ServeSnapshot,
+}
+
+/// The full sweep result.
+#[derive(Debug, Clone)]
+pub struct LoadtestReport {
+    /// One point per entry of [`LoadtestConfig::rates`].
+    pub open_loop: Vec<RatePoint>,
+    /// The closed-loop point, when clients were configured.
+    pub closed_loop: Option<RatePoint>,
+    /// Highest measured throughput across every point — the tier's
+    /// saturation throughput.
+    pub saturation_rps: f64,
+}
+
+fn point_from(offered_rps: f64, elapsed_s: f64, snap: ServeSnapshot) -> RatePoint {
+    let completed = snap.completed;
+    let per_req = |total: u64| {
+        if completed == 0 {
+            0.0
+        } else {
+            total as f64 / completed as f64
+        }
+    };
+    RatePoint {
+        offered_rps,
+        elapsed_s,
+        throughput_rps: if elapsed_s > 0.0 { completed as f64 / elapsed_s } else { 0.0 },
+        adc_per_request: per_req(snap.adc_conversions),
+        energy_pj_per_request: per_req(snap.energy_pj),
+        snap,
+    }
+}
+
+fn request_input(rng: &mut Xoshiro256, rows: usize, features: usize) -> Tensor {
+    let data: Vec<f32> =
+        (0..rows * features).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+    Tensor::new(&[rows, features], data).expect("request shape")
+}
+
+fn build_tier(
+    cfg: &LoadtestConfig,
+    backends: &[Arc<SyntheticModel>],
+) -> Result<ServeTier> {
+    let specs = backends.iter().map(|b| ModelSpec::shared(b.clone())).collect();
+    let tenants = cfg
+        .models
+        .iter()
+        .enumerate()
+        .map(|(i, name)| TenantSpec { name: name.clone(), model: i, quota: cfg.tenant_quota })
+        .collect();
+    ServeTier::start(specs, tenants, cfg.serve)
+}
+
+fn open_loop_point(
+    cfg: &LoadtestConfig,
+    backends: &[Arc<SyntheticModel>],
+    rate: f64,
+) -> Result<RatePoint> {
+    anyhow::ensure!(rate > 0.0, "arrival rate must be positive, got {rate}");
+    let tier = build_tier(cfg, backends)?;
+    let features: Vec<usize> =
+        tier.tenants().iter().map(|t| tier.models()[t.model].input_features).collect();
+    let mut rng = Xoshiro256::seeded(cfg.seed ^ rate.to_bits());
+    let start = Instant::now();
+    let deadline = start + Duration::from_millis(cfg.duration_ms);
+    let mut next = start;
+    let mut i = 0usize;
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        if next > now {
+            std::thread::sleep((next - now).min(deadline - now));
+            if next >= deadline {
+                break;
+            }
+        }
+        let tenant = i % features.len();
+        // Receivers are dropped on purpose: the tier records completion and
+        // latency itself, which is exactly the open-loop (fire and measure
+        // at the server) regime.
+        let _ = tier.submit(tenant, request_input(&mut rng, cfg.rows_per_request, features[tenant]));
+        i += 1;
+        // Exponential inter-arrival; 1-u is in (0, 1] so ln() is finite.
+        let dt = -(1.0 - rng.uniform()).ln() / rate;
+        next += Duration::from_secs_f64(dt);
+    }
+    let snap = tier.shutdown();
+    Ok(point_from(rate, start.elapsed().as_secs_f64(), snap))
+}
+
+fn closed_loop_point(
+    cfg: &LoadtestConfig,
+    backends: &[Arc<SyntheticModel>],
+) -> Result<RatePoint> {
+    let tier = build_tier(cfg, backends)?;
+    let features: Vec<usize> =
+        tier.tenants().iter().map(|t| tier.models()[t.model].input_features).collect();
+    let rows = cfg.rows_per_request;
+    let start = Instant::now();
+    let deadline = start + Duration::from_millis(cfg.duration_ms);
+    std::thread::scope(|s| {
+        for c in 0..cfg.closed_clients {
+            let tier = &tier;
+            let features = &features;
+            let seed = cfg.seed ^ (0xC1_0000 + c as u64);
+            s.spawn(move || {
+                let mut rng = Xoshiro256::seeded(seed);
+                let tenant = c % features.len();
+                while Instant::now() < deadline {
+                    match tier.submit(tenant, request_input(&mut rng, rows, features[tenant]))
+                    {
+                        Ok(rx) => {
+                            let _ = rx.recv();
+                        }
+                        Err(ServeError::Overloaded { .. }) => {
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+    });
+    let snap = tier.shutdown();
+    Ok(point_from(0.0, start.elapsed().as_secs_f64(), snap))
+}
+
+/// Run the sweep: compile each model once, then one fresh tier per point.
+pub fn run_loadtest(cfg: &LoadtestConfig) -> Result<LoadtestReport> {
+    anyhow::ensure!(!cfg.models.is_empty(), "loadtest needs at least one model");
+    anyhow::ensure!(
+        !cfg.rates.is_empty() || cfg.closed_clients > 0,
+        "loadtest needs open-loop rates or closed-loop clients"
+    );
+    let mut backends = Vec::with_capacity(cfg.models.len());
+    for name in &cfg.models {
+        backends.push(Arc::new(SyntheticModel::compile(name, &cfg.synth)?));
+    }
+    let mut open_loop = Vec::with_capacity(cfg.rates.len());
+    for &rate in &cfg.rates {
+        open_loop.push(open_loop_point(cfg, &backends, rate)?);
+    }
+    let closed_loop = if cfg.closed_clients > 0 {
+        Some(closed_loop_point(cfg, &backends)?)
+    } else {
+        None
+    };
+    let saturation_rps = open_loop
+        .iter()
+        .chain(closed_loop.iter())
+        .map(|p| p.throughput_rps)
+        .fold(0.0f64, f64::max);
+    Ok(LoadtestReport { open_loop, closed_loop, saturation_rps })
+}
+
+fn point_json(p: &RatePoint) -> Json {
+    Json::obj(vec![
+        ("offered_rps", Json::Num(p.offered_rps)),
+        ("duration_s", Json::Num(p.elapsed_s)),
+        ("submitted", Json::Int(p.snap.submitted as i64)),
+        ("admitted", Json::Int(p.snap.admitted as i64)),
+        ("completed", Json::Int(p.snap.completed as i64)),
+        ("failed", Json::Int(p.snap.failed as i64)),
+        ("shed_quota", Json::Int(p.snap.shed_quota as i64)),
+        ("shed_queue", Json::Int(p.snap.shed_queue as i64)),
+        ("shed_rate", Json::Num(p.snap.shed_rate)),
+        ("throughput_rps", Json::Num(p.throughput_rps)),
+        ("latency_p50_us", Json::Int(p.snap.latency_p50_us as i64)),
+        ("latency_p95_us", Json::Int(p.snap.latency_p95_us as i64)),
+        ("latency_p99_us", Json::Int(p.snap.latency_p99_us as i64)),
+        ("latency_mean_us", Json::Num(p.snap.latency_mean_us)),
+        ("adc_per_request", Json::Num(p.adc_per_request)),
+        ("energy_pj_per_request", Json::Num(p.energy_pj_per_request)),
+        ("waves", Json::Int(p.snap.waves as i64)),
+        ("rows", Json::Int(p.snap.rows as i64)),
+    ])
+}
+
+/// Write the `BENCH_serve_slo.json` report (the schema CI's loadtest smoke
+/// step gates on: `open_loop[*].completed` / `closed_loop.completed`).
+pub fn write_report(
+    path: impl AsRef<std::path::Path>,
+    cfg: &LoadtestConfig,
+    report: &LoadtestReport,
+) -> Result<()> {
+    write_json_object(
+        path,
+        &[
+            ("benchmark", Json::Str("serve_slo".into())),
+            (
+                "models",
+                Json::Arr(cfg.models.iter().map(|m| Json::Str(m.clone())).collect()),
+            ),
+            ("strategy", Json::Str(cfg.synth.strategy.clone())),
+            ("eta_signed", Json::Num(cfg.synth.eta_signed)),
+            ("tile", Json::Int(cfg.synth.geometry.rows as i64)),
+            ("k_bits", Json::Int(cfg.synth.geometry.k_bits as i64)),
+            ("seed", Json::Int(cfg.seed as i64)),
+            ("rows_per_request", Json::Int(cfg.rows_per_request as i64)),
+            ("workers_per_model", Json::Int(cfg.serve.workers_per_model as i64)),
+            ("wave_rows", Json::Int(cfg.serve.wave_rows as i64)),
+            ("tenant_quota", Json::Int(cfg.tenant_quota as i64)),
+            ("shed_rows", Json::Int(cfg.serve.shed_rows as i64)),
+            ("duration_ms", Json::Int(cfg.duration_ms as i64)),
+            ("closed_clients", Json::Int(cfg.closed_clients as i64)),
+            (
+                "chip_priced",
+                Json::Bool(cfg.synth.chip.is_some()),
+            ),
+            (
+                "open_loop",
+                Json::Arr(report.open_loop.iter().map(point_json).collect()),
+            ),
+            (
+                "closed_loop",
+                match &report.closed_loop {
+                    Some(p) => point_json(p),
+                    // Non-finite Num renders as JSON null.
+                    None => Json::Num(f64::NAN),
+                },
+            ),
+            ("saturation_rps", Json::Num(report.saturation_rps)),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::TileGeometry;
+
+    fn tiny_cfg() -> LoadtestConfig {
+        LoadtestConfig {
+            models: vec!["miniresnet".into()],
+            rates: vec![300.0],
+            duration_ms: 150,
+            closed_clients: 1,
+            synth: SyntheticModelConfig {
+                geometry: TileGeometry::new(16, 32, 8).unwrap(),
+                ..SyntheticModelConfig::default()
+            },
+            ..LoadtestConfig::default()
+        }
+    }
+
+    #[test]
+    fn smoke_sweep_completes_requests_and_writes_the_report() {
+        let cfg = tiny_cfg();
+        let report = run_loadtest(&cfg).unwrap();
+        assert_eq!(report.open_loop.len(), 1);
+        let open = &report.open_loop[0];
+        assert!(open.snap.completed > 0, "open loop completed nothing");
+        assert_eq!(open.snap.failed, 0);
+        assert!(open.adc_per_request > 0.0);
+        assert!(open.energy_pj_per_request > 0.0);
+        let closed = report.closed_loop.as_ref().unwrap();
+        assert!(closed.snap.completed > 0, "closed loop completed nothing");
+        assert!(report.saturation_rps > 0.0);
+
+        let dir = std::env::temp_dir().join(format!("slo_test_{}", std::process::id()));
+        let path = dir.join("BENCH_serve_slo.json");
+        write_report(&path, &cfg, &report).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        for key in [
+            "\"benchmark\": \"serve_slo\"",
+            "\"open_loop\"",
+            "\"closed_loop\"",
+            "\"saturation_rps\"",
+            "\"latency_p95_us\"",
+            "\"shed_rate\"",
+            "\"adc_per_request\"",
+            "\"energy_pj_per_request\"",
+        ] {
+            assert!(text.contains(key), "missing {key} in {text}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_sweeps_are_rejected() {
+        let cfg = LoadtestConfig {
+            rates: vec![],
+            closed_clients: 0,
+            ..tiny_cfg()
+        };
+        assert!(run_loadtest(&cfg).is_err());
+        let cfg = LoadtestConfig { models: vec![], ..tiny_cfg() };
+        assert!(run_loadtest(&cfg).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Serving-tier metrics: admission/shed counters, wave accounting, cost
+//! attribution, latency percentiles, and per-tenant breakdowns.
+//!
+//! Reuses the coordinator's [`LatencyRecorder`] so both serving stacks
+//! report percentiles through one implementation.
+
+use crate::coordinator::LatencyRecorder;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-tenant counters (all thread-safe).
+#[derive(Debug, Default)]
+pub struct TenantCounters {
+    /// Tenant display name.
+    pub name: String,
+    /// Submission attempts by this tenant.
+    pub submitted: AtomicU64,
+    /// Attempts shed at admission (quota or queue depth).
+    pub shed: AtomicU64,
+    /// Requests answered for this tenant.
+    pub completed: AtomicU64,
+}
+
+/// Aggregated serving-tier metrics.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Submission attempts (admitted + shed + stopped).
+    pub submitted: AtomicU64,
+    /// Requests admitted into a model queue.
+    pub admitted: AtomicU64,
+    /// Attempts shed because the tenant quota was exhausted.
+    pub shed_quota: AtomicU64,
+    /// Attempts shed because the tier-wide queue depth was exceeded.
+    pub shed_queue: AtomicU64,
+    /// Requests answered with logits.
+    pub completed: AtomicU64,
+    /// Admitted requests that failed in a worker (answered by dropping the
+    /// response channel, never by hanging).
+    pub failed: AtomicU64,
+    /// Waves formed by the continuous batcher.
+    pub waves: AtomicU64,
+    /// Input rows served.
+    pub rows: AtomicU64,
+    /// ADC conversions attributed through the models' unit costs.
+    pub adc_conversions: AtomicU64,
+    /// Analog energy attributed through the models' unit costs, picojoules
+    /// (accumulated as integral pJ).
+    pub energy_pj: AtomicU64,
+    /// End-to-end latency of completed requests.
+    pub latency: LatencyRecorder,
+    /// Per-tenant counters, indexed like the tier's tenants.
+    pub tenants: Vec<TenantCounters>,
+}
+
+impl ServeMetrics {
+    /// Metrics with one counter block per tenant name.
+    pub fn new(tenant_names: Vec<String>) -> Self {
+        let tenants = tenant_names
+            .into_iter()
+            .map(|name| TenantCounters { name, ..TenantCounters::default() })
+            .collect();
+        Self { tenants, ..Self::default() }
+    }
+
+    /// Increment a counter.
+    pub fn bump(counter: &AtomicU64, by: u64) {
+        counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy for reporting.
+    pub fn snapshot(&self) -> ServeSnapshot {
+        let submitted = self.submitted.load(Ordering::Relaxed);
+        let shed_quota = self.shed_quota.load(Ordering::Relaxed);
+        let shed_queue = self.shed_queue.load(Ordering::Relaxed);
+        ServeSnapshot {
+            submitted,
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed_quota,
+            shed_queue,
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            waves: self.waves.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            adc_conversions: self.adc_conversions.load(Ordering::Relaxed),
+            energy_pj: self.energy_pj.load(Ordering::Relaxed),
+            shed_rate: if submitted == 0 {
+                0.0
+            } else {
+                (shed_quota + shed_queue) as f64 / submitted as f64
+            },
+            latency_p50_us: self.latency.percentile(50.0),
+            latency_p95_us: self.latency.percentile(95.0),
+            latency_p99_us: self.latency.percentile(99.0),
+            latency_mean_us: self.latency.mean(),
+            tenants: self
+                .tenants
+                .iter()
+                .map(|t| TenantSnapshot {
+                    name: t.name.clone(),
+                    submitted: t.submitted.load(Ordering::Relaxed),
+                    shed: t.shed.load(Ordering::Relaxed),
+                    completed: t.completed.load(Ordering::Relaxed),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of one tenant's counters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSnapshot {
+    /// Tenant display name.
+    pub name: String,
+    /// Submission attempts.
+    pub submitted: u64,
+    /// Attempts shed at admission.
+    pub shed: u64,
+    /// Requests answered.
+    pub completed: u64,
+}
+
+/// Point-in-time copy of the serving-tier metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSnapshot {
+    /// Submission attempts (admitted + shed + stopped).
+    pub submitted: u64,
+    /// Requests admitted into a model queue.
+    pub admitted: u64,
+    /// Attempts shed on tenant quota.
+    pub shed_quota: u64,
+    /// Attempts shed on tier queue depth.
+    pub shed_queue: u64,
+    /// Requests answered with logits.
+    pub completed: u64,
+    /// Admitted requests failed in a worker.
+    pub failed: u64,
+    /// Waves formed.
+    pub waves: u64,
+    /// Input rows served.
+    pub rows: u64,
+    /// ADC conversions attributed.
+    pub adc_conversions: u64,
+    /// Analog energy attributed, picojoules.
+    pub energy_pj: u64,
+    /// Shed fraction of submission attempts.
+    pub shed_rate: f64,
+    /// Median latency of completed requests, microseconds.
+    pub latency_p50_us: u64,
+    /// 95th-percentile latency, microseconds.
+    pub latency_p95_us: u64,
+    /// 99th-percentile latency, microseconds.
+    pub latency_p99_us: u64,
+    /// Mean latency, microseconds.
+    pub latency_mean_us: f64,
+    /// Per-tenant breakdown.
+    pub tenants: Vec<TenantSnapshot>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_computes_shed_rate_and_percentiles() {
+        let m = ServeMetrics::new(vec!["a".into(), "b".into()]);
+        ServeMetrics::bump(&m.submitted, 10);
+        ServeMetrics::bump(&m.admitted, 8);
+        ServeMetrics::bump(&m.shed_quota, 1);
+        ServeMetrics::bump(&m.shed_queue, 1);
+        ServeMetrics::bump(&m.completed, 8);
+        ServeMetrics::bump(&m.tenants[1].completed, 8);
+        for us in [100, 200, 300, 400] {
+            m.latency.record(us);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 10);
+        assert!((s.shed_rate - 0.2).abs() < 1e-12);
+        assert!(s.latency_p50_us >= 100);
+        assert!(s.latency_p95_us <= s.latency_p99_us.max(s.latency_p95_us));
+        assert!(s.latency_p99_us >= s.latency_p50_us);
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.tenants[1].name, "b");
+        assert_eq!(s.tenants[1].completed, 8);
+    }
+
+    #[test]
+    fn empty_metrics_snapshot_is_zeroed() {
+        let s = ServeMetrics::new(vec![]).snapshot();
+        assert_eq!(s.submitted, 0);
+        assert_eq!(s.shed_rate, 0.0);
+        assert_eq!(s.latency_p99_us, 0);
+        assert!(s.tenants.is_empty());
+    }
+}

@@ -1,0 +1,153 @@
+//! Continuous-batching serving tier: multi-model tenancy, overload
+//! shedding, and SLO loadtesting.
+//!
+//! This subsystem replaces the coordinator's fixed-window request path with
+//! a continuous batcher: workers pull the next wave of queued rows the
+//! moment they go idle, so wave slots refill as the hardware drains them
+//! instead of waiting out a batching window. The flow is
+//!
+//! ```text
+//! submit(tenant, x) ── admission ──► per-model FIFO ── wave pop ──► backend
+//!        │               │                                  │
+//!        │      quota / queue-depth shed                    │
+//!        ▼               ▼                                  ▼
+//!   ServeResponse   ServeError::Overloaded        ServeMetrics + Scheduler
+//!                                                 cost attribution
+//! ```
+//!
+//! Key invariants (tested in `tests/integration_serve.rs`):
+//!
+//! - **Typed shedding** — an overloaded tier rejects at `submit` with
+//!   [`ServeError::Overloaded`] (never a hang), keeping tail latency of
+//!   admitted requests bounded.
+//! - **Tenant isolation** — each tenant has an outstanding-request quota
+//!   (queued + in-flight) counted independently, so one tenant flooding
+//!   its queue cannot starve another below its quota.
+//! - **Drain on shutdown** — [`tier::ServeTier::shutdown`] is a barrier:
+//!   every admitted request is answered (or counted `failed`) before the
+//!   call returns; no admitted request is silently dropped.
+//! - **Determinism** — served logits are bitwise identical at any worker
+//!   count: each output row of a wave depends only on that request's own
+//!   input rows, so wave composition and drain order cannot perturb them.
+//!
+//! Cost attribution reuses the chip-level wave [`crate::chip::Scheduler`]
+//! (PR 3): each model carries a per-row [`crate::crossbar::TileCost`] unit
+//! price, and the tier accumulates ADC conversions and energy per served
+//! row so the loadtest can report ADC/energy per request.
+
+pub mod loadtest;
+pub mod metrics;
+pub mod model;
+pub mod tier;
+
+pub use loadtest::{run_loadtest, LoadtestConfig, LoadtestReport, RatePoint};
+pub use metrics::{ServeMetrics, ServeSnapshot, TenantSnapshot};
+pub use model::{EngineBackend, ModelBackend, SyntheticModel, SyntheticModelConfig};
+pub use tier::{ModelInfo, ModelSpec, ServeConfig, ServeTier, TenantSpec};
+
+use crate::tensor::Tensor;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Why an admission attempt was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The tenant already has `quota` requests queued or in flight.
+    TenantQuota,
+    /// Total queued rows would exceed the tier-wide shed threshold.
+    QueueDepth,
+}
+
+/// Typed serving error. `Overloaded` is the shed path: returned from
+/// `submit` immediately, never after queueing, so callers can retry or
+/// back off without waiting on a doomed response channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission was refused to protect tail latency.
+    Overloaded {
+        /// Index of the tenant whose request was shed.
+        tenant: usize,
+        /// Which admission limit tripped.
+        reason: ShedReason,
+    },
+    /// The tier is shutting down and no longer admits requests.
+    Stopped,
+    /// The tenant index does not name a configured tenant.
+    UnknownTenant(usize),
+    /// The request tensor is malformed for the routed model.
+    BadRequest(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { tenant, reason } => {
+                let why = match reason {
+                    ShedReason::TenantQuota => "tenant quota exhausted",
+                    ShedReason::QueueDepth => "queue depth limit reached",
+                };
+                write!(f, "overloaded: tenant {tenant} shed ({why})")
+            }
+            ServeError::Stopped => write!(f, "serve tier stopped"),
+            ServeError::UnknownTenant(t) => write!(f, "unknown tenant index {t}"),
+            ServeError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One admitted inference request, queued for wave formation.
+#[derive(Debug)]
+pub struct ServeRequest {
+    /// Monotonic request id (unique per tier).
+    pub id: u64,
+    /// Index of the submitting tenant.
+    pub tenant: usize,
+    /// Input rows, `[rows, input_features]` for the routed model.
+    pub x: Tensor,
+    /// Admission timestamp (latency is measured from here).
+    pub submitted: Instant,
+    /// Channel the worker answers on.
+    pub resp: mpsc::Sender<ServeResponse>,
+}
+
+/// The served answer for one request.
+#[derive(Debug)]
+pub struct ServeResponse {
+    /// Request id this answers.
+    pub id: u64,
+    /// Tenant that submitted the request.
+    pub tenant: usize,
+    /// Output logits, `[rows, output_features]`.
+    pub logits: Tensor,
+    /// End-to-end latency in microseconds (admission to answer).
+    pub latency_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_error_displays_typed_reasons() {
+        let quota =
+            ServeError::Overloaded { tenant: 3, reason: ShedReason::TenantQuota };
+        let depth =
+            ServeError::Overloaded { tenant: 0, reason: ShedReason::QueueDepth };
+        assert!(quota.to_string().contains("overloaded"));
+        assert!(quota.to_string().contains("quota"));
+        assert!(depth.to_string().contains("queue depth"));
+        assert!(ServeError::Stopped.to_string().contains("stopped"));
+        assert!(ServeError::UnknownTenant(7).to_string().contains('7'));
+    }
+
+    #[test]
+    fn serve_error_is_an_error_for_anyhow() {
+        fn takes_anyhow(e: impl Into<anyhow::Error>) -> anyhow::Error {
+            e.into()
+        }
+        let e = takes_anyhow(ServeError::Stopped);
+        assert!(e.to_string().contains("stopped"));
+    }
+}

@@ -1,0 +1,246 @@
+//! Model backends for the serving tier.
+//!
+//! A [`ModelBackend`] is whatever can answer a wave of activations:
+//!
+//! * [`SyntheticModel`] — a zoo model programmed through the
+//!   [`Pipeline`] with deterministic synthetic weights and served via the
+//!   pure-Rust effective-weight forward. `Send + Sync`, so one compiled
+//!   instance is shared across every worker (the loadtest path — no PJRT
+//!   artifacts needed).
+//! * [`EngineBackend`] — the artifact-backed coordinator [`Engine`]
+//!   (trained weights + AOT forward graph). Engines own a PJRT runtime, so
+//!   they are built *inside* each worker thread via
+//!   [`super::tier::ModelSpec::per_worker`], exactly like the legacy
+//!   coordinator server did.
+//!
+//! Backends are deliberately **not** required to be `Send`/`Sync`: the
+//! tier's per-worker factory runs in the worker thread, and shared
+//! backends opt in through the blanket `Arc<B>` implementation.
+
+use crate::chip::{placer_by_name, ChipModel};
+use crate::coordinator::{Engine, EngineConfig};
+use crate::crossbar::{TileCost, TileGeometry};
+use crate::parallel::ParallelConfig;
+use crate::pipeline::{Pipeline, ProgrammedModel};
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// One servable model: metadata plus a batched forward.
+pub trait ModelBackend {
+    /// Display name (zoo name for synthetic models).
+    fn name(&self) -> &str;
+    /// Required request-row width.
+    fn input_features(&self) -> usize;
+    /// Logit width of the answers.
+    fn output_features(&self) -> usize;
+    /// Per-input-row analog cost (the serving tier's ADC/energy meter).
+    fn unit_cost(&self) -> TileCost;
+    /// Answer a wave `[rows, input_features] -> [rows, output_features]`.
+    /// Implementations must keep output rows independent of wave
+    /// composition (row `r` depends only on input row `r`) — the tier's
+    /// bitwise-determinism contract.
+    fn infer(&self, x: &Tensor) -> Result<Tensor>;
+}
+
+impl<B: ModelBackend + ?Sized> ModelBackend for Arc<B> {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn input_features(&self) -> usize {
+        (**self).input_features()
+    }
+    fn output_features(&self) -> usize {
+        (**self).output_features()
+    }
+    fn unit_cost(&self) -> TileCost {
+        (**self).unit_cost()
+    }
+    fn infer(&self, x: &Tensor) -> Result<Tensor> {
+        (**self).infer(x)
+    }
+}
+
+/// How a [`SyntheticModel`] is programmed and priced.
+#[derive(Debug, Clone)]
+pub struct SyntheticModelConfig {
+    /// Mapping strategy registry name.
+    pub strategy: String,
+    /// Signed Eq.-17 PR distortion coefficient.
+    pub eta_signed: f64,
+    /// Tile geometry the crossbars are programmed at.
+    pub geometry: TileGeometry,
+    /// Weight synthesis seed (deterministic per model).
+    pub seed: u64,
+    /// Worker pool for compile-time per-tile work.
+    pub parallel: ParallelConfig,
+    /// When set, unit cost is priced by placing the model on this chip and
+    /// rolling one input through the wave [`crate::chip::Scheduler`]
+    /// (geometry must match). When `None`, unit cost is the sum of the
+    /// compile-time per-layer costs.
+    pub chip: Option<ChipModel>,
+    /// Placer registry name used for chip pricing.
+    pub placer: String,
+}
+
+impl Default for SyntheticModelConfig {
+    fn default() -> Self {
+        Self {
+            strategy: "mdm".into(),
+            eta_signed: -2e-3,
+            geometry: TileGeometry::paper_eval(),
+            seed: 42,
+            parallel: ParallelConfig::default(),
+            chip: None,
+            placer: "nf_aware".into(),
+        }
+    }
+}
+
+/// A zoo model programmed with synthetic weights, served from the
+/// effective-weight matrices — the artifact-free backend the loadtest and
+/// the pure-Rust integration tests run against.
+#[derive(Debug, Clone)]
+pub struct SyntheticModel {
+    model: Arc<ProgrammedModel>,
+    unit: TileCost,
+}
+
+impl SyntheticModel {
+    /// Program a zoo model (by name) and price its unit cost.
+    pub fn compile(model: &str, cfg: &SyntheticModelConfig) -> Result<Self> {
+        let desc = crate::models::model_by_name(model)?;
+        let pipeline = Pipeline::new(cfg.geometry)
+            .strategy(&cfg.strategy)?
+            .eta_signed(cfg.eta_signed)
+            .parallel(cfg.parallel);
+        let programmed = pipeline.compile_model(&desc, cfg.seed)?;
+        let unit = match &cfg.chip {
+            Some(chip) => {
+                let placer = placer_by_name(&cfg.placer)?;
+                programmed.chip_report(chip, placer.as_ref(), 1)?.total
+            }
+            None => programmed.unit_cost(),
+        };
+        Ok(Self { model: Arc::new(programmed), unit })
+    }
+
+    /// The programmed model behind the backend.
+    pub fn programmed(&self) -> &ProgrammedModel {
+        &self.model
+    }
+}
+
+impl ModelBackend for SyntheticModel {
+    fn name(&self) -> &str {
+        &self.model.name
+    }
+    fn input_features(&self) -> usize {
+        self.model.input_features()
+    }
+    fn output_features(&self) -> usize {
+        self.model.output_features()
+    }
+    fn unit_cost(&self) -> TileCost {
+        self.unit
+    }
+    fn infer(&self, x: &Tensor) -> Result<Tensor> {
+        self.model.forward(x)
+    }
+}
+
+/// The artifact-backed engine as a serving backend (trained weights + AOT
+/// forward graph). Built per worker thread — engines own their own PJRT
+/// runtime and never cross threads.
+pub struct EngineBackend {
+    name: String,
+    engine: Engine,
+}
+
+impl EngineBackend {
+    /// Program an engine from the artifact store.
+    pub fn program(artifacts_dir: &str, config: EngineConfig) -> Result<Self> {
+        let name = config.model.zoo_name().to_string();
+        let engine = Engine::program(artifacts_dir, config)?;
+        Ok(Self { name, engine })
+    }
+
+    /// The wrapped engine.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl ModelBackend for EngineBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn input_features(&self) -> usize {
+        crate::dataset::N_FEATURES
+    }
+    fn output_features(&self) -> usize {
+        crate::dataset::N_CLASSES
+    }
+    fn unit_cost(&self) -> TileCost {
+        *self.engine.unit_cost()
+    }
+    fn infer(&self, x: &Tensor) -> Result<Tensor> {
+        self.engine.infer(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SyntheticModelConfig {
+        SyntheticModelConfig {
+            geometry: TileGeometry::new(16, 32, 8).unwrap(),
+            ..SyntheticModelConfig::default()
+        }
+    }
+
+    #[test]
+    fn synthetic_model_serves_logits() {
+        let m = SyntheticModel::compile("miniresnet", &small_cfg()).unwrap();
+        assert_eq!(m.name(), "miniresnet");
+        assert_eq!(m.input_features(), 256);
+        assert_eq!(m.output_features(), 10);
+        assert!(m.unit_cost().adc_conversions > 0);
+        let x = Tensor::full(&[2, 256], 0.25);
+        let y = m.infer(&x).unwrap();
+        assert_eq!(y.shape(), &[2, 10]);
+    }
+
+    #[test]
+    fn chip_pricing_goes_through_the_wave_scheduler() {
+        let plain = SyntheticModel::compile("miniresnet", &small_cfg()).unwrap();
+        let cfg = SyntheticModelConfig {
+            chip: Some(ChipModel {
+                geometry: TileGeometry::new(16, 32, 8).unwrap(),
+                ..ChipModel::default()
+            }),
+            ..small_cfg()
+        };
+        let priced = SyntheticModel::compile("miniresnet", &cfg).unwrap();
+        // Scheduler pricing includes routing/reprogram overheads the plain
+        // per-layer sum does not; both must price nonzero ADC work.
+        assert!(priced.unit_cost().adc_conversions > 0);
+        assert!(plain.unit_cost().adc_conversions > 0);
+        assert!(priced.unit_cost().latency_ns > 0.0);
+    }
+
+    #[test]
+    fn arc_backends_are_backends_too() {
+        let m = Arc::new(SyntheticModel::compile("miniresnet", &small_cfg()).unwrap());
+        fn takes_backend(b: &dyn ModelBackend) -> usize {
+            b.input_features()
+        }
+        assert_eq!(takes_backend(&m), 256);
+    }
+
+    #[test]
+    fn unknown_model_name_is_an_error() {
+        assert!(SyntheticModel::compile("nope", &small_cfg()).is_err());
+    }
+}

@@ -119,6 +119,49 @@ fn backpressure_rejects_when_queue_full() {
     server.shutdown();
 }
 
+/// Shutdown regression: every request admitted before `shutdown()` must be
+/// answered — the drain barrier — even with a live `ServerHandle` clone
+/// keeping the ingress channel open (the exact condition that used to wedge
+/// shutdown: the batcher waited for channel disconnection that could never
+/// come, and queued requests were dropped unanswered).
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    if !artifacts_ready("shutdown_drains_in_flight_requests") {
+        return;
+    }
+    let test = ArtifactStore::open("artifacts").unwrap().data("test").unwrap();
+    let server = Server::start(
+        "artifacts",
+        engine_cfg(0.0, "conventional"),
+        // A long batch window so requests are still queued when shutdown
+        // lands; the drain must flush them immediately, not wait it out.
+        ServerConfig { workers: 1, max_batch: 4, batch_window_us: 5_000_000, queue_depth: 64 },
+    )
+    .unwrap();
+    let handle = server.handle();
+    let n = 10usize;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let (x, _) = test.batch(i, 1);
+        rxs.push(server.submit(x).unwrap());
+    }
+    let t0 = std::time::Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(4),
+        "shutdown waited out the batch window instead of draining: {:?}",
+        t0.elapsed()
+    );
+    // Every admitted request was answered before shutdown returned.
+    for rx in rxs {
+        let resp = rx.recv().expect("request dropped by shutdown");
+        assert_eq!(resp.logits.shape(), &[1, 10]);
+    }
+    // The live handle clone no longer admits work after the barrier.
+    let (x, _) = test.batch(0, 1);
+    assert!(handle.submit(x).is_err(), "handle admitted a request after shutdown");
+}
+
 /// The row-sort component of MDM must not hurt accuracy even at strong
 /// distortion (it moves the heavy rows toward the I/O rails; unlike the
 /// dataflow reversal it has no bit-significance trade-off — see
