@@ -111,6 +111,14 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.flags.get("strategy") {
         cfg.strategy = v.clone();
     }
+    if let Some(v) = args.flags.get("budget-ms") {
+        let _: u64 = v.parse().context("--budget-ms")?;
+        // Only the search strategy consumes a budget; fold the knob into
+        // its parameterized registry name (`swap-search:MS`).
+        if cfg.strategy == "swap-search" || cfg.strategy == "swap_search" {
+            cfg.strategy = format!("swap-search:{v}");
+        }
+    }
     if let Some(v) = args.flags.get("estimator") {
         cfg.estimator = v.clone();
     }
@@ -236,9 +244,14 @@ commands (paper experiment in brackets):
   bench          parallel vs serial NF sweep -> BENCH_parallel_nf.json;
                  with an explicit --estimator NAME flag: backend comparison
                  vs uncached `circuit` on a bit-sliced synthetic workload
-                 (wall time, speedup, cache hit-rate) ->
-                 BENCH_nf_estimator.json (the `[nf] estimator` config key
-                 configures other commands but does not switch bench modes)
+                 (wall time, speedup, cache hit-rate, analytic-identity
+                 gate) -> BENCH_nf_estimator.json (the `[nf] estimator`
+                 config key configures other commands but does not switch
+                 bench modes); with --bitplane: scalar vs packed vs
+                 incremental Manhattan kernels + per-step row-move
+                 re-scoring, every step verified bitwise ->
+                 BENCH_bitplane.json (--model NAME --tiles N --tile N
+                 --search-tiles N --moves N --repeats N)
   place          chip placement sweep: tile sizes x placers x strategies
                  -> BENCH_chip_place.json (--tiles 32,64 --placer
                  firstfit,skyline,maxrects,nf_aware --strategies a,b
@@ -252,8 +265,10 @@ commands (paper experiment in brackets):
 
 common flags: --config f.toml --results DIR --artifacts DIR --seed N
               --eta X --tile N --models a,b,c --strategy NAME
-              --estimator NAME (NF backend: analytic|circuit|circuit_cg|
-              sampled[:N]|cached:<inner>, also `[nf] estimator`)
+              (swap-search takes a budget: swap-search:MS or --budget-ms N)
+              --estimator NAME (NF backend: analytic|packed|incremental|
+              circuit|circuit_cg|sampled[:N]|cached:<inner>, also
+              `[nf] estimator`)
               --threads N (solver worker pool; default = all cores,
               also `[runtime] threads` in a config file)
 ";
@@ -280,7 +295,8 @@ fn cmd_strategies(_args: &Args) -> Result<()> {
     println!("{}", report::table(&["strategy", "description"], &rows));
     println!(
         "select with --strategy NAME (serve) or `strategy = \"NAME\"` under \
-         [experiment] in a config file; random:SEED pins the control seed"
+         [experiment] in a config file; random:SEED pins the control seed, \
+         swap-search:MS (or --budget-ms) pins the per-tile search budget"
     );
     Ok(())
 }
@@ -1085,7 +1101,9 @@ fn chip_settings(args: &Args) -> Result<ChipSettings> {
 /// tiles/sec.
 ///
 /// With an explicit `--estimator NAME` flag: the backend comparison
-/// ([`cmd_bench_estimator`]) emitting `BENCH_nf_estimator.json`. (The
+/// ([`cmd_bench_estimator`]) emitting `BENCH_nf_estimator.json`. With
+/// `--bitplane`: the packed-kernel / incremental-delta microbench
+/// ([`cmd_bench_bitplane`]) emitting `BENCH_bitplane.json`. (The
 /// `[nf] estimator` config key configures other commands' backends but
 /// deliberately does not switch bench modes — `mdm bench --config f.toml`
 /// keeps benchmarking the parallel sweep.)
@@ -1095,6 +1113,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use mdm_cim::report::Json;
 
     let cfg = experiment_config(args)?;
+    if args.flags.contains_key("bitplane") {
+        return cmd_bench_bitplane(args, &cfg);
+    }
     if args.flags.contains_key("estimator") {
         return cmd_bench_estimator(args, &cfg);
     }
@@ -1196,40 +1217,30 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `mdm bench --estimator NAME` — compare an NF-estimation backend against
-/// the uncached `circuit` baseline on a **bit-sliced synthetic workload**:
+/// The shared **bit-sliced synthetic workload** of the estimator benches:
 /// every crossbar tile of a zoo model's layers (repeated blocks reuse their
 /// synthesized weights, as everywhere else in the repo) contributes its
-/// `k_bits` per-bit planes. High-order planes of bell-shaped weights are
-/// near-empty and repeat across tiles/blocks (Theorem 1), which is exactly
-/// the redundancy `cached:<inner>` deduplicates — the JSON records wall
-/// times, speedup vs uncached `circuit`, cache hit-rate, and the
-/// bitwise-identity gate (enforced for `cached:circuit`).
-fn cmd_bench_estimator(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> Result<()> {
+/// `k_bits` per-bit planes, up to `per_layer` tiles per sign part and
+/// `max_planes` planes overall. High-order planes of bell-shaped weights
+/// are near-empty and repeat across tiles/blocks (Theorem 1).
+fn bit_sliced_workload(
+    model: &str,
+    geometry: TileGeometry,
+    per_layer: usize,
+    max_planes: usize,
+    seed: u64,
+) -> Result<Vec<mdm_cim::tensor::Tensor>> {
     use mdm_cim::crossbar::LayerTiling;
-    use mdm_cim::nf::estimator::{estimator_by_name, NfEstimator};
     use mdm_cim::quant::SignSplit;
-    use mdm_cim::report::Json;
 
-    let est_name = cfg.estimator.clone();
-    let tile = args.usize_or("tile", cfg.tile_size);
-    let max_planes = args.usize_or("tiles", 64) * cfg.k_bits;
-    let per_layer = args.usize_or("layer-tiles", 6);
-    let repeats = args.usize_or("repeats", 3);
-    let out_path = args.str_or("out", "BENCH_nf_estimator.json");
-    let model = args.str_or("model", "resnet18");
-    let physics = CrossbarPhysics::default();
-    let parallel = mdm_cim::parallel::ParallelConfig::default();
-
-    let desc = mdm_cim::models::model_by_name(&model)?;
-    let geometry = TileGeometry::new(tile, tile, cfg.k_bits)?;
+    let desc = mdm_cim::models::model_by_name(model)?;
     let mut planes: Vec<mdm_cim::tensor::Tensor> = Vec::new();
     'outer: for (li, layer) in desc.layers.iter().enumerate() {
         let w = mdm_cim::models::generate_layer_weights(
             layer.fan_in,
             layer.fan_out,
             &desc.profile,
-            cfg.seed ^ ((li as u64) << 24),
+            seed ^ ((li as u64) << 24),
         )?;
         let split = SignSplit::of(&w);
         // Slice each sign part once; repeated blocks of the model re-use
@@ -1252,6 +1263,43 @@ fn cmd_bench_estimator(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> 
         }
     }
     anyhow::ensure!(!planes.is_empty(), "empty bit-sliced workload");
+    Ok(planes)
+}
+
+/// Canonical base backend under any stack of `cached:` decorators.
+fn estimator_base_name(canonical: &str) -> &str {
+    let mut base = canonical;
+    while let Some(rest) = base.strip_prefix("cached:") {
+        base = rest;
+    }
+    base
+}
+
+/// `mdm bench --estimator NAME` — compare an NF-estimation backend against
+/// the uncached `circuit` baseline on the [`bit_sliced_workload`]: the
+/// near-empty repeating high-order planes are exactly the redundancy
+/// `cached:<inner>` deduplicates — the JSON records wall times, speedup vs
+/// uncached `circuit`, cache hit-rate, whether the backend reproduced the
+/// scalar `analytic` reference bit for bit (enforced for the
+/// Manhattan-family backends `packed`/`incremental` and their cached
+/// wrappers), and the circuit bitwise-identity gate (enforced for
+/// `cached:circuit`).
+fn cmd_bench_estimator(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> Result<()> {
+    use mdm_cim::nf::estimator::{estimator_by_name, Analytic, NfEstimator};
+    use mdm_cim::report::Json;
+
+    let est_name = cfg.estimator.clone();
+    let tile = args.usize_or("tile", cfg.tile_size);
+    let max_planes = args.usize_or("tiles", 64) * cfg.k_bits;
+    let per_layer = args.usize_or("layer-tiles", 6);
+    let repeats = args.usize_or("repeats", 3);
+    let out_path = args.str_or("out", "BENCH_nf_estimator.json");
+    let model = args.str_or("model", "resnet18");
+    let physics = CrossbarPhysics::default();
+    let parallel = mdm_cim::parallel::ParallelConfig::default();
+
+    let geometry = TileGeometry::new(tile, tile, cfg.k_bits)?;
+    let planes = bit_sliced_workload(&model, geometry, per_layer, max_planes, cfg.seed)?;
 
     println!(
         "bench: estimator `{est_name}` vs uncached `circuit` on {} bit planes \
@@ -1290,21 +1338,44 @@ fn cmd_bench_estimator(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> 
         None => (0, 0, 0.0),
     };
 
+    // Canonicalize through the registry so aliases (cached:exact, bitplane,
+    // delta, ...) resolve to the name the hard gates below key on.
+    let canonical = estimator_by_name(&est_name)?.name();
+    let base_name = estimator_base_name(&canonical);
+    // Manhattan-family backends claim bitwise identity with the scalar
+    // `analytic` reference; measure and gate it here.
+    let manhattan_family = matches!(base_name, "analytic" | "packed" | "incremental");
+    let analytic_identical = if manhattan_family {
+        let reference = Analytic.nf_mean_batch(&planes, &physics, &parallel)?;
+        Some(
+            reference.len() == est_nf.len()
+                && reference.iter().zip(&est_nf).all(|(a, b)| a.to_bits() == b.to_bits()),
+        )
+    } else {
+        None
+    };
+
     println!(
         "{}",
         report::table(
-            &["estimator", "wall s", "planes/s", "cache hit-rate"],
+            &["estimator", "wall s", "planes/s", "= analytic", "cache hit-rate"],
             &[
                 vec![
                     "circuit (uncached)".into(),
                     format!("{base_s:.4}"),
                     format!("{:.1}", planes.len() as f64 / base_s.max(f64::MIN_POSITIVE)),
                     "-".into(),
+                    "-".into(),
                 ],
                 vec![
                     est_name.clone(),
                     format!("{est_s:.4}"),
                     format!("{:.1}", planes.len() as f64 / est_s.max(f64::MIN_POSITIVE)),
+                    match analytic_identical {
+                        Some(true) => "yes".into(),
+                        Some(false) => "NO".into(),
+                        None => "-".into(),
+                    },
                     if stats.is_some() {
                         format!("{:.1}% ({hits} hits / {misses} misses)", 100.0 * hit_rate)
                     } else {
@@ -1318,12 +1389,16 @@ fn cmd_bench_estimator(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> 
         "speedup {speedup:.2}x vs uncached circuit; NF bitwise identical to circuit: \
          {bitwise_identical}"
     );
-    // Canonicalize through the registry so aliases (cached:exact,
-    // cached:cholesky, ...) get the same hard bitwise gate.
-    if estimator_by_name(&est_name)?.name() == "cached:circuit" {
+    if canonical == "cached:circuit" {
         anyhow::ensure!(
             bitwise_identical,
             "cached:circuit diverged from the uncached circuit reference"
+        );
+    }
+    if matches!(base_name, "packed" | "incremental") {
+        anyhow::ensure!(
+            analytic_identical == Some(true),
+            "{canonical} diverged from the scalar analytic reference"
         );
     }
 
@@ -1348,6 +1423,294 @@ fn cmd_bench_estimator(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> 
             ("cache_misses", Json::Int(misses)),
             ("cache_hit_rate", Json::Num(hit_rate)),
             ("bitwise_identical", Json::Bool(bitwise_identical)),
+            ("analytic_identical", Json::Bool(analytic_identical.unwrap_or(false))),
+        ],
+    )?;
+    println!("json: {out_path}");
+    Ok(())
+}
+
+/// `mdm bench --bitplane` — the packed bit-plane kernel + incremental
+/// re-score microbench behind `BENCH_bitplane.json`, in two phases:
+///
+/// 1. **Kernel throughput**: the scalar `analytic` walk vs the `packed`
+///    popcount kernels vs the `incremental` partial-sum backend, all
+///    scoring the same [`bit_sliced_workload`] (default: the `miniresnet`
+///    zoo planes). Bitwise identity of the packed backends against the
+///    scalar reference is a **hard gate**; the speedups are recorded, not
+///    gated (wall-clock ratios are machine-dependent).
+/// 2. **Row-move re-scoring**: per synthetic low-order-dense tile
+///    ([`mdm_cim::testsupport::random_bit_sliced_planes`]), one
+///    [`IncrementalNf`](mdm_cim::nf::packed::IncrementalNf) session replays
+///    a deterministic swap/move sequence with O(row) delta re-scores,
+///    timed against a full packed re-score (permute + popcount walk) and a
+///    full scalar re-score of the same sequence. A separate untimed pass
+///    verifies the incremental aggregate equals the from-scratch re-score
+///    after **every** step (hard gate).
+fn cmd_bench_bitplane(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> Result<()> {
+    use mdm_cim::nf::estimator::{Analytic, Incremental, NfEstimator, Packed};
+    use mdm_cim::nf::manhattan_nf_sum;
+    use mdm_cim::nf::packed::{IncrementalNf, PackedPlanes};
+    use mdm_cim::report::Json;
+    use mdm_cim::rng::Xoshiro256;
+    use mdm_cim::testsupport::{low_order_dense_densities, random_bit_sliced_planes};
+    use std::hint::black_box;
+    use std::time::Instant;
+
+    let tile = args.usize_or("tile", cfg.tile_size);
+    let max_planes = args.usize_or("tiles", 64) * cfg.k_bits;
+    let per_layer = args.usize_or("layer-tiles", 6);
+    let repeats = args.usize_or("repeats", 3);
+    let search_tiles = args.usize_or("search-tiles", 4);
+    let moves = args.usize_or("moves", 2000).max(1);
+    let out_path = args.str_or("out", "BENCH_bitplane.json");
+    let model = args.str_or("model", "miniresnet");
+    let physics = CrossbarPhysics::default();
+    let ratio = physics.parasitic_ratio();
+    let parallel = mdm_cim::parallel::ParallelConfig::default();
+
+    // ---- Phase 1: batch kernel throughput on the bit-sliced zoo workload.
+    let geometry = TileGeometry::new(tile, tile, cfg.k_bits)?;
+    let planes = bit_sliced_workload(&model, geometry, per_layer, max_planes, cfg.seed)?;
+    println!(
+        "bench --bitplane: scalar vs packed vs incremental on {} bit planes \
+         ({model} tiles at {tile}x{tile}, {} bits/weight), best of {repeats}",
+        planes.len(),
+        cfg.k_bits
+    );
+
+    let time_batch = |est: &dyn NfEstimator| -> Result<(f64, Vec<f64>)> {
+        let mut best = f64::INFINITY;
+        let mut nf = Vec::new();
+        for _ in 0..repeats.max(1) {
+            let t0 = Instant::now();
+            nf = est.nf_sum_batch(&planes, &physics, &parallel)?;
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        Ok((best, nf))
+    };
+    let (scalar_s, scalar_nf) = time_batch(&Analytic)?;
+    let (packed_s, packed_nf) = time_batch(&Packed)?;
+    let (incremental_s, incremental_nf) = time_batch(&Incremental)?;
+
+    let identical = |candidate: &[f64]| {
+        candidate.len() == scalar_nf.len()
+            && candidate.iter().zip(&scalar_nf).all(|(a, b)| a.to_bits() == b.to_bits())
+    };
+    let bitwise_identical = identical(&packed_nf) && identical(&incremental_nf);
+    let speedup_packed = scalar_s / packed_s.max(f64::MIN_POSITIVE);
+    let speedup_incremental_backend = scalar_s / incremental_s.max(f64::MIN_POSITIVE);
+
+    let throughput = |s: f64| format!("{:.1}", planes.len() as f64 / s.max(f64::MIN_POSITIVE));
+    println!(
+        "{}",
+        report::table(
+            &["backend", "wall s", "planes/s", "speedup", "= analytic"],
+            &[
+                vec![
+                    "analytic (scalar)".into(),
+                    format!("{scalar_s:.4}"),
+                    throughput(scalar_s),
+                    "1.00x".into(),
+                    "reference".into(),
+                ],
+                vec![
+                    "packed".into(),
+                    format!("{packed_s:.4}"),
+                    throughput(packed_s),
+                    format!("{speedup_packed:.2}x"),
+                    if identical(&packed_nf) { "yes" } else { "NO" }.into(),
+                ],
+                vec![
+                    "incremental".into(),
+                    format!("{incremental_s:.4}"),
+                    throughput(incremental_s),
+                    format!("{speedup_incremental_backend:.2}x"),
+                    if identical(&incremental_nf) { "yes" } else { "NO" }.into(),
+                ],
+            ],
+        )
+    );
+    anyhow::ensure!(
+        bitwise_identical,
+        "packed/incremental NF diverged from the scalar analytic reference"
+    );
+
+    // ---- Phase 2: incremental delta re-scores vs full re-scores under a
+    // deterministic random swap/move sequence on low-order-dense tiles.
+    let rows = tile;
+    let densities = low_order_dense_densities(cfg.k_bits, 0.45, 0.5);
+    let mut rng = Xoshiro256::seeded(cfg.seed ^ 0xB17);
+    let search_planes: Vec<mdm_cim::tensor::Tensor> = (0..search_tiles.max(1))
+        .map(|_| random_bit_sliced_planes(&mut rng, rows, tile, &densities))
+        .collect();
+    let packed_tiles: Vec<PackedPlanes> =
+        search_planes.iter().map(PackedPlanes::from_tensor).collect::<Result<_>>()?;
+    // One deterministic op sequence per tile, replayed identically by the
+    // timed incremental, timed full-re-score, and untimed verify passes.
+    let op_seqs: Vec<Vec<(bool, usize, usize)>> = (0..search_planes.len())
+        .map(|ti| {
+            let mut r = Xoshiro256::seeded(cfg.seed ^ ((ti as u64) << 16) ^ 0x0F5);
+            (0..moves)
+                .map(|_| {
+                    (r.bernoulli(0.5), r.below(rows as u64) as usize, r.below(rows as u64) as usize)
+                })
+                .collect()
+        })
+        .collect();
+    let apply_to_order = |order: &mut Vec<usize>, op: (bool, usize, usize)| {
+        let (is_swap, a, b) = op;
+        if is_swap {
+            order.swap(a, b);
+        } else if a != b {
+            // Mirror IncrementalNf::move_row (Vec::remove + Vec::insert).
+            let row = order.remove(a);
+            order.insert(b, row);
+        }
+    };
+
+    // Timed: O(row) delta re-score per step.
+    let mut inc_s = f64::INFINITY;
+    for _ in 0..repeats.max(1) {
+        let t0 = Instant::now();
+        for (p, ops) in packed_tiles.iter().zip(&op_seqs) {
+            let mut inc = IncrementalNf::new(p);
+            for &(is_swap, a, b) in ops {
+                if is_swap {
+                    inc.swap(a, b);
+                } else {
+                    inc.move_row(a, b);
+                }
+                black_box(inc.nf_sum(ratio));
+            }
+        }
+        inc_s = inc_s.min(t0.elapsed().as_secs_f64());
+    }
+    let total_steps = (search_planes.len() * moves) as f64;
+    let incremental_step_ns = inc_s / total_steps * 1e9;
+
+    // Timed: full packed re-score (row permute + popcount walk) per step.
+    let mut full_s = f64::INFINITY;
+    for _ in 0..repeats.max(1) {
+        let t0 = Instant::now();
+        for (p, ops) in packed_tiles.iter().zip(&op_seqs) {
+            let mut order: Vec<usize> = (0..rows).collect();
+            for &op in ops {
+                apply_to_order(&mut order, op);
+                black_box(p.permute_rows(&order)?.nf_sum(ratio));
+            }
+        }
+        full_s = full_s.min(t0.elapsed().as_secs_f64());
+    }
+    let full_step_ns = full_s / total_steps * 1e9;
+
+    // Timed: full scalar re-score (f32 permute + per-cell walk) per step —
+    // capped to keep the smoke run bounded; reported per step.
+    let scalar_moves = moves.min(args.usize_or("scalar-moves", 256)).max(1);
+    let mut scalar_full_s = f64::INFINITY;
+    for _ in 0..repeats.max(1) {
+        let t0 = Instant::now();
+        for (t, ops) in search_planes.iter().zip(&op_seqs) {
+            let mut order: Vec<usize> = (0..rows).collect();
+            for &op in ops.iter().take(scalar_moves) {
+                apply_to_order(&mut order, op);
+                black_box(manhattan_nf_sum(&t.permute_rows(&order)?, ratio));
+            }
+        }
+        scalar_full_s = scalar_full_s.min(t0.elapsed().as_secs_f64());
+    }
+    let scalar_full_step_ns =
+        scalar_full_s / (search_planes.len() * scalar_moves) as f64 * 1e9;
+
+    // Untimed hard gate: the incremental aggregate must equal a
+    // from-scratch packed re-score after EVERY step, and the scalar
+    // reference on a periodic subsample.
+    for (ti, ((t, p), ops)) in
+        search_planes.iter().zip(&packed_tiles).zip(&op_seqs).enumerate()
+    {
+        let mut inc = IncrementalNf::new(p);
+        let mut order: Vec<usize> = (0..rows).collect();
+        for (si, &(is_swap, a, b)) in ops.iter().enumerate() {
+            if is_swap {
+                inc.swap(a, b);
+            } else {
+                inc.move_row(a, b);
+            }
+            apply_to_order(&mut order, (is_swap, a, b));
+            anyhow::ensure!(inc.order() == &order[..], "tile {ti} step {si}: order diverged");
+            let full = p.permute_rows(&order)?;
+            anyhow::ensure!(
+                inc.aggregate() == full.aggregate_manhattan()
+                    && inc.nf_sum(ratio).to_bits() == full.nf_sum(ratio).to_bits(),
+                "tile {ti} step {si}: incremental NF diverged from full packed re-score"
+            );
+            if si % 64 == 0 {
+                anyhow::ensure!(
+                    inc.nf_sum(ratio).to_bits()
+                        == manhattan_nf_sum(&t.permute_rows(&order)?, ratio).to_bits(),
+                    "tile {ti} step {si}: incremental NF diverged from scalar re-score"
+                );
+            }
+        }
+    }
+
+    let speedup_incremental = full_step_ns / incremental_step_ns.max(f64::MIN_POSITIVE);
+    let speedup_vs_scalar_full =
+        scalar_full_step_ns / incremental_step_ns.max(f64::MIN_POSITIVE);
+    println!(
+        "{}",
+        report::table(
+            &["re-score path", "ns/step", "speedup vs incremental"],
+            &[
+                vec![
+                    "incremental delta".into(),
+                    format!("{incremental_step_ns:.0}"),
+                    "1.00x".into(),
+                ],
+                vec![
+                    "full packed re-score".into(),
+                    format!("{full_step_ns:.0}"),
+                    format!("{speedup_incremental:.2}x slower"),
+                ],
+                vec![
+                    "full scalar re-score".into(),
+                    format!("{scalar_full_step_ns:.0}"),
+                    format!("{speedup_vs_scalar_full:.2}x slower"),
+                ],
+            ],
+        )
+    );
+    println!(
+        "packed kernels {speedup_packed:.2}x vs scalar batch; incremental deltas \
+         {speedup_incremental:.2}x vs full packed re-score (every step verified exact)"
+    );
+
+    report::write_json_object(
+        &out_path,
+        &[
+            ("benchmark", Json::Str("bitplane_nf_kernels".into())),
+            ("workload", Json::Str("bit-sliced zoo planes + low-order-dense tiles".into())),
+            ("model", Json::Str(model.clone())),
+            ("tile", Json::Int(tile as i64)),
+            ("k_bits", Json::Int(cfg.k_bits as i64)),
+            ("n_planes", Json::Int(planes.len() as i64)),
+            ("seed", Json::Int(cfg.seed as i64)),
+            ("repeats", Json::Int(repeats as i64)),
+            ("threads", Json::Int(parallel.threads as i64)),
+            ("scalar_wall_s", Json::Num(scalar_s)),
+            ("packed_wall_s", Json::Num(packed_s)),
+            ("incremental_wall_s", Json::Num(incremental_s)),
+            ("speedup_packed_vs_scalar", Json::Num(speedup_packed)),
+            ("speedup_incremental_vs_scalar", Json::Num(speedup_incremental_backend)),
+            ("bitwise_identical", Json::Bool(bitwise_identical)),
+            ("search_tiles", Json::Int(search_planes.len() as i64)),
+            ("moves", Json::Int(moves as i64)),
+            ("scalar_moves", Json::Int(scalar_moves as i64)),
+            ("incremental_step_ns", Json::Num(incremental_step_ns)),
+            ("full_step_ns", Json::Num(full_step_ns)),
+            ("scalar_full_step_ns", Json::Num(scalar_full_step_ns)),
+            ("speedup_incremental_vs_full", Json::Num(speedup_incremental)),
+            ("speedup_incremental_vs_scalar_full", Json::Num(speedup_vs_scalar_full)),
         ],
     )?;
     println!("json: {out_path}");

@@ -52,8 +52,8 @@ pub mod strategy;
 pub use plan::MappingPlan;
 pub use strategy::{
     plan_tile, row_magnitudes, strategy_by_name, strategy_names, Identity, MagnitudeDesc,
-    ManhattanAsc, MapContext, MappingStrategy, Mdm, Random, SlicedTile, XChangrRotate,
-    DEFAULT_RANDOM_SEED,
+    ManhattanAsc, MapContext, MappingStrategy, Mdm, Random, SlicedTile, SwapSearch,
+    XChangrRotate, DEFAULT_RANDOM_SEED, DEFAULT_SWAP_BUDGET_MS,
 };
 
 use crate::tensor::ops::argsort_f64;
@@ -159,19 +159,20 @@ pub struct RowStats {
 }
 
 /// Compute per-row activity statistics of `[J, C]` binary planes.
+///
+/// Evaluated through the packed bit-plane kernels
+/// ([`crate::nf::packed::PackedPlanes::row_stats_u64`]): both statistics
+/// are integer sums, so the popcount path produces the exact values the
+/// historical scalar walk did while every strategy's row scoring (and thus
+/// every [`crate::pipeline::Pipeline::compile`]) rides the fast kernels.
 pub fn row_stats(planes: &Tensor) -> RowStats {
-    let (rows, _cols) = (planes.rows(), planes.cols());
-    let mut count = vec![0usize; rows];
-    let mut col_dist_sum = vec![0.0f64; rows];
-    for j in 0..rows {
-        for (k, &v) in planes.row(j).iter().enumerate() {
-            if v != 0.0 {
-                count[j] += 1;
-                col_dist_sum[j] += k as f64;
-            }
-        }
+    let packed = crate::nf::packed::PackedPlanes::from_tensor(planes)
+        .expect("row_stats planes must be 2-D");
+    let (counts, colsums) = packed.row_stats_u64();
+    RowStats {
+        count: counts.into_iter().map(|c| c as usize).collect(),
+        col_dist_sum: colsums.into_iter().map(|s| s as f64).collect(),
     }
-    RowStats { count, col_dist_sum }
 }
 
 /// Compute the row permutation for a policy over (already column-ordered)

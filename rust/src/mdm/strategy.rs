@@ -295,6 +295,87 @@ impl MappingStrategy for XChangrRotate {
     }
 }
 
+/// Default per-tile time budget (milliseconds) of the registry's
+/// `swap-search` strategy; override with `swap-search:MS` or `--budget-ms`.
+pub const DEFAULT_SWAP_BUDGET_MS: u64 = 5;
+
+/// Search-based mapping: greedy row-order improvement driven by the
+/// incremental Manhattan re-scorer ([`crate::nf::packed::IncrementalNf`]).
+///
+/// Columns are placed per the dataflow, the placed planes packed once, and
+/// the strategy then sweeps adjacent-position swap proposals, accepting any
+/// that strictly lower the Eq.-16 aggregate — each proposal scored as an
+/// O(1) delta, not an O(tile) re-walk. Sweeps repeat until a full pass
+/// yields no improvement (for the Manhattan objective, adjacent swaps reach
+/// the rearrangement-optimal order, so a converged search ties the
+/// closed-form [`Mdm`] sort) or until the `budget_ms` wall-clock budget is
+/// exhausted, whichever comes first.
+///
+/// A converged run is fully deterministic. A budget-truncated run depends
+/// on machine speed by construction (that is what a wall-clock knob means);
+/// `budget_ms: 0` deterministically returns the dataflow-only baseline
+/// plan. MDM's closed form makes search redundant *for this objective* —
+/// the strategy exists as the registry's search template (richer objectives
+/// swap in a different delta scorer) and as the incremental estimator's
+/// first consumer.
+#[derive(Debug, Clone, Copy)]
+pub struct SwapSearch {
+    /// Column placement (reversed is the paper's recommended dataflow).
+    pub dataflow: Dataflow,
+    /// Wall-clock budget per tile, in milliseconds.
+    pub budget_ms: u64,
+}
+
+impl SwapSearch {
+    /// The registered configuration: reversed dataflow at `budget_ms`.
+    pub fn reversed(budget_ms: u64) -> Self {
+        Self { dataflow: Dataflow::Reversed, budget_ms }
+    }
+}
+
+impl MappingStrategy for SwapSearch {
+    fn name(&self) -> &'static str {
+        "swap-search"
+    }
+
+    fn description(&self) -> &'static str {
+        "greedy row-swap search via O(1) incremental NF deltas (budgeted)"
+    }
+
+    fn plan(&self, tile: &SlicedTile, _ctx: &MapContext) -> MappingPlan {
+        use crate::nf::packed::{IncrementalNf, PackedPlanes};
+        use std::time::{Duration, Instant};
+
+        let col_perm = dataflow_col_perm(self.dataflow, tile.cols());
+        let placed = tile.planes.permute_cols(&col_perm).expect("column permutation is valid");
+        let packed = PackedPlanes::from_tensor(&placed).expect("tile planes are 2-D");
+        let mut inc = IncrementalNf::new(&packed);
+        let deadline = Instant::now() + Duration::from_millis(self.budget_ms);
+        let rows = tile.rows();
+        'search: loop {
+            let mut improved = false;
+            for p in 0..rows.saturating_sub(1) {
+                // Check the budget every few proposals, and before the
+                // first one so `budget_ms: 0` does no search at all.
+                if p % 64 == 0 && Instant::now() >= deadline {
+                    break 'search;
+                }
+                let before = inc.aggregate();
+                inc.swap(p, p + 1);
+                if inc.aggregate() < before {
+                    improved = true;
+                } else {
+                    inc.swap(p, p + 1); // revert — also an O(1) delta
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        MappingPlan::new(inc.order().to_vec(), col_perm)
+    }
+}
+
 /// One registry row: canonical name, accepted aliases, a blurb describing
 /// the registered configuration, and its constructor.
 struct RegistryEntry {
@@ -334,6 +415,10 @@ fn ctor_random() -> Arc<dyn MappingStrategy> {
 
 fn ctor_xchangr() -> Arc<dyn MappingStrategy> {
     Arc::new(XChangrRotate::conventional())
+}
+
+fn ctor_swap_search() -> Arc<dyn MappingStrategy> {
+    Arc::new(SwapSearch::reversed(DEFAULT_SWAP_BUDGET_MS))
 }
 
 const REGISTRY: &[RegistryEntry] = &[
@@ -385,6 +470,12 @@ const REGISTRY: &[RegistryEntry] = &[
         blurb: "X-CHANGR-style cyclic row rotation baseline",
         ctor: ctor_xchangr,
     },
+    RegistryEntry {
+        name: "swap-search",
+        aliases: &["swap_search"],
+        blurb: "greedy incremental-NF row-swap search (also swap-search:BUDGET_MS)",
+        ctor: ctor_swap_search,
+    },
 ];
 
 /// All registered strategy names with their descriptions (CLI listing).
@@ -393,7 +484,8 @@ pub fn strategy_names() -> Vec<(&'static str, &'static str)> {
 }
 
 /// Resolve a strategy by registry name (or alias). `"random:SEED"` selects
-/// the random control with an explicit seed.
+/// the random control with an explicit seed; `"swap-search:MS"` pins the
+/// search strategy's per-tile wall-clock budget in milliseconds.
 ///
 /// ```
 /// use mdm_cim::mdm::{strategy_by_name, strategy_names};
@@ -402,11 +494,12 @@ pub fn strategy_names() -> Vec<(&'static str, &'static str)> {
 /// assert_eq!(mdm.name(), "mdm");
 /// // Aliases resolve to their canonical configuration ...
 /// assert_eq!(strategy_by_name("identity")?.name(), "conventional");
-/// // ... seeds ride along on the random control ...
+/// // ... parameters ride along on the parameterized entries ...
 /// assert_eq!(strategy_by_name("random:31")?.name(), "random");
+/// assert_eq!(strategy_by_name("swap-search:50")?.name(), "swap-search");
 /// // ... and unknown names fail with the registry listing.
 /// assert!(strategy_by_name("bogus").is_err());
-/// assert!(strategy_names().iter().any(|(name, _)| *name == "xchangr"));
+/// assert!(strategy_names().iter().any(|(name, _)| *name == "swap-search"));
 /// # anyhow::Ok(())
 /// ```
 pub fn strategy_by_name(name: &str) -> Result<Arc<dyn MappingStrategy>> {
@@ -415,6 +508,14 @@ pub fn strategy_by_name(name: &str) -> Result<Arc<dyn MappingStrategy>> {
         let seed: u64 =
             seed.parse().with_context(|| format!("bad seed in strategy {key:?}"))?;
         return Ok(Arc::new(Random::conventional(seed)));
+    }
+    for prefix in ["swap-search:", "swap_search:"] {
+        if let Some(ms) = key.strip_prefix(prefix) {
+            let budget_ms: u64 = ms
+                .parse()
+                .with_context(|| format!("bad budget (ms) in strategy {key:?}"))?;
+            return Ok(Arc::new(SwapSearch::reversed(budget_ms)));
+        }
     }
     for e in REGISTRY {
         if e.name == key || e.aliases.contains(&key) {

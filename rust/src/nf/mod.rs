@@ -18,8 +18,15 @@
 //! CG cross-check, distortion draws, content-addressed cache) by name
 //! through [`estimator::estimator_by_name`] instead of calling the model
 //! functions directly.
+//!
+//! The scalar walks below are the **reference semantics**; the [`packed`]
+//! module evaluates the identical model over `u64` lane bitmasks with
+//! popcount kernels (the `packed` and `incremental` registry backends),
+//! bitwise identical to these functions — see the [`packed`] module docs
+//! for the exactness argument.
 
 pub mod estimator;
+pub mod packed;
 
 use crate::stats::{ols, relative_error_pct, summary, OlsFit, Summary};
 use crate::tensor::Tensor;

@@ -1,0 +1,550 @@
+//! Packed `u64` bit-plane kernels for the Manhattan NF model, and the
+//! incremental row-move re-scorer built on top of them.
+//!
+//! The scalar reference ([`crate::nf::aggregate_manhattan`] and friends)
+//! walks every cell of an f32 plane tensor. This module stores a plane as
+//! row-major `u64` lane bitmasks — one bit per cell, 64 cells per word —
+//! and evaluates the same model with popcount/prefix-sum kernels:
+//!
+//! * `Σ_k δ_{j,k}` per row is one `popcount` per word;
+//! * `Σ_k δ_{j,k}·k` per row is `64·w·popcount(word)` plus a weighted
+//!   popcount of the in-word bit positions (six masked popcounts — the
+//!   position index is a 6-bit number, so summing each bit of it over the
+//!   set lanes reconstructs the positional sum);
+//! * the full Eq.-16 aggregate is then `Σ_j (j·count_j + colsum_j)`.
+//!
+//! ## Exactness
+//!
+//! Every Manhattan aggregate is a sum of integers `(j + k)`. The scalar
+//! reference accumulates them in an `f64`, and sums of integers are exact
+//! in `f64` (regardless of association order) while they stay below 2^53 —
+//! which holds for any tile that fits in memory (a dense 65536² tile
+//! aggregates to ~2^49). The packed kernels therefore reproduce the scalar
+//! reference **bit for bit**, not merely within a ULP: they compute the
+//! same integer and perform the same final `ratio·agg/n` float ops in the
+//! same order. `tests/integration_bitplane.rs` locks this down
+//! differentially across randomized shapes, densities, and ratios.
+//!
+//! ## Incremental re-scoring
+//!
+//! Under the Manhattan model the NF contribution of logical row `l` placed
+//! at physical distance `p` is `p·count_l + colsum_l`, and `Σ colsum` is
+//! invariant under row permutation (see [`crate::mdm`] module docs). An
+//! [`IncrementalNf`] session caches the per-row `(count, colsum)` partial
+//! sums once — O(tile) — after which a row swap re-scores in O(1) and a
+//! single-row move in O(moved span): exactly the delta structure the
+//! `swap-search` mapping strategy searches over. The session is pinned to
+//! one tile content at one column placement; anything that changes the
+//! *bits* (a different dataflow/column permutation, fault injection, a new
+//! quantization) invalidates the partials and requires a full O(tile)
+//! rebuild from a fresh [`PackedPlanes`] — row-order changes never do.
+
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// `POSITION_MASKS[b]` selects the bits of a `u64` whose position index has
+/// bit `b` set; `Σ_b 2^b·popcount(w & POSITION_MASKS[b])` is the sum of the
+/// set-bit positions of `w` (each position is a 6-bit integer, summed
+/// bit-plane by bit-plane — the same trick the paper plays on weights).
+const POSITION_MASKS: [u64; 6] = [
+    0xAAAA_AAAA_AAAA_AAAA,
+    0xCCCC_CCCC_CCCC_CCCC,
+    0xF0F0_F0F0_F0F0_F0F0,
+    0xFF00_FF00_FF00_FF00,
+    0xFFFF_0000_FFFF_0000,
+    0xFFFF_FFFF_0000_0000,
+];
+
+/// Sum of the positions (0-based, LSB = 0) of the set bits of `w`.
+#[inline]
+fn bit_position_sum(w: u64) -> u64 {
+    let mut acc = 0u64;
+    for (b, m) in POSITION_MASKS.iter().enumerate() {
+        acc += ((w & m).count_ones() as u64) << b;
+    }
+    acc
+}
+
+fn is_permutation(p: &[usize], n: usize) -> bool {
+    if p.len() != n {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    for &i in p {
+        if i >= n || seen[i] {
+            return false;
+        }
+        seen[i] = true;
+    }
+    true
+}
+
+/// One bit plane packed as row-major `u64` lane bitmasks: bit `k % 64` of
+/// word `row·words_per_row + k/64` holds `δ_{row,k}`. Ragged widths (cols
+/// not a multiple of 64) keep their last word's tail bits zero — an
+/// invariant every kernel and permutation below preserves.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedPlanes {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl PackedPlanes {
+    /// Pack a 2-D plane tensor (any nonzero cell is active, matching the
+    /// scalar reference's `v != 0.0` test).
+    pub fn from_tensor(planes: &Tensor) -> Result<Self> {
+        ensure!(planes.ndim() == 2, "planes must be 2-D, got {:?}", planes.shape());
+        let (rows, cols) = (planes.rows(), planes.cols());
+        let words_per_row = cols.div_ceil(64).max(1);
+        let mut words = vec![0u64; rows * words_per_row];
+        for j in 0..rows {
+            let base = j * words_per_row;
+            for (wi, chunk) in planes.row(j).chunks(64).enumerate() {
+                // Branchless pack: compare + shift, one store per word.
+                let mut w = 0u64;
+                for (t, &v) in chunk.iter().enumerate() {
+                    w |= ((v != 0.0) as u64) << t;
+                }
+                words[base + wi] = w;
+            }
+        }
+        Ok(Self { rows, cols, words_per_row, words })
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `u64` words per packed row (`cols.div_ceil(64)`, at least 1).
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Whether cell `(j, k)` is active.
+    pub fn get(&self, j: usize, k: usize) -> bool {
+        assert!(j < self.rows && k < self.cols, "cell ({j}, {k}) out of range");
+        let w = self.words[j * self.words_per_row + k / 64];
+        (w >> (k % 64)) & 1 == 1
+    }
+
+    fn row_words(&self, j: usize) -> &[u64] {
+        &self.words[j * self.words_per_row..(j + 1) * self.words_per_row]
+    }
+
+    /// Number of active cells (one popcount per word).
+    pub fn active_count(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Per-row `(active count, Σ_k δ_k·k)` partial sums — the quantities
+    /// [`crate::mdm::row_stats`] reports and [`IncrementalNf`] caches.
+    pub fn row_stats_u64(&self) -> (Vec<u64>, Vec<u64>) {
+        let mut counts = Vec::with_capacity(self.rows);
+        let mut colsums = Vec::with_capacity(self.rows);
+        for j in 0..self.rows {
+            let (mut count, mut colsum) = (0u64, 0u64);
+            for (wi, &w) in self.row_words(j).iter().enumerate() {
+                let pc = w.count_ones() as u64;
+                count += pc;
+                colsum += (wi as u64 * 64) * pc + bit_position_sum(w);
+            }
+            counts.push(count);
+            colsums.push(colsum);
+        }
+        (counts, colsums)
+    }
+
+    /// The Eq.-16 aggregate `Σ δ_{j,k}(j+k)` as an exact integer.
+    pub fn aggregate_manhattan(&self) -> u64 {
+        let mut acc = 0u64;
+        for j in 0..self.rows {
+            let (mut count, mut colsum) = (0u64, 0u64);
+            for (wi, &w) in self.row_words(j).iter().enumerate() {
+                let pc = w.count_ones() as u64;
+                count += pc;
+                colsum += (wi as u64 * 64) * pc + bit_position_sum(w);
+            }
+            acc += j as u64 * count + colsum;
+        }
+        acc
+    }
+
+    /// Eq. 16 (sum form), bitwise identical to
+    /// [`crate::nf::manhattan_nf_sum`] on the unpacked planes.
+    ///
+    /// ```
+    /// use mdm_cim::nf::{manhattan_nf_sum, packed::PackedPlanes};
+    /// use mdm_cim::tensor::Tensor;
+    ///
+    /// let t = Tensor::new(&[2, 3], vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0])?;
+    /// let packed = PackedPlanes::from_tensor(&t)?;
+    /// let ratio = 2.5 / 300e3;
+    /// assert_eq!(packed.nf_sum(ratio).to_bits(), manhattan_nf_sum(&t, ratio).to_bits());
+    /// # anyhow::Ok(())
+    /// ```
+    pub fn nf_sum(&self, parasitic_ratio: f64) -> f64 {
+        parasitic_ratio * self.aggregate_manhattan() as f64
+    }
+
+    /// Density-normalized mean form, bitwise identical to
+    /// [`crate::nf::manhattan_nf_mean`] on the unpacked planes.
+    pub fn nf_mean(&self, parasitic_ratio: f64) -> f64 {
+        let n = self.active_count();
+        if n == 0 {
+            return 0.0;
+        }
+        parasitic_ratio * self.aggregate_manhattan() as f64 / n as f64
+    }
+
+    /// Per-column mean form, bitwise identical to
+    /// [`crate::nf::manhattan_nf_per_col`] on the unpacked planes. Iterates
+    /// set bits only — O(active cells), not O(cells).
+    pub fn nf_per_col(&self, parasitic_ratio: f64) -> Vec<f64> {
+        let mut acc = vec![0u64; self.cols];
+        let mut n = vec![0u64; self.cols];
+        for j in 0..self.rows {
+            for (wi, &word) in self.row_words(j).iter().enumerate() {
+                let mut w = word;
+                while w != 0 {
+                    let k = wi * 64 + w.trailing_zeros() as usize;
+                    acc[k] += (j + k) as u64;
+                    n[k] += 1;
+                    w &= w - 1;
+                }
+            }
+        }
+        acc.iter()
+            .zip(&n)
+            .map(|(&a, &cnt)| {
+                if cnt == 0 {
+                    0.0
+                } else {
+                    parasitic_ratio * a as f64 / cnt as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Row permutation `out[p] = self[perm[p]]` (the [`crate::mdm::MappingPlan`]
+    /// row convention) — pure word copies, O(cells / 64).
+    pub fn permute_rows(&self, perm: &[usize]) -> Result<Self> {
+        ensure!(
+            is_permutation(perm, self.rows),
+            "row perm of len {} is not a permutation of {} rows",
+            perm.len(),
+            self.rows
+        );
+        let mut words = Vec::with_capacity(self.words.len());
+        for &src in perm {
+            words.extend_from_slice(self.row_words(src));
+        }
+        Ok(Self { rows: self.rows, cols: self.cols, words_per_row: self.words_per_row, words })
+    }
+
+    /// Column permutation `out[j][q] = self[j][perm[q]]` — bit gather,
+    /// O(cells) single-bit ops (still far cheaper than permuting the f32
+    /// tensor). Preserves the ragged-tail invariant by construction.
+    pub fn permute_cols(&self, perm: &[usize]) -> Result<Self> {
+        ensure!(
+            is_permutation(perm, self.cols),
+            "col perm of len {} is not a permutation of {} cols",
+            perm.len(),
+            self.cols
+        );
+        let mut words = vec![0u64; self.words.len()];
+        for j in 0..self.rows {
+            let src = self.row_words(j);
+            let base = j * self.words_per_row;
+            for (q, &p) in perm.iter().enumerate() {
+                let bit = (src[p / 64] >> (p % 64)) & 1;
+                words[base + q / 64] |= bit << (q % 64);
+            }
+        }
+        Ok(Self { rows: self.rows, cols: self.cols, words_per_row: self.words_per_row, words })
+    }
+}
+
+/// A stateful incremental Manhattan re-scorer over one packed tile at one
+/// column placement.
+///
+/// Construction caches per-logical-row `(count, colsum)` partials — O(tile)
+/// once. Afterwards:
+///
+/// * [`IncrementalNf::swap`] re-scores a swap of two physical positions in
+///   O(1): the aggregate changes by `(b−a)·(count_at_a − count_at_b)`;
+/// * [`IncrementalNf::move_row`] re-scores a remove-and-reinsert in
+///   O(|from−to|): intervening rows shift by one position each;
+/// * [`IncrementalNf::set_order`] re-scores an arbitrary new order in
+///   O(rows) from the cached partials.
+///
+/// All state is integer, so [`IncrementalNf::nf_sum`]/[`IncrementalNf::nf_mean`]
+/// stay bitwise identical to a from-scratch packed (or scalar) re-score of
+/// the permuted planes after **every** step — the property
+/// `tests/integration_incremental.rs` checks move by move.
+///
+/// The session does **not** watch the planes: if the tile's bits change
+/// (different column placement, fault injection, requantization), the
+/// cached partials are stale and the caller must rebuild from a fresh
+/// [`PackedPlanes`] — a full O(tile) re-score. Row-order changes never
+/// require that fallback.
+#[derive(Debug, Clone)]
+pub struct IncrementalNf {
+    /// Per **logical** row active count.
+    counts: Vec<u64>,
+    /// `order[p]` = logical row at physical position `p`.
+    order: Vec<usize>,
+    /// `Σ_p p·counts[order[p]]` under the current order.
+    weighted: u64,
+    /// `Σ_l colsum_l` — invariant under row permutation.
+    colsum_total: u64,
+    /// Total active cells — invariant under row permutation.
+    active: u64,
+}
+
+impl IncrementalNf {
+    /// Start a session at the identity row order.
+    pub fn new(packed: &PackedPlanes) -> Self {
+        let (counts, colsums) = packed.row_stats_u64();
+        let weighted = counts.iter().enumerate().map(|(p, &c)| p as u64 * c).sum();
+        let colsum_total = colsums.iter().sum();
+        let active = counts.iter().sum();
+        let order = (0..packed.rows()).collect();
+        Self { counts, order, weighted, colsum_total, active }
+    }
+
+    /// Start a session at an explicit row order (`order[p]` = logical row at
+    /// physical position `p`, the [`crate::mdm::MappingPlan`] convention).
+    pub fn with_order(packed: &PackedPlanes, order: &[usize]) -> Result<Self> {
+        ensure!(
+            is_permutation(order, packed.rows()),
+            "order of len {} is not a permutation of {} rows",
+            order.len(),
+            packed.rows()
+        );
+        let mut s = Self::new(packed);
+        s.set_order(order.to_vec());
+        Ok(s)
+    }
+
+    /// Number of rows under management.
+    pub fn rows(&self) -> usize {
+        self.order.len()
+    }
+
+    /// The current physical-position → logical-row order.
+    pub fn order(&self) -> &[usize] {
+        &self.order
+    }
+
+    /// Total active cells (order-invariant).
+    pub fn active_count(&self) -> u64 {
+        self.active
+    }
+
+    /// The Eq.-16 aggregate under the current order, as an exact integer.
+    pub fn aggregate(&self) -> u64 {
+        self.weighted + self.colsum_total
+    }
+
+    /// Eq.-16 sum-form NF under the current order — bitwise identical to
+    /// scoring the row-permuted planes from scratch.
+    pub fn nf_sum(&self, parasitic_ratio: f64) -> f64 {
+        parasitic_ratio * self.aggregate() as f64
+    }
+
+    /// Mean-form NF under the current order — bitwise identical to scoring
+    /// the row-permuted planes from scratch.
+    pub fn nf_mean(&self, parasitic_ratio: f64) -> f64 {
+        if self.active == 0 {
+            return 0.0;
+        }
+        parasitic_ratio * self.aggregate() as f64 / self.active as f64
+    }
+
+    /// Swap the rows at physical positions `a` and `b` — O(1) re-score.
+    pub fn swap(&mut self, a: usize, b: usize) {
+        let n = self.rows();
+        assert!(a < n && b < n, "swap ({a}, {b}) out of range for {n} rows");
+        if a == b {
+            return;
+        }
+        let (ca, cb) = (self.counts[self.order[a]] as i128, self.counts[self.order[b]] as i128);
+        let delta = (b as i128 - a as i128) * (ca - cb);
+        self.weighted = (self.weighted as i128 + delta) as u64;
+        self.order.swap(a, b);
+    }
+
+    /// Remove the row at physical position `from` and reinsert it so it
+    /// lands at physical position `to` (`Vec::remove` + `Vec::insert`
+    /// semantics); intervening rows shift by one — O(|from − to|) re-score.
+    pub fn move_row(&mut self, from: usize, to: usize) {
+        let n = self.rows();
+        assert!(from < n && to < n, "move ({from} -> {to}) out of range for {n} rows");
+        if from == to {
+            return;
+        }
+        let moved = self.counts[self.order[from]] as i128;
+        let mut delta = moved * (to as i128 - from as i128);
+        if from < to {
+            // Positions from+1..=to shift down by one.
+            for p in from + 1..=to {
+                delta -= self.counts[self.order[p]] as i128;
+            }
+            self.order[from..=to].rotate_left(1);
+        } else {
+            // Positions to..from-1 shift up by one.
+            for p in to..from {
+                delta += self.counts[self.order[p]] as i128;
+            }
+            self.order[to..=from].rotate_right(1);
+        }
+        self.weighted = (self.weighted as i128 + delta) as u64;
+    }
+
+    /// Replace the whole order — O(rows) re-score from the cached partials
+    /// (the in-session "full re-score"; no tile walk needed). Panics on a
+    /// non-permutation.
+    pub fn set_order(&mut self, order: Vec<usize>) {
+        assert!(
+            is_permutation(&order, self.rows()),
+            "order is not a permutation of {} rows",
+            self.rows()
+        );
+        self.weighted = order.iter().enumerate().map(|(p, &l)| p as u64 * self.counts[l]).sum();
+        self.order = order;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nf::{
+        active_count, aggregate_manhattan, manhattan_nf_mean, manhattan_nf_per_col,
+        manhattan_nf_sum,
+    };
+    use crate::rng::Xoshiro256;
+
+    fn random_planes(rows: usize, cols: usize, density: f64, seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seeded(seed);
+        crate::eval::random_planes(rows, cols, density, &mut rng)
+    }
+
+    #[test]
+    fn bit_position_sum_matches_naive() {
+        let mut rng = Xoshiro256::seeded(1);
+        for _ in 0..200 {
+            let w = rng.next_u64();
+            let naive: u64 = (0..64).filter(|&t| (w >> t) & 1 == 1).map(|t| t as u64).sum();
+            assert_eq!(bit_position_sum(w), naive, "word {w:#x}");
+        }
+        assert_eq!(bit_position_sum(0), 0);
+        assert_eq!(bit_position_sum(u64::MAX), 64 * 63 / 2);
+    }
+
+    #[test]
+    fn pack_roundtrips_cells_and_counts() {
+        for (rows, cols) in [(1usize, 1usize), (3, 64), (5, 65), (4, 130), (7, 17)] {
+            let t = random_planes(rows, cols, 0.4, (rows * 1000 + cols) as u64);
+            let p = PackedPlanes::from_tensor(&t).unwrap();
+            assert_eq!(p.rows(), rows);
+            assert_eq!(p.cols(), cols);
+            for j in 0..rows {
+                for k in 0..cols {
+                    assert_eq!(p.get(j, k), t.at2(j, k) != 0.0, "({j}, {k})");
+                }
+            }
+            assert_eq!(p.active_count(), active_count(&t) as u64);
+        }
+    }
+
+    #[test]
+    fn kernels_match_scalar_reference_bitwise() {
+        for (seed, (rows, cols)) in
+            [(1u64, (8usize, 8usize)), (2, (16, 100)), (3, (3, 64)), (4, (30, 129))]
+        {
+            let t = random_planes(rows, cols, 0.3, seed);
+            let p = PackedPlanes::from_tensor(&t).unwrap();
+            let ratio = 2.5 / 300e3;
+            assert_eq!(p.aggregate_manhattan() as f64, aggregate_manhattan(&t));
+            assert_eq!(p.nf_sum(ratio).to_bits(), manhattan_nf_sum(&t, ratio).to_bits());
+            assert_eq!(p.nf_mean(ratio).to_bits(), manhattan_nf_mean(&t, ratio).to_bits());
+            let per = p.nf_per_col(ratio);
+            let reference = manhattan_nf_per_col(&t, ratio);
+            assert_eq!(per.len(), reference.len());
+            for (a, b) in per.iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn permutes_match_tensor_permutes() {
+        let mut rng = Xoshiro256::seeded(9);
+        let t = random_planes(12, 70, 0.35, 11);
+        let p = PackedPlanes::from_tensor(&t).unwrap();
+        let rp = rng.permutation(12);
+        let cp = rng.permutation(70);
+        let via_tensor =
+            PackedPlanes::from_tensor(&t.permute_rows(&rp).unwrap().permute_cols(&cp).unwrap())
+                .unwrap();
+        let via_packed = p.permute_rows(&rp).unwrap().permute_cols(&cp).unwrap();
+        assert_eq!(via_packed, via_tensor);
+        assert!(p.permute_rows(&[0, 0]).is_err());
+        assert!(p.permute_cols(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn incremental_tracks_full_rescore_through_ops() {
+        let t = random_planes(16, 40, 0.3, 21);
+        let p = PackedPlanes::from_tensor(&t).unwrap();
+        let mut inc = IncrementalNf::new(&p);
+        let mut rng = Xoshiro256::seeded(22);
+        let ratio = 1e-4;
+        for step in 0..200 {
+            if rng.bernoulli(0.5) {
+                inc.swap(rng.below(16) as usize, rng.below(16) as usize);
+            } else {
+                inc.move_row(rng.below(16) as usize, rng.below(16) as usize);
+            }
+            let full = p.permute_rows(inc.order()).unwrap();
+            assert_eq!(inc.aggregate(), full.aggregate_manhattan(), "step {step}");
+            assert_eq!(inc.nf_sum(ratio).to_bits(), full.nf_sum(ratio).to_bits());
+            assert_eq!(inc.nf_mean(ratio).to_bits(), full.nf_mean(ratio).to_bits());
+        }
+    }
+
+    #[test]
+    fn with_order_and_set_order_rescore_exactly() {
+        let t = random_planes(10, 33, 0.4, 31);
+        let p = PackedPlanes::from_tensor(&t).unwrap();
+        let mut rng = Xoshiro256::seeded(32);
+        let order = rng.permutation(10);
+        let inc = IncrementalNf::with_order(&p, &order).unwrap();
+        assert_eq!(inc.aggregate(), p.permute_rows(&order).unwrap().aggregate_manhattan());
+        assert!(IncrementalNf::with_order(&p, &[0, 1]).is_err());
+        let mut inc2 = IncrementalNf::new(&p);
+        inc2.set_order(order.clone());
+        assert_eq!(inc2.aggregate(), inc.aggregate());
+        assert_eq!(inc2.order(), &order[..]);
+    }
+
+    #[test]
+    fn empty_and_degenerate_tiles() {
+        let zero = PackedPlanes::from_tensor(&Tensor::zeros(&[4, 70])).unwrap();
+        assert_eq!(zero.active_count(), 0);
+        assert_eq!(zero.nf_sum(1.0), 0.0);
+        assert_eq!(zero.nf_mean(1.0), 0.0);
+        assert!(zero.nf_per_col(1.0).iter().all(|&v| v == 0.0));
+        let inc = IncrementalNf::new(&zero);
+        assert_eq!(inc.nf_mean(1.0), 0.0);
+        assert!(PackedPlanes::from_tensor(&Tensor::from_vec(vec![1.0])).is_err());
+    }
+}

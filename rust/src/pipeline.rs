@@ -30,6 +30,7 @@
 use crate::crossbar::{CostModel, LayerTiling, TileCost, TileGeometry};
 use crate::mdm::{strategy_by_name, MappingPlan, MappingStrategy};
 use crate::nf::estimator::{estimator_by_name, NfEstimator};
+use crate::nf::packed::PackedPlanes;
 use crate::noise::distorted_weights;
 use crate::parallel::{self, ParallelConfig};
 use crate::quant::{Quantizer, SignSplit};
@@ -271,9 +272,27 @@ impl Pipeline {
             } else {
                 rng.choose_k(total, tiles_per_part)
             };
+            let packed_fast_path = self.estimator.scores_packed_manhattan();
             let nfs = parallel::try_map(&self.parallel, &idx, |&i| {
                 let tile = LayerTiling::build_tile(part, self.geometry, quant, i / gc, i % gc)?;
                 let plan = tile.plan(self.strategy.as_ref());
+                if packed_fast_path {
+                    // Packed-Manhattan backends score the permuted bitmasks
+                    // directly — no permuted f32 tensor is materialized.
+                    // Bitwise identical to the slow path (see `nf::packed`).
+                    ensure!(
+                        tile.sliced.planes.rows() == plan.rows()
+                            && tile.sliced.planes.cols() == plan.cols(),
+                        "plan {}x{} does not fit planes {:?}",
+                        plan.rows(),
+                        plan.cols(),
+                        tile.sliced.planes.shape()
+                    );
+                    let packed = PackedPlanes::from_tensor(&tile.sliced.planes)?
+                        .permute_rows(plan.row_perm())?
+                        .permute_cols(plan.col_perm())?;
+                    return Ok(packed.nf_mean(self.physics.parasitic_ratio()));
+                }
                 self.estimator.nf_mean(&plan.apply(&tile.sliced.planes)?, &self.physics)
             })?;
             for nf in nfs {
@@ -839,6 +858,54 @@ mod tests {
         assert!(analytic > 0.0 && sampled > 0.0);
         // Unknown estimator names fail like unknown strategies do.
         assert!(Pipeline::new(g).estimator("nope").is_err());
+    }
+
+    #[test]
+    fn packed_sampled_nf_fast_path_is_bitwise_analytic() {
+        // `packed`/`incremental` take the permuted-bitmask fast path inside
+        // sampled_nf; the result must be bitwise identical to the scalar
+        // `analytic` walk of the materialized permuted tensor.
+        let w = random_signed(256, 32, 15);
+        let g = TileGeometry::paper_eval();
+        for strategy in ["mdm", "conventional"] {
+            let mut r_ref = Xoshiro256::seeded(17);
+            let (reference, n_ref) = Pipeline::new(g)
+                .strategy(strategy)
+                .unwrap()
+                .sampled_nf(&w, 8, &mut r_ref)
+                .unwrap();
+            for est in ["packed", "incremental"] {
+                let mut rng = Xoshiro256::seeded(17);
+                let (fast, n) = Pipeline::new(g)
+                    .strategy(strategy)
+                    .unwrap()
+                    .estimator(est)
+                    .unwrap()
+                    .sampled_nf(&w, 8, &mut rng)
+                    .unwrap();
+                assert_eq!(n, n_ref);
+                assert_eq!(fast.to_bits(), reference.to_bits(), "{strategy}/{est}");
+            }
+        }
+    }
+
+    #[test]
+    fn swap_search_strategy_compiles_and_ties_mdm_nf() {
+        // Converged swap-search reaches the rearrangement-optimal row order,
+        // which is exactly the MDM sort's objective value.
+        let w = random_signed(128, 16, 16);
+        let g = TileGeometry::new(16, 32, 8).unwrap();
+        let mut r1 = Xoshiro256::seeded(19);
+        let mut r2 = Xoshiro256::seeded(19);
+        let (mdm, n1) =
+            Pipeline::new(g).strategy("mdm").unwrap().sampled_nf(&w, 8, &mut r1).unwrap();
+        let (searched, n2) = Pipeline::new(g)
+            .strategy("swap-search:1000")
+            .unwrap()
+            .sampled_nf(&w, 8, &mut r2)
+            .unwrap();
+        assert_eq!(n1, n2);
+        assert_eq!(searched.to_bits(), mdm.to_bits(), "searched {searched} vs mdm {mdm}");
     }
 
     #[test]

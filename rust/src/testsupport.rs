@@ -7,6 +7,7 @@
 //! reports the failing seed + size so the case is exactly reproducible.
 
 use crate::rng::Xoshiro256;
+use crate::tensor::Tensor;
 use std::time::Instant;
 
 /// Timing statistics of one benchmark.
@@ -120,6 +121,41 @@ where
     }
 }
 
+/// Per-bit-plane activation densities of a *low-order-dense* weight profile
+/// — the structured sparsity MDM's Theorem 1 exploits. The repo's bit-slice
+/// layout puts bit 0 at the **highest** order (see
+/// [`crate::quant::BitSlicedMatrix`]), so the density decays from the peak
+/// at plane `k_bits − 1` (the LSB) toward plane 0 (the MSB):
+/// `densities[b] = peak · decay^(k_bits − 1 − b)`.
+pub fn low_order_dense_densities(k_bits: usize, peak: f64, decay: f64) -> Vec<f64> {
+    (0..k_bits).map(|b| peak * decay.powi((k_bits - 1 - b) as i32)).collect()
+}
+
+/// A synthetic bit-sliced tile `[rows, n_weights · densities.len()]` with
+/// controlled per-plane density: column `c` (bit `c % k_bits` of weight
+/// `c / k_bits`, the [`crate::quant::BitSlicedMatrix`] interleaving) is
+/// active with probability `densities[c % k_bits]`. Pair with
+/// [`low_order_dense_densities`] for realistic DNN-weight plane profiles;
+/// both the bit-plane differential suites and `mdm bench --bitplane` draw
+/// their workloads here.
+pub fn random_bit_sliced_planes(
+    rng: &mut Xoshiro256,
+    rows: usize,
+    n_weights: usize,
+    densities: &[f64],
+) -> Tensor {
+    let k = densities.len();
+    assert!(k >= 1, "need at least one bit plane");
+    let cols = n_weights * k;
+    let mut data = vec![0.0f32; rows * cols];
+    for (i, v) in data.iter_mut().enumerate() {
+        if rng.bernoulli(densities[(i % cols) % k]) {
+            *v = 1.0;
+        }
+    }
+    Tensor::new(&[rows, cols], data).expect("shape is consistent")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +182,42 @@ mod tests {
             |rng, _| rng.below(100),
             |&v| if v < 1000 { Err(format!("v = {v}")) } else { Ok(()) },
         );
+    }
+
+    #[test]
+    fn low_order_dense_profile_peaks_at_the_lsb_plane() {
+        let d = low_order_dense_densities(8, 0.5, 0.5);
+        assert_eq!(d.len(), 8);
+        assert!((d[7] - 0.5).abs() < 1e-12, "LSB plane (bit 7) holds the peak");
+        assert!((d[0] - 0.5 * 0.5f64.powi(7)).abs() < 1e-12);
+        for b in 1..8 {
+            assert!(d[b] > d[b - 1], "density must decay toward the MSB plane");
+        }
+    }
+
+    #[test]
+    fn bit_sliced_planes_follow_the_per_plane_densities() {
+        let k = 4;
+        let densities = low_order_dense_densities(k, 0.6, 0.25);
+        let mut rng = Xoshiro256::seeded(41);
+        let t = random_bit_sliced_planes(&mut rng, 64, 50, &densities);
+        assert_eq!(t.shape(), &[64, 50 * k]);
+        // Empirical per-plane density over 64*50 draws each: within a loose
+        // band of the target (binomial σ ≈ 0.009 at p=0.6).
+        for (b, &target) in densities.iter().enumerate() {
+            let mut active = 0usize;
+            let mut total = 0usize;
+            for j in 0..t.rows() {
+                for c in (b..t.cols()).step_by(k) {
+                    total += 1;
+                    if t.at2(j, c) != 0.0 {
+                        active += 1;
+                    }
+                }
+            }
+            let got = active as f64 / total as f64;
+            assert!((got - target).abs() < 0.05, "plane {b}: {got} vs {target}");
+        }
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Differential property suite for the packed bit-plane NF kernels
+//! (`nf::packed`): across randomized shapes (including ragged widths),
+//! densities, and parasitic ratios, every packed kernel must reproduce the
+//! scalar reference in `nf` **bit for bit** — the aggregates are exact
+//! integer sums, so there is no tolerance, not even 1 ULP (see the
+//! `nf::packed` module docs for the exactness argument). No artifacts
+//! required.
+
+use mdm_cim::nf::estimator::{estimator_by_name, Analytic, NfEstimator};
+use mdm_cim::nf::packed::PackedPlanes;
+use mdm_cim::nf::{
+    active_count, aggregate_manhattan, manhattan_nf_mean, manhattan_nf_per_col, manhattan_nf_sum,
+};
+use mdm_cim::rng::Xoshiro256;
+use mdm_cim::tensor::Tensor;
+use mdm_cim::testsupport::{
+    low_order_dense_densities, propcheck, random_bit_sliced_planes, PropConfig,
+};
+use mdm_cim::CrossbarPhysics;
+
+fn random_planes(rows: usize, cols: usize, density: f64, rng: &mut Xoshiro256) -> Tensor {
+    let data: Vec<f32> =
+        (0..rows * cols).map(|_| if rng.bernoulli(density) { 1.0 } else { 0.0 }).collect();
+    Tensor::new(&[rows, cols], data).unwrap()
+}
+
+/// Assert every packed kernel output is bitwise equal to its scalar
+/// reference on `t` at `ratio`; returns an error message for `propcheck`.
+fn check_bitwise(t: &Tensor, ratio: f64) -> Result<(), String> {
+    let p = PackedPlanes::from_tensor(t).map_err(|e| e.to_string())?;
+    if p.active_count() != active_count(t) as u64 {
+        return Err(format!("active_count {} vs {}", p.active_count(), active_count(t)));
+    }
+    if p.aggregate_manhattan() as f64 != aggregate_manhattan(t) {
+        return Err(format!(
+            "aggregate {} vs {}",
+            p.aggregate_manhattan(),
+            aggregate_manhattan(t)
+        ));
+    }
+    let (ps, ss) = (p.nf_sum(ratio), manhattan_nf_sum(t, ratio));
+    if ps.to_bits() != ss.to_bits() {
+        return Err(format!("nf_sum {ps} vs {ss}"));
+    }
+    let (pm, sm) = (p.nf_mean(ratio), manhattan_nf_mean(t, ratio));
+    if pm.to_bits() != sm.to_bits() {
+        return Err(format!("nf_mean {pm} vs {sm}"));
+    }
+    let per = p.nf_per_col(ratio);
+    let reference = manhattan_nf_per_col(t, ratio);
+    if per.len() != reference.len() {
+        return Err(format!("per_col len {} vs {}", per.len(), reference.len()));
+    }
+    for (k, (a, b)) in per.iter().zip(&reference).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("nf_per_col[{k}] {a} vs {b}"));
+        }
+    }
+    Ok(())
+}
+
+/// Property: packed nf_sum/nf_mean/nf_per_col are bitwise equal to the
+/// scalar reference over random shapes — widths deliberately straddle the
+/// 64-bit word boundary (ragged last words) — densities, and log-ranged
+/// parasitic ratios.
+#[test]
+fn packed_kernels_bitwise_equal_scalar_reference() {
+    propcheck(
+        PropConfig { cases: 96, seed: 0xB17_0001, max_size: 48 },
+        |rng, size| {
+            let rows = 1 + rng.below(size as u64) as usize;
+            // Widths cluster around the u64 word boundary: 1..=128+size.
+            let cols = 1 + rng.below((128 + size) as u64) as usize;
+            let density = rng.uniform_range(0.0, 1.0);
+            let ratio = 10f64.powf(rng.uniform_range(-8.0, 0.0));
+            (random_planes(rows, cols, density, rng), ratio)
+        },
+        |(t, ratio)| check_bitwise(t, *ratio),
+    );
+}
+
+/// Explicit edge shapes: all-zero and all-one planes at widths on both
+/// sides of (and exactly at) the word boundary, plus single-row and
+/// single-column tiles.
+#[test]
+fn edge_shapes_all_zero_and_all_one() {
+    let ratio = 2.5 / 300e3;
+    for rows in [1usize, 2, 16] {
+        for cols in [1usize, 63, 64, 65, 100, 127, 128, 129] {
+            let zero = Tensor::zeros(&[rows, cols]);
+            check_bitwise(&zero, ratio).unwrap();
+            assert_eq!(PackedPlanes::from_tensor(&zero).unwrap().active_count(), 0);
+            let one = Tensor::full(&[rows, cols], 1.0);
+            check_bitwise(&one, ratio).unwrap();
+            assert_eq!(
+                PackedPlanes::from_tensor(&one).unwrap().active_count(),
+                (rows * cols) as u64
+            );
+        }
+    }
+}
+
+/// The registry backends `packed` and `incremental` (and their aliases)
+/// are bitwise equal to `analytic` through the `NfEstimator` interface.
+#[test]
+fn packed_estimators_match_analytic_through_the_registry() {
+    let physics = CrossbarPhysics::default();
+    let mut rng = Xoshiro256::seeded(0xB17_0002);
+    let tiles: Vec<Tensor> = (0..6)
+        .map(|i| random_planes(4 + 3 * i, 30 + 17 * i, 0.1 + 0.12 * i as f64, &mut rng))
+        .collect();
+    for name in ["packed", "bitplane", "incremental", "delta"] {
+        let est = estimator_by_name(name).unwrap();
+        assert!(est.scores_packed_manhattan(), "{name}");
+        for t in &tiles {
+            assert_eq!(
+                est.nf_sum(t, &physics).unwrap().to_bits(),
+                Analytic.nf_sum(t, &physics).unwrap().to_bits(),
+                "{name} nf_sum"
+            );
+            assert_eq!(
+                est.nf_mean(t, &physics).unwrap().to_bits(),
+                Analytic.nf_mean(t, &physics).unwrap().to_bits(),
+                "{name} nf_mean"
+            );
+            let a = est.nf_per_col(t, &physics).unwrap();
+            let b = Analytic.nf_per_col(t, &physics).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name} nf_per_col");
+            }
+        }
+    }
+}
+
+/// Property: packed row/column permutations commute with packing — the
+/// permuted bitmasks equal the packed permuted tensor, so plan application
+/// on bitmasks (the pipeline fast path) can never drift from the tensors.
+#[test]
+fn packed_permutes_match_tensor_permutes() {
+    propcheck(
+        PropConfig { cases: 64, seed: 0xB17_0003, max_size: 40 },
+        |rng, size| {
+            let rows = 1 + rng.below(size as u64) as usize;
+            let cols = 1 + rng.below((96 + size) as u64) as usize;
+            let t = random_planes(rows, cols, rng.uniform_range(0.05, 0.6), rng);
+            let rp = rng.permutation(rows);
+            let cp = rng.permutation(cols);
+            (t, rp, cp)
+        },
+        |(t, rp, cp)| {
+            let via_tensor = PackedPlanes::from_tensor(
+                &t.permute_rows(rp)
+                    .map_err(|e| e.to_string())?
+                    .permute_cols(cp)
+                    .map_err(|e| e.to_string())?,
+            )
+            .map_err(|e| e.to_string())?;
+            let via_packed = PackedPlanes::from_tensor(t)
+                .map_err(|e| e.to_string())?
+                .permute_rows(rp)
+                .map_err(|e| e.to_string())?
+                .permute_cols(cp)
+                .map_err(|e| e.to_string())?;
+            if via_packed != via_tensor {
+                return Err("permuted bitmasks diverged from packed permuted tensor".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The `testsupport` bit-plane generator honours its density profile: with
+/// a low-order-dense profile, higher-order planes (lower plane index — bit
+/// 0 is the highest order in this repo's slicing) are strictly sparser in
+/// expectation, and the kernels stay bitwise exact on its output.
+#[test]
+fn generated_bit_sliced_tiles_are_low_order_dense_and_score_exactly() {
+    let k = 8;
+    let densities = low_order_dense_densities(k, 0.5, 0.5);
+    for b in 1..k {
+        assert!(densities[b] > densities[b - 1], "profile must decay toward the MSB");
+    }
+    let mut rng = Xoshiro256::seeded(0xB17_0004);
+    let t = random_bit_sliced_planes(&mut rng, 96, 64, &densities);
+    assert_eq!(t.shape(), &[96, 64 * k]);
+    check_bitwise(&t, 2.5 / 300e3).unwrap();
+    // Empirical per-plane activity: the MSB plane (bit 0) must be much
+    // sparser than the LSB plane (bit k-1).
+    let plane_count = |b: usize| -> usize {
+        let mut n = 0;
+        for j in 0..t.rows() {
+            for c in (b..t.cols()).step_by(k) {
+                if t.at2(j, c) != 0.0 {
+                    n += 1;
+                }
+            }
+        }
+        n
+    };
+    let msb = plane_count(0);
+    let lsb = plane_count(k - 1);
+    assert!(
+        (msb as f64) < 0.25 * lsb as f64,
+        "MSB plane ({msb} active) should be far sparser than LSB ({lsb})"
+    );
+}

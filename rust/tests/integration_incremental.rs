@@ -1,0 +1,232 @@
+//! Integration suite for the incremental row-move re-scorer
+//! (`nf::packed::IncrementalNf`) and its consumers: random swap/move
+//! sequences must re-score bitwise identically to a from-scratch packed
+//! (and scalar) re-score after **every** step, at any thread count, and
+//! the `swap-search` strategy built on it must behave deterministically.
+//! No artifacts required.
+
+use mdm_cim::mdm::{plan_tile, strategy_by_name, strategy_names, SlicedTile};
+use mdm_cim::nf::estimator::{estimator_by_name, Analytic, NfEstimator};
+use mdm_cim::nf::manhattan_nf_sum;
+use mdm_cim::nf::packed::{IncrementalNf, PackedPlanes};
+use mdm_cim::parallel::{self, ParallelConfig};
+use mdm_cim::rng::Xoshiro256;
+use mdm_cim::tensor::Tensor;
+use mdm_cim::testsupport::{
+    low_order_dense_densities, propcheck, random_bit_sliced_planes, PropConfig,
+};
+use mdm_cim::CrossbarPhysics;
+
+/// A deterministic swap/move sequence: `(is_swap, a, b)` per step.
+fn op_sequence(rows: usize, steps: usize, seed: u64) -> Vec<(bool, usize, usize)> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..steps)
+        .map(|_| {
+            (rng.bernoulli(0.5), rng.below(rows as u64) as usize, rng.below(rows as u64) as usize)
+        })
+        .collect()
+}
+
+/// Replay `ops` on a fresh session over `t`, checking after every step that
+/// the incremental aggregate equals a from-scratch packed re-score and the
+/// scalar walk of the materialized permuted tensor — bitwise.
+fn replay_and_check(t: &Tensor, ops: &[(bool, usize, usize)], ratio: f64) -> Result<(), String> {
+    let p = PackedPlanes::from_tensor(t).map_err(|e| e.to_string())?;
+    let mut inc = IncrementalNf::new(&p);
+    let mut order: Vec<usize> = (0..t.rows()).collect();
+    for (si, &(is_swap, a, b)) in ops.iter().enumerate() {
+        if is_swap {
+            inc.swap(a, b);
+            order.swap(a, b);
+        } else {
+            inc.move_row(a, b);
+            if a != b {
+                let row = order.remove(a);
+                order.insert(b, row);
+            }
+        }
+        if inc.order() != &order[..] {
+            return Err(format!("step {si}: order diverged"));
+        }
+        let full = p.permute_rows(&order).map_err(|e| e.to_string())?;
+        if inc.aggregate() != full.aggregate_manhattan() {
+            return Err(format!(
+                "step {si}: aggregate {} vs full packed {}",
+                inc.aggregate(),
+                full.aggregate_manhattan()
+            ));
+        }
+        if inc.nf_sum(ratio).to_bits() != full.nf_sum(ratio).to_bits() {
+            return Err(format!("step {si}: nf_sum diverged from packed re-score"));
+        }
+        let scalar =
+            manhattan_nf_sum(&t.permute_rows(&order).map_err(|e| e.to_string())?, ratio);
+        if inc.nf_sum(ratio).to_bits() != scalar.to_bits() {
+            return Err(format!("step {si}: nf_sum diverged from scalar re-score"));
+        }
+        if inc.nf_mean(ratio).to_bits() != full.nf_mean(ratio).to_bits() {
+            return Err(format!("step {si}: nf_mean diverged"));
+        }
+    }
+    Ok(())
+}
+
+/// Property: over random low-order-dense tiles and random swap/move
+/// sequences, the incremental session re-scores exactly (packed AND scalar
+/// agreement after every single step).
+#[test]
+fn incremental_rescore_is_exact_through_random_op_sequences() {
+    propcheck(
+        PropConfig { cases: 48, seed: 0x19C0_0001, max_size: 24 },
+        |rng, size| {
+            let rows = 2 + rng.below((2 + size) as u64) as usize;
+            let k = 1 + rng.below(8) as usize;
+            let densities = low_order_dense_densities(k, rng.uniform_range(0.2, 0.6), 0.5);
+            let n_weights = 1 + rng.below((8 + size) as u64) as usize;
+            let t = random_bit_sliced_planes(rng, rows, n_weights, &densities);
+            let steps = 8 + rng.below(40) as usize;
+            let ops = op_sequence(rows, steps, rng.next_u64());
+            let ratio = 10f64.powf(rng.uniform_range(-8.0, -2.0));
+            (t, ops, ratio)
+        },
+        |(t, ops, ratio)| replay_and_check(t, ops, *ratio),
+    );
+}
+
+/// Determinism gate: a batch of incremental sessions (one per tile, each
+/// replaying its own deterministic op sequence) produces bitwise-identical
+/// final scores at 1/2/4/8 threads — the same contract the estimator
+/// suite enforces for the circuit cache.
+#[test]
+fn incremental_batch_is_bitwise_deterministic_at_any_thread_count() {
+    let ratio = 2.5 / 300e3;
+    let mut rng = Xoshiro256::seeded(0x19C0_0002);
+    let densities = low_order_dense_densities(8, 0.5, 0.5);
+    let tiles: Vec<(Tensor, Vec<(bool, usize, usize)>)> = (0..12)
+        .map(|i| {
+            let rows = 8 + (i % 5) * 3;
+            let t = random_bit_sliced_planes(&mut rng, rows, 6 + i, &densities);
+            let ops = op_sequence(rows, 64, 0xA5A5 + i as u64);
+            (t, ops)
+        })
+        .collect();
+    let score = |(t, ops): &(Tensor, Vec<(bool, usize, usize)>)| -> anyhow::Result<f64> {
+        let p = PackedPlanes::from_tensor(t)?;
+        let mut inc = IncrementalNf::new(&p);
+        for &(is_swap, a, b) in ops {
+            if is_swap {
+                inc.swap(a, b);
+            } else {
+                inc.move_row(a, b);
+            }
+        }
+        Ok(inc.nf_sum(ratio))
+    };
+    let reference = parallel::try_map(&ParallelConfig::serial(), &tiles, score).unwrap();
+    for threads in [1usize, 2, 4, 8] {
+        let got =
+            parallel::try_map(&ParallelConfig::with_threads(threads), &tiles, score).unwrap();
+        assert_eq!(got.len(), reference.len());
+        for (a, b) in got.iter().zip(&reference) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads = {threads}");
+        }
+    }
+}
+
+/// The `incremental` registry backend's batch entry points are bitwise
+/// identical to `analytic` at several thread counts.
+#[test]
+fn incremental_backend_batches_match_analytic() {
+    let physics = CrossbarPhysics::default();
+    let mut rng = Xoshiro256::seeded(0x19C0_0003);
+    let densities = low_order_dense_densities(8, 0.45, 0.5);
+    let tiles: Vec<Tensor> =
+        (0..9).map(|i| random_bit_sliced_planes(&mut rng, 6 + i, 8, &densities)).collect();
+    let est = estimator_by_name("incremental").unwrap();
+    let sums = Analytic.nf_sum_batch(&tiles, &physics, &ParallelConfig::serial()).unwrap();
+    let means = Analytic.nf_mean_batch(&tiles, &physics, &ParallelConfig::serial()).unwrap();
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ParallelConfig::with_threads(threads);
+        let s = est.nf_sum_batch(&tiles, &physics, &pool).unwrap();
+        let m = est.nf_mean_batch(&tiles, &physics, &pool).unwrap();
+        for (a, b) in s.iter().zip(&sums) {
+            assert_eq!(a.to_bits(), b.to_bits(), "sum, threads = {threads}");
+        }
+        for (a, b) in m.iter().zip(&means) {
+            assert_eq!(a.to_bits(), b.to_bits(), "mean, threads = {threads}");
+        }
+    }
+}
+
+fn random_tile(rows: usize, n_weights: usize, seed: u64) -> SlicedTile {
+    let mut rng = Xoshiro256::seeded(seed);
+    let densities = low_order_dense_densities(8, 0.5, 0.5);
+    SlicedTile::from_planes(random_bit_sliced_planes(&mut rng, rows, n_weights, &densities))
+        .unwrap()
+}
+
+/// `swap-search` is registered, parses its budget parameter, and converges
+/// to the MDM objective value: with a generous budget, the searched plan's
+/// NF ties the closed-form `mdm` sort bitwise (rearrangement optimality of
+/// adjacent-swap hill climbing on the Manhattan objective).
+#[test]
+fn swap_search_registry_and_convergence() {
+    assert!(strategy_names().iter().any(|(n, _)| *n == "swap-search"));
+    assert_eq!(strategy_by_name("swap-search").unwrap().name(), "swap-search");
+    assert_eq!(strategy_by_name("swap_search").unwrap().name(), "swap-search");
+    assert_eq!(strategy_by_name("swap-search:25").unwrap().name(), "swap-search");
+    assert!(strategy_by_name("swap-search:abc").is_err());
+
+    let physics = CrossbarPhysics::default();
+    let ratio = physics.parasitic_ratio();
+    for seed in [1u64, 2, 3] {
+        let tile = random_tile(24, 8, seed);
+        let mdm = plan_tile(strategy_by_name("mdm").unwrap().as_ref(), &tile);
+        let searched =
+            plan_tile(strategy_by_name("swap-search:10000").unwrap().as_ref(), &tile);
+        assert_eq!(searched.rows(), tile.rows());
+        assert_eq!(searched.cols(), tile.cols());
+        let nf_mdm = manhattan_nf_sum(&mdm.apply(&tile.planes).unwrap(), ratio);
+        let nf_search = manhattan_nf_sum(&searched.apply(&tile.planes).unwrap(), ratio);
+        assert_eq!(
+            nf_search.to_bits(),
+            nf_mdm.to_bits(),
+            "seed {seed}: searched {nf_search} vs mdm {nf_mdm}"
+        );
+    }
+}
+
+/// `budget_ms: 0` deterministically returns the dataflow-only baseline
+/// (identity row order at the reversed dataflow) — no search at all.
+#[test]
+fn swap_search_zero_budget_is_the_dataflow_baseline() {
+    let tile = random_tile(16, 6, 9);
+    let plan = plan_tile(strategy_by_name("swap-search:0").unwrap().as_ref(), &tile);
+    let identity: Vec<usize> = (0..tile.rows()).collect();
+    assert_eq!(plan.row_perm(), &identity[..]);
+    let reversed = plan_tile(strategy_by_name("reversed").unwrap().as_ref(), &tile);
+    assert_eq!(plan.col_perm(), reversed.col_perm());
+    assert_eq!(plan.row_perm(), reversed.row_perm());
+}
+
+/// A converged `swap-search` run is deterministic: two plans of the same
+/// tile are identical, and never score worse than the identity baseline.
+#[test]
+fn swap_search_is_deterministic_and_never_hurts() {
+    let physics = CrossbarPhysics::default();
+    let ratio = physics.parasitic_ratio();
+    let strategy = strategy_by_name("swap-search:10000").unwrap();
+    for seed in [11u64, 12] {
+        let tile = random_tile(20, 7, seed);
+        let a = plan_tile(strategy.as_ref(), &tile);
+        let b = plan_tile(strategy.as_ref(), &tile);
+        assert_eq!(a, b, "seed {seed}: converged plans must be identical");
+        let baseline = plan_tile(strategy_by_name("reversed").unwrap().as_ref(), &tile);
+        let nf_search = manhattan_nf_sum(&a.apply(&tile.planes).unwrap(), ratio);
+        let nf_base = manhattan_nf_sum(&baseline.apply(&tile.planes).unwrap(), ratio);
+        assert!(
+            nf_search <= nf_base,
+            "seed {seed}: search {nf_search} must not exceed baseline {nf_base}"
+        );
+    }
+}
