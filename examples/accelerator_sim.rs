@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
                 geometry: TileGeometry::new(tile, tile, 8)?,
                 fwd_batch: 16,
                 solver_parallel: mdm_cim::parallel::ParallelConfig::default(),
+                artifact_store: None,
             };
             let server = Server::start(
                 &artifacts,

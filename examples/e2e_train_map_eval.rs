@@ -101,6 +101,7 @@ fn main() -> anyhow::Result<()> {
                 geometry,
                 fwd_batch: 16,
                 solver_parallel: mdm_cim::parallel::ParallelConfig::default(),
+                artifact_store: None,
             },
         )?;
         let acc = engine.accuracy(&test)?;

@@ -119,6 +119,7 @@ fn main() -> anyhow::Result<()> {
                 geometry: TileGeometry::paper_eval(),
                 fwd_batch: 16,
                 solver_parallel: mdm_cim::parallel::ParallelConfig::default(),
+                artifact_store: None,
             },
         )?;
         let test = ArtifactStore::open("artifacts")?.data("test")?;
@@ -138,6 +139,8 @@ fn main() -> anyhow::Result<()> {
                     geometry: TileGeometry::paper_eval(),
                     fwd_batch: 16,
                     solver_parallel: mdm_cim::parallel::ParallelConfig::default(),
+                    // Cold on purpose: this measures the full programming path.
+                    artifact_store: None,
                 },
             )
             .unwrap();

@@ -345,6 +345,51 @@ impl ServeSettings {
     }
 }
 
+/// Typed compile-artifact-store configuration (`[artifacts]` section),
+/// consumed wherever a [`crate::runtime::CompileArtifactStore`] is opened
+/// (`mdm serve`, `mdm bench --artifacts`, `mdm artifacts {list,gc,verify}`).
+#[derive(Debug, Clone)]
+pub struct ArtifactSettings {
+    /// On-disk store directory.
+    pub dir: String,
+    /// Whether warm starts are enabled at all (`--no-store` overrides).
+    pub enabled: bool,
+    /// GC size budget in bytes; 0 = unbounded.
+    pub max_bytes: u64,
+    /// GC age budget in days; 0 = unbounded.
+    pub max_age_days: u64,
+}
+
+impl Default for ArtifactSettings {
+    fn default() -> Self {
+        Self { dir: "runtime/artifacts".into(), enabled: true, max_bytes: 0, max_age_days: 0 }
+    }
+}
+
+impl ArtifactSettings {
+    /// Build from `[artifacts]` section with defaults.
+    pub fn from_config(c: &Config) -> Self {
+        let d = Self::default();
+        Self {
+            dir: c.str_or("artifacts", "dir", &d.dir),
+            enabled: c.bool_or("artifacts", "enabled", d.enabled),
+            // Negative budgets are nonsense; clamp to 0 = unbounded rather
+            // than wrapping through `as u64`.
+            max_bytes: c.int_or("artifacts", "max_bytes", d.max_bytes as i64).max(0) as u64,
+            max_age_days: c.int_or("artifacts", "max_age_days", d.max_age_days as i64).max(0)
+                as u64,
+        }
+    }
+
+    /// The GC budgets as [`crate::runtime::CompileArtifactStore::gc`]
+    /// arguments (`None` = unbounded).
+    pub fn gc_budgets(&self) -> (Option<u64>, Option<u64>) {
+        let bytes = (self.max_bytes > 0).then_some(self.max_bytes);
+        let age_secs = (self.max_age_days > 0).then_some(self.max_age_days * 86_400);
+        (bytes, age_secs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -440,6 +485,26 @@ label = "a # not a comment"
         // Nonsense values clamp to 1 instead of wrapping.
         let c = Config::parse("[serve]\nwave_rows = -4").unwrap();
         assert_eq!(ServeSettings::from_config(&c).wave_rows, 1);
+    }
+
+    #[test]
+    fn artifacts_section_parsed_with_defaults() {
+        let c = Config::parse(
+            "[artifacts]\ndir = \"/tmp/store\"\nenabled = false\nmax_bytes = 1024\nmax_age_days = 7",
+        )
+        .unwrap();
+        let s = ArtifactSettings::from_config(&c);
+        assert_eq!(s.dir, "/tmp/store");
+        assert!(!s.enabled);
+        assert_eq!(s.gc_budgets(), (Some(1024), Some(7 * 86_400)));
+        // Unspecified keys fall back: enabled, unbounded budgets.
+        let d = ArtifactSettings::from_config(&Config::default());
+        assert_eq!(d.dir, "runtime/artifacts");
+        assert!(d.enabled);
+        assert_eq!(d.gc_budgets(), (None, None));
+        // Negative budgets clamp to unbounded instead of wrapping.
+        let c = Config::parse("[artifacts]\nmax_bytes = -5").unwrap();
+        assert_eq!(ArtifactSettings::from_config(&c).gc_budgets().0, None);
     }
 
     #[test]

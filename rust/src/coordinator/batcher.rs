@@ -7,6 +7,7 @@
 //! degenerates to this under our per-request row granularity).
 
 use super::InferenceRequest;
+use anyhow::Context;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -115,13 +116,28 @@ pub fn next_batch_until(
 }
 
 /// Concatenate the requests' inputs into one `[rows, f]` tensor.
-pub fn concat_inputs(batch: &Batch) -> crate::tensor::Tensor {
-    let f = batch.requests[0].x.cols();
+///
+/// Errors (instead of panicking the worker) when the batch is empty or its
+/// requests disagree on the feature width — a malformed request that slipped
+/// past admission fails its batch, not the server.
+pub fn concat_inputs(batch: &Batch) -> anyhow::Result<crate::tensor::Tensor> {
+    let first = batch
+        .requests
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("cannot concatenate an empty batch"))?;
+    let f = first.x.cols();
     let mut data = Vec::with_capacity(batch.rows * f);
     for req in &batch.requests {
+        anyhow::ensure!(
+            req.x.cols() == f,
+            "request {} has {} features, batch started with {f}",
+            req.id,
+            req.x.cols()
+        );
         data.extend_from_slice(req.x.data());
     }
-    crate::tensor::Tensor::new(&[batch.rows, f], data).expect("consistent rows")
+    crate::tensor::Tensor::new(&[batch.rows, f], data)
+        .context("assembling batch input tensor")
 }
 
 #[cfg(test)]
@@ -327,10 +343,27 @@ mod tests {
         tx.send(r1).unwrap();
         tx.send(r2).unwrap();
         let b = next_batch(&rx, 10, Duration::from_millis(5)).unwrap();
-        let x = concat_inputs(&b);
+        let x = concat_inputs(&b).unwrap();
         assert_eq!(x.shape(), &[3, 4]);
         assert_eq!(x.at2(0, 0), 7.0);
         assert_eq!(x.at2(1, 0), 9.0);
         assert_eq!(x.at2(2, 0), 9.0);
+    }
+
+    #[test]
+    fn concat_rejects_mismatched_feature_widths() {
+        // A malformed request mixed into a batch must produce an error,
+        // never a worker panic.
+        let (tx, _rx_resp) = mpsc::channel();
+        let mk = |id: u64, cols: usize| InferenceRequest {
+            id,
+            x: Tensor::full(&[1, cols], id as f32),
+            submitted: Instant::now(),
+            resp: tx.clone(),
+        };
+        let batch = Batch { requests: vec![mk(1, 4), mk(2, 5)], rows: 2 };
+        let err = concat_inputs(&batch).unwrap_err();
+        assert!(err.to_string().contains("features"), "{err:#}");
+        assert!(concat_inputs(&Batch { requests: vec![], rows: 0 }).is_err());
     }
 }

@@ -15,7 +15,7 @@ use crate::mdm::{strategy_by_name, MappingStrategy};
 use crate::nf::estimator::{estimator_by_name, NfEstimator};
 use crate::parallel::ParallelConfig;
 use crate::pipeline::Pipeline;
-use crate::runtime::{ArtifactStore, CompiledModule};
+use crate::runtime::{ArtifactStore, CompileArtifactStore, CompiledModule};
 use crate::tensor::Tensor;
 use anyhow::{ensure, Context, Result};
 use std::sync::{Arc, OnceLock};
@@ -87,6 +87,10 @@ pub struct EngineConfig {
     /// narrow (CLI: `mdm serve --solver-threads N`). Programming results are
     /// bitwise independent of this setting.
     pub solver_parallel: ParallelConfig,
+    /// Persistent compile-artifact store for programmed-layer warm starts
+    /// (`None` = always compile cold). Shared across a server's workers so
+    /// one worker's compile warms every restart.
+    pub artifact_store: Option<Arc<CompileArtifactStore>>,
 }
 
 impl EngineConfig {
@@ -100,6 +104,7 @@ impl EngineConfig {
             geometry: TileGeometry::paper_eval(),
             fwd_batch: 16,
             solver_parallel: ParallelConfig::default(),
+            artifact_store: None,
         }
     }
 
@@ -113,6 +118,7 @@ impl EngineConfig {
             geometry: TileGeometry::paper_eval(),
             fwd_batch: 16,
             solver_parallel: ParallelConfig::default(),
+            artifact_store: None,
         })
     }
 }
@@ -155,7 +161,8 @@ impl Engine {
             .strategy_impl(config.strategy.clone())
             .estimator_impl(config.estimator.clone())
             .eta_signed(config.eta_signed)
-            .parallel(config.solver_parallel);
+            .parallel(config.solver_parallel)
+            .artifact_store_opt(config.artifact_store.clone());
         let mut programmed = Vec::with_capacity(desc.layers.len());
         let mut cost = TileCost::default();
         for (i, l) in desc.layers.iter().enumerate() {

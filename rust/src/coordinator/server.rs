@@ -125,7 +125,12 @@ impl Server {
                             engine.as_ref().map(|e| *e.unit_cost()).unwrap_or_default();
                         loop {
                             let batch = {
-                                let rx = work_rx.lock().expect("work queue lock");
+                                // Poison-tolerant: a sibling worker that
+                                // panicked while holding the lock must not
+                                // wedge the rest of the pool.
+                                let rx = work_rx
+                                    .lock()
+                                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                                 match rx.recv() {
                                     Ok(b) => b,
                                     Err(_) => break,
@@ -135,7 +140,19 @@ impl Server {
                                 Metrics::bump(&metrics.failed, batch.requests.len() as u64);
                                 continue;
                             };
-                            let x = concat_inputs(&batch);
+                            // A malformed batch fails its requests (dropped
+                            // responders), never the worker.
+                            let x = match concat_inputs(&batch) {
+                                Ok(x) => x,
+                                Err(err) => {
+                                    eprintln!("worker{w}: bad batch: {err:#}");
+                                    Metrics::bump(
+                                        &metrics.failed,
+                                        batch.requests.len() as u64,
+                                    );
+                                    continue;
+                                }
+                            };
                             match engine.infer(&x) {
                                 Ok(logits) => {
                                     Metrics::bump(&metrics.rows, batch.rows as u64);
@@ -151,10 +168,19 @@ impl Server {
                                     for req in batch.requests {
                                         let n = req.x.rows();
                                         let rows: Vec<usize> = (row..row + n).collect();
-                                        let part = logits
-                                            .permute_rows(&rows)
-                                            .expect("rows in range");
                                         row += n;
+                                        let part = match logits.permute_rows(&rows) {
+                                            Ok(p) => p,
+                                            Err(err) => {
+                                                // Short logits fail this
+                                                // request, not the worker.
+                                                eprintln!(
+                                                    "worker{w}: response slice failed: {err:#}"
+                                                );
+                                                Metrics::bump(&metrics.failed, 1);
+                                                continue;
+                                            }
+                                        };
                                         let latency_us =
                                             req.submitted.elapsed().as_micros() as u64;
                                         metrics.latency.record(latency_us);

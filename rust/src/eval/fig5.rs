@@ -18,9 +18,10 @@ use crate::parallel::{self, ParallelConfig};
 use crate::pipeline::Pipeline;
 use crate::report;
 use crate::rng::Xoshiro256;
-use crate::runtime::ArtifactStore;
+use crate::runtime::{ArtifactKey, ArtifactKind, ArtifactStore, CompileArtifactStore, KeyHasher};
 use anyhow::Result;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Per-model Fig. 5 row.
 #[derive(Debug, Clone)]
@@ -79,6 +80,11 @@ pub struct Fig5Config {
     /// Worker pool, split across the four {dataflow} × {row order} sweep
     /// points (each point's tile sampling runs on its share of the pool).
     pub parallel: ParallelConfig,
+    /// Persistent compile-artifact store: per-model sweep results found
+    /// here (keyed over the weights, geometry, estimator, and sampling
+    /// parameters) are reused instead of re-scored, and fresh results are
+    /// published back (`None` = always re-score).
+    pub store: Option<Arc<CompileArtifactStore>>,
 }
 
 impl Default for Fig5Config {
@@ -91,6 +97,7 @@ impl Default for Fig5Config {
             artifacts_dir: None,
             estimator: "analytic".into(),
             parallel: ParallelConfig::default(),
+            store: None,
         }
     }
 }
@@ -98,6 +105,30 @@ impl Default for Fig5Config {
 /// The {dataflow} × {row order} grid, as registry strategy names, in
 /// `[conv_identity, conv_mdm, rev_identity, rev_mdm]` order.
 const GRID: [&str; 4] = ["conventional", "sort_only", "reversed", "mdm"];
+
+/// Sweep-result artifact key of one model's four-point grid: everything
+/// that determines the scores — the sampled weights themselves, the
+/// geometry, the estimator, the sampling parameters, and the grid — so a
+/// changed config never resolves to a stale result.
+fn sweep_key(cfg: &Fig5Config, model: &str, weights: &ModelWeights) -> ArtifactKey {
+    let mut h = KeyHasher::new();
+    h.str("fig5-sweep");
+    h.str(model);
+    h.usize(cfg.geometry.rows);
+    h.usize(cfg.geometry.cols);
+    h.usize(cfg.geometry.k_bits);
+    h.str(&cfg.estimator);
+    h.usize(cfg.tiles_per_layer);
+    h.u64(cfg.seed);
+    for (w, desc) in weights.layers.iter().zip(&weights.desc.layers) {
+        h.tensor(w);
+        h.usize(desc.count);
+    }
+    for strategy in GRID {
+        h.str(strategy);
+    }
+    ArtifactKey::new(ArtifactKind::Sweep, &h)
+}
 
 /// Mean tile NF of a whole model under one pipeline (layers weighted by
 /// their zoo repeat count).
@@ -140,19 +171,41 @@ pub fn run(cfg: &Fig5Config, results_dir: &Path) -> Result<Vec<Fig5Row>> {
         } else {
             ModelWeights::synthesize(&desc, cfg.seed)?
         };
-        // The four sweep points are independent (each draws its own rng so
-        // all configs see the same tile sample); fan them out and hand each
-        // point an equal share of the worker pool for its tile sampling
-        // (floor division so the total stays within the requested budget).
-        let share = ParallelConfig::with_threads(cfg.parallel.threads / GRID.len());
-        let nf = parallel::try_map(&cfg.parallel, &GRID, |strategy| {
-            let pipeline = Pipeline::new(cfg.geometry)
-                .strategy(strategy)?
-                .estimator(&cfg.estimator)?
-                .parallel(share);
-            let mut rng = Xoshiro256::seeded(cfg.seed ^ 0xF165);
-            model_nf(&weights, &pipeline, cfg.tiles_per_layer, &mut rng)
-        })?;
+        // Already-scored configs skip the whole grid: the sweep key covers
+        // the weights and every scoring parameter, so a hit is exactly the
+        // result this run would recompute.
+        let key = cfg.store.as_ref().map(|_| sweep_key(cfg, name, &weights));
+        let cached = match (cfg.store.as_deref(), key) {
+            (Some(store), Some(key)) => {
+                store.load_sweep(&key).filter(|v| v.len() == GRID.len())
+            }
+            _ => None,
+        };
+        let nf = match cached {
+            Some(v) => v,
+            None => {
+                // The four sweep points are independent (each draws its own
+                // rng so all configs see the same tile sample); fan them out
+                // and hand each point an equal share of the worker pool for
+                // its tile sampling (floor division so the total stays
+                // within the requested budget).
+                let share = ParallelConfig::with_threads(cfg.parallel.threads / GRID.len());
+                let nf = parallel::try_map(&cfg.parallel, &GRID, |strategy| {
+                    let pipeline = Pipeline::new(cfg.geometry)
+                        .strategy(strategy)?
+                        .estimator(&cfg.estimator)?
+                        .parallel(share);
+                    let mut rng = Xoshiro256::seeded(cfg.seed ^ 0xF165);
+                    model_nf(&weights, &pipeline, cfg.tiles_per_layer, &mut rng)
+                })?;
+                if let (Some(store), Some(key)) = (cfg.store.as_deref(), key) {
+                    if let Err(e) = store.store_sweep(&key, &nf) {
+                        eprintln!("warning: could not persist fig5 sweep result: {e:#}");
+                    }
+                }
+                nf
+            }
+        };
         rows.push(Fig5Row {
             model: name.clone(),
             nf_conv_identity: nf[0],
@@ -222,6 +275,34 @@ mod tests {
             rows[0].reduction_full(),
             rows[1].reduction_full()
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fig5_sweep_cache_skips_rescoring_bitwise() {
+        let dir = std::env::temp_dir().join(format!("fig5_cache_{}", std::process::id()));
+        let store_dir = dir.join("artifact-store");
+        let store = Arc::new(CompileArtifactStore::open(&store_dir).unwrap());
+        let cfg = Fig5Config {
+            models: vec!["resnet18".into()],
+            tiles_per_layer: 2,
+            store: Some(store.clone()),
+            ..Default::default()
+        };
+        let cold = run(&cfg, &dir).unwrap();
+        assert_eq!(store.stats().stores, 1);
+        let warm = run(&cfg, &dir).unwrap();
+        assert!(store.stats().hits >= 1, "{:?}", store.stats());
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.nf_conv_identity.to_bits(), b.nf_conv_identity.to_bits());
+            assert_eq!(a.nf_conv_mdm.to_bits(), b.nf_conv_mdm.to_bits());
+            assert_eq!(a.nf_rev_identity.to_bits(), b.nf_rev_identity.to_bits());
+            assert_eq!(a.nf_rev_mdm.to_bits(), b.nf_rev_mdm.to_bits());
+        }
+        // A different sampling budget must re-key, not resolve stale.
+        let other = Fig5Config { tiles_per_layer: 3, ..cfg.clone() };
+        run(&other, &dir).unwrap();
+        assert_eq!(store.stats().stores, 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -80,6 +80,7 @@ pub fn run(
                 geometry,
                 fwd_batch: 16,
                 solver_parallel: ParallelConfig::serial(),
+                artifact_store: None,
             };
             Engine::program(artifacts_dir, cfg)?.accuracy(&test)
         })?;
@@ -139,6 +140,7 @@ pub fn run_eta_sweep(
                 geometry,
                 fwd_batch: 16,
                 solver_parallel: ParallelConfig::serial(),
+                artifact_store: None,
             },
         )?;
         engine.accuracy(&test)

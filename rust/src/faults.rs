@@ -231,6 +231,12 @@ impl MappingStrategy for FaultAware {
             fault_aware_row_remap(tile, &self.faults).expect("fault map must match tile shape");
         MappingPlan::new(remap, (0..tile.cols()).collect())
     }
+
+    fn artifact_token(&self) -> Option<String> {
+        // Plans depend on the measured fault map of one physical crossbar,
+        // which no portable token can identify — never cache.
+        None
+    }
 }
 
 #[cfg(test)]

@@ -17,6 +17,7 @@
 //! mdm strategies                                mapping-strategy registry
 //! mdm netlist   [--rows J] [--cols K]           SPICE deck export
 //! mdm info                                      artifact/manifest summary
+//! mdm artifacts <list|gc|verify>                compile-artifact store admin
 //! ```
 //!
 //! Common flags: `--config path.toml`, `--results dir`, `--artifacts dir`,
@@ -24,15 +25,17 @@
 //! parser below (rust/DESIGN.md §5).
 
 use anyhow::{bail, Context, Result};
-use mdm_cim::config::{ChipSettings, Config, ExperimentConfig, ServeSettings};
+use mdm_cim::config::{ArtifactSettings, ChipSettings, Config, ExperimentConfig, ServeSettings};
 use mdm_cim::coordinator::{EngineConfig, ModelKind};
 use mdm_cim::crossbar::TileGeometry;
 use mdm_cim::serve;
 use mdm_cim::mdm::{plan_tile, strategy_by_name, strategy_names};
 use mdm_cim::report;
+use mdm_cim::runtime::CompileArtifactStore;
 use mdm_cim::{eval, CrossbarPhysics};
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Parsed command line: subcommand + `--key value` flags.
 struct Args {
@@ -166,6 +169,7 @@ fn main() -> Result<()> {
         "netlist" => cmd_netlist(&args),
         "info" => cmd_info(&args),
         "doctor" => cmd_doctor(&args),
+        "artifacts" => cmd_artifacts(&args),
         other => bail!("unknown command {other:?}; see `mdm help`"),
     }
 }
@@ -233,8 +237,10 @@ commands (paper experiment in brackets):
                  each), waves refill as workers drain them, per-tenant
                  quotas + queue-depth shedding (--workers --wave-rows
                  --quota --shed-rows, also `[serve]` in a config file;
-                 persists <results>/serve_metrics.json; --chip adds
-                 per-worker chip placement attribution)
+                 persists <results>/serve_metrics.json with compile-store
+                 hit/miss counters; --chip adds per-worker chip placement
+                 attribution; restarts warm-start programmed layers from
+                 the compile-artifact store, see `artifacts`)
   loadtest       SLO sweep of the serving tier on synthetic pipeline
                  models (no artifacts needed): open-loop Poisson rates +
                  closed-loop clients -> BENCH_serve_slo.json with
@@ -251,7 +257,11 @@ commands (paper experiment in brackets):
                  incremental Manhattan kernels + per-step row-move
                  re-scoring, every step verified bitwise ->
                  BENCH_bitplane.json (--model NAME --tiles N --tile N
-                 --search-tiles N --moves N --repeats N)
+                 --search-tiles N --moves N --repeats N); with
+                 --warm-start: cold vs warm model compile through a fresh
+                 compile-artifact store, gating bitwise identity, a
+                 perfect warm hit-rate, and warm wall < cold ->
+                 BENCH_artifacts.json
   place          chip placement sweep: tile sizes x placers x strategies
                  -> BENCH_chip_place.json (--tiles 32,64 --placer
                  firstfit,skyline,maxrects,nf_aware --strategies a,b
@@ -262,6 +272,13 @@ commands (paper experiment in brackets):
   netlist        export a SPICE .cir deck of a crossbar
   info           artifact manifest summary
   doctor         verify artifacts, kernel/oracle agreement, engines
+  artifacts      administer the persistent compile-artifact store:
+                 `list` prints resident artifacts (largest first), `gc`
+                 collects to the `[artifacts]` budgets (--max-bytes N
+                 --max-age-days D; keys referenced by the running config
+                 are never deleted), `verify` recompiles one layer cold
+                 and compares it bitwise against the stored artifact
+                 (--model NAME --layer N)
 
 common flags: --config f.toml --results DIR --artifacts DIR --seed N
               --eta X --tile N --models a,b,c --strategy NAME
@@ -271,6 +288,9 @@ common flags: --config f.toml --results DIR --artifacts DIR --seed N
               `[nf] estimator`)
               --threads N (solver worker pool; default = all cores,
               also `[runtime] threads` in a config file)
+              --store DIR / --no-store (compile-artifact store for
+              warm-started layer programming; default runtime/artifacts,
+              also `[artifacts]` in a config file)
 ";
 
 fn cmd_estimators(_args: &Args) -> Result<()> {
@@ -373,6 +393,9 @@ fn cmd_nf(args: &Args) -> Result<()> {
         artifacts_dir: Some(cfg.artifacts_dir.clone()),
         estimator: cfg.estimator.clone(),
         parallel: mdm_cim::parallel::ParallelConfig::default(),
+        // Persist the scored sweep: re-runs with unchanged inputs skip
+        // straight to the cached per-strategy NF vector.
+        store: compile_store(args)?,
     };
     println!("Fig. 5 — NF reduction with MDM (tile {0}x{0})", cfg.tile_size);
     let rows = eval::fig5::run(&f5, Path::new(&cfg.results_dir))?;
@@ -701,6 +724,35 @@ fn serve_settings(args: &Args) -> Result<ServeSettings> {
     Ok(s)
 }
 
+/// Resolve the `[artifacts]` compile-store settings (config file +
+/// `--store DIR` / `--no-store` flag overrides).
+fn artifact_settings(args: &Args) -> Result<ArtifactSettings> {
+    let mut s = if let Some(path) = args.flags.get("config") {
+        ArtifactSettings::from_config(&Config::load(path)?)
+    } else {
+        ArtifactSettings::default()
+    };
+    if let Some(dir) = args.flags.get("store") {
+        s.dir = dir.clone();
+        s.enabled = true;
+    }
+    if args.flags.contains_key("no-store") {
+        s.enabled = false;
+    }
+    Ok(s)
+}
+
+/// Open the persistent compile-artifact store configured for this
+/// invocation, or `None` when disabled (`--no-store` / `[artifacts]
+/// enabled = false`).
+fn compile_store(args: &Args) -> Result<Option<Arc<CompileArtifactStore>>> {
+    let settings = artifact_settings(args)?;
+    if !settings.enabled {
+        return Ok(None);
+    }
+    Ok(Some(Arc::new(CompileArtifactStore::open(&settings.dir)?)))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = experiment_config(args)?;
     // Resident models (one tenant each): `--models a,b` or the legacy
@@ -748,6 +800,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let test = store.data("test")?;
     drop(store);
 
+    // Persistent compile-artifact store, shared by the probe engine and
+    // every worker factory: a restart with an unchanged config reloads
+    // each programmed layer instead of re-solving it.
+    let artifact_store = compile_store(args)?;
+    if let Some(s) = &artifact_store {
+        println!("compile-artifact store: {}", s.dir().display());
+    }
+
     // Optional chip-level cost attribution target (placement is per worker:
     // every worker of a model serves from an identical placement).
     let chip_target = if args.flags.contains_key("chip") {
@@ -776,6 +836,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             geometry,
             fwd_batch: 16,
             solver_parallel,
+            artifact_store: artifact_store.clone(),
         };
         let probe = mdm_cim::coordinator::Engine::program(&cfg.artifacts_dir, engine_cfg.clone())?;
         let unit = *probe.unit_cost();
@@ -862,6 +923,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             t.name, t.submitted, t.shed, t.completed
         );
     }
+    if let Some(s) = &artifact_store {
+        let st = s.stats();
+        println!(
+            "compile artifacts: {} hit(s), {} miss(es), {} stored, {} quarantined \
+             (hit-rate {:.0}%)",
+            st.hits,
+            st.misses,
+            st.stores,
+            st.quarantined,
+            100.0 * st.hit_rate()
+        );
+    }
 
     // Persist the snapshot so serving runs are comparable across commits
     // (same escaping/formatting path as every other emitted artifact).
@@ -915,6 +988,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 ),
             ),
         ];
+        if let Some(s) = &artifact_store {
+            let st = s.stats();
+            pairs.push(("artifact_store_dir", Json::Str(s.dir().display().to_string())));
+            pairs.push(("artifact_hits", Json::Int(st.hits as i64)));
+            pairs.push(("artifact_misses", Json::Int(st.misses as i64)));
+            pairs.push(("artifact_stores", Json::Int(st.stores as i64)));
+            pairs.push(("artifact_evictions", Json::Int(st.evictions as i64)));
+            pairs.push(("artifact_quarantined", Json::Int(st.quarantined as i64)));
+            pairs.push(("artifact_hit_rate", Json::Num(st.hit_rate())));
+        }
         if let Some(r) = &chip_attr {
             pairs.push(("chip_placer", Json::Str(r.placer.clone())));
             pairs.push(("chip_chips", Json::Int(r.chips as i64)));
@@ -993,6 +1076,9 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             parallel: mdm_cim::parallel::ParallelConfig::default(),
             chip: Some(chip),
             placer: chip_set.placer.clone(),
+            // Sweep points recompile the same models; the store turns every
+            // tier after the first into a warm start.
+            store: compile_store(args)?,
         },
         seed: cfg.seed,
     };
@@ -1103,7 +1189,9 @@ fn chip_settings(args: &Args) -> Result<ChipSettings> {
 /// With an explicit `--estimator NAME` flag: the backend comparison
 /// ([`cmd_bench_estimator`]) emitting `BENCH_nf_estimator.json`. With
 /// `--bitplane`: the packed-kernel / incremental-delta microbench
-/// ([`cmd_bench_bitplane`]) emitting `BENCH_bitplane.json`. (The
+/// ([`cmd_bench_bitplane`]) emitting `BENCH_bitplane.json`. With
+/// `--warm-start`: the compile-artifact warm-start bench
+/// ([`cmd_bench_artifacts`]) emitting `BENCH_artifacts.json`. (The
 /// `[nf] estimator` config key configures other commands' backends but
 /// deliberately does not switch bench modes — `mdm bench --config f.toml`
 /// keeps benchmarking the parallel sweep.)
@@ -1115,6 +1203,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let cfg = experiment_config(args)?;
     if args.flags.contains_key("bitplane") {
         return cmd_bench_bitplane(args, &cfg);
+    }
+    if args.flags.contains_key("warm-start") {
+        return cmd_bench_artifacts(args, &cfg);
     }
     if args.flags.contains_key("estimator") {
         return cmd_bench_estimator(args, &cfg);
@@ -1717,6 +1808,152 @@ fn cmd_bench_bitplane(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> R
     Ok(())
 }
 
+/// `mdm bench --warm-start` — the compile-artifact warm-start bench behind
+/// `BENCH_artifacts.json`: program a zoo model **cold** through a freshly
+/// cleared [`CompileArtifactStore`], program it again **warm** from the
+/// just-published artifacts, and enforce three hard gates:
+///
+/// 1. every warm layer is bitwise identical to its cold counterpart
+///    (compared on the canonical encoded payload, the same bytes
+///    `mdm artifacts verify` checks);
+/// 2. the warm pass is served entirely from the store (hit-rate 1.0,
+///    zero misses);
+/// 3. warm wall-clock is strictly below cold.
+///
+/// The warm/cold wall ratio is recorded (not gated — machine-dependent);
+/// the roadmap target is < 0.10.
+fn cmd_bench_artifacts(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> Result<()> {
+    use mdm_cim::report::Json;
+    use mdm_cim::runtime::encode_layer;
+
+    let model = args.str_or("model", "miniresnet");
+    let out_path = args.str_or("out", "BENCH_artifacts.json");
+    let geometry = TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?;
+    let desc = mdm_cim::models::model_by_name(&model)?;
+    anyhow::ensure!(
+        strategy_by_name(&cfg.strategy)?.artifact_token().is_some(),
+        "strategy `{}` opts out of artifact caching (no stable artifact token); \
+         pick a deterministic strategy to bench warm starts",
+        cfg.strategy
+    );
+
+    // A dedicated store, cleared first: the cold pass must actually be cold.
+    let default_dir = format!("{}/bench_artifact_store", cfg.results_dir);
+    let store_dir = args.str_or("store", &default_dir);
+    match std::fs::remove_dir_all(&store_dir) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => {
+            return Err(e).with_context(|| format!("clearing bench store {store_dir}"));
+        }
+    }
+    let store = Arc::new(CompileArtifactStore::open(&store_dir)?);
+
+    let pipeline = |store: Arc<CompileArtifactStore>| -> Result<mdm_cim::pipeline::Pipeline> {
+        Ok(mdm_cim::pipeline::Pipeline::new(geometry)
+            .strategy(&cfg.strategy)?
+            .estimator(&cfg.estimator)?
+            .eta_signed(cfg.eta_signed)
+            .parallel(mdm_cim::parallel::ParallelConfig::default())
+            .artifact_store(store))
+    };
+
+    println!(
+        "bench --warm-start: {model} via `{}`/`{}` into {store_dir} \
+         (tile {}x{}, {} bits, eta {:.1e})",
+        cfg.strategy, cfg.estimator, cfg.tile_size, cfg.tile_size, cfg.k_bits, cfg.eta_signed
+    );
+
+    let t0 = std::time::Instant::now();
+    let cold = pipeline(store.clone())?.compile_model(&desc, cfg.seed)?;
+    let cold_s = t0.elapsed().as_secs_f64();
+    let after_cold = store.stats();
+
+    let t1 = std::time::Instant::now();
+    let warm = pipeline(store.clone())?.compile_model(&desc, cfg.seed)?;
+    let warm_s = t1.elapsed().as_secs_f64();
+    let after_warm = store.stats();
+
+    let n_layers = cold.n_layers();
+    let warm_hits = after_warm.hits - after_cold.hits;
+    let warm_misses = after_warm.misses - after_cold.misses;
+    let warm_hit_rate = if warm_hits + warm_misses == 0 {
+        0.0
+    } else {
+        warm_hits as f64 / (warm_hits + warm_misses) as f64
+    };
+    let bitwise_identical = cold.layers.len() == warm.layers.len()
+        && cold
+            .layers
+            .iter()
+            .zip(&warm.layers)
+            .all(|(a, b)| encode_layer(a) == encode_layer(b));
+    let warm_over_cold = warm_s / cold_s.max(f64::MIN_POSITIVE);
+
+    println!(
+        "{}",
+        report::table(
+            &["pass", "wall s", "layers", "hits", "misses"],
+            &[
+                vec![
+                    "cold".into(),
+                    format!("{cold_s:.4}"),
+                    n_layers.to_string(),
+                    after_cold.hits.to_string(),
+                    after_cold.misses.to_string(),
+                ],
+                vec![
+                    "warm".into(),
+                    format!("{warm_s:.4}"),
+                    warm.n_layers().to_string(),
+                    warm_hits.to_string(),
+                    warm_misses.to_string(),
+                ],
+            ],
+        )
+    );
+    println!(
+        "warm/cold wall ratio {warm_over_cold:.3} (target < 0.10); warm bitwise identical \
+         to cold: {bitwise_identical}"
+    );
+    anyhow::ensure!(bitwise_identical, "warm-started layers diverged from the cold compile");
+    anyhow::ensure!(
+        warm_misses == 0 && warm_hits == n_layers as u64,
+        "warm pass was not fully served from the store \
+         ({warm_hits} hit(s), {warm_misses} miss(es) over {n_layers} layer(s))"
+    );
+    anyhow::ensure!(
+        warm_s < cold_s,
+        "warm compile ({warm_s:.4}s) was not faster than cold ({cold_s:.4}s)"
+    );
+
+    report::write_json_object(
+        &out_path,
+        &[
+            ("benchmark", Json::Str("artifact_warm_start".into())),
+            ("model", Json::Str(model.clone())),
+            ("strategy", Json::Str(cfg.strategy.clone())),
+            ("estimator", Json::Str(cfg.estimator.clone())),
+            ("tile", Json::Int(cfg.tile_size as i64)),
+            ("k_bits", Json::Int(cfg.k_bits as i64)),
+            ("eta_signed", Json::Num(cfg.eta_signed)),
+            ("seed", Json::Int(cfg.seed as i64)),
+            ("store_dir", Json::Str(store_dir.clone())),
+            ("n_layers", Json::Int(n_layers as i64)),
+            ("cold_wall_s", Json::Num(cold_s)),
+            ("warm_wall_s", Json::Num(warm_s)),
+            ("warm_over_cold", Json::Num(warm_over_cold)),
+            ("cold_stores", Json::Int(after_cold.stores as i64)),
+            ("warm_hits", Json::Int(warm_hits as i64)),
+            ("warm_misses", Json::Int(warm_misses as i64)),
+            ("warm_hit_rate", Json::Num(warm_hit_rate)),
+            ("bitwise_identical", Json::Bool(bitwise_identical)),
+        ],
+    )?;
+    println!("json: {out_path}");
+    Ok(())
+}
+
 /// `mdm place` — the chip-level placement sweep: tile sizes × placers ×
 /// mapping strategies on a synthetic model workload (default: ResNet-18
 /// shaped layers), each point placed, validated, and rolled through the
@@ -1968,5 +2205,154 @@ fn cmd_info(args: &Args) -> Result<()> {
         .map(|e| vec![e.name.clone(), e.file.clone(), e.input_shapes.clone(), e.note.clone()])
         .collect();
     println!("{}", report::table(&["name", "file", "inputs", "note"], &rows));
+    Ok(())
+}
+
+/// `mdm artifacts <list|gc|verify>` — administer the persistent
+/// compile-artifact store (rust/DESIGN.md §12).
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let settings = artifact_settings(args)?;
+    let store = CompileArtifactStore::open(&settings.dir)?;
+    match args.sub.as_deref() {
+        Some("list") | None => cmd_artifacts_list(&store),
+        Some("gc") => cmd_artifacts_gc(args, &settings, &store),
+        Some("verify") => cmd_artifacts_verify(args, &store),
+        other => bail!("artifacts {other:?} unknown (list|gc|verify)"),
+    }
+}
+
+/// `mdm artifacts list` — resident store contents, largest first.
+fn cmd_artifacts_list(store: &CompileArtifactStore) -> Result<()> {
+    let entries = store.list()?;
+    if entries.is_empty() {
+        println!("artifact store {} is empty", store.dir().display());
+        return Ok(());
+    }
+    let rows: Vec<Vec<String>> = entries
+        .iter()
+        .map(|e| {
+            vec![
+                e.file.clone(),
+                e.kind.to_string(),
+                e.bytes.to_string(),
+                e.age_secs.map(|a| a.to_string()).unwrap_or_else(|| "-".into()),
+            ]
+        })
+        .collect();
+    println!("{}", report::table(&["file", "kind", "bytes", "age s"], &rows));
+    let total: u64 = entries.iter().map(|e| e.bytes).sum();
+    println!("{} file(s), {total} byte(s) in {}", entries.len(), store.dir().display());
+    Ok(())
+}
+
+/// The programmed-layer keys the current invocation's config would compile
+/// — the gc protection set ("artifacts referenced by the running config
+/// are never collected"). Covers every configured model under the
+/// configured strategy/estimator/geometry/eta/seed; strategies without a
+/// stable artifact token contribute nothing (they are never persisted).
+fn artifact_keep_set(args: &Args) -> Result<std::collections::HashSet<String>> {
+    let cfg = experiment_config(args)?;
+    let geometry = TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?;
+    let pipeline = mdm_cim::pipeline::Pipeline::new(geometry)
+        .strategy(&cfg.strategy)?
+        .estimator(&cfg.estimator)?
+        .eta_signed(cfg.eta_signed);
+    let mut keep = std::collections::HashSet::new();
+    for name in models_flag(args, true) {
+        let desc = mdm_cim::models::model_by_name(&name)?;
+        let weights = mdm_cim::models::ModelWeights::synthesize(&desc, cfg.seed)?;
+        for w in &weights.layers {
+            if let Some(key) = pipeline.layer_key(w) {
+                keep.insert(key.file_name());
+            }
+        }
+    }
+    Ok(keep)
+}
+
+/// `mdm artifacts gc` — collect the store down to the `[artifacts]`
+/// budgets (`--max-bytes N` / `--max-age-days D` override the config
+/// file), never touching keys referenced by the running config.
+fn cmd_artifacts_gc(
+    args: &Args,
+    settings: &ArtifactSettings,
+    store: &CompileArtifactStore,
+) -> Result<()> {
+    let (mut max_bytes, mut max_age_secs) = settings.gc_budgets();
+    if let Some(v) = args.flags.get("max-bytes") {
+        max_bytes = Some(v.parse().context("--max-bytes")?);
+    }
+    if let Some(v) = args.flags.get("max-age-days") {
+        let days: u64 = v.parse().context("--max-age-days")?;
+        max_age_secs = Some(days.saturating_mul(86_400));
+    }
+    let keep = artifact_keep_set(args)?;
+    let r = store.gc(max_bytes, max_age_secs, &keep)?;
+    println!(
+        "gc {}: scanned {}, removed {} ({} bytes), kept {} ({} bytes); \
+         {} key(s) protected by the running config",
+        store.dir().display(),
+        r.scanned,
+        r.removed,
+        r.removed_bytes,
+        r.kept,
+        r.kept_bytes,
+        keep.len()
+    );
+    Ok(())
+}
+
+/// `mdm artifacts verify` — re-derive one artifact from scratch and
+/// compare it bitwise against the stored payload: synthesize the
+/// configured model's weights (`--model NAME`, `--layer N`), compile the
+/// layer cold (no store attached), canonically encode it, and diff the
+/// bytes against what the store currently publishes under the same key.
+fn cmd_artifacts_verify(args: &Args, store: &CompileArtifactStore) -> Result<()> {
+    use mdm_cim::runtime::encode_layer;
+
+    let cfg = experiment_config(args)?;
+    let model = args.str_or("model", "miniresnet");
+    let layer_idx = args.usize_or("layer", 0);
+    let geometry = TileGeometry::new(cfg.tile_size, cfg.tile_size, cfg.k_bits)?;
+    let desc = mdm_cim::models::model_by_name(&model)?;
+    let weights = mdm_cim::models::ModelWeights::synthesize(&desc, cfg.seed)?;
+    anyhow::ensure!(
+        layer_idx < weights.layers.len(),
+        "--layer {layer_idx} out of range ({} layer(s) in {model})",
+        weights.layers.len()
+    );
+    let w = &weights.layers[layer_idx];
+    let pipeline = mdm_cim::pipeline::Pipeline::new(geometry)
+        .strategy(&cfg.strategy)?
+        .estimator(&cfg.estimator)?
+        .eta_signed(cfg.eta_signed)
+        .parallel(mdm_cim::parallel::ParallelConfig::default());
+    let Some(key) = pipeline.layer_key(w) else {
+        bail!(
+            "strategy `{}` opts out of artifact caching (no stable artifact token); \
+             nothing to verify",
+            cfg.strategy
+        )
+    };
+    let file = key.file_name();
+    let Some(stored) = store.stored_payload(&key)? else {
+        bail!(
+            "no stored artifact {file} for {model} layer {layer_idx} in {}; compile it \
+             first (e.g. `mdm bench --warm-start --model {model}`)",
+            store.dir().display()
+        )
+    };
+    let fresh = encode_layer(&pipeline.compile(w)?);
+    anyhow::ensure!(
+        fresh == stored,
+        "artifact {file} DIVERGES from a cold recompile \
+         ({} byte(s) stored vs {} byte(s) recomputed)",
+        stored.len(),
+        fresh.len()
+    );
+    println!(
+        "artifact {file} verified: cold recompile is bitwise identical ({} byte(s))",
+        stored.len()
+    );
     Ok(())
 }

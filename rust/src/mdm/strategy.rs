@@ -58,6 +58,20 @@ pub trait MappingStrategy: fmt::Debug + Send + Sync {
 
     /// Build the mapping plan for one tile.
     fn plan(&self, tile: &SlicedTile, ctx: &MapContext) -> MappingPlan;
+
+    /// Cache token for the persistent compile-artifact store
+    /// ([`crate::runtime::CompileArtifactStore`]): a string that, together
+    /// with the weights and physics, fully determines every plan this
+    /// strategy produces. `None` disables artifact caching for the
+    /// strategy — required when plans depend on state the token cannot
+    /// capture (wall-clock budgets, external fault maps).
+    ///
+    /// The default covers stateless strategies whose registry name is their
+    /// entire configuration. Parameterized strategies must append their
+    /// parameters (e.g. [`Random`] returns `"random:SEED"`).
+    fn artifact_token(&self) -> Option<String> {
+        Some(self.name().to_string())
+    }
 }
 
 /// Build a plan for a tile under a strategy with an empty [`MapContext`] —
@@ -258,6 +272,12 @@ impl MappingStrategy for Random {
     fn plan(&self, tile: &SlicedTile, _ctx: &MapContext) -> MappingPlan {
         plan_with_order(tile, self.dataflow, RowOrder::Random { seed: self.seed }, None)
     }
+
+    fn artifact_token(&self) -> Option<String> {
+        // The seed parameterizes every plan but is not part of `name()`,
+        // so it must be part of the cache identity.
+        Some(format!("random:{}", self.seed))
+    }
 }
 
 /// X-CHANGR-style baseline (arXiv:1907.00285): cyclically rotate the row
@@ -373,6 +393,17 @@ impl MappingStrategy for SwapSearch {
             }
         }
         MappingPlan::new(inc.order().to_vec(), col_perm)
+    }
+
+    fn artifact_token(&self) -> Option<String> {
+        // A truncated search depends on machine speed, so a nonzero
+        // wall-clock budget cannot be a stable cache identity. Budget 0
+        // deterministically yields the dataflow-only baseline plan.
+        if self.budget_ms == 0 {
+            Some("swap-search:0".to_string())
+        } else {
+            None
+        }
     }
 }
 
@@ -558,6 +589,24 @@ mod tests {
         assert_eq!(strategy_by_name("xchangr_rotate").unwrap().name(), "xchangr");
         assert!(strategy_by_name("no_such_strategy").is_err());
         assert!(strategy_by_name("random:bad").is_err());
+    }
+
+    #[test]
+    fn artifact_tokens_capture_parameters() {
+        // Stateless strategies: the registry name is the whole identity.
+        assert_eq!(strategy_by_name("mdm").unwrap().artifact_token().as_deref(), Some("mdm"));
+        // Parameterized: the seed rides along even though name() is "random".
+        assert_eq!(
+            strategy_by_name("random:9").unwrap().artifact_token().as_deref(),
+            Some("random:9")
+        );
+        // Wall-clock-budgeted search is not cacheable ...
+        assert!(strategy_by_name("swap-search:5").unwrap().artifact_token().is_none());
+        // ... except at budget 0, which is deterministically the baseline.
+        assert_eq!(
+            strategy_by_name("swap-search:0").unwrap().artifact_token().as_deref(),
+            Some("swap-search:0")
+        );
     }
 
     #[test]

@@ -775,6 +775,15 @@ mod tests {
     }
 
     #[test]
+    fn hit_rate_is_zero_not_nan_without_lookups() {
+        // 0/0 must report 0.0 — a NaN here poisons every downstream
+        // metrics aggregation (serve_metrics.json, bench gates).
+        let stats = CacheStats::default();
+        assert_eq!(stats.hit_rate(), 0.0);
+        assert!(!stats.hit_rate().is_nan());
+    }
+
+    #[test]
     fn cached_sum_shares_the_mean_memo_for_deriving_backends() {
         let physics = CrossbarPhysics::default();
         let tiles = random_tiles(2, 8, 8, 19);

@@ -35,6 +35,7 @@ use crate::noise::distorted_weights;
 use crate::parallel::{self, ParallelConfig};
 use crate::quant::{Quantizer, SignSplit};
 use crate::rng::Xoshiro256;
+use crate::runtime::{ArtifactKey, ArtifactKind, CompileArtifactStore, KeyHasher};
 use crate::tensor::Tensor;
 use crate::CrossbarPhysics;
 use anyhow::{ensure, Result};
@@ -71,6 +72,7 @@ pub struct Pipeline {
     eta_signed: f64,
     cost_model: CostModel,
     parallel: ParallelConfig,
+    store: Option<Arc<CompileArtifactStore>>,
 }
 
 impl Pipeline {
@@ -85,6 +87,7 @@ impl Pipeline {
             eta_signed: 0.0,
             cost_model: CostModel::default(),
             parallel: ParallelConfig::default(),
+            store: None,
         }
     }
 
@@ -154,6 +157,63 @@ impl Pipeline {
         self
     }
 
+    /// Attach a persistent [`CompileArtifactStore`]: [`Self::compile`]
+    /// checks the store before solving and publishes fresh layers after —
+    /// warm starts are bitwise identical to cold compiles. Strategies
+    /// whose plans are not a pure function of their
+    /// [`artifact token`](crate::mdm::MappingStrategy::artifact_token)
+    /// (e.g. budgeted `swap-search`) are never persisted.
+    pub fn artifact_store(mut self, store: Arc<CompileArtifactStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// Attach or detach the artifact store from an `Option` (config-file
+    /// plumbing convenience).
+    pub fn artifact_store_opt(mut self, store: Option<Arc<CompileArtifactStore>>) -> Self {
+        self.store = store;
+        self
+    }
+
+    /// The content address [`Self::compile`] would use for this weight
+    /// matrix, or `None` when the configured strategy opts out of
+    /// persistent caching. The digest covers everything that determines
+    /// the programmed artifact: weight bits and shape, the strategy's
+    /// artifact token, tile geometry, physics and distortion bit patterns,
+    /// the quantizer override, the cost model, and the estimator name.
+    pub fn layer_key(&self, w_signed: &Tensor) -> Option<ArtifactKey> {
+        let token = self.strategy.artifact_token()?;
+        let mut h = KeyHasher::new();
+        h.str("programmed-layer");
+        h.tensor(w_signed);
+        h.str(&token);
+        h.usize(self.geometry.rows);
+        h.usize(self.geometry.cols);
+        h.usize(self.geometry.k_bits);
+        h.f64(self.physics.r_wire);
+        h.f64(self.physics.r_on);
+        h.f64(self.physics.r_off);
+        h.f64(self.physics.v_in);
+        h.f64(self.eta_signed);
+        match self.quantizer {
+            Some(q) => {
+                h.u64(1);
+                h.usize(q.k_bits);
+                h.f32(q.scale);
+            }
+            None => h.u64(0),
+        }
+        h.str(&self.estimator.name());
+        h.u64(self.cost_model.adc.bits as u64);
+        h.f64(self.cost_model.adc.energy_per_conv_pj);
+        h.f64(self.cost_model.adc.time_per_conv_ns);
+        h.f64(self.cost_model.tile_settle_ns);
+        h.f64(self.cost_model.sync_ns);
+        h.f64(self.cost_model.bytes_per_input);
+        h.f64(self.cost_model.bytes_per_output);
+        Some(ArtifactKey::new(ArtifactKind::Layer, &h))
+    }
+
     /// Quantizer for one non-negative part: the shared override, or a fresh
     /// fit.
     fn part_quantizer(&self, part: &Tensor) -> Result<Quantizer> {
@@ -168,11 +228,20 @@ impl Pipeline {
     /// per Eq. 17, and cache the assembled effective weights.
     pub fn compile(&self, w_signed: &Tensor) -> Result<ProgrammedLayer> {
         ensure!(w_signed.ndim() == 2, "layer matrix must be 2-D, got {:?}", w_signed.shape());
+        // Warm start: an attached artifact store answers with the persisted
+        // (bitwise-identical) layer before any solving happens. Corrupt or
+        // stale files surface as misses inside the store, never as errors.
+        let key = if self.store.is_some() { self.layer_key(w_signed) } else { None };
+        if let (Some(store), Some(key)) = (self.store.as_deref(), key) {
+            if let Some(layer) = store.load_layer(&key, self.strategy.name()) {
+                return Ok(layer);
+            }
+        }
         let split = SignSplit::of(w_signed);
         let pos = self.compile_nonneg(&split.pos)?;
         let neg = self.compile_nonneg(&split.neg)?;
         let effective = pos.effective.zip(&neg.effective, |p, n| p - n)?;
-        Ok(ProgrammedLayer {
+        let layer = ProgrammedLayer {
             geometry: self.geometry,
             physics: self.physics,
             eta_signed: self.eta_signed,
@@ -180,7 +249,15 @@ impl Pipeline {
             pos,
             neg,
             effective,
-        })
+        };
+        if let (Some(store), Some(key)) = (self.store.as_deref(), key) {
+            // Publication is best-effort: a full disk or read-only store
+            // must not fail a compile that already succeeded.
+            if let Err(e) = store.store_layer(&key, &layer) {
+                eprintln!("warning: could not persist compile artifact: {e:#}");
+            }
+        }
+        Ok(layer)
     }
 
     /// Program one **non-negative** part (half of the differential pair).
@@ -313,6 +390,7 @@ impl std::fmt::Debug for Pipeline {
             .field("eta_signed", &self.eta_signed)
             .field("quantizer", &self.quantizer)
             .field("parallel", &self.parallel)
+            .field("artifact_store", &self.store.as_ref().map(|s| s.dir().display().to_string()))
             .finish()
     }
 }
@@ -403,6 +481,23 @@ pub struct ProgrammedLayer {
 }
 
 impl ProgrammedLayer {
+    /// Reassemble a layer from its programmed parts — the decode side of
+    /// the persistent artifact store. The effective signed matrix is
+    /// recomputed with exactly the element-wise subtraction that
+    /// [`Pipeline::compile`] uses, so a layer rebuilt from stored parts is
+    /// bitwise identical to the layer that was stored.
+    pub fn from_parts(
+        geometry: TileGeometry,
+        physics: CrossbarPhysics,
+        eta_signed: f64,
+        strategy: &'static str,
+        pos: ProgrammedPart,
+        neg: ProgrammedPart,
+    ) -> Result<Self> {
+        let effective = pos.effective.zip(&neg.effective, |p, n| p - n)?;
+        Ok(Self { geometry, physics, eta_signed, strategy, pos, neg, effective })
+    }
+
     /// The effective signed weight matrix `pos − neg`, `[fan_in, fan_out]`.
     pub fn effective_weights(&self) -> &Tensor {
         &self.effective
@@ -906,6 +1001,42 @@ mod tests {
             .unwrap();
         assert_eq!(n1, n2);
         assert_eq!(searched.to_bits(), mdm.to_bits(), "searched {searched} vs mdm {mdm}");
+    }
+
+    #[test]
+    fn artifact_store_warm_start_is_bitwise_cold() {
+        let dir = std::env::temp_dir()
+            .join(format!("mdm-pipeline-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(CompileArtifactStore::open(&dir).unwrap());
+        let w = random_signed(96, 24, 31);
+        let g = TileGeometry::new(16, 32, 8).unwrap();
+        let pipe = || {
+            Pipeline::new(g)
+                .strategy("mdm")
+                .unwrap()
+                .eta_signed(-2e-3)
+                .artifact_store(store.clone())
+        };
+        let cold = pipe().compile(&w).unwrap();
+        let warm = pipe().compile(&w).unwrap();
+        assert_eq!(store.stats().hits, 1, "second compile must hit the store");
+        for (a, b) in cold.effective_weights().data().iter().zip(warm.effective_weights().data())
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (ta, tb) in cold.pos.tiles.iter().zip(&warm.pos.tiles) {
+            assert_eq!(ta.plan, tb.plan);
+            assert_eq!(ta.weights.data(), tb.weights.data());
+        }
+        // A budgeted swap-search strategy opts out of persistence entirely.
+        let searcher = Pipeline::new(g).strategy("swap-search:5").unwrap();
+        assert!(searcher.layer_key(&w).is_none());
+        // Different seeds of the registry's random strategy key differently.
+        let r7 = Pipeline::new(g).strategy("random:7").unwrap().layer_key(&w).unwrap();
+        let r8 = Pipeline::new(g).strategy("random:8").unwrap().layer_key(&w).unwrap();
+        assert_ne!(r7.digest, r8.digest);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

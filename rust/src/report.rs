@@ -110,8 +110,12 @@ pub fn write_csv(
 ) -> Result<()> {
     let path = path.as_ref();
     if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)
-            .with_context(|| format!("creating {}", parent.display()))?;
+        // A bare relative filename yields Some("") — creating "" errors, so
+        // only materialize real parent directories.
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
     }
     let mut text = String::new();
     let _ = writeln!(text, "{}", headers.join(","));
@@ -284,6 +288,22 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text, "a,b\n\"1,2\",\"x\"\"y\"\n");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bare_filenames_write_without_erroring() {
+        // `Path::parent()` of a bare relative filename is Some("") — both
+        // writers must skip the empty create_dir_all instead of erroring.
+        // (No set_current_dir here: tests share one process cwd.)
+        let pid = std::process::id();
+        let csv_name = format!("bare_csv_test_{pid}.csv");
+        let json_name = format!("bare_json_test_{pid}.json");
+        write_csv(&csv_name, &["a"], &[vec!["1".into()]]).unwrap();
+        write_json_object(&json_name, &[("ok", Json::Bool(true))]).unwrap();
+        assert!(Path::new(&csv_name).exists());
+        assert!(Path::new(&json_name).exists());
+        std::fs::remove_file(&csv_name).ok();
+        std::fs::remove_file(&json_name).ok();
     }
 
     #[test]

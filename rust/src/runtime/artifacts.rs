@@ -96,8 +96,14 @@ impl ArtifactStore {
     }
 
     /// Load (compile-once, cached) an executable by manifest name.
+    ///
+    /// The executable cache lock tolerates poisoning (a worker that
+    /// panicked mid-insert leaves a map that is still structurally valid),
+    /// so one crashed compile thread cannot wedge every later load.
     pub fn load(&self, name: &str) -> Result<std::sync::Arc<CompiledModule>> {
-        if let Some(m) = self.cache.lock().expect("cache lock").get(name) {
+        if let Some(m) =
+            self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).get(name)
+        {
             return Ok(m.clone());
         }
         let entry = self
@@ -106,7 +112,10 @@ impl ArtifactStore {
             .with_context(|| format!("artifact {name:?} not in manifest"))?;
         let module =
             std::sync::Arc::new(self.runtime.compile_file(self.dir.join(&entry.file))?);
-        self.cache.lock().expect("cache lock").insert(name.to_string(), module.clone());
+        self.cache
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .insert(name.to_string(), module.clone());
         Ok(module)
     }
 

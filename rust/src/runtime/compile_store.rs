@@ -1,0 +1,1120 @@
+//! Persistent content-addressed store for compile artifacts
+//! (rust/DESIGN.md §12).
+//!
+//! The content-addressed tile NF cache from the estimator layer dies with
+//! the process; this module extends content addressing to whole
+//! [`ProgrammedLayer`]s, [`Placement`]s, and scored sweep points, persisted
+//! under `runtime/artifacts/` so that `mdm serve` warm-starts from
+//! millisecond file loads instead of re-running the quantize → slice →
+//! tile → map → distort chain, and repeated sweeps skip already-scored
+//! configurations.
+//!
+//! **Keys.** An [`ArtifactKey`] is an FNV-1a 64-bit digest over the exact
+//! bit patterns of everything that determines the artifact: weight `f32`
+//! bits and shape, the strategy's [`artifact
+//! token`](crate::mdm::MappingStrategy::artifact_token) (name *plus*
+//! parameters; strategies whose output is not a pure function of their
+//! token opt out and are never persisted), tile geometry, physics `f64`
+//! bits, the signed distortion coefficient, the quantizer override, the
+//! cost model, the estimator name, and [`SCHEMA_VERSION`]. Equal keys ⇒
+//! bitwise-equal artifacts; any input change ⇒ a different file.
+//!
+//! **On-disk format.** One artifact per file,
+//! `<kind>-<digest:016x>.mdma`, laid out as `magic "MDMA" | version u32 |
+//! kind u8 | payload length u64 | payload | FNV-1a64(payload)` with every
+//! multi-byte integer little-endian and every float stored as its IEEE-754
+//! bit pattern (loads are bitwise identical to the stored compile).
+//!
+//! **Durability and tolerance.** Writers publish atomically
+//! (write-to-temp then `rename`), so concurrent writers racing on one key
+//! leave a complete file from one of them and readers never observe a
+//! partial write. Loads never panic and never fail the caller: a missing
+//! file is a miss; a truncated, checksum-corrupt, or undecodable file is
+//! quarantined (renamed to `*.quarantined`) and reported as a miss; a
+//! stale [`SCHEMA_VERSION`] is evicted and reported as a miss. The
+//! compile path then simply recompiles cold.
+//!
+//! **Budgets.** [`CompileArtifactStore::gc`] enforces optional size and
+//! age budgets (oldest artifacts evicted first) while never touching keys
+//! the caller marks as referenced by the running config.
+
+use crate::chip::{placer_by_name, ChipModel, PlacedBlock, Placement, SpillPolicy, TileBlock};
+use crate::crossbar::{TileCost, TileGeometry};
+use crate::mdm::MappingPlan;
+use crate::pipeline::{ProgrammedLayer, ProgrammedPart, ProgrammedTile};
+use crate::quant::Quantizer;
+use crate::tensor::Tensor;
+use crate::CrossbarPhysics;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashSet;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::SystemTime;
+
+/// Version of the on-disk artifact encoding. Bump on any layout change:
+/// old files then decode as stale and are evicted on first touch.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// File magic of every artifact.
+const MAGIC: [u8; 4] = *b"MDMA";
+
+/// File extension of a published artifact.
+const EXT: &str = "mdma";
+
+/// Extension a corrupt artifact is renamed to (kept for post-mortems,
+/// collected by `gc`).
+const QUARANTINE_EXT: &str = "quarantined";
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64-bit streaming hasher used for both artifact keys and payload
+/// checksums — dependency-free and stable across platforms.
+#[derive(Debug, Clone)]
+pub struct KeyHasher {
+    state: u64,
+}
+
+impl Default for KeyHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KeyHasher {
+    /// Start a digest already bound to [`SCHEMA_VERSION`], so every schema
+    /// bump also re-keys (old files become unreachable, not just stale).
+    pub fn new() -> Self {
+        let mut h = Self { state: FNV_OFFSET };
+        h.u64(SCHEMA_VERSION as u64);
+        h
+    }
+
+    /// Absorb raw bytes.
+    pub fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.state ^= x as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    /// Absorb a `u64` (little-endian).
+    pub fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    /// Absorb a `usize` exactly (via `u64`).
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Absorb an `f64` by IEEE-754 bit pattern.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Absorb an `f32` by IEEE-754 bit pattern.
+    pub fn f32(&mut self, v: f32) {
+        self.bytes(&v.to_bits().to_le_bytes());
+    }
+
+    /// Absorb a string, length-prefixed so concatenations can't collide.
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    /// Absorb a tensor: shape then every element's `f32` bit pattern.
+    pub fn tensor(&mut self, t: &Tensor) {
+        self.u64(t.shape().len() as u64);
+        for &d in t.shape() {
+            self.u64(d as u64);
+        }
+        for &v in t.data() {
+            self.f32(v);
+        }
+    }
+
+    /// Finish the digest.
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot FNV-1a 64 of a byte slice (payload checksums).
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = KeyHasher { state: FNV_OFFSET };
+    h.bytes(bytes);
+    h.finish()
+}
+
+/// What kind of artifact a key addresses; part of the file name, so
+/// different kinds can never alias even on a digest collision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// A whole programmed layer (plans + conductances + costs).
+    Layer,
+    /// A validated chip placement.
+    Placement,
+    /// A scored sweep point (a short vector of `f64` results).
+    Sweep,
+}
+
+impl ArtifactKind {
+    fn tag(self) -> u8 {
+        match self {
+            ArtifactKind::Layer => 1,
+            ArtifactKind::Placement => 2,
+            ArtifactKind::Sweep => 3,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            1 => ArtifactKind::Layer,
+            2 => ArtifactKind::Placement,
+            3 => ArtifactKind::Sweep,
+            other => bail!("unknown artifact kind tag {other}"),
+        })
+    }
+
+    /// File-name prefix and listing label.
+    pub fn label(self) -> &'static str {
+        match self {
+            ArtifactKind::Layer => "layer",
+            ArtifactKind::Placement => "placement",
+            ArtifactKind::Sweep => "sweep",
+        }
+    }
+}
+
+/// Content address of one artifact: kind plus a 64-bit digest of every
+/// compile input (see the module docs for the exact key derivation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    /// Artifact kind (selects the codec and the file-name prefix).
+    pub kind: ArtifactKind,
+    /// FNV-1a 64 digest of the canonical key material.
+    pub digest: u64,
+}
+
+impl ArtifactKey {
+    /// Build a key from a finished hasher.
+    pub fn new(kind: ArtifactKind, hasher: &KeyHasher) -> Self {
+        Self { kind, digest: hasher.finish() }
+    }
+
+    /// The store-relative file name this key publishes to.
+    pub fn file_name(&self) -> String {
+        format!("{}-{:016x}.{EXT}", self.kind.label(), self.digest)
+    }
+}
+
+/// Monotonic counters of one store's lifetime (process-local; the files
+/// themselves persist across processes).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Loads answered from disk.
+    pub hits: u64,
+    /// Loads that fell through to a cold compile (absent, stale, or
+    /// quarantined artifacts all count here).
+    pub misses: u64,
+    /// Artifacts published.
+    pub stores: u64,
+    /// Files deleted (stale schema versions and gc evictions).
+    pub evictions: u64,
+    /// Corrupt files renamed aside as misses.
+    pub quarantined: u64,
+}
+
+impl StoreStats {
+    /// Hits over lookups; 0.0 (not NaN) when no lookup has happened yet.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One row of [`CompileArtifactStore::list`].
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    /// File name within the store directory.
+    pub file: String,
+    /// Listing label: a kind label, `"quarantined"`, or `"other"`.
+    pub kind: &'static str,
+    /// File size in bytes.
+    pub bytes: u64,
+    /// Seconds since last modification, when the filesystem reports it.
+    pub age_secs: Option<u64>,
+}
+
+/// What [`CompileArtifactStore::gc`] did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GcReport {
+    /// Files considered.
+    pub scanned: usize,
+    /// Files deleted.
+    pub removed: usize,
+    /// Bytes reclaimed.
+    pub removed_bytes: u64,
+    /// Files kept.
+    pub kept: usize,
+    /// Bytes still resident after collection.
+    pub kept_bytes: u64,
+}
+
+/// A persistent, content-addressed, corruption-tolerant artifact store
+/// rooted at one directory (conventionally `runtime/artifacts/`).
+///
+/// All methods take `&self`; the store is `Send + Sync` and is shared
+/// across compile workers behind an `Arc`. Loads are infallible by design
+/// (every failure mode degrades to a miss); publishes are atomic.
+#[derive(Debug)]
+pub struct CompileArtifactStore {
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stores: AtomicU64,
+    evictions: AtomicU64,
+    quarantined: AtomicU64,
+    tmp_seq: AtomicU64,
+}
+
+/// Why a load did not produce an artifact.
+enum LoadMiss {
+    /// No file for this key — the ordinary cold-compile case.
+    Absent,
+    /// The file predates [`SCHEMA_VERSION`]; it is deleted.
+    Stale,
+    /// The file is truncated, checksum-corrupt, or undecodable; it is
+    /// renamed aside.
+    Corrupt(String),
+}
+
+impl CompileArtifactStore {
+    /// Open (creating if needed) the store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("create artifact store dir {}", dir.display()))?;
+        Ok(Self {
+            dir,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            tmp_seq: AtomicU64::new(0),
+        })
+    }
+
+    /// Root directory of the store.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+        }
+    }
+
+    fn path_for(&self, key: &ArtifactKey) -> PathBuf {
+        self.dir.join(key.file_name())
+    }
+
+    /// Load a programmed layer. `strategy` is the caller's interned
+    /// registry name; it must match the stored provenance string (the key
+    /// already encodes the strategy, so a mismatch means corruption).
+    pub fn load_layer(
+        &self,
+        key: &ArtifactKey,
+        strategy: &'static str,
+    ) -> Option<ProgrammedLayer> {
+        self.load_with(key, ArtifactKind::Layer, |payload| decode_layer(payload, strategy))
+    }
+
+    /// Publish a programmed layer under `key`.
+    pub fn store_layer(&self, key: &ArtifactKey, layer: &ProgrammedLayer) -> Result<()> {
+        self.publish(key, ArtifactKind::Layer, &encode_layer(layer))
+    }
+
+    /// Load a validated placement (re-validated on decode).
+    pub fn load_placement(&self, key: &ArtifactKey) -> Option<Placement> {
+        self.load_with(key, ArtifactKind::Placement, decode_placement)
+    }
+
+    /// Publish a placement under `key`.
+    pub fn store_placement(&self, key: &ArtifactKey, placement: &Placement) -> Result<()> {
+        self.publish(key, ArtifactKind::Placement, &encode_placement(placement))
+    }
+
+    /// Load a scored sweep point.
+    pub fn load_sweep(&self, key: &ArtifactKey) -> Option<Vec<f64>> {
+        self.load_with(key, ArtifactKind::Sweep, decode_sweep)
+    }
+
+    /// Publish a scored sweep point under `key`.
+    pub fn store_sweep(&self, key: &ArtifactKey, values: &[f64]) -> Result<()> {
+        self.publish(key, ArtifactKind::Sweep, &encode_sweep(values))
+    }
+
+    /// The verified payload currently published under `key`, if any —
+    /// the comparison side of `mdm artifacts verify`. Unlike the load
+    /// path this propagates IO errors and does not touch hit/miss stats.
+    pub fn stored_payload(&self, key: &ArtifactKey) -> Result<Option<Vec<u8>>> {
+        let path = self.path_for(key);
+        match read_verified(&path, key.kind) {
+            Ok(payload) => Ok(Some(payload)),
+            Err(LoadMiss::Absent) => Ok(None),
+            Err(LoadMiss::Stale) => Ok(None),
+            Err(LoadMiss::Corrupt(why)) => {
+                bail!("artifact {} is corrupt: {why}", path.display())
+            }
+        }
+    }
+
+    /// Generic load: verify the container, decode the payload, account
+    /// stats, and sweep failures aside so callers never see an error.
+    fn load_with<T>(
+        &self,
+        key: &ArtifactKey,
+        kind: ArtifactKind,
+        decode: impl FnOnce(&[u8]) -> Result<T>,
+    ) -> Option<T> {
+        let path = self.path_for(key);
+        let outcome = read_verified(&path, kind)
+            .and_then(|payload| decode(&payload).map_err(|e| LoadMiss::Corrupt(e.to_string())));
+        match outcome {
+            Ok(value) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(value)
+            }
+            Err(LoadMiss::Absent) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Err(LoadMiss::Stale) => {
+                if fs::remove_file(&path).is_ok() {
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Err(LoadMiss::Corrupt(_)) => {
+                let aside = path.with_extension(QUARANTINE_EXT);
+                if fs::rename(&path, &aside).is_err() {
+                    // Rename can fail on exotic filesystems; fall back to
+                    // removal so the poisoned file can't re-trip forever.
+                    let _ = fs::remove_file(&path);
+                }
+                self.quarantined.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Atomically publish `payload` under `key`: the full container is
+    /// written to a temp file in the store directory, then renamed into
+    /// place, so readers (and racing writers) only ever observe complete
+    /// files.
+    fn publish(&self, key: &ArtifactKey, kind: ArtifactKind, payload: &[u8]) -> Result<()> {
+        let mut file = Vec::with_capacity(payload.len() + 29);
+        file.extend_from_slice(&MAGIC);
+        file.extend_from_slice(&SCHEMA_VERSION.to_le_bytes());
+        file.push(kind.tag());
+        file.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        file.extend_from_slice(payload);
+        file.extend_from_slice(&fnv64(payload).to_le_bytes());
+
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = self.dir.join(format!(".tmp-{}-{seq}", std::process::id()));
+        let path = self.path_for(key);
+        let publish = fs::write(&tmp, &file)
+            .with_context(|| format!("write artifact temp file {}", tmp.display()))
+            .and_then(|()| {
+                fs::rename(&tmp, &path)
+                    .with_context(|| format!("publish artifact {}", path.display()))
+            });
+        if publish.is_err() {
+            let _ = fs::remove_file(&tmp);
+        }
+        publish?;
+        self.stores.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// List resident files (artifacts, quarantined remains, and anything
+    /// else that strayed into the directory), largest first.
+    pub fn list(&self) -> Result<Vec<ArtifactInfo>> {
+        let now = SystemTime::now();
+        let mut out = Vec::new();
+        let entries = fs::read_dir(&self.dir)
+            .with_context(|| format!("read artifact store dir {}", self.dir.display()))?;
+        for entry in entries {
+            let entry = entry.with_context(|| "read artifact store dir entry")?;
+            let meta = match entry.metadata() {
+                Ok(m) if m.is_file() => m,
+                _ => continue,
+            };
+            let file = entry.file_name().to_string_lossy().into_owned();
+            let kind = if file.ends_with(&format!(".{QUARANTINE_EXT}")) {
+                "quarantined"
+            } else if file.ends_with(&format!(".{EXT}")) {
+                [ArtifactKind::Layer, ArtifactKind::Placement, ArtifactKind::Sweep]
+                    .into_iter()
+                    .find(|k| file.starts_with(k.label()))
+                    .map(ArtifactKind::label)
+                    .unwrap_or("other")
+            } else {
+                "other"
+            };
+            let age_secs =
+                meta.modified().ok().and_then(|m| now.duration_since(m).ok()).map(|d| d.as_secs());
+            out.push(ArtifactInfo { file, kind, bytes: meta.len(), age_secs });
+        }
+        out.sort_by(|a, b| b.bytes.cmp(&a.bytes).then_with(|| a.file.cmp(&b.file)));
+        Ok(out)
+    }
+
+    /// Collect the store down to the given budgets. Quarantined remains
+    /// and temp leftovers are always collectable; artifacts at least
+    /// `max_age_secs` old go next (so `Some(0)` clears everything
+    /// unprotected); then the oldest artifacts are evicted until the
+    /// directory fits `max_bytes`. Files named in `keep` (the keys
+    /// referenced by the running config) are never deleted.
+    pub fn gc(
+        &self,
+        max_bytes: Option<u64>,
+        max_age_secs: Option<u64>,
+        keep: &HashSet<String>,
+    ) -> Result<GcReport> {
+        let mut entries = self.list()?;
+        // Oldest first so the size budget evicts in LRU-ish order.
+        entries.sort_by(|a, b| {
+            b.age_secs.unwrap_or(0).cmp(&a.age_secs.unwrap_or(0)).then_with(|| a.file.cmp(&b.file))
+        });
+        let mut report = GcReport { scanned: entries.len(), ..GcReport::default() };
+        let mut resident: u64 = entries.iter().map(|e| e.bytes).sum();
+        for e in &entries {
+            let protected = keep.contains(&e.file);
+            let is_artifact = e.kind != "quarantined" && e.kind != "other";
+            let over_age = max_age_secs.is_some_and(|max| e.age_secs.unwrap_or(0) >= max);
+            let over_size = max_bytes.is_some_and(|max| resident > max);
+            let evict = !protected && (!is_artifact || over_age || over_size);
+            if evict {
+                match fs::remove_file(self.dir.join(&e.file)) {
+                    Ok(()) => {
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                        resident = resident.saturating_sub(e.bytes);
+                        report.removed += 1;
+                        report.removed_bytes += e.bytes;
+                        continue;
+                    }
+                    Err(err) if err.kind() == std::io::ErrorKind::NotFound => {
+                        // Lost a race with another collector; fine.
+                        resident = resident.saturating_sub(e.bytes);
+                        continue;
+                    }
+                    Err(err) => {
+                        return Err(err).with_context(|| format!("gc remove {}", e.file));
+                    }
+                }
+            }
+            report.kept += 1;
+            report.kept_bytes += e.bytes;
+        }
+        Ok(report)
+    }
+}
+
+/// Read and verify one artifact container, returning its payload.
+fn read_verified(path: &Path, kind: ArtifactKind) -> Result<Vec<u8>, LoadMiss> {
+    let bytes = match fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Err(LoadMiss::Absent),
+        Err(e) => return Err(LoadMiss::Corrupt(format!("read failed: {e}"))),
+    };
+    let corrupt = |why: &str| LoadMiss::Corrupt(why.to_string());
+    if bytes.len() < 25 {
+        return Err(corrupt("truncated header"));
+    }
+    if bytes[..4] != MAGIC {
+        return Err(corrupt("bad magic"));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().expect("4-byte slice"));
+    if version != SCHEMA_VERSION {
+        return Err(LoadMiss::Stale);
+    }
+    if bytes[8] != kind.tag() {
+        return Err(corrupt("artifact kind mismatch"));
+    }
+    let len = u64::from_le_bytes(bytes[9..17].try_into().expect("8-byte slice")) as usize;
+    let Some(expected_total) = len.checked_add(25) else {
+        return Err(corrupt("absurd payload length"));
+    };
+    if bytes.len() != expected_total {
+        return Err(corrupt("payload length mismatch (truncated or padded)"));
+    }
+    let payload = &bytes[17..17 + len];
+    let checksum = u64::from_le_bytes(bytes[17 + len..].try_into().expect("8-byte slice"));
+    if fnv64(payload) != checksum {
+        return Err(corrupt("payload checksum mismatch"));
+    }
+    Ok(payload.to_vec())
+}
+
+// ---------------------------------------------------------------------------
+// Payload codecs. All integers little-endian u64, all floats by bit
+// pattern; decoders bound every length against the remaining input before
+// allocating, so garbage bytes cannot OOM or panic.
+// ---------------------------------------------------------------------------
+
+/// Payload encoder.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn perm(&mut self, perm: &[usize]) {
+        self.usize(perm.len());
+        for &p in perm {
+            self.usize(p);
+        }
+    }
+
+    fn tensor(&mut self, t: &Tensor) {
+        self.usize(t.shape().len());
+        for &d in t.shape() {
+            self.usize(d);
+        }
+        self.usize(t.data().len());
+        for &v in t.data() {
+            self.f32(v);
+        }
+    }
+}
+
+/// Payload decoder: strict, bounds-checked, never panics on bad input.
+struct Dec<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.b.len() >= n, "payload truncated (need {n} bytes, have {})", self.b.len());
+        let (head, rest) = self.b.split_at(n);
+        self.b = rest;
+        Ok(head)
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(self.b.is_empty(), "{} trailing bytes after payload", self.b.len());
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).context("count overflows usize")
+    }
+
+    /// A count that must be payable by at least `unit` remaining bytes per
+    /// element — rejects absurd lengths before any allocation.
+    fn count(&mut self, unit: usize) -> Result<usize> {
+        let n = self.usize()?;
+        ensure!(
+            n.checked_mul(unit).is_some_and(|need| need <= self.b.len()),
+            "count {n} exceeds remaining payload"
+        );
+        Ok(n)
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice"))))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        String::from_utf8(self.take(n)?.to_vec()).context("non-UTF-8 string")
+    }
+
+    fn perm(&mut self) -> Result<Vec<usize>> {
+        let n = self.count(8)?;
+        let mut perm = Vec::with_capacity(n);
+        for _ in 0..n {
+            perm.push(self.usize()?);
+        }
+        let mut seen = vec![false; n];
+        for &p in &perm {
+            ensure!(p < n && !seen[p], "stored index list is not a permutation");
+            seen[p] = true;
+        }
+        Ok(perm)
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let ndim = self.count(8)?;
+        ensure!(ndim <= 8, "absurd tensor rank {ndim}");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(self.usize()?);
+        }
+        let len = self.count(4)?;
+        let mut data = Vec::with_capacity(len);
+        for _ in 0..len {
+            data.push(self.f32()?);
+        }
+        Tensor::new(&shape, data)
+    }
+}
+
+fn encode_part(e: &mut Enc, p: &ProgrammedPart) {
+    e.usize(p.fan_in);
+    e.usize(p.fan_out);
+    e.usize(p.quant.k_bits);
+    e.f32(p.quant.scale);
+    e.u64(p.cost.adc_conversions);
+    e.u64(p.cost.sync_events);
+    e.u64(p.cost.io_bytes);
+    e.f64(p.cost.latency_ns);
+    e.f64(p.cost.energy_pj);
+    e.tensor(&p.effective);
+    e.usize(p.tiles.len());
+    for t in &p.tiles {
+        e.usize(t.row_start);
+        e.usize(t.col_start);
+        e.perm(t.plan.row_perm());
+        e.perm(t.plan.col_perm());
+        e.tensor(&t.weights);
+    }
+}
+
+fn decode_part(d: &mut Dec<'_>) -> Result<ProgrammedPart> {
+    let fan_in = d.usize()?;
+    let fan_out = d.usize()?;
+    let quant = Quantizer { k_bits: d.usize()?, scale: d.f32()? };
+    let cost = TileCost {
+        adc_conversions: d.u64()?,
+        sync_events: d.u64()?,
+        io_bytes: d.u64()?,
+        latency_ns: d.f64()?,
+        energy_pj: d.f64()?,
+    };
+    let effective = d.tensor()?;
+    ensure!(
+        effective.shape() == [fan_in, fan_out],
+        "part effective matrix shape disagrees with fan-in/fan-out"
+    );
+    let n_tiles = d.count(1)?;
+    let mut tiles = Vec::with_capacity(n_tiles);
+    for _ in 0..n_tiles {
+        let row_start = d.usize()?;
+        let col_start = d.usize()?;
+        let row_perm = d.perm()?;
+        let col_perm = d.perm()?;
+        let weights = d.tensor()?;
+        tiles.push(ProgrammedTile {
+            row_start,
+            col_start,
+            plan: MappingPlan::new(row_perm, col_perm),
+            weights,
+        });
+    }
+    Ok(ProgrammedPart { fan_in, fan_out, quant, tiles, effective, cost })
+}
+
+/// Encode a programmed layer into payload bytes (also the reference side
+/// of `mdm artifacts verify`: cold recompiles must re-encode to exactly
+/// these bytes).
+pub fn encode_layer(layer: &ProgrammedLayer) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.usize(layer.geometry.rows);
+    e.usize(layer.geometry.cols);
+    e.usize(layer.geometry.k_bits);
+    e.f64(layer.physics.r_wire);
+    e.f64(layer.physics.r_on);
+    e.f64(layer.physics.r_off);
+    e.f64(layer.physics.v_in);
+    e.f64(layer.eta_signed);
+    e.str(layer.strategy);
+    encode_part(&mut e, &layer.pos);
+    encode_part(&mut e, &layer.neg);
+    e.buf
+}
+
+/// Decode a programmed layer. `strategy` must be the caller's interned
+/// registry name and must match the stored provenance string.
+fn decode_layer(payload: &[u8], strategy: &'static str) -> Result<ProgrammedLayer> {
+    let mut d = Dec::new(payload);
+    let geometry = TileGeometry::new(d.usize()?, d.usize()?, d.usize()?)?;
+    let physics =
+        CrossbarPhysics { r_wire: d.f64()?, r_on: d.f64()?, r_off: d.f64()?, v_in: d.f64()? };
+    let eta_signed = d.f64()?;
+    let stored = d.str()?;
+    ensure!(
+        stored == strategy,
+        "stored strategy {stored:?} does not match requested {strategy:?}"
+    );
+    let pos = decode_part(&mut d)?;
+    let neg = decode_part(&mut d)?;
+    d.done()?;
+    ProgrammedLayer::from_parts(geometry, physics, eta_signed, strategy, pos, neg)
+}
+
+fn encode_chip(e: &mut Enc, chip: &ChipModel) {
+    e.usize(chip.slot_rows);
+    e.usize(chip.slot_cols);
+    e.usize(chip.geometry.rows);
+    e.usize(chip.geometry.cols);
+    e.usize(chip.geometry.k_bits);
+    e.usize(chip.adc_group);
+    e.f64(chip.pr_gradient);
+    e.f64(chip.route_ns_per_hop);
+    e.f64(chip.route_pj_per_byte_hop);
+    e.f64(chip.reprogram_ns);
+    e.f64(chip.reprogram_pj_per_cell);
+    e.f64(chip.slot_area_mm2);
+    e.f64(chip.adc_area_mm2);
+    e.u8(match chip.spill {
+        SpillPolicy::MoreChips => 0,
+        SpillPolicy::Reuse => 1,
+    });
+}
+
+fn decode_chip(d: &mut Dec<'_>) -> Result<ChipModel> {
+    let chip = ChipModel {
+        slot_rows: d.usize()?,
+        slot_cols: d.usize()?,
+        geometry: TileGeometry::new(d.usize()?, d.usize()?, d.usize()?)?,
+        adc_group: d.usize()?,
+        pr_gradient: d.f64()?,
+        route_ns_per_hop: d.f64()?,
+        route_pj_per_byte_hop: d.f64()?,
+        reprogram_ns: d.f64()?,
+        reprogram_pj_per_cell: d.f64()?,
+        slot_area_mm2: d.f64()?,
+        adc_area_mm2: d.f64()?,
+        spill: match d.u8()? {
+            0 => SpillPolicy::MoreChips,
+            1 => SpillPolicy::Reuse,
+            other => bail!("unknown spill policy tag {other}"),
+        },
+    };
+    chip.validate()?;
+    Ok(chip)
+}
+
+/// Encode a placement into payload bytes.
+pub fn encode_placement(p: &Placement) -> Vec<u8> {
+    let mut e = Enc::new();
+    encode_chip(&mut e, &p.chip);
+    e.str(p.placer);
+    e.usize(p.regions);
+    e.usize(p.blocks.len());
+    for b in &p.blocks {
+        e.str(&b.label);
+        e.usize(b.layer);
+        e.usize(b.grid_origin.0);
+        e.usize(b.grid_origin.1);
+        e.usize(b.rows);
+        e.usize(b.cols);
+        e.usize(b.fan_in);
+        e.usize(b.fan_out);
+        e.f64(b.nf_weight);
+    }
+    e.usize(p.placed.len());
+    for pb in &p.placed {
+        e.usize(pb.block);
+        e.usize(pb.region);
+        e.usize(pb.row);
+        e.usize(pb.col);
+    }
+    e.buf
+}
+
+fn decode_placement(payload: &[u8]) -> Result<Placement> {
+    let mut d = Dec::new(payload);
+    let chip = decode_chip(&mut d)?;
+    // Resolve the stored placer name back to its interned registry string;
+    // a placer that is no longer registered makes the artifact undecodable
+    // (and thus a miss), never a dangling reference.
+    let placer = placer_by_name(&d.str()?)?.name();
+    let regions = d.usize()?;
+    let n_blocks = d.count(1)?;
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        blocks.push(TileBlock {
+            label: d.str()?,
+            layer: d.usize()?,
+            grid_origin: (d.usize()?, d.usize()?),
+            rows: d.usize()?,
+            cols: d.usize()?,
+            fan_in: d.usize()?,
+            fan_out: d.usize()?,
+            nf_weight: d.f64()?,
+        });
+    }
+    let n_placed = d.count(32)?;
+    let mut placed = Vec::with_capacity(n_placed);
+    for _ in 0..n_placed {
+        placed.push(PlacedBlock {
+            block: d.usize()?,
+            region: d.usize()?,
+            row: d.usize()?,
+            col: d.usize()?,
+        });
+    }
+    d.done()?;
+    let placement = Placement { chip, blocks, placed, placer, regions };
+    placement.validate()?;
+    Ok(placement)
+}
+
+fn encode_sweep(values: &[f64]) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.usize(values.len());
+    for &v in values {
+        e.f64(v);
+    }
+    e.buf
+}
+
+fn decode_sweep(payload: &[u8]) -> Result<Vec<f64>> {
+    let mut d = Dec::new(payload);
+    let n = d.count(8)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(d.f64()?);
+    }
+    d.done()?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::Pipeline;
+    use crate::rng::Xoshiro256;
+
+    fn test_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mdm-compile-store-{tag}-{}", std::process::id()))
+    }
+
+    fn small_layer() -> ProgrammedLayer {
+        let mut rng = Xoshiro256::seeded(11);
+        let data: Vec<f32> = (0..24 * 12).map(|_| rng.laplace(0.2) as f32).collect();
+        let w = Tensor::new(&[24, 12], data).unwrap();
+        Pipeline::new(TileGeometry::new(16, 16, 8).unwrap())
+            .strategy("mdm")
+            .unwrap()
+            .eta_signed(-2e-3)
+            .compile(&w)
+            .unwrap()
+    }
+
+    fn layer_key(tag: u64) -> ArtifactKey {
+        let mut h = KeyHasher::new();
+        h.u64(tag);
+        ArtifactKey::new(ArtifactKind::Layer, &h)
+    }
+
+    #[test]
+    fn store_stats_hit_rate_is_zero_not_nan_without_lookups() {
+        let stats = StoreStats::default();
+        assert_eq!(stats.hit_rate(), 0.0);
+        assert!(!stats.hit_rate().is_nan());
+    }
+
+    #[test]
+    fn layer_roundtrip_is_bitwise_identical() {
+        let dir = test_dir("roundtrip");
+        let _ = fs::remove_dir_all(&dir);
+        let store = CompileArtifactStore::open(&dir).unwrap();
+        let layer = small_layer();
+        let key = layer_key(1);
+
+        assert!(store.load_layer(&key, "mdm").is_none(), "cold store must miss");
+        store.store_layer(&key, &layer).unwrap();
+        let loaded = store.load_layer(&key, "mdm").expect("stored layer must hit");
+
+        assert_eq!(loaded.effective_weights().data(), layer.effective_weights().data());
+        assert_eq!(loaded.pos.effective.data(), layer.pos.effective.data());
+        assert_eq!(loaded.neg.cost, layer.neg.cost);
+        assert_eq!(loaded.pos.tiles.len(), layer.pos.tiles.len());
+        for (a, b) in loaded.pos.tiles.iter().zip(&layer.pos.tiles) {
+            assert_eq!(a.plan.row_perm(), b.plan.row_perm());
+            assert_eq!(a.plan.col_perm(), b.plan.col_perm());
+            assert_eq!(a.weights.data(), b.weights.data());
+        }
+        assert_eq!(encode_layer(&loaded), encode_layer(&layer), "re-encode must be bitwise equal");
+
+        let stats = store.stats();
+        assert_eq!((stats.hits, stats.misses, stats.stores), (1, 1, 1));
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_garbage_and_stale_files_degrade_to_misses() {
+        let dir = test_dir("corrupt");
+        let _ = fs::remove_dir_all(&dir);
+        let store = CompileArtifactStore::open(&dir).unwrap();
+        let layer = small_layer();
+
+        // Truncated: drop the tail of a valid file.
+        let key = layer_key(2);
+        store.store_layer(&key, &layer).unwrap();
+        let path = dir.join(key.file_name());
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(store.load_layer(&key, "mdm").is_none());
+        assert!(!path.exists(), "corrupt file must be swept aside");
+
+        // Garbage bytes of a plausible size.
+        let key = layer_key(3);
+        fs::write(dir.join(key.file_name()), vec![0xAB; 4096]).unwrap();
+        assert!(store.load_layer(&key, "mdm").is_none());
+
+        // Flipped payload byte behind a valid header fails the checksum.
+        let key = layer_key(4);
+        store.store_layer(&key, &layer).unwrap();
+        let path = dir.join(key.file_name());
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        assert!(store.load_layer(&key, "mdm").is_none());
+
+        // Stale schema version is evicted, not quarantined.
+        let key = layer_key(5);
+        store.store_layer(&key, &layer).unwrap();
+        let path = dir.join(key.file_name());
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&(SCHEMA_VERSION + 1).to_le_bytes());
+        fs::write(&path, &bytes).unwrap();
+        assert!(store.load_layer(&key, "mdm").is_none());
+        assert!(!path.exists(), "stale file must be evicted");
+
+        let stats = store.stats();
+        assert_eq!(stats.hits, 0);
+        assert_eq!(stats.misses, 4);
+        assert!(stats.quarantined >= 2);
+        assert!(stats.evictions >= 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn strategy_mismatch_is_a_miss() {
+        let dir = test_dir("mismatch");
+        let _ = fs::remove_dir_all(&dir);
+        let store = CompileArtifactStore::open(&dir).unwrap();
+        let key = layer_key(6);
+        store.store_layer(&key, &small_layer()).unwrap();
+        assert!(store.load_layer(&key, "conventional").is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_roundtrip_and_kind_separation() {
+        let dir = test_dir("sweep");
+        let _ = fs::remove_dir_all(&dir);
+        let store = CompileArtifactStore::open(&dir).unwrap();
+        let mut h = KeyHasher::new();
+        h.str("fig5");
+        h.u64(7);
+        let key = ArtifactKey::new(ArtifactKind::Sweep, &h);
+        let values = [1.25f64, -0.5, 3e-9];
+        store.store_sweep(&key, &values).unwrap();
+        assert_eq!(store.load_sweep(&key).unwrap(), values);
+        // Same digest under a different kind is a distinct address.
+        let layer_alias = ArtifactKey { kind: ArtifactKind::Layer, digest: key.digest };
+        assert!(store.load_layer(&layer_alias, "mdm").is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_respects_budgets_and_keep_set() {
+        let dir = test_dir("gc");
+        let _ = fs::remove_dir_all(&dir);
+        let store = CompileArtifactStore::open(&dir).unwrap();
+        let layer = small_layer();
+        let keys: Vec<ArtifactKey> = (10..14).map(layer_key).collect();
+        for key in &keys {
+            store.store_layer(key, &layer).unwrap();
+        }
+        let total: u64 = store.list().unwrap().iter().map(|e| e.bytes).sum();
+        let one = total / 4;
+
+        // Keep the first key alive, budget room for roughly two files.
+        let keep: HashSet<String> = [keys[0].file_name()].into_iter().collect();
+        let report = store.gc(Some(2 * one + one / 2), None, &keep).unwrap();
+        assert!(report.removed >= 2, "size budget must evict: {report:?}");
+        assert!(report.kept_bytes <= 2 * one + one / 2);
+        assert!(
+            dir.join(keys[0].file_name()).exists(),
+            "gc must never delete a kept artifact"
+        );
+
+        // Age budget of zero clears everything unprotected.
+        let report = store.gc(None, Some(0), &keep).unwrap();
+        assert_eq!(report.kept, 1);
+        assert!(dir.join(keys[0].file_name()).exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,15 +1,24 @@
 //! A compiled PJRT executable with tensor-level call conventions.
 
+#[cfg(pjrt_runtime)]
 use super::{literal_to_tensor, tensor_to_literal};
 use crate::tensor::Tensor;
-use anyhow::{ensure, Context, Result};
+#[cfg(pjrt_runtime)]
+use anyhow::Context;
+use anyhow::{ensure, Result};
 
 /// One compiled HLO module, executable with [`Tensor`] operands.
 ///
 /// All AOT entry points are lowered with `return_tuple=True`, so the single
 /// output literal is a tuple; [`CompiledModule::run`] unpacks it into one
 /// tensor per element.
+///
+/// In builds without the `pjrt_runtime` cfg the type exists (so callers
+/// holding `Arc<CompiledModule>` compile) but cannot be constructed:
+/// [`super::Runtime::compile_file`] is the only constructor path and the
+/// stub runtime refuses it.
 pub struct CompiledModule {
+    #[cfg(pjrt_runtime)]
     exe: xla::PjRtLoadedExecutable,
     name: String,
     /// Cumulative number of `run` calls (metrics).
@@ -17,6 +26,7 @@ pub struct CompiledModule {
 }
 
 impl CompiledModule {
+    #[cfg(pjrt_runtime)]
     pub(super) fn new(exe: xla::PjRtLoadedExecutable, name: String) -> Self {
         Self { exe, name, calls: std::sync::atomic::AtomicU64::new(0) }
     }
@@ -32,6 +42,7 @@ impl CompiledModule {
     }
 
     /// Execute with tensor inputs; returns the tuple elements as tensors.
+    #[cfg(pjrt_runtime)]
     pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let literals: Vec<xla::Literal> =
             inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
@@ -51,10 +62,20 @@ impl CompiledModule {
         })
     }
 
+    /// Stub `run`: unreachable in practice (the type cannot be built
+    /// without PJRT) but kept API-compatible for callers.
+    #[cfg(not(pjrt_runtime))]
+    pub fn run(&self, _inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        anyhow::bail!("{}: built without PJRT runtime support", self.name)
+    }
+
     /// Execute and expect exactly one output tensor.
     pub fn run1(&self, inputs: &[&Tensor]) -> Result<Tensor> {
         let mut out = self.run(inputs)?;
         ensure!(out.len() == 1, "{} returned {} outputs, expected 1", self.name, out.len());
-        Ok(out.pop().expect("len checked"))
+        match out.pop() {
+            Some(t) => Ok(t),
+            None => anyhow::bail!("{}: empty output after length check", self.name),
+        }
     }
 }

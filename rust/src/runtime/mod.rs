@@ -1,5 +1,6 @@
 //! PJRT runtime: load the AOT-compiled HLO artifacts and execute them from
-//! Rust — Python never runs on this path.
+//! Rust — Python never runs on this path — plus the persistent
+//! [`CompileArtifactStore`] for programmed-layer warm starts.
 //!
 //! Wraps the `xla` crate (docs.rs/xla 0.1.6 over xla_extension 0.5.1):
 //! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
@@ -7,22 +8,43 @@
 //! (see `python/compile/aot.py` and /opt/xla-example/README.md: jax ≥ 0.5
 //! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids).
+//!
+//! The xla dependency is compile-time gated: build with
+//! `RUSTFLAGS="--cfg pjrt_runtime"` (and the `xla` crate vendored) to get
+//! the real PJRT path. Without the cfg — the default, matching offline
+//! environments where the `xla` native toolchain is unavailable — the
+//! same API surface compiles against stubs whose execution entry points
+//! return errors, so everything that does not touch PJRT (the compile
+//! pipeline, the artifact store, weights/data loading) keeps working.
 
 mod artifacts;
+mod compile_store;
 mod executable;
 
 pub use artifacts::{ArtifactStore, Manifest, ManifestEntry};
+pub use compile_store::{
+    encode_layer, encode_placement, ArtifactInfo, ArtifactKey, ArtifactKind,
+    CompileArtifactStore, GcReport, KeyHasher, StoreStats, SCHEMA_VERSION,
+};
 pub use executable::CompiledModule;
 
+#[cfg(pjrt_runtime)]
 use crate::tensor::Tensor;
-use anyhow::{Context, Result};
+#[cfg(pjrt_runtime)]
+use anyhow::Context;
+use anyhow::Result;
+#[cfg(pjrt_runtime)]
 use std::sync::Arc;
 
 /// Shared PJRT CPU client. One per process; executables keep an `Arc`.
+/// Without the `pjrt_runtime` cfg this is an inert handle whose
+/// [`Runtime::compile_file`] reports that PJRT support is not built in.
 pub struct Runtime {
+    #[cfg(pjrt_runtime)]
     client: Arc<xla::PjRtClient>,
 }
 
+#[cfg(pjrt_runtime)]
 impl Runtime {
     /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -56,7 +78,36 @@ impl Runtime {
     }
 }
 
+#[cfg(not(pjrt_runtime))]
+impl Runtime {
+    /// Stub client so artifact-directory plumbing (manifest, weights,
+    /// datasets) stays usable in builds without PJRT support.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {})
+    }
+
+    /// Backend platform name of the stub.
+    pub fn platform(&self) -> String {
+        "unavailable (built without --cfg pjrt_runtime)".to_string()
+    }
+
+    /// Number of addressable devices (0: the stub cannot execute).
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Always fails: executing HLO needs the real PJRT client.
+    pub fn compile_file(&self, path: impl AsRef<std::path::Path>) -> Result<CompiledModule> {
+        anyhow::bail!(
+            "cannot compile {}: built without PJRT support (rebuild with \
+             RUSTFLAGS=\"--cfg pjrt_runtime\" and the xla crate available)",
+            path.as_ref().display()
+        )
+    }
+}
+
 /// Convert a [`Tensor`] to an `xla::Literal` (f32, row-major).
+#[cfg(pjrt_runtime)]
 pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(t.data());
     let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
@@ -64,6 +115,7 @@ pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
 }
 
 /// Convert an `xla::Literal` back to a [`Tensor`].
+#[cfg(pjrt_runtime)]
 pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
     let shape = lit.shape().context("literal shape")?;
     let dims: Vec<usize> = match &shape {
@@ -74,7 +126,7 @@ pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
     Tensor::new(&dims, data)
 }
 
-#[cfg(test)]
+#[cfg(all(test, pjrt_runtime))]
 mod tests {
     use super::*;
 
@@ -91,5 +143,19 @@ mod tests {
         let rt = Runtime::cpu().unwrap();
         assert!(rt.device_count() >= 1);
         assert!(!rt.platform().is_empty());
+    }
+}
+
+#[cfg(all(test, not(pjrt_runtime)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.device_count(), 0);
+        assert!(rt.platform().contains("unavailable"));
+        let err = rt.compile_file("nowhere.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("without PJRT support"));
     }
 }

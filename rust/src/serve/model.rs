@@ -81,6 +81,10 @@ pub struct SyntheticModelConfig {
     pub chip: Option<ChipModel>,
     /// Placer registry name used for chip pricing.
     pub placer: String,
+    /// Persistent compile-artifact store: programmed layers found here are
+    /// warm-started instead of recompiled, and freshly compiled layers are
+    /// published back (`None` = always cold).
+    pub store: Option<Arc<crate::runtime::CompileArtifactStore>>,
 }
 
 impl Default for SyntheticModelConfig {
@@ -93,6 +97,7 @@ impl Default for SyntheticModelConfig {
             parallel: ParallelConfig::default(),
             chip: None,
             placer: "nf_aware".into(),
+            store: None,
         }
     }
 }
@@ -113,7 +118,8 @@ impl SyntheticModel {
         let pipeline = Pipeline::new(cfg.geometry)
             .strategy(&cfg.strategy)?
             .eta_signed(cfg.eta_signed)
-            .parallel(cfg.parallel);
+            .parallel(cfg.parallel)
+            .artifact_store_opt(cfg.store.clone());
         let programmed = pipeline.compile_model(&desc, cfg.seed)?;
         let unit = match &cfg.chip {
             Some(chip) => {

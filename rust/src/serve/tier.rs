@@ -163,6 +163,16 @@ struct Shared {
     metrics: ServeMetrics,
 }
 
+impl Shared {
+    /// Lock the queue state, tolerating poisoning: a worker that panicked
+    /// mid-wave leaves accounting that is still structurally valid, and
+    /// refusing the lock would wedge admission, draining, and shutdown for
+    /// every other thread for good.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
 /// The running serving tier. See the module docs for the topology.
 pub struct ServeTier {
     shared: Arc<Shared>,
@@ -247,8 +257,7 @@ impl ServeTier {
                             };
                             loop {
                                 let wave = {
-                                    let mut st =
-                                        shared.state.lock().expect("serve state lock");
+                                    let mut st = shared.lock_state();
                                     loop {
                                         if let Some(wave) = pop_wave(&mut st, mi, wave_rows)
                                         {
@@ -260,7 +269,7 @@ impl ServeTier {
                                         st = shared
                                             .work_cv
                                             .wait(st)
-                                            .expect("serve state lock");
+                                            .unwrap_or_else(std::sync::PoisonError::into_inner);
                                     }
                                 };
                                 let Some(wave) = wave else { break };
@@ -320,7 +329,7 @@ impl ServeTier {
         let rows = x.rows();
         let (tx, rx) = mpsc::channel();
         {
-            let mut st = self.shared.state.lock().expect("serve state lock");
+            let mut st = self.shared.lock_state();
             if st.stopping {
                 return Err(ServeError::Stopped);
             }
@@ -366,11 +375,15 @@ impl ServeTier {
 
     fn drain_and_join(&mut self) {
         {
-            let mut st = self.shared.state.lock().expect("serve state lock");
+            let mut st = self.shared.lock_state();
             st.stopping = true;
             self.shared.work_cv.notify_all();
             while st.in_flight > 0 || st.queues.iter().any(|q| !q.is_empty()) {
-                st = self.shared.drain_cv.wait(st).expect("serve state lock");
+                st = self
+                    .shared
+                    .drain_cv
+                    .wait(st)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         }
         for t in self.workers.drain(..) {
@@ -396,15 +409,16 @@ fn pop_wave(st: &mut QueueState, model: usize, wave_rows: usize) -> Option<Vec<S
     }
     let mut wave = Vec::new();
     let mut rows = 0usize;
-    while let Some(front) = st.queues[model].front() {
+    while let Some(front) = st.queues[model].pop_front() {
         let r = front.x.rows();
         if !wave.is_empty() && rows + r > wave_rows {
+            st.queues[model].push_front(front);
             break;
         }
         rows += r;
-        wave.push(st.queues[model].pop_front().expect("front just observed"));
+        wave.push(front);
     }
-    st.queued_rows -= rows;
+    st.queued_rows = st.queued_rows.saturating_sub(rows);
     st.in_flight += wave.len();
     Some(wave)
 }
@@ -455,7 +469,17 @@ fn process_wave(
                     part.extend_from_slice(y.row(r));
                 }
                 row += n;
-                let logits = Tensor::new(&[n, width], part).expect("logit slice shape");
+                let logits = match Tensor::new(&[n, width], part) {
+                    Ok(t) => t,
+                    Err(err) => {
+                        // A malformed logit slice fails *this* request
+                        // (channel dropped → caller sees RecvError) without
+                        // panicking the worker thread.
+                        eprintln!("serve response slice failed: {err:#}");
+                        ServeMetrics::bump(&shared.metrics.failed, 1);
+                        continue;
+                    }
+                };
                 let latency_us = req.submitted.elapsed().as_micros() as u64;
                 shared.metrics.latency.record(latency_us);
                 ServeMetrics::bump(&shared.metrics.completed, 1);
@@ -476,11 +500,11 @@ fn process_wave(
         }
     }
 
-    let mut st = shared.state.lock().expect("serve state lock");
+    let mut st = shared.lock_state();
     for t in tenants {
-        st.tenant_outstanding[t] -= 1;
+        st.tenant_outstanding[t] = st.tenant_outstanding[t].saturating_sub(1);
     }
-    st.in_flight -= n_reqs;
+    st.in_flight = st.in_flight.saturating_sub(n_reqs);
     drop(st);
     shared.drain_cv.notify_all();
 }

@@ -1,0 +1,171 @@
+//! Integration tests over the persistent compile-artifact store
+//! (rust/DESIGN.md §12): warm starts are bitwise identical to cold
+//! compiles at any thread count, corrupted/truncated/stale artifacts
+//! degrade to recomputes (never errors), concurrent writers racing on one
+//! key all converge to the same bytes, and gc honors budgets without
+//! touching protected keys.
+
+use mdm_cim::crossbar::TileGeometry;
+use mdm_cim::models::{generate_layer_weights, WeightProfile};
+use mdm_cim::parallel::ParallelConfig;
+use mdm_cim::pipeline::Pipeline;
+use mdm_cim::runtime::{encode_layer, CompileArtifactStore, SCHEMA_VERSION};
+use mdm_cim::tensor::Tensor;
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Fresh per-test scratch directory (pid-suffixed so parallel `cargo test`
+/// invocations of different processes never collide).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mdm-artifacts-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn small_weights(seed: u64) -> Tensor {
+    generate_layer_weights(48, 12, &WeightProfile::cnn(), seed).unwrap()
+}
+
+fn pipeline(store: Option<Arc<CompileArtifactStore>>, threads: usize) -> Pipeline {
+    Pipeline::new(TileGeometry::new(16, 16, 8).unwrap())
+        .strategy("mdm")
+        .unwrap()
+        .estimator("analytic")
+        .unwrap()
+        .eta_signed(-2e-3)
+        .parallel(ParallelConfig::with_threads(threads))
+        .artifact_store_opt(store)
+}
+
+#[test]
+fn warm_start_is_bitwise_identical_to_cold_at_every_thread_count() {
+    let dir = tmp_dir("threads");
+    let w = small_weights(7);
+    // Cold reference: no store attached, serial.
+    let reference = encode_layer(&pipeline(None, 1).compile(&w).unwrap());
+
+    // First iteration compiles cold and publishes; every later iteration
+    // (and thread count) must warm-start to the exact same bytes.
+    for threads in [1usize, 2, 4, 8] {
+        let store = Arc::new(CompileArtifactStore::open(&dir).unwrap());
+        let layer = pipeline(Some(store), threads).compile(&w).unwrap();
+        assert_eq!(
+            encode_layer(&layer),
+            reference,
+            "store-backed compile diverged at {threads} thread(s)"
+        );
+    }
+
+    let store = Arc::new(CompileArtifactStore::open(&dir).unwrap());
+    let layer = pipeline(Some(store.clone()), 3).compile(&w).unwrap();
+    assert_eq!(encode_layer(&layer), reference);
+    let st = store.stats();
+    assert_eq!((st.hits, st.misses), (1, 0), "restart did not warm-start");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_garbage_and_stale_artifacts_degrade_to_recomputes() {
+    let dir = tmp_dir("corrupt");
+    let store = Arc::new(CompileArtifactStore::open(&dir).unwrap());
+    let p = pipeline(Some(store.clone()), 2);
+    let w = small_weights(11);
+    let reference = encode_layer(&p.compile(&w).unwrap());
+    let path = dir.join(p.layer_key(&w).unwrap().file_name());
+    assert!(path.exists(), "cold compile did not publish an artifact");
+
+    // Truncated container: quarantined, recomputed bitwise identical.
+    let full = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    assert_eq!(encode_layer(&p.compile(&w).unwrap()), reference);
+    assert!(store.stats().quarantined >= 1, "truncated artifact was not quarantined");
+    assert!(path.exists(), "recompute did not republish after quarantine");
+
+    // Garbage bytes: same degradation.
+    std::fs::write(&path, b"definitely not an mdm artifact container").unwrap();
+    assert_eq!(encode_layer(&p.compile(&w).unwrap()), reference);
+    assert!(store.stats().quarantined >= 2);
+
+    // Stale schema version in an otherwise valid container: evicted (not
+    // quarantined), then recomputed and republished at the current version.
+    let mut stale = std::fs::read(&path).unwrap();
+    stale[4..8].copy_from_slice(&(SCHEMA_VERSION + 1).to_le_bytes());
+    std::fs::write(&path, &stale).unwrap();
+    let evictions_before = store.stats().evictions;
+    assert_eq!(encode_layer(&p.compile(&w).unwrap()), reference);
+    assert!(store.stats().evictions > evictions_before, "stale version was not evicted");
+
+    // The republished artifact serves a clean hit again.
+    let fresh = Arc::new(CompileArtifactStore::open(&dir).unwrap());
+    assert_eq!(encode_layer(&pipeline(Some(fresh.clone()), 2).compile(&w).unwrap()), reference);
+    assert_eq!(fresh.stats().hits, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_writers_racing_on_one_key_all_match_the_cold_compile() {
+    let dir = tmp_dir("race");
+    let w = small_weights(13);
+    let reference = encode_layer(&pipeline(None, 1).compile(&w).unwrap());
+
+    // Every thread opens its own store handle on the same directory and
+    // compiles the same layer: publication is write-then-rename, so
+    // whichever writer lands last leaves a complete, verified artifact.
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let dir = &dir;
+                let w = &w;
+                let reference = &reference;
+                s.spawn(move || {
+                    let store = Arc::new(CompileArtifactStore::open(dir).unwrap());
+                    let layer = pipeline(Some(store), 1).compile(w).unwrap();
+                    assert_eq!(&encode_layer(&layer), reference);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    // Whatever survived the race warm-starts bitwise identically.
+    let store = Arc::new(CompileArtifactStore::open(&dir).unwrap());
+    assert_eq!(encode_layer(&pipeline(Some(store.clone()), 1).compile(&w).unwrap()), reference);
+    let st = store.stats();
+    assert_eq!((st.hits, st.misses, st.quarantined), (1, 0, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_honors_budgets_and_never_deletes_protected_keys() {
+    let dir = tmp_dir("gc");
+    let store = Arc::new(CompileArtifactStore::open(&dir).unwrap());
+    let p = pipeline(Some(store.clone()), 1);
+    let w_keep = small_weights(17);
+    let w_evict = small_weights(18);
+    let keep_ref = encode_layer(&p.compile(&w_keep).unwrap());
+    p.compile(&w_evict).unwrap();
+    let keep_file = p.layer_key(&w_keep).unwrap().file_name();
+    let keep: HashSet<String> = [keep_file.clone()].into_iter().collect();
+
+    // Age budget 0 clears everything except the protected key.
+    let r = store.gc(None, Some(0), &keep).unwrap();
+    assert_eq!((r.scanned, r.removed, r.kept), (2, 1, 1));
+    assert!(dir.join(&keep_file).exists(), "gc deleted a protected artifact");
+
+    // The survivor still warm-starts bitwise identically.
+    let fresh = Arc::new(CompileArtifactStore::open(&dir).unwrap());
+    assert_eq!(
+        encode_layer(&pipeline(Some(fresh.clone()), 1).compile(&w_keep).unwrap()),
+        keep_ref
+    );
+    assert_eq!((fresh.stats().hits, fresh.stats().misses), (1, 0));
+
+    // Size budget 0 with nothing protected empties the store.
+    let r = store.gc(Some(0), None, &HashSet::new()).unwrap();
+    assert_eq!(r.removed, 1);
+    assert!(store.list().unwrap().is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}

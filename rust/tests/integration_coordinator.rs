@@ -217,6 +217,7 @@ fn engine_cost_scales_with_tile_size() {
             geometry: TileGeometry::new(tile, tile, 8).unwrap(),
             fwd_batch: 16,
             solver_parallel: mdm_cim::parallel::ParallelConfig::default(),
+            artifact_store: None,
         };
         Engine::program("artifacts", cfg).unwrap()
     };
