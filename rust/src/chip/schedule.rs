@@ -134,6 +134,11 @@ impl Scheduler {
     /// each switch of the resident reuse round pays the chip reprogramming
     /// cost once (consecutive waves sharing a round pay nothing extra).
     pub fn schedule(&self, placement: &Placement, batch: usize) -> Result<ChipReport> {
+        let _sp = crate::span!(
+            "place.schedule",
+            "blocks={} batch={batch}",
+            placement.blocks.len()
+        );
         ensure!(batch >= 1, "batch must be >= 1");
         placement.validate()?;
         let chip = placement.chip;
@@ -267,6 +272,14 @@ impl Scheduler {
             waves.push(wave);
         }
 
+        // Wave costs for the scrape: counts are monotonic, the histogram
+        // carries the per-wave latency distribution (ns → µs).
+        crate::obs::counter("chip.waves").add(waves.len() as u64);
+        crate::obs::counter("chip.wave_adc_conversions").add(total.adc_conversions);
+        let wave_hist = crate::obs::histogram("chip.wave_latency_us");
+        for w in &waves {
+            wave_hist.record((w.latency_ns / 1_000.0) as u64);
+        }
         Ok(ChipReport {
             placer: placement.placer.to_string(),
             waves,

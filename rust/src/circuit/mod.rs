@@ -237,6 +237,8 @@ impl CrossbarCircuit {
 
     /// Solve the crossbar with the banded-Cholesky direct solver.
     pub fn solve(&self) -> Result<Solution> {
+        let _sp =
+            crate::span!("solve.circuit", "tile={}x{} direct", self.j_rows, self.k_cols);
         let (map, a, rhs) = self.assemble();
         let v = if map.n_unknowns == 0 {
             Vec::new()
@@ -252,6 +254,8 @@ impl CrossbarCircuit {
 
     /// Solve with Jacobi-preconditioned CG (cross-check / huge meshes).
     pub fn solve_cg(&self, tol: f64) -> Result<Solution> {
+        let _sp =
+            crate::span!("solve.circuit", "tile={}x{} cg", self.j_rows, self.k_cols);
         let (map, a, rhs) = self.assemble();
         let v = if map.n_unknowns == 0 {
             Vec::new()
@@ -406,6 +410,9 @@ impl SolverWorkspace {
             self.map = NodeMap::build(j_rows, k_cols);
             self.bw = self.map.bandwidth();
             self.dims = (j_rows, k_cols);
+            crate::obs::counter("circuit.workspace.rebuilds").inc();
+        } else {
+            crate::obs::counter("circuit.workspace.reuses").inc();
         }
         let n = self.map.n_unknowns;
         self.a.reset(n, self.bw);
@@ -418,6 +425,7 @@ impl SolverWorkspace {
     fn solve_planes(&mut self, planes: &Tensor, physics: &CrossbarPhysics) -> Result<()> {
         ensure!(planes.ndim() == 2, "planes must be 2-D");
         let (j_rows, k_cols) = (planes.rows(), planes.cols());
+        let _sp = crate::span!("solve.circuit", "tile={j_rows}x{k_cols}");
         ensure!(j_rows >= 1 && k_cols >= 1, "crossbar must be at least 1x1");
         ensure!(
             physics.r_wire > 0.0 && physics.r_on > 0.0,

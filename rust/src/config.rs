@@ -345,6 +345,31 @@ impl ServeSettings {
     }
 }
 
+/// Typed observability configuration (`[obs]` section), consumed by the
+/// CLI leader before dispatching any subcommand. Command-line flags
+/// (`--trace`, `--metrics-addr`) take precedence over the file.
+#[derive(Debug, Clone, Default)]
+pub struct ObsSettings {
+    /// Chrome-trace output path; empty disables trace export.
+    pub trace: String,
+    /// Prometheus listen address (`host:port`); empty disables the
+    /// exposition server.
+    pub metrics_addr: String,
+    /// Force span recording on even without a trace/exposition sink.
+    pub enabled: bool,
+}
+
+impl ObsSettings {
+    /// Build from `[obs]` section with defaults (everything off).
+    pub fn from_config(c: &Config) -> Self {
+        Self {
+            trace: c.str_or("obs", "trace", ""),
+            metrics_addr: c.str_or("obs", "metrics_addr", ""),
+            enabled: c.bool_or("obs", "enabled", false),
+        }
+    }
+}
+
 /// Typed compile-artifact-store configuration (`[artifacts]` section),
 /// consumed wherever a [`crate::runtime::CompileArtifactStore`] is opened
 /// (`mdm serve`, `mdm bench --artifacts`, `mdm artifacts {list,gc,verify}`).

@@ -60,6 +60,7 @@ pub fn tile_size_sweep(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<TileSizeRow>> {
+    let _sp = crate::span!("ablation.tilesize", "sizes={}", sizes.len());
     // A 512x64 bell-shaped layer, fixed across sizes.
     let profile = crate::models::WeightProfile::cnn();
     let w = crate::models::generate_layer_weights(512, 64, &profile, seed)?;
@@ -141,6 +142,7 @@ pub fn sparsity_sweep(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<SparsitySweepRow>> {
+    let _sp = crate::span!("ablation.sparsity", "levels={}", levels.len());
     let conv = strategy_by_name("conventional")?;
     let mdm = strategy_by_name("mdm")?;
     let mut rng = Xoshiro256::seeded(seed);
@@ -222,6 +224,7 @@ pub fn ratio_sweep(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<RatioRow>> {
+    let _sp = crate::span!("ablation.ratio", "points={}", r_values.len());
     let pool = ParallelConfig::default();
     let mut rows = Vec::new();
     for &r_wire in r_values {
@@ -276,6 +279,7 @@ pub fn roworder_compare(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<RowOrderRow>> {
+    let _sp = crate::span!("ablation.roworder", "tiles={n_tiles}");
     let profile = crate::models::WeightProfile::cnn();
     let strategies: Vec<Arc<dyn MappingStrategy>> = vec![
         Arc::new(Identity::reversed()),
@@ -329,6 +333,7 @@ pub fn variation_sweep(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<(f64, crate::variation::VariationReport)>> {
+    let _sp = crate::span!("ablation.variation", "sigmas={}", sigmas.len());
     let reports = parallel::try_map(&ParallelConfig::default(), sigmas, |&sigma| {
         let model = crate::variation::VariationModel { sigma_on: sigma, sigma_off: 2.0 * sigma };
         crate::variation::monte_carlo(n_tiles, tile, 0.2, CrossbarPhysics::default(), model, seed)
@@ -366,6 +371,7 @@ pub fn fault_sweep(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<(f64, f64, f64, f64)>> {
+    let _sp = crate::span!("ablation.faults", "rates={}", rates.len());
     use crate::faults::{weight_error, FaultAware, FaultMap};
     let profile = crate::models::WeightProfile::cnn();
     let identity = Identity::conventional();
@@ -428,6 +434,7 @@ pub fn adc_sweep(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<(u32, f64, f64, f64)>> {
+    let _sp = crate::span!("ablation.adc", "points={}", bits_list.len());
     use crate::crossbar::{quantize_partials, AdcTransfer};
     let profile = crate::models::WeightProfile::cnn();
     let w = crate::models::generate_layer_weights(tile, tile / k_bits, &profile, seed)?;
@@ -498,6 +505,7 @@ pub fn global_sort_compare(
     seed: u64,
     results_dir: &Path,
 ) -> Result<Vec<GlobalSortRow>> {
+    let _sp = crate::span!("ablation.global", "fan_in={fan_in}");
     use crate::mdm::{global_row_assignment, row_stats};
     let profile = crate::models::WeightProfile::cnn();
     let w = crate::models::generate_layer_weights(fan_in, tile / k_bits, &profile, seed)?;
@@ -638,6 +646,13 @@ pub fn placement_sweep(
     cfg: &PlacementSweepConfig,
     results_dir: &Path,
 ) -> Result<Vec<PlacementRow>> {
+    let _sp = crate::span!(
+        "ablation.placement",
+        "tiles={} placers={} strategies={}",
+        cfg.tiles.len(),
+        cfg.placers.len(),
+        cfg.strategies.len()
+    );
     let desc = crate::models::model_by_name(&cfg.model)?;
     let mut workloads = Vec::with_capacity(cfg.tiles.len() * cfg.strategies.len());
     for (ti, &tile) in cfg.tiles.iter().enumerate() {

@@ -75,6 +75,7 @@ pub struct Fig4Result {
 /// Kirchhoff solves fan out over `cfg.parallel` — results are bitwise
 /// identical at any thread count.
 pub fn run(cfg: Fig4Config, results_dir: &Path) -> Result<Fig4Result> {
+    let _sp = crate::span!("fig4.run", "tiles={} tile={}", cfg.n_tiles, cfg.tile);
     let mut rng = Xoshiro256::seeded(cfg.seed);
     let tiles: Vec<Tensor> = (0..cfg.n_tiles)
         .map(|_| {
@@ -89,14 +90,16 @@ pub fn run(cfg: Fig4Config, results_dir: &Path) -> Result<Fig4Result> {
         .collect();
     // Calculated: Eq. 16 exactly as written (sum form), via the analytic
     // estimator's batch entry point.
-    let calculated = Analytic.nf_sum_batch(&tiles, &cfg.physics, &cfg.parallel)?;
+    let calculated = {
+        let _sp = crate::span!("fig4.calculated");
+        Analytic.nf_sum_batch(&tiles, &cfg.physics, &cfg.parallel)?
+    };
     // Measured: the configured measuring backend (default: one full
     // Kirchhoff solve per tile through the thread-local workspaces).
-    let measured = estimator_by_name(&cfg.estimator)?.nf_mean_batch(
-        &tiles,
-        &cfg.physics,
-        &cfg.parallel,
-    )?;
+    let measured = {
+        let _sp = crate::span!("fig4.measured", "estimator={}", cfg.estimator);
+        estimator_by_name(&cfg.estimator)?.nf_mean_batch(&tiles, &cfg.physics, &cfg.parallel)?
+    };
     let fit = fit_hypothesis(&calculated, &measured);
     let spread = 3.0 * fit.error_summary.std;
     let histogram = Histogram::build(

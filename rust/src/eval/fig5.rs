@@ -150,8 +150,10 @@ fn model_nf(
 
 /// Run Fig. 5 over the configured models.
 pub fn run(cfg: &Fig5Config, results_dir: &Path) -> Result<Vec<Fig5Row>> {
+    let _sp = crate::span!("fig5.run", "models={}", cfg.models.len());
     let mut rows = Vec::new();
     for name in &cfg.models {
+        let _sp_model = crate::span!("fig5.model", "model={name}");
         let desc = model_by_name(name)?;
         let weights = if desc.is_trained() && cfg.artifacts_dir.is_some() {
             let dir = cfg.artifacts_dir.as_ref().expect("checked");

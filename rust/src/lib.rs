@@ -53,6 +53,7 @@ pub mod mdm;
 pub mod models;
 pub mod nf;
 pub mod noise;
+pub mod obs;
 pub mod parallel;
 pub mod pipeline;
 pub mod quant;

@@ -18,14 +18,20 @@
 //! mdm netlist   [--rows J] [--cols K]           SPICE deck export
 //! mdm info                                      artifact/manifest summary
 //! mdm artifacts <list|gc|verify>                compile-artifact store admin
+//! mdm obs dump  [--out f.json]                  metrics-registry snapshot
 //! ```
+//!
+//! Every subcommand accepts `--trace FILE` (Chrome trace of the run) and
+//! `--metrics-addr HOST:PORT` (Prometheus `/metrics` exposition).
 //!
 //! Common flags: `--config path.toml`, `--results dir`, `--artifacts dir`,
 //! `--seed N`, `--strategy NAME`. No `clap` offline — a small hand-rolled
 //! parser below (rust/DESIGN.md §5).
 
 use anyhow::{bail, Context, Result};
-use mdm_cim::config::{ArtifactSettings, ChipSettings, Config, ExperimentConfig, ServeSettings};
+use mdm_cim::config::{
+    ArtifactSettings, ChipSettings, Config, ExperimentConfig, ObsSettings, ServeSettings,
+};
 use mdm_cim::coordinator::{EngineConfig, ModelKind};
 use mdm_cim::crossbar::TileGeometry;
 use mdm_cim::serve;
@@ -148,7 +154,8 @@ fn models_flag(args: &Args, default_all: bool) -> Vec<String> {
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = parse_args(&argv)?;
-    match args.cmd.as_str() {
+    let obs = ObsSession::start(&args)?;
+    let result = match args.cmd.as_str() {
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -170,7 +177,89 @@ fn main() -> Result<()> {
         "info" => cmd_info(&args),
         "doctor" => cmd_doctor(&args),
         "artifacts" => cmd_artifacts(&args),
+        "obs" => cmd_obs(&args),
         other => bail!("unknown command {other:?}; see `mdm help`"),
+    };
+    // Flush the trace / hold the scrape endpoint even when the command
+    // failed: a trace of a failing run is the one you want most. The
+    // command's own error stays the primary one.
+    let finished = obs.finish();
+    result.and(finished)
+}
+
+/// Process-wide observability wiring, resolved before any subcommand runs:
+/// `--trace FILE` (Chrome trace on exit), `--metrics-addr HOST:PORT`
+/// (Prometheus `/metrics` for the lifetime of the command), and the
+/// `[obs]` config section. Any sink enables span recording.
+struct ObsSession {
+    trace: Option<String>,
+    server: Option<mdm_cim::obs::MetricsServer>,
+    hold_ms: u64,
+}
+
+impl ObsSession {
+    fn start(args: &Args) -> Result<Self> {
+        let file = match args.flags.get("config") {
+            Some(path) => ObsSettings::from_config(&Config::load(path)?),
+            None => ObsSettings::default(),
+        };
+        let trace = args
+            .flags
+            .get("trace")
+            .cloned()
+            .or_else(|| (!file.trace.is_empty()).then(|| file.trace.clone()));
+        let addr = args
+            .flags
+            .get("metrics-addr")
+            .cloned()
+            .or_else(|| (!file.metrics_addr.is_empty()).then(|| file.metrics_addr.clone()));
+        if trace.is_some() || addr.is_some() || file.enabled {
+            mdm_cim::obs::set_enabled(true);
+        }
+        let server = match &addr {
+            Some(a) => {
+                let s = mdm_cim::obs::MetricsServer::start(a)?;
+                eprintln!("metrics: http://{}/metrics", s.local_addr());
+                Some(s)
+            }
+            None => None,
+        };
+        let hold_ms = args.usize_or("hold-metrics-ms", 0) as u64;
+        Ok(Self { trace, server, hold_ms })
+    }
+
+    fn finish(self) -> Result<()> {
+        if let Some(path) = &self.trace {
+            mdm_cim::obs::span::write_trace(path)?;
+            eprintln!("trace: {path} (load in Perfetto or chrome://tracing)");
+        }
+        if self.server.is_some() && self.hold_ms > 0 {
+            // Keep the scrape endpoint alive so an external scraper (CI's
+            // curl) can observe the finished run's counters.
+            std::thread::sleep(std::time::Duration::from_millis(self.hold_ms));
+        }
+        Ok(())
+    }
+}
+
+/// `mdm obs dump [--out FILE]` — one-shot JSON snapshot of the metrics
+/// registry (counters, gauges, histogram percentiles).
+fn cmd_obs(args: &Args) -> Result<()> {
+    match args.sub.as_deref() {
+        Some("dump") | None => {
+            let snap = mdm_cim::obs::snapshot_json();
+            let pairs: Vec<(&str, report::Json)> =
+                snap.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+            match args.flags.get("out") {
+                Some(path) => {
+                    report::write_json_object(path, &pairs)?;
+                    println!("obs json: {path}");
+                }
+                None => print!("{}", report::json_object(&pairs)),
+            }
+            Ok(())
+        }
+        other => bail!("obs {other:?} unknown (dump)"),
     }
 }
 
@@ -261,7 +350,10 @@ commands (paper experiment in brackets):
                  --warm-start: cold vs warm model compile through a fresh
                  compile-artifact store, gating bitwise identity, a
                  perfect warm hit-rate, and warm wall < cold ->
-                 BENCH_artifacts.json
+                 BENCH_artifacts.json; with --obs-overhead: gate span
+                 instrumentation cost on the packed-NF workload (raw vs
+                 disabled vs enabled; disabled/raw <= 1.03) ->
+                 BENCH_obs_overhead.json
   place          chip placement sweep: tile sizes x placers x strategies
                  -> BENCH_chip_place.json (--tiles 32,64 --placer
                  firstfit,skyline,maxrects,nf_aware --strategies a,b
@@ -269,6 +361,8 @@ commands (paper experiment in brackets):
                  --spill chips|reuse, also `[chip]` in a config file)
   strategies     list the registered mapping strategies
   estimators     list the registered NF-estimation backends
+  obs            observability admin: `dump` prints (or --out writes) a
+                 one-shot JSON snapshot of the metrics registry
   netlist        export a SPICE .cir deck of a crossbar
   info           artifact manifest summary
   doctor         verify artifacts, kernel/oracle agreement, engines
@@ -291,6 +385,12 @@ common flags: --config f.toml --results DIR --artifacts DIR --seed N
               --store DIR / --no-store (compile-artifact store for
               warm-started layer programming; default runtime/artifacts,
               also `[artifacts]` in a config file)
+              --trace FILE (write a Chrome trace of the run, loadable in
+              Perfetto / chrome://tracing; any subcommand)
+              --metrics-addr HOST:PORT (Prometheus /metrics for the
+              lifetime of the command; --hold-metrics-ms N keeps it up
+              after the run so a scraper can read the final counters)
+              ([obs] trace / metrics_addr / enabled in a config file)
 ";
 
 fn cmd_estimators(_args: &Args) -> Result<()> {
@@ -880,7 +980,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
 
-    let t0 = std::time::Instant::now();
+    let sp_run = mdm_cim::span!("serve.run", "requests={n_requests} rows={rows_per_req}");
     let tier = serve::ServeTier::start(specs, tenants, tier_cfg)?;
     let mut receivers = Vec::new();
     let mut shed = 0usize;
@@ -898,15 +998,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ok += 1;
         }
     }
-    let elapsed = t0.elapsed();
+    let elapsed_s = sp_run.elapsed_secs();
     // The drain barrier: shutdown() answers every admitted request before
     // returning (see the tier-level regression tests).
     let snap = tier.shutdown();
+    drop(sp_run);
     println!(
-        "{ok}/{n_requests} responses ({shed} shed) in {:.2}s  ({:.1} req/s, {:.1} rows/s)",
-        elapsed.as_secs_f64(),
-        ok as f64 / elapsed.as_secs_f64(),
-        snap.rows as f64 / elapsed.as_secs_f64()
+        "{ok}/{n_requests} responses ({shed} shed) in {elapsed_s:.2}s  \
+         ({:.1} req/s, {:.1} rows/s)",
+        ok as f64 / elapsed_s,
+        snap.rows as f64 / elapsed_s
     );
     println!(
         "waves {}  latency p50/p95/p99 {:.1}/{:.1}/{:.1} ms  ADC conversions {}  energy {} pJ",
@@ -940,7 +1041,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // (same escaping/formatting path as every other emitted artifact).
     {
         use mdm_cim::report::Json;
-        let elapsed_s = elapsed.as_secs_f64().max(f64::MIN_POSITIVE);
+        let safe_elapsed_s = elapsed_s.max(f64::MIN_POSITIVE);
         let mut pairs: Vec<(&str, Json)> = vec![
             (
                 "models",
@@ -968,9 +1069,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("latency_p95_us", Json::Int(snap.latency_p95_us as i64)),
             ("latency_p99_us", Json::Int(snap.latency_p99_us as i64)),
             ("latency_mean_us", Json::Num(snap.latency_mean_us)),
-            ("elapsed_s", Json::Num(elapsed.as_secs_f64())),
-            ("req_per_s", Json::Num(ok as f64 / elapsed_s)),
-            ("rows_per_s", Json::Num(snap.rows as f64 / elapsed_s)),
+            ("elapsed_s", Json::Num(elapsed_s)),
+            ("req_per_s", Json::Num(ok as f64 / safe_elapsed_s)),
+            ("rows_per_s", Json::Num(snap.rows as f64 / safe_elapsed_s)),
             (
                 "tenants",
                 Json::Arr(
@@ -1094,7 +1195,12 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         lt.tenant_quota,
         lt.serve.shed_rows
     );
-    let t0 = std::time::Instant::now();
+    let sp_run = mdm_cim::span!(
+        "loadtest.run",
+        "points={} clients={}",
+        lt.rates.len(),
+        lt.closed_clients
+    );
     let rep = serve::run_loadtest(&lt)?;
     let fmt_point = |label: String, p: &serve::RatePoint| -> Vec<String> {
         vec![
@@ -1137,8 +1243,9 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     println!(
         "saturation {:.1} req/s; swept in {:.2}s",
         rep.saturation_rps,
-        t0.elapsed().as_secs_f64()
+        sp_run.elapsed_secs()
     );
+    drop(sp_run);
     let out_path = args.str_or("out", "BENCH_serve_slo.json");
     serve::loadtest::write_report(&out_path, &lt, &rep)?;
     println!("report json: {out_path}");
@@ -1204,6 +1311,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if args.flags.contains_key("bitplane") {
         return cmd_bench_bitplane(args, &cfg);
     }
+    if args.flags.contains_key("obs-overhead") {
+        return cmd_bench_obs_overhead(args, &cfg);
+    }
     if args.flags.contains_key("warm-start") {
         return cmd_bench_artifacts(args, &cfg);
     }
@@ -1233,6 +1343,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         parallel.threads
     );
     let run_pass = |p: &ParallelConfig| -> Result<(f64, Vec<f64>, Vec<f64>)> {
+        let _sp = mdm_cim::span!("bench.pass", "threads={}", p.threads);
         let mut best = f64::INFINITY;
         let mut series = None;
         for _ in 0..repeats.max(1) {
@@ -1357,6 +1468,115 @@ fn bit_sliced_workload(
     Ok(planes)
 }
 
+/// `mdm bench --obs-overhead` — gate the cost of span instrumentation on
+/// the packed-NF workload. Three in-process passes over the same
+/// [`bit_sliced_workload`], best-of-`--repeats` each:
+///
+/// * **raw** — direct packed-NF calls, no span site on the path at all;
+/// * **disabled** — one span site per plane with recording off (the cost
+///   every uninstrumented run pays: one relaxed atomic load + `Instant`);
+/// * **enabled** — recording on (ring push + duration histogram).
+///
+/// Gates `disabled/raw <= 1.03` (a wall-clock *ratio*, so the gate is
+/// machine-independent) and writes `BENCH_obs_overhead.json`.
+fn cmd_bench_obs_overhead(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> Result<()> {
+    use mdm_cim::nf::estimator::{NfEstimator, Packed};
+    use mdm_cim::report::Json;
+
+    let model = args.str_or("model", "miniresnet");
+    let tile = args.usize_or("tile", cfg.tile_size);
+    let geometry = TileGeometry::new(tile, tile, cfg.k_bits)?;
+    let per_layer = args.usize_or("tiles", 4);
+    let max_planes = args.usize_or("max-planes", 512);
+    let repeats = args.usize_or("repeats", 7);
+    let gate = args.f64_or("gate", 1.03);
+    let out_path = args.str_or("out", "BENCH_obs_overhead.json");
+    let physics = CrossbarPhysics::default();
+    let planes = bit_sliced_workload(&model, geometry, per_layer, max_planes, cfg.seed)?;
+    println!(
+        "obs-overhead: {} packed-NF planes of {tile}x{tile} ({model}), best of {repeats}, \
+         gate {gate:.2}x",
+        planes.len()
+    );
+
+    // `spanned` switches the per-plane span site; the enabled/disabled
+    // split comes from the global flag so both passes run identical code.
+    let run = |spanned: bool| -> Result<f64> {
+        let mut best = f64::INFINITY;
+        for _ in 0..repeats.max(1) {
+            let t0 = std::time::Instant::now();
+            let mut sink = 0.0f64;
+            for p in &planes {
+                if spanned {
+                    let _sp = mdm_cim::span!("bench.obs_probe");
+                    sink += Packed.nf_per_col(p, &physics)?.iter().sum::<f64>();
+                } else {
+                    sink += Packed.nf_per_col(p, &physics)?.iter().sum::<f64>();
+                }
+            }
+            std::hint::black_box(sink);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        Ok(best)
+    };
+
+    let was_enabled = mdm_cim::obs::enabled();
+    mdm_cim::obs::set_enabled(false);
+    let raw_s = run(false)?;
+    let disabled_s = run(true)?;
+    mdm_cim::obs::set_enabled(true);
+    let enabled_s = run(true)?;
+    mdm_cim::obs::set_enabled(was_enabled);
+
+    let overhead_disabled = disabled_s / raw_s.max(f64::MIN_POSITIVE);
+    let overhead_enabled = enabled_s / raw_s.max(f64::MIN_POSITIVE);
+    println!(
+        "{}",
+        report::table(
+            &["pass", "wall s", "vs raw"],
+            &[
+                vec!["raw".into(), format!("{raw_s:.5}"), "1.00x".into()],
+                vec![
+                    "disabled".into(),
+                    format!("{disabled_s:.5}"),
+                    format!("{overhead_disabled:.3}x"),
+                ],
+                vec![
+                    "enabled".into(),
+                    format!("{enabled_s:.5}"),
+                    format!("{overhead_enabled:.3}x"),
+                ],
+            ],
+        )
+    );
+    let pass = overhead_disabled <= gate;
+    report::write_json_object(
+        &out_path,
+        &[
+            ("benchmark", Json::Str("obs_overhead".into())),
+            ("workload", Json::Str("packed-NF per-plane scoring".into())),
+            ("model", Json::Str(model.clone())),
+            ("tile", Json::Int(tile as i64)),
+            ("n_planes", Json::Int(planes.len() as i64)),
+            ("repeats", Json::Int(repeats as i64)),
+            ("seed", Json::Int(cfg.seed as i64)),
+            ("raw_wall_s", Json::Num(raw_s)),
+            ("disabled_wall_s", Json::Num(disabled_s)),
+            ("enabled_wall_s", Json::Num(enabled_s)),
+            ("overhead_disabled", Json::Num(overhead_disabled)),
+            ("overhead_enabled", Json::Num(overhead_enabled)),
+            ("gate", Json::Num(gate)),
+            ("pass", Json::Bool(pass)),
+        ],
+    )?;
+    println!("json: {out_path}");
+    anyhow::ensure!(
+        pass,
+        "disabled-instrumentation overhead {overhead_disabled:.3}x exceeds the {gate:.2}x gate"
+    );
+    Ok(())
+}
+
 /// Canonical base backend under any stack of `cached:` decorators.
 fn estimator_base_name(canonical: &str) -> &str {
     let mut base = canonical;
@@ -1402,23 +1622,29 @@ fn cmd_bench_estimator(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> 
     // Baseline: uncached exact solves (thread-local workspaces, no memo).
     let mut base_s = f64::INFINITY;
     let mut base_nf: Vec<f64> = Vec::new();
-    for _ in 0..repeats.max(1) {
-        let baseline = estimator_by_name("circuit")?;
-        let t0 = std::time::Instant::now();
-        base_nf = baseline.nf_mean_batch(&planes, &physics, &parallel)?;
-        base_s = base_s.min(t0.elapsed().as_secs_f64());
+    {
+        let _sp = mdm_cim::span!("bench.estimator.baseline");
+        for _ in 0..repeats.max(1) {
+            let baseline = estimator_by_name("circuit")?;
+            let t0 = std::time::Instant::now();
+            base_nf = baseline.nf_mean_batch(&planes, &physics, &parallel)?;
+            base_s = base_s.min(t0.elapsed().as_secs_f64());
+        }
     }
     // Candidate: a **fresh** estimator per repeat so caches start cold —
     // the measured speedup is intra-run dedup, not cross-repeat warming.
     let mut est_s = f64::INFINITY;
     let mut est_nf: Vec<f64> = Vec::new();
     let mut stats = None;
-    for _ in 0..repeats.max(1) {
-        let est = estimator_by_name(&est_name)?;
-        let t0 = std::time::Instant::now();
-        est_nf = est.nf_mean_batch(&planes, &physics, &parallel)?;
-        est_s = est_s.min(t0.elapsed().as_secs_f64());
-        stats = est.cache_stats();
+    {
+        let _sp = mdm_cim::span!("bench.estimator.candidate", "estimator={est_name}");
+        for _ in 0..repeats.max(1) {
+            let est = estimator_by_name(&est_name)?;
+            let t0 = std::time::Instant::now();
+            est_nf = est.nf_mean_batch(&planes, &physics, &parallel)?;
+            est_s = est_s.min(t0.elapsed().as_secs_f64());
+            stats = est.cache_stats();
+        }
     }
 
     let bitwise_identical = base_nf.len() == est_nf.len()
@@ -1580,9 +1806,18 @@ fn cmd_bench_bitplane(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> R
         }
         Ok((best, nf))
     };
-    let (scalar_s, scalar_nf) = time_batch(&Analytic)?;
-    let (packed_s, packed_nf) = time_batch(&Packed)?;
-    let (incremental_s, incremental_nf) = time_batch(&Incremental)?;
+    let (scalar_s, scalar_nf) = {
+        let _sp = mdm_cim::span!("bench.bitplane.scalar");
+        time_batch(&Analytic)?
+    };
+    let (packed_s, packed_nf) = {
+        let _sp = mdm_cim::span!("bench.bitplane.packed");
+        time_batch(&Packed)?
+    };
+    let (incremental_s, incremental_nf) = {
+        let _sp = mdm_cim::span!("bench.bitplane.incremental");
+        time_batch(&Incremental)?
+    };
 
     let identical = |candidate: &[f64]| {
         candidate.len() == scalar_nf.len()
@@ -1661,6 +1896,7 @@ fn cmd_bench_bitplane(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> R
     };
 
     // Timed: O(row) delta re-score per step.
+    let sp_inc = mdm_cim::span!("bench.bitplane.rescore_incremental");
     let mut inc_s = f64::INFINITY;
     for _ in 0..repeats.max(1) {
         let t0 = Instant::now();
@@ -1677,10 +1913,12 @@ fn cmd_bench_bitplane(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> R
         }
         inc_s = inc_s.min(t0.elapsed().as_secs_f64());
     }
+    drop(sp_inc);
     let total_steps = (search_planes.len() * moves) as f64;
     let incremental_step_ns = inc_s / total_steps * 1e9;
 
     // Timed: full packed re-score (row permute + popcount walk) per step.
+    let sp_full = mdm_cim::span!("bench.bitplane.rescore_packed");
     let mut full_s = f64::INFINITY;
     for _ in 0..repeats.max(1) {
         let t0 = Instant::now();
@@ -1693,11 +1931,13 @@ fn cmd_bench_bitplane(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> R
         }
         full_s = full_s.min(t0.elapsed().as_secs_f64());
     }
+    drop(sp_full);
     let full_step_ns = full_s / total_steps * 1e9;
 
     // Timed: full scalar re-score (f32 permute + per-cell walk) per step —
     // capped to keep the smoke run bounded; reported per step.
     let scalar_moves = moves.min(args.usize_or("scalar-moves", 256)).max(1);
+    let sp_scalar = mdm_cim::span!("bench.bitplane.rescore_scalar");
     let mut scalar_full_s = f64::INFINITY;
     for _ in 0..repeats.max(1) {
         let t0 = Instant::now();
@@ -1710,6 +1950,7 @@ fn cmd_bench_bitplane(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> R
         }
         scalar_full_s = scalar_full_s.min(t0.elapsed().as_secs_f64());
     }
+    drop(sp_scalar);
     let scalar_full_step_ns =
         scalar_full_s / (search_planes.len() * scalar_moves) as f64 * 1e9;
 
@@ -1864,14 +2105,16 @@ fn cmd_bench_artifacts(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> 
         cfg.strategy, cfg.estimator, cfg.tile_size, cfg.tile_size, cfg.k_bits, cfg.eta_signed
     );
 
-    let t0 = std::time::Instant::now();
+    let sp_cold = mdm_cim::span!("bench.compile_cold", "model={model}");
     let cold = pipeline(store.clone())?.compile_model(&desc, cfg.seed)?;
-    let cold_s = t0.elapsed().as_secs_f64();
+    let cold_s = sp_cold.elapsed_secs();
+    drop(sp_cold);
     let after_cold = store.stats();
 
-    let t1 = std::time::Instant::now();
+    let sp_warm = mdm_cim::span!("bench.compile_warm", "model={model}");
     let warm = pipeline(store.clone())?.compile_model(&desc, cfg.seed)?;
-    let warm_s = t1.elapsed().as_secs_f64();
+    let warm_s = sp_warm.elapsed_secs();
+    drop(sp_warm);
     let after_warm = store.stats();
 
     let n_layers = cold.n_layers();
@@ -2009,7 +2252,14 @@ fn cmd_place(args: &Args) -> Result<()> {
         sweep_cfg.placers.len(),
         sweep_cfg.strategies.len(),
     );
-    let rows = placement_sweep(&sweep_cfg, Path::new(&cfg.results_dir))?;
+    let rows = {
+        let _sp = mdm_cim::span!(
+            "place.sweep",
+            "points={}",
+            sweep_cfg.tiles.len() * sweep_cfg.placers.len() * sweep_cfg.strategies.len()
+        );
+        placement_sweep(&sweep_cfg, Path::new(&cfg.results_dir))?
+    };
     let table: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {

@@ -498,6 +498,11 @@ pub struct Cached {
     per_col: Mutex<HashMap<TileKey, Vec<f64>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    // Registry mirrors of the local atomics, resolved once here so the
+    // per-lookup cost is a single extra relaxed add (no name hashing on
+    // the hot path).
+    obs_hits: Arc<crate::obs::Counter>,
+    obs_misses: Arc<crate::obs::Counter>,
 }
 
 impl Cached {
@@ -510,6 +515,8 @@ impl Cached {
             per_col: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            obs_hits: crate::obs::counter("estimator.cache.hits"),
+            obs_misses: crate::obs::counter("estimator.cache.misses"),
         }
     }
 
@@ -521,9 +528,11 @@ impl Cached {
     ) -> Result<f64> {
         if let Some(&v) = map.lock().expect("nf cache lock").get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            self.obs_hits.inc();
             return Ok(v);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        self.obs_misses.inc();
         let v = compute()?;
         map.lock().expect("nf cache lock").insert(key, v);
         Ok(v)
@@ -565,9 +574,11 @@ impl NfEstimator for Cached {
         let key = TileKey::of(planes, physics)?;
         if let Some(v) = self.per_col.lock().expect("nf cache lock").get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            self.obs_hits.inc();
             return Ok(v.clone());
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        self.obs_misses.inc();
         let v = self.inner.nf_per_col(planes, physics)?;
         self.per_col.lock().expect("nf cache lock").insert(key, v.clone());
         Ok(v)

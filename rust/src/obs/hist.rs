@@ -1,0 +1,202 @@
+//! The shared latency histogram: exact percentiles plus fixed log-spaced
+//! buckets for Prometheus exposition.
+//!
+//! This is the **only** percentile implementation in the crate — the
+//! coordinator's and serve tier's former hand-rolled recorders are both
+//! type aliases of this (`coordinator::LatencyRecorder`). Samples are
+//! microseconds (`u64`). Exact samples are retained up to
+//! [`SAMPLE_CAP`]; `sum`/`count` (and therefore `mean`) stay exact past
+//! the cap, while percentiles then describe the first `SAMPLE_CAP`
+//! samples. Bucket counters are cumulative-compatible (each atomic holds
+//! the count for its half-open range; exposition accumulates them into
+//! Prometheus `le` form).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Upper bounds (inclusive, microseconds) of the fixed buckets: a 1-2-5
+/// series from 1 µs to 1 s, plus 10 s; values above the last bound land
+/// in the implicit `+Inf` bucket.
+pub const BUCKET_BOUNDS_US: &[u64] = &[
+    1,
+    2,
+    5,
+    10,
+    20,
+    50,
+    100,
+    200,
+    500,
+    1_000,
+    2_000,
+    5_000,
+    10_000,
+    20_000,
+    50_000,
+    100_000,
+    200_000,
+    500_000,
+    1_000_000,
+    2_000_000,
+    5_000_000,
+    10_000_000,
+];
+
+/// Exact samples retained for percentile queries (1 Mi samples ≈ 8 MiB).
+pub const SAMPLE_CAP: usize = 1 << 20;
+
+/// Thread-safe latency histogram (microsecond samples).
+#[derive(Debug)]
+pub struct Histogram {
+    samples_us: Mutex<Vec<u64>>,
+    buckets: Vec<AtomicU64>, // BUCKET_BOUNDS_US.len() + 1 (+Inf)
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            samples_us: Mutex::new(Vec::new()),
+            buckets: (0..=BUCKET_BOUNDS_US.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one sample (microseconds).
+    pub fn record(&self, us: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        let idx = BUCKET_BOUNDS_US.partition_point(|&b| b < us);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        let mut s = self.samples_us.lock().expect("histogram lock");
+        if s.len() < SAMPLE_CAP {
+            s.push(us);
+        }
+    }
+
+    /// Total samples recorded (including any past [`SAMPLE_CAP`]).
+    pub fn count(&self) -> usize {
+        self.count.load(Ordering::Relaxed) as usize
+    }
+
+    /// Sum of all samples, microseconds.
+    pub fn sum(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// p-th percentile in microseconds (0 when empty): nearest-rank over
+    /// the retained samples, `rank = round(p/100 · (n−1))`.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let samples = self.samples_us.lock().expect("histogram lock");
+        if samples.is_empty() {
+            return 0;
+        }
+        let mut s = samples.clone();
+        drop(samples);
+        s.sort_unstable();
+        let rank = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    /// Mean in microseconds (0.0 when empty); exact for every recorded
+    /// sample, even past the retention cap.
+    pub fn mean(&self) -> f64 {
+        let n = self.count.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Per-bucket counts (non-cumulative), one per bound plus the final
+    /// `+Inf` bucket.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_zeroed() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.percentile(99.0), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.bucket_counts().iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn single_sample_dominates_every_percentile() {
+        let h = Histogram::default();
+        h.record(42);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(0.0), 42);
+        assert_eq!(h.percentile(50.0), 42);
+        assert_eq!(h.percentile(100.0), 42);
+        assert_eq!(h.mean(), 42.0);
+    }
+
+    #[test]
+    fn percentiles_match_the_legacy_recorder_semantics() {
+        // The exact values the pre-obs LatencyRecorder tests pinned.
+        let h = Histogram::default();
+        for v in [10, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.percentile(0.0), 10);
+        assert_eq!(h.percentile(100.0), 100);
+        assert_eq!(h.percentile(50.0), 60); // round(0.5*9)=5 -> 60
+        assert!((h.mean() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_boundary_values_land_in_their_own_bucket() {
+        // Bounds are inclusive: a sample exactly at a bound counts in
+        // that bound's bucket, matching Prometheus `le` semantics.
+        let h = Histogram::default();
+        h.record(1); // bucket 0 (le=1)
+        h.record(2); // bucket 1 (le=2)
+        h.record(3); // bucket 2 (le=5)
+        h.record(10_000_001); // above the last bound -> +Inf bucket
+        let counts = h.bucket_counts();
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[1], 1);
+        assert_eq!(counts[2], 1);
+        assert_eq!(counts[counts.len() - 1], 1);
+        assert_eq!(counts.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn zero_sample_lands_in_first_bucket() {
+        let h = Histogram::default();
+        h.record(0);
+        assert_eq!(h.bucket_counts()[0], 1);
+        assert_eq!(h.percentile(50.0), 0);
+    }
+
+    #[test]
+    fn concurrent_records_sum_exactly() {
+        let h = Histogram::default();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..5_000 {
+                        h.record(7);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 20_000);
+        assert_eq!(h.sum(), 140_000);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 20_000);
+    }
+}

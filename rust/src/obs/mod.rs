@@ -1,0 +1,322 @@
+//! Unified observability: a global metrics registry (counters, gauges,
+//! fixed-bucket histograms), hierarchical spans with Chrome-trace export,
+//! and Prometheus text exposition — all dependency-free (DESIGN.md §13).
+//!
+//! The registry is **always on** for plain counters/gauges/histograms
+//! (relaxed atomics, same cost the serving metrics already paid); *span
+//! recording* is gated behind a global flag ([`set_enabled`]) so
+//! uninstrumented runs pay only an atomic load per span. Callers on hot
+//! paths should cache the `Arc` handles returned by [`counter`] /
+//! [`gauge`] / [`histogram`] instead of re-resolving names per event.
+//!
+//! Metric names are dot-separated (`pipeline.store.hits`); a name may
+//! carry Prometheus-style labels verbatim (`serve.tenant.completed
+//! {tenant="a"}`) which the exposition layer splits off and re-emits.
+//! Span durations land in per-name histograms under the single
+//! `span_duration_us{span="..."}` family, so `/metrics` exposes
+//! per-stage latency distributions with the percentile math implemented
+//! exactly once ([`Histogram`]).
+
+pub mod hist;
+pub mod prom;
+pub mod span;
+
+pub use hist::Histogram;
+pub use prom::MetricsServer;
+pub use span::SpanGuard;
+
+use crate::report::Json;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic counter (relaxed atomics; safe to share across threads).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add `by` to the counter.
+    pub fn add(&self, by: u64) {
+        self.0.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins signed gauge (queue depths, thread counts).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Set the gauge to `v`.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Add `delta` (may be negative).
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// FNV-1a 64-bit over a name — shard selector and stable test hash.
+fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+const SHARDS: usize = 16;
+
+/// A lock-sharded name → handle map for one metric kind.
+#[derive(Debug)]
+struct Family<T> {
+    shards: Vec<Mutex<HashMap<String, Arc<T>>>>,
+}
+
+impl<T: Default> Family<T> {
+    fn new() -> Self {
+        Self { shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect() }
+    }
+
+    /// Resolve (or create) the handle for `name`. Only the owning shard
+    /// locks, so unrelated names never contend.
+    fn get(&self, name: &str) -> Arc<T> {
+        let shard = &self.shards[(fnv1a(name) as usize) % SHARDS];
+        let mut map = shard.lock().expect("obs family lock");
+        if let Some(v) = map.get(name) {
+            return Arc::clone(v);
+        }
+        let v = Arc::new(T::default());
+        map.insert(name.to_string(), Arc::clone(&v));
+        v
+    }
+
+    /// Name-sorted snapshot of every registered handle.
+    fn entries(&self) -> Vec<(String, Arc<T>)> {
+        let mut out: Vec<(String, Arc<T>)> = Vec::new();
+        for shard in &self.shards {
+            let map = shard.lock().expect("obs family lock");
+            out.extend(map.iter().map(|(k, v)| (k.clone(), Arc::clone(v))));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+/// The process-wide metrics registry. Obtain it via [`registry`]; most
+/// callers use the [`counter`] / [`gauge`] / [`histogram`] shorthands.
+#[derive(Debug)]
+pub struct Registry {
+    counters: Family<Counter>,
+    gauges: Family<Gauge>,
+    histograms: Family<Histogram>,
+    enabled: AtomicBool,
+}
+
+impl Registry {
+    fn new() -> Self {
+        Self {
+            counters: Family::new(),
+            gauges: Family::new(),
+            histograms: Family::new(),
+            enabled: AtomicBool::new(false),
+        }
+    }
+
+    /// Resolve (or create) a counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counters.get(name)
+    }
+
+    /// Resolve (or create) a gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauges.get(name)
+    }
+
+    /// Resolve (or create) a histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Name-sorted counters.
+    pub fn counters(&self) -> Vec<(String, Arc<Counter>)> {
+        self.counters.entries()
+    }
+
+    /// Name-sorted gauges.
+    pub fn gauges(&self) -> Vec<(String, Arc<Gauge>)> {
+        self.gauges.entries()
+    }
+
+    /// Name-sorted histograms.
+    pub fn histograms(&self) -> Vec<(String, Arc<Histogram>)> {
+        self.histograms.entries()
+    }
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The global registry.
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// Shorthand for `registry().counter(name)`.
+pub fn counter(name: &str) -> Arc<Counter> {
+    registry().counter(name)
+}
+
+/// Shorthand for `registry().gauge(name)`.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    registry().gauge(name)
+}
+
+/// Shorthand for `registry().histogram(name)`.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    registry().histogram(name)
+}
+
+/// Whether span recording is enabled (counters/gauges are always on).
+pub fn enabled() -> bool {
+    registry().enabled.load(Ordering::Relaxed)
+}
+
+/// Enable/disable span recording. `--trace`, `--metrics-addr`, and
+/// `[obs] enabled` flip this on; the default is off so uninstrumented
+/// runs pay one relaxed atomic load per span site.
+pub fn set_enabled(on: bool) {
+    if on {
+        span::epoch(); // pin the trace epoch before the first span starts
+    }
+    registry().enabled.store(on, Ordering::Relaxed);
+}
+
+/// One-shot JSON snapshot of the registry (the `mdm obs dump` payload):
+/// `{"counters": {...}, "gauges": {...}, "histograms": {name: {count,
+/// sum_us, mean_us, p50_us, p95_us, p99_us}}}`.
+pub fn snapshot_json() -> Vec<(String, Json)> {
+    let reg = registry();
+    let counters = reg
+        .counters()
+        .into_iter()
+        .map(|(k, v)| (k, Json::Int(v.get() as i64)))
+        .collect();
+    let gauges =
+        reg.gauges().into_iter().map(|(k, v)| (k, Json::Int(v.get()))).collect();
+    let hists = reg
+        .histograms()
+        .into_iter()
+        .map(|(k, h)| {
+            (
+                k,
+                Json::Obj(vec![
+                    ("count".into(), Json::Int(h.count() as i64)),
+                    ("sum_us".into(), Json::Int(h.sum() as i64)),
+                    ("mean_us".into(), Json::Num(h.mean())),
+                    ("p50_us".into(), Json::Int(h.percentile(50.0) as i64)),
+                    ("p95_us".into(), Json::Int(h.percentile(95.0) as i64)),
+                    ("p99_us".into(), Json::Int(h.percentile(99.0) as i64)),
+                ]),
+            )
+        })
+        .collect();
+    vec![
+        ("counters".to_string(), Json::Obj(counters)),
+        ("gauges".to_string(), Json::Obj(gauges)),
+        ("histograms".to_string(), Json::Obj(hists)),
+    ]
+}
+
+/// Start a span; prefer this macro over [`SpanGuard`] directly.
+///
+/// `span!("compile.map")` opens a guard that records a trace event (and a
+/// `span_duration_us{span="compile.map"}` histogram sample) when dropped,
+/// if span recording is enabled. A second format-args form attaches a
+/// detail string shown in the Perfetto args pane:
+/// `span!("compile.tile", "tile={i}")` — the detail is only formatted
+/// when recording is on.
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {
+        $crate::obs::span::SpanGuard::enter($name)
+    };
+    ($name:literal, $($fmt:tt)+) => {
+        $crate::obs::span::SpanGuard::with_detail(
+            $name,
+            if $crate::obs::enabled() { Some(format!($($fmt)+)) } else { None },
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_resolve_by_name_and_accumulate() {
+        let c = counter("test.obs.mod.counter");
+        c.add(2);
+        counter("test.obs.mod.counter").inc();
+        assert_eq!(c.get(), 3);
+        // Distinct names are distinct cells.
+        assert_eq!(counter("test.obs.mod.counter2").get(), 0);
+    }
+
+    #[test]
+    fn gauges_set_and_add() {
+        let g = gauge("test.obs.mod.gauge");
+        g.set(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn concurrent_counter_increments_sum_exactly() {
+        let c = counter("test.obs.mod.concurrent");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn snapshot_lists_registered_names_sorted() {
+        counter("test.obs.snap.b").inc();
+        counter("test.obs.snap.a").inc();
+        let names: Vec<String> = registry()
+            .counters()
+            .into_iter()
+            .map(|(k, _)| k)
+            .filter(|k| k.starts_with("test.obs.snap."))
+            .collect();
+        assert_eq!(names, vec!["test.obs.snap.a", "test.obs.snap.b"]);
+        let snap = snapshot_json();
+        let pairs: Vec<(&str, Json)> =
+            snap.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        let json = crate::report::json_object(&pairs);
+        assert!(json.contains("\"test.obs.snap.a\": 1"));
+    }
+}

@@ -1,0 +1,230 @@
+//! Prometheus text-format exposition (version 0.0.4) over a plain
+//! `std::net::TcpListener` — no HTTP library, no dependencies.
+//!
+//! Metric names are prefixed `mdm_` and sanitized (dots → underscores);
+//! a registry name may embed labels verbatim (`serve.tenant.completed
+//! {tenant="a"}`), which are split off and re-emitted per series so one
+//! `# TYPE` header covers the family. Histograms render cumulative
+//! `_bucket{le="..."}` series plus `_sum` and `_count`, accumulating the
+//! registry's per-bucket counts.
+
+use super::hist::BUCKET_BOUNDS_US;
+use super::Registry;
+use crate::Result;
+use anyhow::Context;
+use std::fmt::Write as _;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Split a registry name into (sanitized metric name, label block).
+/// `"serve.tenant.completed{tenant=\"a\"}"` →
+/// `("mdm_serve_tenant_completed", "{tenant=\"a\"}")`.
+fn split_name(name: &str) -> (String, &str) {
+    let (base, labels) = match name.find('{') {
+        Some(i) => (&name[..i], &name[i..]),
+        None => (name, ""),
+    };
+    let mut out = String::with_capacity(base.len() + 4);
+    out.push_str("mdm_");
+    for c in base.chars() {
+        out.push(if c.is_ascii_alphanumeric() { c } else { '_' });
+    }
+    (out, labels)
+}
+
+/// Merge a `le` label into an existing label block.
+fn with_le(labels: &str, le: &str) -> String {
+    if labels.is_empty() {
+        format!("{{le=\"{le}\"}}")
+    } else {
+        format!("{},le=\"{le}\"}}", &labels[..labels.len() - 1])
+    }
+}
+
+/// Render the whole registry in Prometheus text format.
+pub fn render(reg: &Registry) -> String {
+    let mut out = String::new();
+    let mut last_family = String::new();
+    let mut type_line = |out: &mut String, family: &str, kind: &str| {
+        if family != last_family {
+            let _ = writeln!(out, "# TYPE {family} {kind}");
+            last_family = family.to_string();
+        }
+    };
+    for (name, c) in reg.counters() {
+        let (family, labels) = split_name(&name);
+        type_line(&mut out, &family, "counter");
+        let _ = writeln!(out, "{family}{labels} {}", c.get());
+    }
+    for (name, g) in reg.gauges() {
+        let (family, labels) = split_name(&name);
+        type_line(&mut out, &family, "gauge");
+        let _ = writeln!(out, "{family}{labels} {}", g.get());
+    }
+    for (name, h) in reg.histograms() {
+        let (family, labels) = split_name(&name);
+        type_line(&mut out, &family, "histogram");
+        let counts = h.bucket_counts();
+        let mut cum: u64 = 0;
+        for (i, bound) in BUCKET_BOUNDS_US.iter().enumerate() {
+            cum += counts[i];
+            let _ = writeln!(
+                out,
+                "{family}_bucket{} {cum}",
+                with_le(labels, &bound.to_string())
+            );
+        }
+        cum += counts[counts.len() - 1];
+        let _ = writeln!(out, "{family}_bucket{} {cum}", with_le(labels, "+Inf"));
+        let _ = writeln!(out, "{family}_sum{labels} {}", h.sum());
+        let _ = writeln!(out, "{family}_count{labels} {}", h.count());
+    }
+    out
+}
+
+/// A background `/metrics` server. Bind with [`MetricsServer::start`];
+/// dropping the handle stops the accept loop and joins the thread.
+#[derive(Debug)]
+pub struct MetricsServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`; port 0 picks a free port) and
+    /// serve the global registry until dropped.
+    pub fn start(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics listener on {addr}"))?;
+        let bound = listener.local_addr().context("metrics listener local addr")?;
+        listener.set_nonblocking(true).context("metrics listener nonblocking")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = Arc::clone(&shutdown);
+        let handle = std::thread::Builder::new()
+            .name("mdm-metrics".into())
+            .spawn(move || accept_loop(listener, &stop))
+            .context("spawning metrics thread")?;
+        Ok(Self { addr: bound, shutdown, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shutdown: &AtomicBool) {
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Serve inline: scrapes are rare and the body is small.
+                let _ = serve_one(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+fn serve_one(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // Read the request head (first line is enough to route).
+    let mut buf = [0u8; 2048];
+    let n = stream.read(&mut buf).unwrap_or(0);
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let path = head.split_whitespace().nth(1).unwrap_or("/");
+    let (status, body) = if path == "/metrics" || path == "/" {
+        ("200 OK", render(super::registry()))
+    } else {
+        ("404 Not Found", String::from("not found\n"))
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; \
+         charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_sanitize_and_split_labels() {
+        assert_eq!(split_name("pipeline.store.hits"), ("mdm_pipeline_store_hits".into(), ""));
+        let (f, l) = split_name("serve.tenant.completed{tenant=\"a\"}");
+        assert_eq!(f, "mdm_serve_tenant_completed");
+        assert_eq!(l, "{tenant=\"a\"}");
+    }
+
+    #[test]
+    fn le_merges_into_existing_labels() {
+        assert_eq!(with_le("", "5"), "{le=\"5\"}");
+        assert_eq!(with_le("{a=\"b\"}", "+Inf"), "{a=\"b\",le=\"+Inf\"}");
+    }
+
+    #[test]
+    fn exposition_golden() {
+        // Build a private registry so other tests' metrics can't leak in.
+        let reg = Registry::new();
+        reg.counter("golden.count{tenant=\"a\"}").add(3);
+        reg.counter("golden.count{tenant=\"b\"}").add(4);
+        reg.gauge("golden.depth").set(-2);
+        let h = reg.histogram("golden.lat_us");
+        h.record(1); // le=1
+        h.record(3); // le=5
+        h.record(20_000_000); // +Inf
+        let text = render(&reg);
+        let expected_prefix = "\
+# TYPE mdm_golden_count counter
+mdm_golden_count{tenant=\"a\"} 3
+mdm_golden_count{tenant=\"b\"} 4
+# TYPE mdm_golden_depth gauge
+mdm_golden_depth -2
+# TYPE mdm_golden_lat_us histogram
+mdm_golden_lat_us_bucket{le=\"1\"} 1
+mdm_golden_lat_us_bucket{le=\"2\"} 1
+mdm_golden_lat_us_bucket{le=\"5\"} 2
+";
+        assert!(text.starts_with(expected_prefix), "got:\n{text}");
+        assert!(text.contains("mdm_golden_lat_us_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("mdm_golden_lat_us_sum 20000004"));
+        assert!(text.contains("mdm_golden_lat_us_count 3"));
+    }
+
+    #[test]
+    fn server_serves_metrics_over_tcp() {
+        crate::obs::counter("test.prom.server.hits").add(7);
+        let server = MetricsServer::start("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK"), "got:\n{out}");
+        assert!(out.contains("mdm_test_prom_server_hits 7"), "got:\n{out}");
+        // Unknown paths 404.
+        let mut s2 = TcpStream::connect(addr).unwrap();
+        s2.write_all(b"GET /nope HTTP/1.1\r\n\r\n").unwrap();
+        let mut out2 = String::new();
+        s2.read_to_string(&mut out2).unwrap();
+        assert!(out2.starts_with("HTTP/1.1 404"), "got:\n{out2}");
+    }
+}

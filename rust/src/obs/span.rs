@@ -1,0 +1,247 @@
+//! Hierarchical spans: RAII guards that record thread-aware start/stop
+//! timestamps into a bounded ring buffer, exported as Chrome trace-event
+//! JSON (loadable in Perfetto / `chrome://tracing`).
+//!
+//! Hierarchy is positional: nested guards on one thread produce nested
+//! complete events (`"ph":"X"`), which trace viewers stack by timestamp
+//! containment — dotted names (`compile.map`) group the flame rows.
+//! Every completed span also feeds the
+//! `span_duration_us{span="<name>"}` registry histogram, so `/metrics`
+//! exposes per-stage latency distributions without separate plumbing.
+
+use crate::report::Json;
+use crate::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Ring-buffer capacity: completed spans beyond this drop the oldest
+/// (the drop count is reported in the trace metadata).
+pub const RING_CAP: usize = 1 << 16;
+
+/// One completed span.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    /// Span name (dotted stage path, e.g. `compile.map`).
+    pub name: &'static str,
+    /// Optional detail string (Perfetto args pane).
+    pub detail: Option<String>,
+    /// Start offset from the trace epoch, microseconds.
+    pub start_us: u64,
+    /// Duration, microseconds.
+    pub dur_us: u64,
+    /// Dense per-process thread id (0 = first thread observed).
+    pub tid: u64,
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    events: VecDeque<SpanEvent>,
+    dropped: u64,
+}
+
+static RING: Mutex<Ring> = Mutex::new(Ring { events: VecDeque::new(), dropped: 0 });
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// The process trace epoch (pinned on first use; [`super::set_enabled`]
+/// pins it eagerly so no span can start before it).
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// RAII span guard: records on drop when span recording is enabled.
+/// Construct via the [`crate::span!`] macro. The guard always times
+/// (cheap), so call sites can read [`SpanGuard::elapsed_secs`] for
+/// report fields whether or not recording is on.
+#[derive(Debug)]
+pub struct SpanGuard {
+    name: &'static str,
+    detail: Option<String>,
+    start: Instant,
+    record: bool,
+}
+
+impl SpanGuard {
+    /// Open a span.
+    pub fn enter(name: &'static str) -> Self {
+        Self::with_detail(name, None)
+    }
+
+    /// Open a span with a detail string (shown in the trace args pane).
+    pub fn with_detail(name: &'static str, detail: Option<String>) -> Self {
+        let record = super::enabled();
+        if record {
+            epoch(); // ensure epoch <= start
+        }
+        Self { name, detail, start: Instant::now(), record }
+    }
+
+    /// Seconds since the span opened.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Microseconds since the span opened.
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.record || !super::enabled() {
+            return;
+        }
+        let dur_us = self.start.elapsed().as_micros() as u64;
+        let start_us = self.start.duration_since(epoch()).as_micros() as u64;
+        let tid = TID.with(|t| *t);
+        super::histogram(&format!("span_duration_us{{span=\"{}\"}}", self.name))
+            .record(dur_us);
+        let mut ring = RING.lock().expect("span ring lock");
+        if ring.events.len() >= RING_CAP {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        ring.events.push_back(SpanEvent {
+            name: self.name,
+            detail: self.detail.take(),
+            start_us,
+            dur_us,
+            tid,
+        });
+    }
+}
+
+/// Snapshot the completed spans currently in the ring (oldest first) and
+/// the count of spans dropped by the ring bound.
+pub fn snapshot() -> (Vec<SpanEvent>, u64) {
+    let ring = RING.lock().expect("span ring lock");
+    (ring.events.iter().cloned().collect(), ring.dropped)
+}
+
+/// Clear the ring (tests and repeated exports).
+pub fn clear() {
+    let mut ring = RING.lock().expect("span ring lock");
+    ring.events.clear();
+    ring.dropped = 0;
+}
+
+/// Render the ring as Chrome trace-event JSON (the object form:
+/// `{"traceEvents": [...], ...}`), loadable in Perfetto.
+pub fn trace_json() -> String {
+    let (events, dropped) = snapshot();
+    let trace_events: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut obj = vec![
+                ("name".to_string(), Json::Str(e.name.to_string())),
+                ("cat".to_string(), Json::Str("mdm".into())),
+                ("ph".to_string(), Json::Str("X".into())),
+                ("pid".to_string(), Json::Int(1)),
+                ("tid".to_string(), Json::Int(e.tid as i64)),
+                ("ts".to_string(), Json::Int(e.start_us as i64)),
+                ("dur".to_string(), Json::Int(e.dur_us as i64)),
+            ];
+            if let Some(d) = &e.detail {
+                obj.push((
+                    "args".to_string(),
+                    Json::Obj(vec![("detail".to_string(), Json::Str(d.clone()))]),
+                ));
+            }
+            Json::Obj(obj)
+        })
+        .collect();
+    crate::report::json_object(&[
+        ("traceEvents", Json::Arr(trace_events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("droppedSpans", Json::Int(dropped as i64)),
+    ])
+}
+
+/// Write the Chrome trace to `path` (creates parent directories).
+pub fn write_trace(path: impl AsRef<std::path::Path>) -> Result<()> {
+    use anyhow::Context;
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, trace_json())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Span tests share the global enabled flag and ring with every other
+    // test in the process, so they serialize on one lock and filter by
+    // their own span names.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = TEST_LOCK.lock().unwrap();
+        crate::obs::set_enabled(false);
+        clear();
+        {
+            let _s = crate::span!("test.span.disabled");
+        }
+        let (events, _) = snapshot();
+        assert!(events.iter().all(|e| e.name != "test.span.disabled"));
+    }
+
+    #[test]
+    fn enabled_spans_land_in_ring_and_histogram() {
+        let _g = TEST_LOCK.lock().unwrap();
+        crate::obs::set_enabled(true);
+        clear();
+        {
+            let _outer = crate::span!("test.span.outer");
+            let _inner = crate::span!("test.span.inner", "tile={}", 3);
+        }
+        crate::obs::set_enabled(false);
+        let (events, dropped) = snapshot();
+        assert_eq!(dropped, 0);
+        let inner = events.iter().find(|e| e.name == "test.span.inner").unwrap();
+        let outer = events.iter().find(|e| e.name == "test.span.outer").unwrap();
+        // Inner drops first and nests within outer on the same thread.
+        assert_eq!(inner.detail.as_deref(), Some("tile=3"));
+        assert_eq!(inner.tid, outer.tid);
+        assert!(inner.start_us >= outer.start_us);
+        let h = crate::obs::histogram("span_duration_us{span=\"test.span.inner\"}");
+        assert!(h.count() >= 1);
+    }
+
+    #[test]
+    fn trace_json_has_chrome_fields() {
+        let _g = TEST_LOCK.lock().unwrap();
+        crate::obs::set_enabled(true);
+        clear();
+        {
+            let _s = crate::span!("test.span.trace");
+        }
+        crate::obs::set_enabled(false);
+        let json = trace_json();
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"ph\": \"X\""));
+        assert!(json.contains("\"test.span.trace\""));
+        assert!(json.contains("\"ts\""));
+        assert!(json.contains("\"dur\""));
+    }
+
+    #[test]
+    fn elapsed_works_without_recording() {
+        let s = SpanGuard::enter("test.span.elapsed");
+        assert!(s.elapsed_secs() >= 0.0);
+        let _ = s.elapsed_us();
+    }
+}

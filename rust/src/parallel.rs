@@ -93,9 +93,15 @@ where
     F: Fn(usize) -> R + Sync,
 {
     let workers = cfg.effective_threads(n);
+    // Pool utilization for `/metrics` and `mdm obs dump`: jobs/items are
+    // monotonic counters, the gauge tracks the width of the last fan-out.
+    crate::obs::counter("parallel.jobs").inc();
+    crate::obs::counter("parallel.items").add(n as u64);
+    crate::obs::gauge("parallel.workers").set(workers as i64);
     if workers <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
+    let _sp = crate::span!("parallel.map", "items={n} workers={workers}");
     let per = n.div_ceil(workers);
     let mut chunks: Vec<Vec<R>> = Vec::with_capacity(workers);
     std::thread::scope(|s| {

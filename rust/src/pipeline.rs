@@ -228,6 +228,13 @@ impl Pipeline {
     /// per Eq. 17, and cache the assembled effective weights.
     pub fn compile(&self, w_signed: &Tensor) -> Result<ProgrammedLayer> {
         ensure!(w_signed.ndim() == 2, "layer matrix must be 2-D, got {:?}", w_signed.shape());
+        let _sp = crate::span!(
+            "compile.layer",
+            "shape={}x{} strategy={}",
+            w_signed.rows(),
+            w_signed.cols(),
+            self.strategy.name()
+        );
         // Warm start: an attached artifact store answers with the persisted
         // (bitwise-identical) layer before any solving happens. Corrupt or
         // stale files surface as misses inside the store, never as errors.
@@ -267,11 +274,22 @@ impl Pipeline {
     /// [`ParallelConfig`]; tiles cover disjoint regions of the part, so the
     /// ordered re-assembly below is bitwise identical to the serial loop.
     pub fn compile_nonneg(&self, w: &Tensor) -> Result<ProgrammedPart> {
-        let quant = self.part_quantizer(w)?;
-        let tiling = LayerTiling::partition_with(w, self.geometry, quant)?;
+        let quant = {
+            let _sp = crate::span!("compile.quantize");
+            self.part_quantizer(w)?
+        };
+        let tiling = {
+            let _sp = crate::span!("compile.tile");
+            LayerTiling::partition_with(w, self.geometry, quant)?
+        };
         // Price the part while the tiling is in hand, so callers never need
         // a second partition pass just for cost accounting.
         let cost = self.cost_model.layer_cost(&tiling, 1);
+        // The span covers both per-tile stages (mapping plan + Eq.-17
+        // distortion): the fan-out is one unit of work per tile and the
+        // stages share the workers, so splitting them would time the pool
+        // twice without attributing anything new.
+        let sp_map = crate::span!("compile.map", "tiles={}", tiling.tiles.len());
         let tiles: Vec<ProgrammedTile> =
             parallel::try_map(&self.parallel, &tiling.tiles, |tile| {
                 let plan = tile.plan(self.strategy.as_ref());
@@ -283,6 +301,8 @@ impl Pipeline {
                     weights,
                 })
             })?;
+        drop(sp_map);
+        let _sp_assemble = crate::span!("compile.assemble");
         let mut effective = Tensor::zeros(&[tiling.fan_in, tiling.fan_out]);
         for tile in &tiles {
             for r in 0..tile.weights.rows() {
@@ -721,7 +741,10 @@ impl ProgrammedModel {
         placer: &dyn crate::chip::Placer,
         batch: usize,
     ) -> Result<crate::chip::ChipReport> {
-        let placement = placer.place(&self.workload(chip)?)?;
+        let placement = {
+            let _sp = crate::span!("place.pack", "placer={}", placer.name());
+            placer.place(&self.workload(chip)?)?
+        };
         crate::chip::Scheduler::default().schedule(&placement, batch)
     }
 }

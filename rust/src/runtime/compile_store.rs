@@ -396,20 +396,27 @@ impl CompileArtifactStore {
         let path = self.path_for(key);
         let outcome = read_verified(&path, kind)
             .and_then(|payload| decode(&payload).map_err(|e| LoadMiss::Corrupt(e.to_string())));
+        // Per-store atomics stay authoritative for `stats()`; the global
+        // registry gets the same bumps so `/metrics` and `mdm obs dump`
+        // see every store in the process under one name.
         match outcome {
             Ok(value) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs::counter("store.hits").inc();
                 Some(value)
             }
             Err(LoadMiss::Absent) => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                crate::obs::counter("store.misses").inc();
                 None
             }
             Err(LoadMiss::Stale) => {
                 if fs::remove_file(&path).is_ok() {
                     self.evictions.fetch_add(1, Ordering::Relaxed);
+                    crate::obs::counter("store.evictions").inc();
                 }
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                crate::obs::counter("store.misses").inc();
                 None
             }
             Err(LoadMiss::Corrupt(_)) => {
@@ -421,6 +428,8 @@ impl CompileArtifactStore {
                 }
                 self.quarantined.fetch_add(1, Ordering::Relaxed);
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                crate::obs::counter("store.quarantined").inc();
+                crate::obs::counter("store.misses").inc();
                 None
             }
         }
@@ -453,6 +462,7 @@ impl CompileArtifactStore {
         }
         publish?;
         self.stores.fetch_add(1, Ordering::Relaxed);
+        crate::obs::counter("store.stores").inc();
         Ok(())
     }
 
@@ -518,6 +528,7 @@ impl CompileArtifactStore {
                 match fs::remove_file(self.dir.join(&e.file)) {
                     Ok(()) => {
                         self.evictions.fetch_add(1, Ordering::Relaxed);
+                        crate::obs::counter("store.evictions").inc();
                         resident = resident.saturating_sub(e.bytes);
                         report.removed += 1;
                         report.removed_bytes += e.bytes;

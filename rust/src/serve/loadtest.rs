@@ -212,6 +212,25 @@ fn closed_loop_point(
     Ok(point_from(0.0, start.elapsed().as_secs_f64(), snap))
 }
 
+/// A tiny deterministic Kirchhoff solve run once per sweep, so a serving
+/// trace also covers the circuit tier and a loadtest refuses to run
+/// against a solver that stopped conserving current.
+fn circuit_probe() -> Result<()> {
+    use crate::circuit::CrossbarCircuit;
+    use crate::CrossbarPhysics;
+    let _sp = crate::span!("loadtest.circuit_probe");
+    let n = 8usize;
+    let planes: Vec<f32> = (0..n * n).map(|i| ((i ^ (i >> 3)) & 1) as f32).collect();
+    let planes = Tensor::new(&[n, n], planes)?;
+    let sol = CrossbarCircuit::from_planes(&planes, CrossbarPhysics::default())?.solve()?;
+    let nf = sol.nf();
+    anyhow::ensure!(
+        nf.is_finite() && nf >= 0.0,
+        "circuit probe produced a non-physical NF: {nf}"
+    );
+    Ok(())
+}
+
 /// Run the sweep: compile each model once, then one fresh tier per point.
 pub fn run_loadtest(cfg: &LoadtestConfig) -> Result<LoadtestReport> {
     anyhow::ensure!(!cfg.models.is_empty(), "loadtest needs at least one model");
@@ -219,15 +238,19 @@ pub fn run_loadtest(cfg: &LoadtestConfig) -> Result<LoadtestReport> {
         !cfg.rates.is_empty() || cfg.closed_clients > 0,
         "loadtest needs open-loop rates or closed-loop clients"
     );
+    circuit_probe()?;
     let mut backends = Vec::with_capacity(cfg.models.len());
     for name in &cfg.models {
+        let _sp = crate::span!("loadtest.compile", "model={name}");
         backends.push(Arc::new(SyntheticModel::compile(name, &cfg.synth)?));
     }
     let mut open_loop = Vec::with_capacity(cfg.rates.len());
     for &rate in &cfg.rates {
+        let _sp = crate::span!("loadtest.point", "offered_rps={rate}");
         open_loop.push(open_loop_point(cfg, &backends, rate)?);
     }
     let closed_loop = if cfg.closed_clients > 0 {
+        let _sp = crate::span!("loadtest.point", "closed_clients={}", cfg.closed_clients);
         Some(closed_loop_point(cfg, &backends)?)
     } else {
         None

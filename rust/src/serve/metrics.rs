@@ -1,10 +1,11 @@
 //! Serving-tier metrics: admission/shed counters, wave accounting, cost
 //! attribution, latency percentiles, and per-tenant breakdowns.
 //!
-//! Reuses the coordinator's [`LatencyRecorder`] so both serving stacks
+//! Latency percentiles come from the shared [`crate::obs::Histogram`]
+//! (the coordinator's recorder is the same type), so both serving stacks
 //! report percentiles through one implementation.
 
-use crate::coordinator::LatencyRecorder;
+use crate::obs::Histogram as LatencyRecorder;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Per-tenant counters (all thread-safe).

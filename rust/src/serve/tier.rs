@@ -161,6 +161,66 @@ struct Shared {
     /// Signals shutdown: a wave finished (drain progress).
     drain_cv: Condvar,
     metrics: ServeMetrics,
+    /// Global-registry mirrors of the tier counters, resolved once at
+    /// start so the serve hot path never hashes metric names.
+    obs: ObsHandles,
+}
+
+/// Cached handles into the global [`crate::obs`] registry. The per-tier
+/// [`ServeMetrics`] atomics stay authoritative for `snapshot()`; these
+/// mirrors exist so `/metrics` and `mdm obs dump` see the serve tier
+/// without holding a reference to it.
+struct ObsHandles {
+    queue_depth: Arc<crate::obs::Gauge>,
+    submitted: Arc<crate::obs::Counter>,
+    admitted: Arc<crate::obs::Counter>,
+    shed_quota: Arc<crate::obs::Counter>,
+    shed_queue: Arc<crate::obs::Counter>,
+    completed: Arc<crate::obs::Counter>,
+    failed: Arc<crate::obs::Counter>,
+    waves: Arc<crate::obs::Counter>,
+    rows: Arc<crate::obs::Counter>,
+    latency: Arc<crate::obs::Histogram>,
+    /// Indexed like the tier's tenants.
+    tenants: Vec<TenantObs>,
+}
+
+/// Per-tenant registry handles (labels embedded in the metric names).
+struct TenantObs {
+    submitted: Arc<crate::obs::Counter>,
+    shed: Arc<crate::obs::Counter>,
+    completed: Arc<crate::obs::Counter>,
+    latency: Arc<crate::obs::Histogram>,
+}
+
+impl ObsHandles {
+    fn resolve(tenants: &[TenantSpec]) -> Self {
+        let r = crate::obs::registry();
+        Self {
+            queue_depth: r.gauge("serve.queue_depth"),
+            submitted: r.counter("serve.submitted"),
+            admitted: r.counter("serve.admitted"),
+            shed_quota: r.counter("serve.shed.quota"),
+            shed_queue: r.counter("serve.shed.queue"),
+            completed: r.counter("serve.completed"),
+            failed: r.counter("serve.failed"),
+            waves: r.counter("serve.waves"),
+            rows: r.counter("serve.rows"),
+            latency: r.histogram("serve.latency_us"),
+            tenants: tenants
+                .iter()
+                .map(|t| TenantObs {
+                    submitted: r
+                        .counter(&format!("serve.tenant.submitted{{tenant=\"{}\"}}", t.name)),
+                    shed: r.counter(&format!("serve.tenant.shed{{tenant=\"{}\"}}", t.name)),
+                    completed: r
+                        .counter(&format!("serve.tenant.completed{{tenant=\"{}\"}}", t.name)),
+                    latency: r
+                        .histogram(&format!("serve.tenant.latency_us{{tenant=\"{}\"}}", t.name)),
+                })
+                .collect(),
+        }
+    }
 }
 
 impl Shared {
@@ -221,6 +281,7 @@ impl ServeTier {
             work_cv: Condvar::new(),
             drain_cv: Condvar::new(),
             metrics: ServeMetrics::new(tenants.iter().map(|t| t.name.clone()).collect()),
+            obs: ObsHandles::resolve(&tenants),
         });
 
         let infos: Vec<ModelInfo> = models
@@ -261,6 +322,10 @@ impl ServeTier {
                                     loop {
                                         if let Some(wave) = pop_wave(&mut st, mi, wave_rows)
                                         {
+                                            shared
+                                                .obs
+                                                .queue_depth
+                                                .set(st.queued_rows as i64);
                                             break Some(wave);
                                         }
                                         if st.stopping {
@@ -318,6 +383,8 @@ impl ServeTier {
         let info = &self.models[spec.model];
         ServeMetrics::bump(&self.shared.metrics.submitted, 1);
         ServeMetrics::bump(&self.shared.metrics.tenants[tenant].submitted, 1);
+        self.shared.obs.submitted.inc();
+        self.shared.obs.tenants[tenant].submitted.inc();
         if x.ndim() != 2 || x.rows() == 0 || x.cols() != info.input_features {
             return Err(ServeError::BadRequest(format!(
                 "request shape {:?} != [n>=1, {}] for model {}",
@@ -336,6 +403,8 @@ impl ServeTier {
             if st.tenant_outstanding[tenant] >= spec.quota {
                 ServeMetrics::bump(&self.shared.metrics.shed_quota, 1);
                 ServeMetrics::bump(&self.shared.metrics.tenants[tenant].shed, 1);
+                self.shared.obs.shed_quota.inc();
+                self.shared.obs.tenants[tenant].shed.inc();
                 return Err(ServeError::Overloaded {
                     tenant,
                     reason: ShedReason::TenantQuota,
@@ -344,6 +413,8 @@ impl ServeTier {
             if st.queued_rows + rows > self.cfg.shed_rows {
                 ServeMetrics::bump(&self.shared.metrics.shed_queue, 1);
                 ServeMetrics::bump(&self.shared.metrics.tenants[tenant].shed, 1);
+                self.shared.obs.shed_queue.inc();
+                self.shared.obs.tenants[tenant].shed.inc();
                 return Err(ServeError::Overloaded {
                     tenant,
                     reason: ShedReason::QueueDepth,
@@ -351,6 +422,7 @@ impl ServeTier {
             }
             st.tenant_outstanding[tenant] += 1;
             st.queued_rows += rows;
+            self.shared.obs.queue_depth.set(st.queued_rows as i64);
             st.queues[spec.model].push_back(ServeRequest {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
                 tenant,
@@ -360,6 +432,7 @@ impl ServeTier {
             });
         }
         ServeMetrics::bump(&self.shared.metrics.admitted, 1);
+        self.shared.obs.admitted.inc();
         self.shared.work_cv.notify_all();
         Ok(rx)
     }
@@ -437,6 +510,7 @@ fn process_wave(
     let n_reqs = wave.len();
     let rows: usize = wave.iter().map(|r| r.x.rows()).sum();
     let tenants: Vec<usize> = wave.iter().map(|r| r.tenant).collect();
+    let _sp = crate::span!("serve.wave", "reqs={n_reqs} rows={rows}");
 
     let result = backend
         .ok_or_else(|| anyhow::anyhow!("backend unavailable (init failed)"))
@@ -452,9 +526,11 @@ fn process_wave(
         });
 
     ServeMetrics::bump(&shared.metrics.waves, 1);
+    shared.obs.waves.inc();
     match result {
         Ok(y) => {
             ServeMetrics::bump(&shared.metrics.rows, rows as u64);
+            shared.obs.rows.add(rows as u64);
             ServeMetrics::bump(
                 &shared.metrics.adc_conversions,
                 unit.adc_conversions * rows as u64,
@@ -477,13 +553,18 @@ fn process_wave(
                         // panicking the worker thread.
                         eprintln!("serve response slice failed: {err:#}");
                         ServeMetrics::bump(&shared.metrics.failed, 1);
+                        shared.obs.failed.inc();
                         continue;
                     }
                 };
                 let latency_us = req.submitted.elapsed().as_micros() as u64;
                 shared.metrics.latency.record(latency_us);
+                shared.obs.latency.record(latency_us);
+                shared.obs.tenants[req.tenant].latency.record(latency_us);
                 ServeMetrics::bump(&shared.metrics.completed, 1);
                 ServeMetrics::bump(&shared.metrics.tenants[req.tenant].completed, 1);
+                shared.obs.completed.inc();
+                shared.obs.tenants[req.tenant].completed.inc();
                 // Client may have gone away; ignore.
                 let _ = req.resp.send(ServeResponse {
                     id: req.id,
@@ -496,6 +577,7 @@ fn process_wave(
         Err(err) => {
             eprintln!("serve wave failed ({n_reqs} requests): {err:#}");
             ServeMetrics::bump(&shared.metrics.failed, n_reqs as u64);
+            shared.obs.failed.add(n_reqs as u64);
             drop(wave);
         }
     }

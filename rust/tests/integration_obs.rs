@@ -1,0 +1,317 @@
+//! Integration tests over the observability layer (rust/DESIGN.md §13):
+//! pipeline compiles emit stage spans into the ring and per-span duration
+//! histograms into the registry, the Prometheus exposition serves them
+//! over TCP, the Chrome trace export is well-formed JSON, and a tiny
+//! loadtest sweep populates the serve-tier registry mirrors end to end.
+//!
+//! Span recording is a process-global flag, so every test that toggles it
+//! serializes on one lock and filters the ring by its own span names.
+
+use mdm_cim::crossbar::TileGeometry;
+use mdm_cim::models::{generate_layer_weights, WeightProfile};
+use mdm_cim::pipeline::Pipeline;
+use mdm_cim::serve::{self, LoadtestConfig, SyntheticModelConfig};
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------- histogram
+
+#[test]
+fn histogram_empty_single_and_boundaries() {
+    let h = mdm_cim::obs::Histogram::default();
+    assert_eq!(h.count(), 0);
+    assert_eq!(h.percentile(50.0), 0);
+    assert_eq!(h.mean(), 0.0);
+
+    h.record(77);
+    for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+        assert_eq!(h.percentile(p), 77, "p{p} of a single sample");
+    }
+    assert_eq!(h.mean(), 77.0);
+
+    // Legacy LatencyRecorder nearest-rank semantics, now served by the one
+    // shared implementation (the coordinator's alias points here too).
+    let h = mdm_cim::obs::Histogram::default();
+    for us in (10..=100).step_by(10) {
+        h.record(us);
+    }
+    assert_eq!(h.percentile(50.0), 60);
+    assert_eq!(h.percentile(100.0), 100);
+}
+
+#[test]
+fn concurrent_counter_increments_sum_exactly() {
+    let c = mdm_cim::obs::counter("it.obs.concurrent");
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| {
+                for _ in 0..25_000 {
+                    c.inc();
+                }
+            });
+        }
+    });
+    assert_eq!(c.get(), 200_000);
+}
+
+// ------------------------------------------------------------------- spans
+
+#[test]
+fn pipeline_compile_emits_stage_spans_and_duration_histograms() {
+    let _g = lock();
+    mdm_cim::obs::set_enabled(true);
+    mdm_cim::obs::span::clear();
+
+    let w = generate_layer_weights(48, 12, &WeightProfile::cnn(), 7).unwrap();
+    let pipeline = Pipeline::new(TileGeometry::new(16, 16, 8).unwrap())
+        .strategy("mdm")
+        .unwrap()
+        .estimator("analytic")
+        .unwrap();
+    pipeline.compile(&w).unwrap();
+    mdm_cim::obs::set_enabled(false);
+
+    let (events, _) = mdm_cim::obs::span::snapshot();
+    for stage in ["compile.layer", "compile.quantize", "compile.tile", "compile.map"] {
+        assert!(
+            events.iter().any(|e| e.name == stage),
+            "missing span {stage} in {:?}",
+            events.iter().map(|e| e.name).collect::<Vec<_>>()
+        );
+        let h = mdm_cim::obs::histogram(&format!("span_duration_us{{span=\"{stage}\"}}"));
+        assert!(h.count() >= 1, "no duration samples for {stage}");
+    }
+    // Two sign parts compile per layer.
+    assert!(events.iter().filter(|e| e.name == "compile.quantize").count() >= 2);
+}
+
+// ------------------------------------------------- trace-JSON well-formedness
+
+/// Minimal strict JSON validator (objects, arrays, strings, numbers,
+/// bools, null) — enough to prove the trace loads in a real parser.
+fn validate_json(s: &str) -> Result<(), String> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    fn ws(b: &[u8], i: &mut usize) {
+        while *i < b.len() && b[*i].is_ascii_whitespace() {
+            *i += 1;
+        }
+    }
+    fn value(b: &[u8], i: &mut usize) -> Result<(), String> {
+        ws(b, i);
+        match b.get(*i) {
+            Some(b'{') => {
+                *i += 1;
+                ws(b, i);
+                if b.get(*i) == Some(&b'}') {
+                    *i += 1;
+                    return Ok(());
+                }
+                loop {
+                    ws(b, i);
+                    string(b, i)?;
+                    ws(b, i);
+                    if b.get(*i) != Some(&b':') {
+                        return Err(format!("expected ':' at {i}"));
+                    }
+                    *i += 1;
+                    value(b, i)?;
+                    ws(b, i);
+                    match b.get(*i) {
+                        Some(b',') => *i += 1,
+                        Some(b'}') => {
+                            *i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at {i}")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                *i += 1;
+                ws(b, i);
+                if b.get(*i) == Some(&b']') {
+                    *i += 1;
+                    return Ok(());
+                }
+                loop {
+                    value(b, i)?;
+                    ws(b, i);
+                    match b.get(*i) {
+                        Some(b',') => *i += 1,
+                        Some(b']') => {
+                            *i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(format!("expected ',' or ']' at {i}")),
+                    }
+                }
+            }
+            Some(b'"') => string(b, i),
+            Some(b't') => literal(b, i, "true"),
+            Some(b'f') => literal(b, i, "false"),
+            Some(b'n') => literal(b, i, "null"),
+            Some(c) if c.is_ascii_digit() || *c == b'-' => {
+                *i += 1;
+                while *i < b.len()
+                    && (b[*i].is_ascii_digit() || matches!(b[*i], b'.' | b'e' | b'E' | b'+' | b'-'))
+                {
+                    *i += 1;
+                }
+                Ok(())
+            }
+            other => Err(format!("unexpected {other:?} at {i}")),
+        }
+    }
+    fn string(b: &[u8], i: &mut usize) -> Result<(), String> {
+        if b.get(*i) != Some(&b'"') {
+            return Err(format!("expected '\"' at {i}"));
+        }
+        *i += 1;
+        while let Some(&c) = b.get(*i) {
+            match c {
+                b'\\' => *i += 2,
+                b'"' => {
+                    *i += 1;
+                    return Ok(());
+                }
+                _ => *i += 1,
+            }
+        }
+        Err("unterminated string".into())
+    }
+    fn literal(b: &[u8], i: &mut usize, lit: &str) -> Result<(), String> {
+        if b[*i..].starts_with(lit.as_bytes()) {
+            *i += lit.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at {i}"))
+        }
+    }
+    value(b, &mut i)?;
+    ws(b, &mut i);
+    if i != b.len() {
+        return Err(format!("trailing bytes at {i} of {}", b.len()));
+    }
+    Ok(())
+}
+
+#[test]
+fn trace_export_is_valid_chrome_json() {
+    let _g = lock();
+    mdm_cim::obs::set_enabled(true);
+    mdm_cim::obs::span::clear();
+    {
+        let _outer = mdm_cim::span!("it.obs.outer");
+        let _inner = mdm_cim::span!("it.obs.inner", "k={}", 3);
+    }
+    mdm_cim::obs::set_enabled(false);
+
+    let json = mdm_cim::obs::span::trace_json();
+    validate_json(&json).unwrap_or_else(|e| panic!("invalid trace JSON ({e}):\n{json}"));
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("\"ph\": \"X\""));
+    assert!(json.contains("\"it.obs.inner\""));
+    assert!(json.contains("\"detail\": \"k=3\""));
+
+    // write_trace lands the same bytes on disk.
+    let dir = std::env::temp_dir().join(format!("mdm-obs-it-{}", std::process::id()));
+    let path = dir.join("trace.json");
+    mdm_cim::obs::span::write_trace(&path).unwrap();
+    let on_disk = std::fs::read_to_string(&path).unwrap();
+    validate_json(&on_disk).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn json_validator_rejects_garbage() {
+    assert!(validate_json("{\"a\": 1}").is_ok());
+    assert!(validate_json("[1, 2.5, -3e4, \"x\", true, null]").is_ok());
+    assert!(validate_json("{\"a\": }").is_err());
+    assert!(validate_json("{\"a\": 1").is_err());
+    assert!(validate_json("[1,]").is_err());
+    assert!(validate_json("{} trailing").is_err());
+}
+
+// ------------------------------------------------------------- exposition
+
+#[test]
+fn prometheus_scrape_serves_counters_and_span_histograms() {
+    let _g = lock();
+    mdm_cim::obs::set_enabled(true);
+    {
+        let _sp = mdm_cim::span!("it.obs.scrape");
+    }
+    mdm_cim::obs::set_enabled(false);
+    mdm_cim::obs::counter("it.obs.scrape.hits{tenant=\"a\"}").add(5);
+
+    let server = mdm_cim::obs::MetricsServer::start("127.0.0.1:0").unwrap();
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut body = String::new();
+    stream.read_to_string(&mut body).unwrap();
+
+    assert!(body.starts_with("HTTP/1.1 200 OK"), "got:\n{body}");
+    assert!(body.contains("mdm_it_obs_scrape_hits{tenant=\"a\"} 5"), "got:\n{body}");
+    // The span duration histogram renders as a labeled histogram family.
+    assert!(body.contains("# TYPE mdm_span_duration_us histogram"), "got:\n{body}");
+    assert!(
+        body.contains("mdm_span_duration_us_bucket{span=\"it.obs.scrape\",le=\"+Inf\"}"),
+        "got:\n{body}"
+    );
+    assert!(body.contains("mdm_span_duration_us_count{span=\"it.obs.scrape\"}"), "got:\n{body}");
+}
+
+// ------------------------------------------------------- serve-tier mirrors
+
+#[test]
+fn loadtest_smoke_populates_registry_and_trace_end_to_end() {
+    let _g = lock();
+    mdm_cim::obs::set_enabled(true);
+    mdm_cim::obs::span::clear();
+
+    let cfg = LoadtestConfig {
+        models: vec!["miniresnet".into()],
+        rates: vec![200.0],
+        duration_ms: 120,
+        closed_clients: 1,
+        synth: SyntheticModelConfig {
+            geometry: TileGeometry::new(16, 32, 8).unwrap(),
+            ..SyntheticModelConfig::default()
+        },
+        ..LoadtestConfig::default()
+    };
+    let report = serve::run_loadtest(&cfg).unwrap();
+    mdm_cim::obs::set_enabled(false);
+    assert!(report.open_loop[0].snap.completed > 0);
+
+    // Registry mirrors of the tier counters.
+    assert!(mdm_cim::obs::counter("serve.waves").get() > 0);
+    assert!(mdm_cim::obs::counter("serve.completed").get() > 0);
+    assert!(
+        mdm_cim::obs::counter("serve.tenant.completed{tenant=\"miniresnet\"}").get() > 0
+    );
+    assert!(mdm_cim::obs::histogram("serve.latency_us").count() > 0);
+    assert!(
+        mdm_cim::obs::histogram("serve.tenant.latency_us{tenant=\"miniresnet\"}").count() > 0
+    );
+
+    // The trace covers compile stages, the circuit probe, and serve waves.
+    let (events, _) = mdm_cim::obs::span::snapshot();
+    for stage in ["compile.map", "loadtest.circuit_probe", "solve.circuit", "serve.wave"] {
+        assert!(
+            events.iter().any(|e| e.name == stage),
+            "missing span {stage} in {:?}",
+            events.iter().map(|e| e.name).collect::<Vec<_>>()
+        );
+    }
+    let json = mdm_cim::obs::span::trace_json();
+    validate_json(&json).unwrap_or_else(|e| panic!("invalid trace JSON ({e})"));
+}
