@@ -1,0 +1,407 @@
+//! Anytime simulated-annealing placement search (`anneal[:BUDGET_MS]`).
+//!
+//! The greedy placers commit to each fragment's slot once; this placer
+//! starts from the [`NfAware`] seed and perturbs the whole-model assignment
+//! with **swap**, **relocate**, and **rotate-group** moves, accepting via
+//! simulated annealing on a joint objective — the NF-weighted placement
+//! cost plus the wave-scheduled end-to-end latency, both normalized to the
+//! seed. Every probe is re-scored through [`DeltaCost`], the incremental
+//! cost model over `chip/schedule.rs`, so a move costs O(affected waves)
+//! instead of a full scheduling pass.
+//!
+//! Determinism contract (the same one the `parallel` module keeps):
+//!
+//! * the time budget is converted to a **fixed proposal count**
+//!   ([`PROPOSALS_PER_MS`] per chain) — no wall-clock polling, so a given
+//!   budget explores exactly the same move sequence on any machine;
+//! * [`N_CHAINS`] independent chains run with deterministic per-chain
+//!   seeds, fanned out over [`crate::parallel::try_map_indexed`] (ordered
+//!   results at any thread count);
+//! * the best-of-chains reduction takes the strictly best objective with
+//!   the lowest chain index winning ties.
+//!
+//! Together the returned placement is **bitwise identical** at 1, 2, 4, or
+//! 8 threads (`tests/integration_anneal.rs`). The best state is further
+//! constrained to weakly dominate the seed (NF cost ≤ seed **and** latency
+//! ≤ seed), so `anneal` is never worse than `nf_aware` on either axis, and
+//! a zero budget returns the seed placement verbatim.
+
+use super::placer::SlotGrid;
+use super::schedule::{DeltaCost, PlacementScore};
+use super::{ChipWorkload, NfAware, PlacedBlock, Placement, Placer};
+use crate::crossbar::CostModel;
+use crate::parallel::{self, ParallelConfig};
+use crate::rng::Xoshiro256;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Budget of the bare `anneal` registry entry, milliseconds (also the
+/// `[chip] budget_ms` config default).
+pub const DEFAULT_ANNEAL_BUDGET_MS: u64 = 25;
+
+/// Deterministic time→work conversion: proposals explored per chain per
+/// millisecond of budget (calibrated to the incremental re-score cost; the
+/// wall clock is never consulted, so budgets are reproducible).
+const PROPOSALS_PER_MS: u64 = 192;
+
+/// Independent annealing chains (fixed — **not** the thread count, which
+/// must not change results).
+const N_CHAINS: usize = 4;
+
+/// Base seed of the chain RNGs.
+const CHAIN_SEED: u64 = 0xA11E_A1_5EED;
+
+/// Geometric cooling endpoints on the seed-normalized objective scale
+/// (seed objective = 2.0 by construction).
+const T_START: f64 = 2e-2;
+const T_END: f64 = 1e-4;
+
+/// Random destinations probed per relocate proposal before giving up.
+const RELOCATE_TRIES: usize = 8;
+
+/// Anytime annealing placer over the [`NfAware`] seed placement.
+///
+/// `budget_ms` scales the (deterministic) proposal count; 0 disables the
+/// search and returns the seed placement unchanged. Registered as `anneal`
+/// and `anneal:BUDGET_MS` in [`super::placer_by_name`]; `mdm place
+/// --budget-ms` rewrites the former into the latter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Annealer {
+    /// Search budget in milliseconds-equivalent proposals
+    /// ([`PROPOSALS_PER_MS`] per chain per ms).
+    pub budget_ms: u64,
+}
+
+impl Default for Annealer {
+    fn default() -> Self {
+        Self { budget_ms: DEFAULT_ANNEAL_BUDGET_MS }
+    }
+}
+
+/// One applied (and possibly revertible) move.
+enum Applied {
+    /// `pi` moved from `from` to its current position.
+    Relocate { pi: usize, from: (usize, usize, usize), to: (usize, usize, usize) },
+    /// Same-shape pair exchanged (self-inverse).
+    Swap { a: usize, b: usize },
+    /// Same-shape triple cycled; original positions remembered for undo.
+    Rotate { ids: [usize; 3], orig: [(usize, usize, usize); 3] },
+}
+
+/// Per-chain search outcome.
+struct ChainResult {
+    best_j: f64,
+    best: Vec<PlacedBlock>,
+    proposed: u64,
+    accepted: u64,
+    improved: u64,
+}
+
+impl Placer for Annealer {
+    fn name(&self) -> &'static str {
+        "anneal"
+    }
+
+    fn description(&self) -> &'static str {
+        "anytime annealing over the nf_aware seed (also anneal:BUDGET_MS; <= nf_aware on NF cost and latency)"
+    }
+
+    fn place(&self, workload: &ChipWorkload) -> Result<Placement> {
+        let seed = NfAware
+            .place(workload)
+            .context("anneal placer could not build its nf_aware seed")?;
+        let proposals = self.budget_ms.saturating_mul(PROPOSALS_PER_MS);
+        if proposals == 0 || seed.placed.is_empty() {
+            return Ok(Placement { placer: self.name(), ..seed });
+        }
+        let _sp = crate::span!(
+            "place.anneal",
+            "blocks={} budget_ms={} chains={N_CHAINS}",
+            seed.placed.len(),
+            self.budget_ms
+        );
+        let template = DeltaCost::new(&seed, CostModel::default(), 1)
+            .context("anneal placer could not score its nf_aware seed")?;
+        let s0 = template.score();
+        let cfg = ParallelConfig::default();
+        let chains = parallel::try_map_indexed(&cfg, N_CHAINS, |ci| {
+            run_chain(ci as u64, proposals, &template, s0)
+        })?;
+
+        let mut proposed = 0u64;
+        let mut accepted = 0u64;
+        let mut improved = 0u64;
+        let mut bi = 0usize;
+        for (i, c) in chains.iter().enumerate() {
+            proposed += c.proposed;
+            accepted += c.accepted;
+            improved += c.improved;
+            // Strict less: the lowest chain index wins ties, so the
+            // reduction is order- (and thread-count-) independent.
+            if c.best_j < chains[bi].best_j {
+                bi = i;
+            }
+        }
+        crate::obs::counter("place.anneal_proposed").add(proposed);
+        crate::obs::counter("place.anneal_accepted").add(accepted);
+        crate::obs::counter("place.anneal_improved").add(improved);
+
+        let out = Placement {
+            chip: seed.chip,
+            blocks: seed.blocks.clone(),
+            placed: chains[bi].best.clone(),
+            placer: self.name(),
+            regions: seed.regions,
+        };
+        out.validate().context("annealed placement failed validation")?;
+        Ok(out)
+    }
+}
+
+/// Seed of chain `ci` (SplitMix-style odd-constant spread).
+fn chain_seed(ci: u64) -> u64 {
+    CHAIN_SEED ^ (ci.wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Run one annealing chain for `proposals` moves and return its best
+/// seed-dominating state.
+fn run_chain(
+    ci: u64,
+    proposals: u64,
+    template: &DeltaCost,
+    s0: PlacementScore,
+) -> Result<ChainResult> {
+    let mut rng = Xoshiro256::seeded(chain_seed(ci));
+    let mut dc = template.clone();
+    let nf0 = s0.nf_weighted_cost;
+    let lat0 = s0.latency_ns;
+    let nf_den = if nf0 > 0.0 { nf0 } else { 1.0 };
+    let lat_den = if lat0 > 0.0 { lat0 } else { 1.0 };
+    let score_j = |s: &PlacementScore| s.nf_weighted_cost / nf_den + s.latency_ns / lat_den;
+    let j0 = score_j(&s0);
+
+    let chip = dc.placement().chip;
+    let regions = dc.placement().regions;
+    let n = dc.placement().placed.len();
+    // Occupancy grids: the feasibility side DeltaCost does not track.
+    let mut grids: Vec<SlotGrid> =
+        (0..regions).map(|_| SlotGrid::new(chip.slot_rows, chip.slot_cols)).collect();
+    for p in &dc.placement().placed {
+        let b = &dc.placement().blocks[p.block];
+        grids[p.region].mark(p.row, p.col, b.rows, b.cols);
+    }
+    // Same-shape buckets feed the swap and rotate-group moves (swapping
+    // equal shapes never changes the occupied-cell set, so the grids need
+    // no update for those moves).
+    let mut buckets: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    for (pi, p) in dc.placement().placed.iter().enumerate() {
+        let b = &dc.placement().blocks[p.block];
+        buckets.entry((b.rows, b.cols)).or_default().push(pi);
+    }
+    let swap_buckets: Vec<Vec<usize>> =
+        buckets.values().filter(|v| v.len() >= 2).cloned().collect();
+    let rot_buckets: Vec<Vec<usize>> =
+        buckets.values().filter(|v| v.len() >= 3).cloned().collect();
+
+    let shape_of = |dc: &DeltaCost, pi: usize| {
+        let b = &dc.placement().blocks[dc.placement().placed[pi].block];
+        (b.rows, b.cols)
+    };
+
+    let mut cur_j = j0;
+    let mut best_j = j0;
+    let mut best = dc.placement().placed.clone();
+    let cooling = if proposals > 1 {
+        (T_END / T_START).powf(1.0 / (proposals - 1) as f64)
+    } else {
+        1.0
+    };
+    let mut t = T_START;
+    let mut proposed = 0u64;
+    let mut accepted = 0u64;
+    let mut improved = 0u64;
+
+    for _ in 0..proposals {
+        proposed += 1;
+        let mut kind = rng.below(4);
+        if kind == 2 && swap_buckets.is_empty() {
+            kind = 0;
+        }
+        if kind == 3 && rot_buckets.is_empty() {
+            kind = 0;
+        }
+        let applied: Option<Applied> = match kind {
+            2 => {
+                // Swap a same-shape pair.
+                let bkt = &swap_buckets[rng.below(swap_buckets.len() as u64) as usize];
+                let i = rng.below(bkt.len() as u64) as usize;
+                let mut j = rng.below(bkt.len() as u64 - 1) as usize;
+                if j >= i {
+                    j += 1;
+                }
+                let (a, b) = (bkt[i], bkt[j]);
+                dc.swap(a, b)?;
+                Some(Applied::Swap { a, b })
+            }
+            3 => {
+                // Cycle a same-shape triple a <- b <- c <- a.
+                let bkt = &rot_buckets[rng.below(rot_buckets.len() as u64) as usize];
+                let mut idx: Vec<usize> = (0..bkt.len()).collect();
+                for k in 0..3 {
+                    let r = k + rng.below((idx.len() - k) as u64) as usize;
+                    idx.swap(k, r);
+                }
+                let ids = [bkt[idx[0]], bkt[idx[1]], bkt[idx[2]]];
+                let pos = |pi: usize| {
+                    let p = dc.placement().placed[pi];
+                    (p.region, p.row, p.col)
+                };
+                let orig = [pos(ids[0]), pos(ids[1]), pos(ids[2])];
+                dc.move_many(&[
+                    (ids[0], orig[1].0, orig[1].1, orig[1].2),
+                    (ids[1], orig[2].0, orig[2].1, orig[2].2),
+                    (ids[2], orig[0].0, orig[0].1, orig[0].2),
+                ])?;
+                Some(Applied::Rotate { ids, orig })
+            }
+            _ => {
+                // Relocate one fragment to a random free rectangle.
+                let pi = rng.below(n as u64) as usize;
+                let p = dc.placement().placed[pi];
+                let (h, w) = shape_of(&dc, pi);
+                grids[p.region].unmark(p.row, p.col, h, w);
+                let mut dest = None;
+                for _ in 0..RELOCATE_TRIES {
+                    let region = rng.below(regions as u64) as usize;
+                    let row = rng.below((chip.slot_rows - h + 1) as u64) as usize;
+                    let col = rng.below((chip.slot_cols - w + 1) as u64) as usize;
+                    if (region, row, col) != (p.region, p.row, p.col)
+                        && grids[region].fits(row, col, h, w)
+                    {
+                        dest = Some((region, row, col));
+                        break;
+                    }
+                }
+                match dest {
+                    Some((region, row, col)) => {
+                        grids[region].mark(row, col, h, w);
+                        dc.relocate(pi, region, row, col)?;
+                        Some(Applied::Relocate {
+                            pi,
+                            from: (p.region, p.row, p.col),
+                            to: (region, row, col),
+                        })
+                    }
+                    None => {
+                        grids[p.region].mark(p.row, p.col, h, w);
+                        None
+                    }
+                }
+            }
+        };
+
+        if let Some(applied) = applied {
+            let s = dc.score();
+            let j = score_j(&s);
+            let dj = j - cur_j;
+            let accept = dj <= 0.0 || rng.uniform() < (-dj / t).exp();
+            if accept {
+                accepted += 1;
+                cur_j = j;
+                // Best-so-far must weakly dominate the seed on both axes —
+                // the <=-nf_aware guarantee holds by construction.
+                if s.nf_weighted_cost <= nf0 && s.latency_ns <= lat0 && j < best_j {
+                    improved += 1;
+                    best_j = j;
+                    best.clone_from(&dc.placement().placed);
+                }
+            } else {
+                undo(&mut dc, &mut grids, &applied)?;
+            }
+        }
+        t *= cooling;
+    }
+    Ok(ChainResult { best_j, best, proposed, accepted, improved })
+}
+
+/// Revert a rejected move (exact inverse; DeltaCost relocation is
+/// self-inverse and same-shape swaps/rotations leave the grids unchanged).
+fn undo(dc: &mut DeltaCost, grids: &mut [SlotGrid], applied: &Applied) -> Result<()> {
+    match applied {
+        Applied::Relocate { pi, from, to } => {
+            let b = &dc.placement().blocks[dc.placement().placed[*pi].block];
+            let (h, w) = (b.rows, b.cols);
+            grids[to.0].unmark(to.1, to.2, h, w);
+            grids[from.0].mark(from.1, from.2, h, w);
+            dc.relocate(*pi, from.0, from.1, from.2)
+        }
+        Applied::Swap { a, b } => dc.swap(*a, *b),
+        Applied::Rotate { ids, orig } => dc.move_many(&[
+            (ids[0], orig[0].0, orig[0].1, orig[0].2),
+            (ids[1], orig[1].0, orig[1].1, orig[1].2),
+            (ids[2], orig[2].0, orig[2].1, orig[2].2),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipModel;
+    use crate::crossbar::TileGeometry;
+
+    fn workload() -> ChipWorkload {
+        let chip = ChipModel {
+            slot_rows: 8,
+            slot_cols: 8,
+            geometry: TileGeometry::new(16, 32, 8).unwrap(),
+            ..ChipModel::default()
+        };
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.add_layer("l0", 0, 96, 24, 2.0).unwrap();
+        wl.add_layer("l1", 1, 48, 12, 1.0).unwrap();
+        wl.add_layer("l2", 2, 48, 4, 0.5).unwrap();
+        wl
+    }
+
+    #[test]
+    fn zero_budget_returns_the_nf_aware_seed_verbatim() {
+        let wl = workload();
+        let seed = NfAware.place(&wl).unwrap();
+        let out = Annealer { budget_ms: 0 }.place(&wl).unwrap();
+        assert_eq!(out.placed, seed.placed);
+        assert_eq!(out.regions, seed.regions);
+        assert_eq!(out.placer, "anneal");
+    }
+
+    #[test]
+    fn annealer_never_worse_than_nf_aware_on_either_axis() {
+        let wl = workload();
+        let seed = NfAware.place(&wl).unwrap();
+        let out = Annealer { budget_ms: 5 }.place(&wl).unwrap();
+        out.validate().unwrap();
+        assert!(out.nf_weighted_cost() <= seed.nf_weighted_cost());
+        let s = crate::chip::Scheduler::default();
+        let lat_seed = s.schedule(&seed, 1).unwrap().total.latency_ns;
+        let lat_out = s.schedule(&out, 1).unwrap().total.latency_ns;
+        assert!(lat_out <= lat_seed, "annealed {lat_out} vs seed {lat_seed}");
+    }
+
+    #[test]
+    fn annealer_is_deterministic() {
+        let wl = workload();
+        let a = Annealer { budget_ms: 3 }.place(&wl).unwrap();
+        let b = Annealer { budget_ms: 3 }.place(&wl).unwrap();
+        assert_eq!(a.placed, b.placed);
+        assert_eq!(a.regions, b.regions);
+    }
+
+    #[test]
+    fn empty_workload_is_a_noop() {
+        let chip = ChipModel::default();
+        let wl = ChipWorkload::new(chip).unwrap();
+        let out = Annealer::default().place(&wl).unwrap();
+        assert!(out.placed.is_empty());
+        assert_eq!(out.placer, "anneal");
+    }
+}

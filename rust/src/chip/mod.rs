@@ -14,8 +14,11 @@
 //!   fragments, annotated with an NF sensitivity weight.
 //! * [`Placer`] implementations ([`placer_by_name`]) — greedy first-fit,
 //!   skyline and max-rects bin packing (the rpack family of heuristics),
-//!   and an NF-aware placer that parks high-NF-sensitivity fragments in
-//!   low-PR-impact slots.
+//!   an NF-aware placer that parks high-NF-sensitivity fragments in
+//!   low-PR-impact slots, a whole-model [`Atlas`] packer that scores every
+//!   open region in one global min-waste pass, and an anytime [`Annealer`]
+//!   (`anneal[:BUDGET_MS]`) that searches swap/relocate/rotate moves with
+//!   O(Δ) re-scoring via [`DeltaCost`].
 //! * [`Placement`] — the validated assignment (no overlap, every fragment
 //!   placed, spill to extra chips or to time-multiplexed reuse rounds per
 //!   [`SpillPolicy`]).
@@ -29,11 +32,15 @@
 //! and [`crate::coordinator::Engine::place_on`] places a whole programmed
 //! model for per-worker cost attribution.
 
+mod anneal;
+mod atlas;
 mod placer;
 mod schedule;
 
+pub use anneal::{Annealer, DEFAULT_ANNEAL_BUDGET_MS};
+pub use atlas::Atlas;
 pub use placer::{placer_by_name, placer_names, FirstFit, MaxRects, NfAware, Placer, Skyline};
-pub use schedule::{fragment_cost, ChipReport, Scheduler, Wave};
+pub use schedule::{fragment_cost, ChipReport, DeltaCost, PlacementScore, Scheduler, Wave};
 
 use crate::config::ChipSettings;
 use crate::crossbar::{LayerTiling, TileGeometry};

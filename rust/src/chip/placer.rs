@@ -1,14 +1,16 @@
 //! Placement heuristics: tile-grid fragments → chip slots.
 //!
-//! Four [`Placer`]s are registered (resolved by string via
+//! Six [`Placer`]s are registered (resolved by string via
 //! [`placer_by_name`], mirroring the mapping-strategy registry):
 //!
 //! | name | heuristic |
 //! |---|---|
 //! | `firstfit` | greedy first-fit in input order, row-major scan |
-//! | `skyline` | bottom-left skyline packing (the rpack/texture-packer default) |
+//! | `skyline` | best-fit skyline packing with rpack-style min-waste scoring (first-span variant available via [`Skyline::first_span`]) |
 //! | `maxrects` | max-rects with best-short-side-fit splitting |
 //! | `nf_aware` | sensitivity-ordered min-PR-impact greedy; never worse than `firstfit` on [`Placement::nf_weighted_cost`] by construction |
+//! | `atlas` | whole-model atlas packing: one global min-waste pass over every open region ([`super::Atlas`]) |
+//! | `anneal[:BUDGET_MS]` | anytime simulated annealing over swap/relocate/rotate moves from the `nf_aware` seed, O(Δ) re-scored via [`super::DeltaCost`] ([`super::Annealer`]) |
 //!
 //! All placers fill open regions before spilling to a new one (a new chip
 //! or a new reuse round per [`super::SpillPolicy`]), and all are fully
@@ -23,8 +25,10 @@
 //! for `cached:circuit` upgrades placement priorities to exact (deduped)
 //! measurements without touching any placer.
 
+use super::anneal::Annealer;
+use super::atlas::Atlas;
 use super::{ChipWorkload, PlacedBlock, Placement};
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::sync::Arc;
 
 /// A placement heuristic: assigns every fragment of a [`ChipWorkload`] to a
@@ -38,15 +42,28 @@ pub trait Placer: std::fmt::Debug + Send + Sync {
     fn place(&self, workload: &ChipWorkload) -> Result<Placement>;
 }
 
-/// Resolve a placer by registry name.
+/// Resolve a placer by registry name. `anneal` takes an optional budget
+/// suffix, `anneal:BUDGET_MS` (mirroring the `swap-search:MS` strategy
+/// syntax); bare `anneal` uses [`super::DEFAULT_ANNEAL_BUDGET_MS`].
 pub fn placer_by_name(name: &str) -> Result<Arc<dyn Placer>> {
+    for prefix in ["anneal:", "anneal_search:"] {
+        if let Some(ms) = name.strip_prefix(prefix) {
+            let budget_ms: u64 = ms
+                .parse()
+                .with_context(|| format!("invalid anneal budget in placer {name:?}"))?;
+            return Ok(Arc::new(Annealer { budget_ms }));
+        }
+    }
     match name {
         "firstfit" | "first_fit" | "greedy" => Ok(Arc::new(FirstFit)),
-        "skyline" => Ok(Arc::new(Skyline)),
+        "skyline" => Ok(Arc::new(Skyline::default())),
         "maxrects" | "max_rects" => Ok(Arc::new(MaxRects)),
         "nf_aware" | "nfaware" | "nf" => Ok(Arc::new(NfAware)),
-        other => anyhow::bail!(
-            "unknown placer {other:?}; known: firstfit, skyline, maxrects, nf_aware"
+        "atlas" => Ok(Arc::new(Atlas)),
+        "anneal" | "anneal_search" => Ok(Arc::new(Annealer::default())),
+        other => bail!(
+            "unknown placer {other:?}; known: firstfit, skyline, maxrects, nf_aware, atlas, \
+             anneal[:BUDGET_MS]"
         ),
     }
 }
@@ -55,26 +72,29 @@ pub fn placer_by_name(name: &str) -> Result<Arc<dyn Placer>> {
 pub fn placer_names() -> Vec<(&'static str, &'static str)> {
     vec![
         (FirstFit.name(), FirstFit.description()),
-        (Skyline.name(), Skyline.description()),
+        (Skyline::default().name(), Skyline::default().description()),
         (MaxRects.name(), MaxRects.description()),
         (NfAware.name(), NfAware.description()),
+        (Atlas.name(), Atlas.description()),
+        (Annealer::default().name(), Annealer::default().description()),
     ]
 }
 
-/// Occupancy grid of one region.
-struct SlotGrid {
-    rows: usize,
-    cols: usize,
+/// Occupancy grid of one region (shared with the annealer's move
+/// feasibility checks, hence `pub(crate)`).
+pub(crate) struct SlotGrid {
+    pub(crate) rows: usize,
+    pub(crate) cols: usize,
     occ: Vec<bool>,
     free: usize,
 }
 
 impl SlotGrid {
-    fn new(rows: usize, cols: usize) -> Self {
+    pub(crate) fn new(rows: usize, cols: usize) -> Self {
         Self { rows, cols, occ: vec![false; rows * cols], free: rows * cols }
     }
 
-    fn fits(&self, r: usize, c: usize, h: usize, w: usize) -> bool {
+    pub(crate) fn fits(&self, r: usize, c: usize, h: usize, w: usize) -> bool {
         if r + h > self.rows || c + w > self.cols {
             return false;
         }
@@ -88,7 +108,7 @@ impl SlotGrid {
         true
     }
 
-    fn mark(&mut self, r: usize, c: usize, h: usize, w: usize) {
+    pub(crate) fn mark(&mut self, r: usize, c: usize, h: usize, w: usize) {
         for i in r..r + h {
             for j in c..c + w {
                 debug_assert!(!self.occ[i * self.cols + j]);
@@ -97,11 +117,39 @@ impl SlotGrid {
         }
         self.free -= h * w;
     }
+
+    pub(crate) fn unmark(&mut self, r: usize, c: usize, h: usize, w: usize) {
+        for i in r..r + h {
+            for j in c..c + w {
+                debug_assert!(self.occ[i * self.cols + j]);
+                self.occ[i * self.cols + j] = false;
+            }
+        }
+        self.free += h * w;
+    }
+}
+
+/// Collect per-fragment placements, turning a placer's internal "every
+/// fragment placed" invariant into a context-rich error instead of a panic
+/// (library callers feed hand-built workloads; a placer bug must not abort
+/// the process).
+pub(crate) fn collect_placed(
+    placed: Vec<Option<PlacedBlock>>,
+    placer: &str,
+) -> Result<Vec<PlacedBlock>> {
+    placed
+        .into_iter()
+        .enumerate()
+        .map(|(bi, p)| match p {
+            Some(p) => Ok(p),
+            None => bail!("{placer} left fragment {bi} unplaced (internal invariant violated)"),
+        })
+        .collect()
 }
 
 /// Check that every fragment individually fits an empty chip (guaranteed by
 /// [`ChipWorkload::add_layer`], but placers accept hand-built workloads).
-fn check_fragment_bounds(workload: &ChipWorkload) -> Result<()> {
+pub(crate) fn check_fragment_bounds(workload: &ChipWorkload) -> Result<()> {
     let chip = &workload.chip;
     for b in &workload.blocks {
         ensure!(
@@ -171,11 +219,37 @@ impl Placer for FirstFit {
     }
 }
 
-/// Bottom-left skyline packing (the heuristic behind rpack's
-/// texture-packer): per region, keep one fill height per slot column; place
-/// each fragment (tallest first) at the lowest feasible skyline position.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct Skyline;
+/// Skyline packing (the heuristic behind rpack's texture-packer): per
+/// region, keep one fill height per slot column; place each fragment
+/// (tallest first) at the best feasible skyline span.
+///
+/// By default spans are scored rpack-style by `(wasted area, height,
+/// column)` — the *min-waste best-fit* rule, where the waste of a span is
+/// the area buried between the span's support height and the columns
+/// beneath it. The historical first-span variant (lowest height, leftmost)
+/// is kept behind [`Skyline::first_span`]; best-fit packs ragged workloads
+/// into fewer regions because it avoids burying short columns under wide
+/// fragments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Skyline {
+    /// Score spans by min-waste best-fit (`true`, the default) instead of
+    /// the first lowest-leftmost span.
+    pub best_fit: bool,
+}
+
+impl Default for Skyline {
+    fn default() -> Self {
+        Self { best_fit: true }
+    }
+}
+
+impl Skyline {
+    /// The historical first-span variant: lowest skyline height, leftmost
+    /// column, no waste scoring.
+    pub fn first_span() -> Self {
+        Self { best_fit: false }
+    }
+}
 
 impl Placer for Skyline {
     fn name(&self) -> &'static str {
@@ -183,7 +257,7 @@ impl Placer for Skyline {
     }
 
     fn description(&self) -> &'static str {
-        "bottom-left skyline packing, tallest fragment first (a la rpack)"
+        "skyline packing, min-waste best-fit scoring, tallest fragment first (a la rpack)"
     }
 
     fn place(&self, workload: &ChipWorkload) -> Result<Placement> {
@@ -200,18 +274,29 @@ impl Placer for Skyline {
             let b = &workload.blocks[bi];
             let mut spot = None;
             for (gi, heights) in lines.iter().enumerate() {
-                let mut best: Option<(usize, usize)> = None; // (y, x)
+                // Key (waste, y, x); first-span zeroes the waste component,
+                // reducing the score to the lowest-leftmost rule.
+                let mut best: Option<(usize, usize, usize)> = None;
                 for x in 0..=chip.slot_cols - b.cols {
                     let y = heights[x..x + b.cols].iter().copied().max().unwrap_or(0);
+                    if y + b.rows > chip.slot_rows {
+                        continue;
+                    }
+                    let waste = if self.best_fit {
+                        heights[x..x + b.cols].iter().map(|&h| y - h).sum()
+                    } else {
+                        0
+                    };
+                    let key = (waste, y, x);
                     let better = match best {
                         None => true,
-                        Some((by, _)) => y < by,
+                        Some(k) => key < k,
                     };
-                    if y + b.rows <= chip.slot_rows && better {
-                        best = Some((y, x));
+                    if better {
+                        best = Some(key);
                     }
                 }
-                if let Some((y, x)) = best {
+                if let Some((_, y, x)) = best {
                     spot = Some((gi, y, x));
                     break;
                 }
@@ -228,7 +313,7 @@ impl Placer for Skyline {
         Ok(Placement {
             chip,
             blocks: workload.blocks.clone(),
-            placed: placed.into_iter().map(|p| p.expect("every fragment placed")).collect(),
+            placed: collect_placed(placed, self.name())?,
             placer: self.name(),
             regions: lines.len(),
         })
@@ -340,7 +425,7 @@ impl Placer for MaxRects {
         Ok(Placement {
             chip,
             blocks: workload.blocks.clone(),
-            placed: placed.into_iter().map(|p| p.expect("every fragment placed")).collect(),
+            placed: collect_placed(placed, self.name())?,
             placer: self.name(),
             regions: regions.len(),
         })
@@ -423,7 +508,7 @@ impl Placer for NfAware {
         let own = Placement {
             chip,
             blocks: workload.blocks.clone(),
-            placed: placed.into_iter().map(|p| p.expect("every fragment placed")).collect(),
+            placed: collect_placed(placed, self.name())?,
             placer: self.name(),
             regions: regions.len(),
         };
@@ -494,7 +579,7 @@ mod tests {
     fn packers_never_use_more_regions_than_slot_count_demands() {
         let wl = random_workload(7, 30, test_chip());
         let lower_bound = wl.total_slots().div_ceil(wl.chip.n_slots());
-        for name in ["firstfit", "skyline", "maxrects", "nf_aware"] {
+        for name in ["firstfit", "skyline", "maxrects", "nf_aware", "atlas"] {
             let p = placer_by_name(name).unwrap().place(&wl).unwrap();
             assert!(p.regions >= lower_bound, "{name}: {} < {lower_bound}", p.regions);
             // Generous upper bound: the degenerate one-fragment-per-region
@@ -563,5 +648,42 @@ mod tests {
     #[test]
     fn unknown_placer_is_an_error() {
         assert!(placer_by_name("nope").is_err());
+        assert!(placer_by_name("anneal:abc").is_err(), "non-numeric budget must be rejected");
+    }
+
+    #[test]
+    fn anneal_budget_suffix_parses() {
+        // The registry must resolve anneal:MS like swap-search:MS.
+        assert!(placer_by_name("anneal:0").is_ok());
+        assert!(placer_by_name("anneal:500").is_ok());
+        assert!(placer_by_name("anneal").is_ok());
+    }
+
+    #[test]
+    fn best_fit_skyline_packs_a_ragged_workload_into_fewer_regions() {
+        // Found by exhaustive search over random ragged workloads: on an
+        // 8x8 chip the first-span rule buries the short columns under the
+        // 2x5 fragment and spills to a second region; min-waste scoring
+        // slots the 2x3 pieces beside the tower instead and fits in one.
+        let chip = test_chip();
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        for (i, (rows, cols)) in [(6, 3), (2, 3), (2, 3), (5, 1), (2, 5)].iter().enumerate() {
+            wl.blocks.push(crate::chip::TileBlock {
+                label: format!("b{i}"),
+                layer: i,
+                grid_origin: (0, 0),
+                rows: *rows,
+                cols: *cols,
+                fan_in: rows * chip.geometry.rows,
+                fan_out: cols * chip.geometry.weights_per_row(),
+                nf_weight: 1.0,
+            });
+        }
+        let best = Skyline::default().place(&wl).unwrap();
+        let first = Skyline::first_span().place(&wl).unwrap();
+        best.validate().unwrap();
+        first.validate().unwrap();
+        assert_eq!(best.regions, 1, "{:?}", best.placed);
+        assert_eq!(first.regions, 2, "{:?}", first.placed);
     }
 }

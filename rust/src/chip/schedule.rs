@@ -10,10 +10,17 @@
 //! [`CostModel`] that prices single-layer tilings, extended with the
 //! chip-level effects the tiling model cannot see: shared-ADC
 //! serialization, routing distance, and reprogramming.
+//!
+//! The per-wave arithmetic lives in one shared routine ([`wave_body`] +
+//! [`finalize_waves`]) used by both [`Scheduler::schedule`] (full pass) and
+//! [`DeltaCost`] (incremental pass), so the two are bitwise identical by
+//! construction: a move re-scored through [`DeltaCost`] recomputes only the
+//! affected waves with exactly the code — and exactly the float operation
+//! order — the full scheduler would have used.
 
-use super::{ChipModel, Placement, SpillPolicy, TileBlock};
+use super::{ChipModel, PlacedBlock, Placement, SpillPolicy, TileBlock};
 use crate::crossbar::{CostModel, TileCost};
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
 
 /// Closed-form [`CostModel::layer_cost`] for one fragment of a part's tile
@@ -109,6 +116,217 @@ pub struct ChipReport {
     pub nf_weighted_cost: f64,
 }
 
+/// Wave key `(layer, round)` — BTreeMap order is execution order.
+type WaveKey = (usize, usize);
+
+/// The reuse round a region executes in (0 for every region under
+/// [`SpillPolicy::MoreChips`]: extra chips run in parallel).
+fn wave_round(chip: &ChipModel, region: usize) -> usize {
+    match chip.spill {
+        SpillPolicy::Reuse => region,
+        SpillPolicy::MoreChips => 0,
+    }
+}
+
+/// Group placed fragments into waves keyed by `(layer, round)`; member
+/// lists hold indices into `placement.placed` in ascending order.
+fn wave_members(placement: &Placement) -> BTreeMap<WaveKey, Vec<usize>> {
+    let mut groups: BTreeMap<WaveKey, Vec<usize>> = BTreeMap::new();
+    for (pi, p) in placement.placed.iter().enumerate() {
+        let round = wave_round(&placement.chip, p.region);
+        groups.entry((placement.blocks[p.block].layer, round)).or_default().push(pi);
+    }
+    groups
+}
+
+/// Position-independent cost terms of one wave, before the finalize pass
+/// adds the merge chain, batch scaling, and reprogramming charges.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct WaveBody {
+    blocks: usize,
+    slots: usize,
+    adc: u64,
+    sync: u64,
+    io: u64,
+    energy_pj: f64,
+    exec_ns: f64,
+    fan_in_max: usize,
+}
+
+/// Price one wave's members: ADC-group co-activity, per-slot serialized
+/// conversion time plus routing, routing energy at the mean hop distance,
+/// and the integer adc/sync/io aggregates from the cached per-fragment
+/// closed forms. `occ` is caller-provided scratch (resized and zeroed here)
+/// so the incremental path performs no steady-state allocations.
+fn wave_body(
+    placement: &Placement,
+    cost: &CostModel,
+    frags: &[TileCost],
+    members: &[usize],
+    occ: &mut Vec<u64>,
+) -> WaveBody {
+    let chip = &placement.chip;
+    let g = chip.geometry;
+    let wpr = g.weights_per_row();
+    let gcols = chip.slot_cols.div_ceil(chip.adc_group);
+    // Co-active slots per shared-ADC group in this wave, flat-indexed by
+    // (region, slot row, ADC group).
+    occ.clear();
+    occ.resize(placement.regions.max(1) * chip.slot_rows * gcols, 0);
+    for &pi in members {
+        let p = &placement.placed[pi];
+        let blk = &placement.blocks[p.block];
+        for r in p.row..p.row + blk.rows {
+            for c in p.col..p.col + blk.cols {
+                occ[(p.region * chip.slot_rows + r) * gcols + c / chip.adc_group] += 1;
+            }
+        }
+    }
+
+    let fan_in_max = members
+        .iter()
+        .map(|&pi| placement.blocks[placement.placed[pi].block].fan_in)
+        .max()
+        .unwrap_or(1);
+
+    let mut adc = 0u64;
+    let mut sync = 0u64;
+    let mut io = 0u64;
+    let mut energy = 0.0f64;
+    let mut exec_ns = 0.0f64;
+    let mut slots = 0usize;
+    for &pi in members {
+        let p = &placement.placed[pi];
+        let blk = &placement.blocks[p.block];
+        let fc = &frags[p.block];
+        adc += fc.adc_conversions;
+        sync += fc.sync_events;
+        io += fc.io_bytes;
+        energy += fc.energy_pj;
+        slots += blk.n_slots();
+        // Routing energy at the fragment's mean hop distance.
+        let mean_hops = p.row as f64
+            + p.col as f64
+            + (blk.rows - 1) as f64 / 2.0
+            + (blk.cols - 1) as f64 / 2.0;
+        energy += fc.io_bytes as f64 * chip.route_pj_per_byte_hop * mean_hops;
+        // Slowest slot under ADC-group serialization + routing.
+        for c in p.col..p.col + blk.cols {
+            let gc = blk.grid_origin.1 + (c - p.col);
+            let nw = wpr.min(blk.fan_out.saturating_sub(gc * wpr));
+            let tile_cols = (nw * g.k_bits) as f64;
+            for r in p.row..p.row + blk.rows {
+                let share =
+                    occ[(p.region * chip.slot_rows + r) * gcols + c / chip.adc_group] as f64;
+                let t = cost.tile_settle_ns
+                    + tile_cols * cost.adc.time_per_conv_ns * share
+                    + chip.hops(r, c) as f64 * chip.route_ns_per_hop;
+                if t > exec_ns {
+                    exec_ns = t;
+                }
+            }
+        }
+    }
+    WaveBody {
+        blocks: members.len(),
+        slots,
+        adc,
+        sync,
+        io,
+        energy_pj: energy,
+        exec_ns,
+        fan_in_max,
+    }
+}
+
+/// Walk the wave bodies in `(layer, round)` order and apply the sequential
+/// effects: each layer's final wave appends its partial-sum merge chain,
+/// latency scales by the batch, and each switch of the resident reuse round
+/// pays the reprogramming cost once. Returns the priced waves plus the
+/// end-to-end total (accumulated per wave in key order, so the float bits
+/// match the original single-pass scheduler exactly).
+fn finalize_waves(
+    placement: &Placement,
+    cost: &CostModel,
+    bodies: &BTreeMap<WaveKey, WaveBody>,
+    batch: usize,
+) -> (Vec<Wave>, TileCost) {
+    let chip = &placement.chip;
+    let g = chip.geometry;
+    // Final round per layer (keys ascend, so the last insert wins).
+    let mut last_round: BTreeMap<usize, usize> = BTreeMap::new();
+    for &(layer, round) in bodies.keys() {
+        last_round.insert(layer, round);
+    }
+    // Slots resident per reuse round (a round is written in full each time
+    // the chip switches to it, regardless of how many layers' waves then
+    // execute from it).
+    let mut round_slots: BTreeMap<usize, usize> = BTreeMap::new();
+    if chip.spill == SpillPolicy::Reuse {
+        for p in &placement.placed {
+            *round_slots.entry(p.region).or_insert(0) += placement.blocks[p.block].n_slots();
+        }
+    }
+    // Round 0 is resident after initial programming (not charged, as in the
+    // single-layer cost model).
+    let mut resident_round = 0usize;
+
+    let mut waves = Vec::with_capacity(bodies.len());
+    let mut total = TileCost::default();
+    for (&(layer, round), body) in bodies {
+        // The layer's merge chain completes with its final wave.
+        let mut per_input = body.exec_ns;
+        if last_round.get(&layer) == Some(&round) {
+            let grid_rows = body.fan_in_max.div_ceil(g.rows);
+            per_input += grid_rows.saturating_sub(1) as f64 * cost.sync_ns;
+        }
+        let mut latency = per_input * batch as f64;
+        let mut energy = body.energy_pj;
+        // Reprogram the chip when the wave sequence switches rounds —
+        // charged once per switch (waves of different layers sharing a
+        // round pay nothing extra; revisiting an evicted round pays again).
+        if round != resident_round {
+            let incoming = round_slots.get(&round).copied().unwrap_or(body.slots);
+            latency += chip.reprogram_ns;
+            energy += incoming as f64 * (g.rows * g.cols) as f64 * chip.reprogram_pj_per_cell;
+            resident_round = round;
+        }
+
+        waves.push(Wave {
+            layer,
+            round,
+            blocks: body.blocks,
+            occupied_slots: body.slots,
+            adc_conversions: body.adc,
+            sync_events: body.sync,
+            io_bytes: body.io,
+            latency_ns: latency,
+            energy_pj: energy,
+        });
+        total.add(&TileCost {
+            adc_conversions: body.adc,
+            sync_events: body.sync,
+            io_bytes: body.io,
+            latency_ns: latency,
+            energy_pj: energy,
+        });
+    }
+    (waves, total)
+}
+
+/// Sum of [`ChipModel::slot_pr_factor`] over a fragment's slot rectangle —
+/// the inner loop of [`Placement::nf_weighted_cost`], shared so the
+/// incremental NF fold replays the same bits.
+fn pr_factor_sum(chip: &ChipModel, block: &TileBlock, row: usize, col: usize) -> f64 {
+    let mut factors = 0.0f64;
+    for r in row..row + block.rows {
+        for c in col..col + block.cols {
+            factors += chip.slot_pr_factor(r, c);
+        }
+    }
+    factors
+}
+
 /// Converts a [`Placement`] into execution [`Wave`]s and prices them.
 #[derive(Debug, Clone, Copy)]
 pub struct Scheduler {
@@ -139,138 +357,23 @@ impl Scheduler {
             "blocks={} batch={batch}",
             placement.blocks.len()
         );
-        ensure!(batch >= 1, "batch must be >= 1");
-        placement.validate()?;
-        let chip = placement.chip;
-        let g = chip.geometry;
-        let wpr = g.weights_per_row();
-
-        // Group fragments into waves keyed by (layer, round).
-        let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
-        for (pi, p) in placement.placed.iter().enumerate() {
-            let round = match chip.spill {
-                SpillPolicy::Reuse => p.region,
-                SpillPolicy::MoreChips => 0,
-            };
-            groups.entry((placement.blocks[p.block].layer, round)).or_default().push(pi);
+        ensure!(
+            batch >= 1,
+            "batch must be >= 1 (got {batch}): a wave schedules at least one input"
+        );
+        placement.validate().context("cannot schedule an invalid placement")?;
+        let groups = wave_members(placement);
+        let frags: Vec<TileCost> = placement
+            .blocks
+            .iter()
+            .map(|b| fragment_cost(&placement.chip, b, &self.cost, batch))
+            .collect();
+        let mut occ = Vec::new();
+        let mut bodies: BTreeMap<WaveKey, WaveBody> = BTreeMap::new();
+        for (key, members) in &groups {
+            bodies.insert(*key, wave_body(placement, &self.cost, &frags, members, &mut occ));
         }
-        // Final round per layer (keys ascend, so the last insert wins).
-        let mut last_round: BTreeMap<usize, usize> = BTreeMap::new();
-        for &(layer, round) in groups.keys() {
-            last_round.insert(layer, round);
-        }
-
-        // Slots resident per reuse round (a round is written in full each
-        // time the chip switches to it, regardless of how many layers'
-        // waves then execute from it).
-        let mut round_slots: BTreeMap<usize, usize> = BTreeMap::new();
-        if chip.spill == SpillPolicy::Reuse {
-            for p in &placement.placed {
-                *round_slots.entry(p.region).or_insert(0) +=
-                    placement.blocks[p.block].n_slots();
-            }
-        }
-        // Round 0 is resident after initial programming (not charged, as in
-        // the single-layer cost model).
-        let mut resident_round = 0usize;
-
-        let mut waves = Vec::with_capacity(groups.len());
-        let mut total = TileCost::default();
-        for (&(layer, round), members) in &groups {
-            // Co-active slots per shared-ADC group in this wave.
-            let mut occ: BTreeMap<(usize, usize, usize), u64> = BTreeMap::new();
-            for &pi in members {
-                let p = &placement.placed[pi];
-                let blk = &placement.blocks[p.block];
-                for r in p.row..p.row + blk.rows {
-                    for c in p.col..p.col + blk.cols {
-                        *occ.entry((p.region, r, c / chip.adc_group)).or_insert(0) += 1;
-                    }
-                }
-            }
-
-            let mut adc = 0u64;
-            let mut sync = 0u64;
-            let mut io = 0u64;
-            let mut energy = 0.0f64;
-            let mut exec_ns = 0.0f64;
-            let mut slots = 0usize;
-            for &pi in members {
-                let p = &placement.placed[pi];
-                let blk = &placement.blocks[p.block];
-                let fc = fragment_cost(&chip, blk, &self.cost, batch);
-                adc += fc.adc_conversions;
-                sync += fc.sync_events;
-                io += fc.io_bytes;
-                energy += fc.energy_pj;
-                slots += blk.n_slots();
-                // Routing energy at the fragment's mean hop distance.
-                let mean_hops = p.row as f64
-                    + p.col as f64
-                    + (blk.rows - 1) as f64 / 2.0
-                    + (blk.cols - 1) as f64 / 2.0;
-                energy += fc.io_bytes as f64 * chip.route_pj_per_byte_hop * mean_hops;
-                // Slowest slot under ADC-group serialization + routing.
-                for c in p.col..p.col + blk.cols {
-                    let gc = blk.grid_origin.1 + (c - p.col);
-                    let nw = wpr.min(blk.fan_out.saturating_sub(gc * wpr));
-                    let tile_cols = (nw * g.k_bits) as f64;
-                    for r in p.row..p.row + blk.rows {
-                        let share = occ[&(p.region, r, c / chip.adc_group)] as f64;
-                        let t = self.cost.tile_settle_ns
-                            + tile_cols * self.cost.adc.time_per_conv_ns * share
-                            + chip.hops(r, c) as f64 * chip.route_ns_per_hop;
-                        if t > exec_ns {
-                            exec_ns = t;
-                        }
-                    }
-                }
-            }
-
-            // The layer's merge chain completes with its final wave.
-            let mut per_input = exec_ns;
-            if last_round.get(&layer) == Some(&round) {
-                let fan_in = members
-                    .iter()
-                    .map(|&pi| placement.blocks[placement.placed[pi].block].fan_in)
-                    .max()
-                    .unwrap_or(1);
-                let grid_rows = fan_in.div_ceil(g.rows);
-                per_input += grid_rows.saturating_sub(1) as f64 * self.cost.sync_ns;
-            }
-            let mut latency = per_input * batch as f64;
-            // Reprogram the chip when the wave sequence switches rounds —
-            // charged once per switch (waves of different layers sharing a
-            // round pay nothing extra; revisiting an evicted round pays
-            // again).
-            if round != resident_round {
-                let incoming = round_slots.get(&round).copied().unwrap_or(slots);
-                latency += chip.reprogram_ns;
-                energy +=
-                    incoming as f64 * (g.rows * g.cols) as f64 * chip.reprogram_pj_per_cell;
-                resident_round = round;
-            }
-
-            let wave = Wave {
-                layer,
-                round,
-                blocks: members.len(),
-                occupied_slots: slots,
-                adc_conversions: adc,
-                sync_events: sync,
-                io_bytes: io,
-                latency_ns: latency,
-                energy_pj: energy,
-            };
-            total.add(&TileCost {
-                adc_conversions: adc,
-                sync_events: sync,
-                io_bytes: io,
-                latency_ns: latency,
-                energy_pj: energy,
-            });
-            waves.push(wave);
-        }
+        let (waves, total) = finalize_waves(placement, &self.cost, &bodies, batch);
 
         // Wave costs for the scrape: counts are monotonic, the histogram
         // carries the per-wave latency distribution (ns → µs).
@@ -288,9 +391,231 @@ impl Scheduler {
             chips: placement.chips(),
             rounds: placement.rounds(),
             utilization: placement.utilization(),
-            area_mm2: chip.area_mm2(placement.chips()),
+            area_mm2: placement.chip.area_mm2(placement.chips()),
             nf_weighted_cost: placement.nf_weighted_cost(),
         })
+    }
+}
+
+/// Scores of one placement state as maintained by [`DeltaCost`]: the two
+/// objectives the annealing placer trades off plus the scheduled energy.
+/// `latency_ns` and `energy_pj` equal the corresponding
+/// [`ChipReport::total`] fields bit for bit; `nf_weighted_cost` equals
+/// [`Placement::nf_weighted_cost`] bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlacementScore {
+    /// NF-weighted placement cost ([`Placement::nf_weighted_cost`]).
+    pub nf_weighted_cost: f64,
+    /// Scheduled end-to-end latency, nanoseconds.
+    pub latency_ns: f64,
+    /// Scheduled end-to-end energy, picojoules.
+    pub energy_pj: f64,
+}
+
+/// Incremental placement re-scorer: the placement analogue of the packed
+/// NF layer's `IncrementalNf`.
+///
+/// A full [`Scheduler::schedule`] pass re-validates the placement, rebuilds
+/// every wave, and re-scans every slot's PR factor — O(total slots) per
+/// probe. `DeltaCost` caches the per-wave cost bodies, the per-fragment
+/// closed-form costs (position-independent), and each fragment's PR-factor
+/// sum, so applying a move recomputes **only the affected waves** and the
+/// moved fragments' factor sums; [`DeltaCost::score`] then replays the
+/// cheap finalize pass (O(waves)) and the NF fold (O(fragments)).
+///
+/// Exactness contract: because the dirty waves are recomputed by the same
+/// [`wave_body`] routine, and the finalize pass and NF fold accumulate in
+/// the same order as the full pass, `score()` is **bitwise identical** to
+/// scheduling the current placement from scratch — pinned by
+/// `tests/integration_anneal.rs` over random move traces.
+///
+/// `DeltaCost` does not check move feasibility beyond bounds: callers (the
+/// annealing placer keeps occupancy grids) must avoid overlaps, and
+/// [`Placement::validate`] on [`DeltaCost::placement`] is the final
+/// arbiter.
+#[derive(Debug, Clone)]
+pub struct DeltaCost {
+    cost: CostModel,
+    batch: usize,
+    placement: Placement,
+    frags: Vec<TileCost>,
+    members: BTreeMap<WaveKey, Vec<usize>>,
+    bodies: BTreeMap<WaveKey, WaveBody>,
+    factors: Vec<f64>,
+    occ_scratch: Vec<u64>,
+}
+
+impl DeltaCost {
+    /// Build the incremental state from a valid placement. Costs the same
+    /// as one full scheduling pass; every subsequent move is O(Δ).
+    pub fn new(placement: &Placement, cost: CostModel, batch: usize) -> Result<Self> {
+        ensure!(
+            batch >= 1,
+            "batch must be >= 1 (got {batch}): DeltaCost scores scheduled waves"
+        );
+        placement.validate().context("DeltaCost requires a valid placement")?;
+        let frags: Vec<TileCost> = placement
+            .blocks
+            .iter()
+            .map(|b| fragment_cost(&placement.chip, b, &cost, batch))
+            .collect();
+        let members = wave_members(placement);
+        let mut occ_scratch = Vec::new();
+        let mut bodies = BTreeMap::new();
+        for (key, m) in &members {
+            bodies.insert(*key, wave_body(placement, &cost, &frags, m, &mut occ_scratch));
+        }
+        let factors = placement
+            .placed
+            .iter()
+            .map(|p| {
+                pr_factor_sum(&placement.chip, &placement.blocks[p.block], p.row, p.col)
+            })
+            .collect();
+        Ok(Self {
+            cost,
+            batch,
+            placement: placement.clone(),
+            frags,
+            members,
+            bodies,
+            factors,
+            occ_scratch,
+        })
+    }
+
+    /// The placement in its current (possibly moved) state.
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// Consume the re-scorer and keep the current placement.
+    pub fn into_placement(self) -> Placement {
+        self.placement
+    }
+
+    /// Move one placed fragment to `(region, row, col)`, re-scoring only
+    /// the affected waves. Relocation is its own inverse: re-applying the
+    /// saved prior coordinates undoes the move exactly.
+    pub fn relocate(&mut self, pi: usize, region: usize, row: usize, col: usize) -> Result<()> {
+        self.move_many(&[(pi, region, row, col)])
+    }
+
+    /// Exchange the positions of two same-shape placed fragments.
+    pub fn swap(&mut self, a: usize, b: usize) -> Result<()> {
+        let n = self.placement.placed.len();
+        ensure!(a < n && b < n, "swapped unknown fragment pair ({a}, {b}) of {n}");
+        if a == b {
+            return Ok(());
+        }
+        let (pa, pb) = (self.placement.placed[a], self.placement.placed[b]);
+        let (ba, bb) = (&self.placement.blocks[pa.block], &self.placement.blocks[pb.block]);
+        ensure!(
+            ba.rows == bb.rows && ba.cols == bb.cols,
+            "swap requires matching shapes: {} is {}x{}, {} is {}x{}",
+            ba.label,
+            ba.rows,
+            ba.cols,
+            bb.label,
+            bb.rows,
+            bb.cols
+        );
+        self.move_many(&[
+            (a, pb.region, pb.row, pb.col),
+            (b, pa.region, pa.row, pa.col),
+        ])
+    }
+
+    /// Apply a batch of `(fragment, region, row, col)` relocations
+    /// atomically, then recompute every dirtied wave once. Bounds are
+    /// checked up front (context-rich errors, nothing applied on failure);
+    /// overlap feasibility is the caller's contract.
+    pub fn move_many(&mut self, moves: &[(usize, usize, usize, usize)]) -> Result<()> {
+        let chip = self.placement.chip;
+        for &(pi, region, row, col) in moves {
+            ensure!(
+                pi < self.placement.placed.len(),
+                "moved unknown fragment {pi} of {}",
+                self.placement.placed.len()
+            );
+            let b = &self.placement.blocks[self.placement.placed[pi].block];
+            ensure!(
+                region < self.placement.regions,
+                "fragment {pi} ({}) moved to unknown region {region} of {}",
+                b.label,
+                self.placement.regions
+            );
+            ensure!(
+                row + b.rows <= chip.slot_rows && col + b.cols <= chip.slot_cols,
+                "fragment {pi} ({}, {}x{}) out of bounds at ({row}, {col}) on the {}x{} slot array",
+                b.label,
+                b.rows,
+                b.cols,
+                chip.slot_rows,
+                chip.slot_cols
+            );
+        }
+        let mut dirty: Vec<WaveKey> = Vec::with_capacity(2 * moves.len());
+        for &(pi, region, row, col) in moves {
+            let p = self.placement.placed[pi];
+            let layer = self.placement.blocks[p.block].layer;
+            let old_key = (layer, wave_round(&chip, p.region));
+            let new_key = (layer, wave_round(&chip, region));
+            if old_key != new_key {
+                if let Some(list) = self.members.get_mut(&old_key) {
+                    if let Some(pos) = list.iter().position(|&x| x == pi) {
+                        list.remove(pos);
+                    }
+                }
+                let list = self.members.entry(new_key).or_default();
+                let pos = list.partition_point(|&x| x < pi);
+                list.insert(pos, pi);
+            }
+            self.placement.placed[pi] = PlacedBlock { block: p.block, region, row, col };
+            self.factors[pi] =
+                pr_factor_sum(&chip, &self.placement.blocks[p.block], row, col);
+            dirty.push(old_key);
+            dirty.push(new_key);
+        }
+        dirty.sort_unstable();
+        dirty.dedup();
+        let mut occ = std::mem::take(&mut self.occ_scratch);
+        for key in dirty {
+            let body = match self.members.get(&key) {
+                Some(m) if !m.is_empty() => {
+                    Some(wave_body(&self.placement, &self.cost, &self.frags, m, &mut occ))
+                }
+                _ => None,
+            };
+            match body {
+                Some(b) => {
+                    self.bodies.insert(key, b);
+                }
+                None => {
+                    self.bodies.remove(&key);
+                    self.members.remove(&key);
+                }
+            }
+        }
+        self.occ_scratch = occ;
+        Ok(())
+    }
+
+    /// Score the current placement: the finalize pass over the cached wave
+    /// bodies plus the NF fold over the cached factor sums. Bitwise equal
+    /// to a fresh [`Scheduler::schedule`] +
+    /// [`Placement::nf_weighted_cost`].
+    pub fn score(&self) -> PlacementScore {
+        let (_, total) = finalize_waves(&self.placement, &self.cost, &self.bodies, self.batch);
+        let mut nf = 0.0f64;
+        for (i, p) in self.placement.placed.iter().enumerate() {
+            nf += self.placement.blocks[p.block].nf_weight * self.factors[i];
+        }
+        PlacementScore {
+            nf_weighted_cost: nf,
+            latency_ns: total.latency_ns,
+            energy_pj: total.energy_pj,
+        }
     }
 }
 
@@ -456,5 +781,92 @@ mod tests {
         assert_eq!(r3.total.adc_conversions, 3 * r1.total.adc_conversions);
         assert_eq!(r3.total.sync_events, 3 * r1.total.sync_events);
         assert!((r3.total.latency_ns - 3.0 * r1.total.latency_ns).abs() < 1e-6);
+    }
+
+    #[test]
+    fn delta_cost_matches_full_schedule_at_rest() {
+        let chip = ChipModel {
+            slot_rows: 8,
+            slot_cols: 8,
+            geometry: TileGeometry::new(16, 32, 8).unwrap(),
+            ..ChipModel::default()
+        };
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.add_layer("l0", 0, 96, 24, 1.5).unwrap();
+        wl.add_layer("l1", 1, 48, 12, 0.5).unwrap();
+        let placement = FirstFit.place(&wl).unwrap();
+        let s = Scheduler::default();
+        let report = s.schedule(&placement, 2).unwrap();
+        let dc = DeltaCost::new(&placement, s.cost, 2).unwrap();
+        let score = dc.score();
+        assert_eq!(score.latency_ns.to_bits(), report.total.latency_ns.to_bits());
+        assert_eq!(score.energy_pj.to_bits(), report.total.energy_pj.to_bits());
+        assert_eq!(
+            score.nf_weighted_cost.to_bits(),
+            placement.nf_weighted_cost().to_bits()
+        );
+    }
+
+    #[test]
+    fn delta_cost_relocate_tracks_full_reschedule() {
+        let chip = ChipModel {
+            slot_rows: 8,
+            slot_cols: 8,
+            geometry: TileGeometry::new(16, 32, 8).unwrap(),
+            ..ChipModel::default()
+        };
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.add_layer("l0", 0, 32, 8, 2.0).unwrap(); // 2x2 per part on 8x8: room to move
+        let placement = FirstFit.place(&wl).unwrap();
+        let s = Scheduler::default();
+        let mut dc = DeltaCost::new(&placement, s.cost, 1).unwrap();
+        // Move fragment 0 from its packed corner to the far corner.
+        dc.relocate(0, 0, 6, 6).unwrap();
+        dc.placement().validate().unwrap();
+        let full = s.schedule(dc.placement(), 1).unwrap();
+        let score = dc.score();
+        assert_eq!(score.latency_ns.to_bits(), full.total.latency_ns.to_bits());
+        assert_eq!(score.energy_pj.to_bits(), full.total.energy_pj.to_bits());
+        assert_eq!(
+            score.nf_weighted_cost.to_bits(),
+            dc.placement().nf_weighted_cost().to_bits()
+        );
+        // And the move is exactly undoable.
+        let before = DeltaCost::new(&placement, s.cost, 1).unwrap().score();
+        dc.relocate(0, 0, 0, 0).unwrap();
+        assert_eq!(dc.score(), before);
+    }
+
+    #[test]
+    fn delta_cost_rejects_degenerate_inputs() {
+        let chip = ChipModel {
+            slot_rows: 8,
+            slot_cols: 8,
+            geometry: TileGeometry::new(16, 32, 8).unwrap(),
+            ..ChipModel::default()
+        };
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.add_layer("l0", 0, 16, 4, 1.0).unwrap();
+        let placement = FirstFit.place(&wl).unwrap();
+        let cost = CostModel::default();
+        let err = DeltaCost::new(&placement, cost, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("batch"), "{err:#}");
+        let mut dc = DeltaCost::new(&placement, cost, 1).unwrap();
+        let err = dc.relocate(0, 5, 0, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown region"), "{err:#}");
+        let err = dc.relocate(0, 0, 8, 8).unwrap_err();
+        assert!(format!("{err:#}").contains("out of bounds"), "{err:#}");
+        let err = dc.relocate(99, 0, 0, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown fragment"), "{err:#}");
+    }
+
+    #[test]
+    fn schedule_rejects_batch_zero_with_context() {
+        let chip = ChipModel::default();
+        let mut wl = ChipWorkload::new(chip).unwrap();
+        wl.add_layer("l0", 0, 32, 8, 1.0).unwrap();
+        let placement = FirstFit.place(&wl).unwrap();
+        let err = Scheduler::default().schedule(&placement, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("batch must be >= 1"), "{err:#}");
     }
 }

@@ -243,6 +243,9 @@ pub struct ChipSettings {
     /// placer is applied (`mdm serve --chip` attribution); `mdm place`
     /// sweeps its `--placer` list instead.
     pub placer: String,
+    /// Search budget for the `anneal` placer, milliseconds (`mdm place
+    /// --budget-ms` overrides; 0 returns the `nf_aware` seed unchanged).
+    pub budget_ms: u64,
 }
 
 impl Default for ChipSettings {
@@ -254,6 +257,7 @@ impl Default for ChipSettings {
             pr_gradient: 0.5,
             spill: "chips".into(),
             placer: "nf_aware".into(),
+            budget_ms: crate::chip::DEFAULT_ANNEAL_BUDGET_MS,
         }
     }
 }
@@ -269,6 +273,7 @@ impl ChipSettings {
             pr_gradient: c.float_or("chip", "pr_gradient", d.pr_gradient),
             spill: c.str_or("chip", "spill", &d.spill),
             placer: c.str_or("chip", "placer", &d.placer),
+            budget_ms: c.int_or("chip", "budget_ms", d.budget_ms as i64).max(0) as u64,
         }
     }
 }
@@ -490,6 +495,9 @@ label = "a # not a comment"
         // Unspecified keys fall back to the defaults.
         assert_eq!(s.adc_group, 4);
         assert_eq!(s.placer, "nf_aware");
+        assert_eq!(s.budget_ms, crate::chip::DEFAULT_ANNEAL_BUDGET_MS);
+        let c2 = Config::parse("[chip]\nbudget_ms = 100").unwrap();
+        assert_eq!(ChipSettings::from_config(&c2).budget_ms, 100);
         let d = ChipSettings::from_config(&Config::default());
         assert_eq!(d.rows, 16);
         assert_eq!(d.spill, "chips");

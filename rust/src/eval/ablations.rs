@@ -32,7 +32,7 @@ use crate::quant::SignSplit;
 use crate::report;
 use crate::rng::Xoshiro256;
 use crate::CrossbarPhysics;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -635,12 +635,61 @@ pub struct PlacementRow {
     pub sync_events: u64,
 }
 
+/// Build the placement workload of one (tile, strategy) sweep point: the
+/// model's layer shapes with synthesized weights, NF sensitivity via
+/// [`Pipeline::sampled_nf`] under that strategy. Extracted from
+/// [`placement_sweep`] (seeding preserved bit for bit) so the placement
+/// search bench (`mdm bench --place-search`) scores the exact workload the
+/// sweep would build.
+pub fn model_workload(
+    cfg: &PlacementSweepConfig,
+    ti: usize,
+    si: usize,
+) -> Result<chip::ChipWorkload> {
+    ensure!(
+        ti < cfg.tiles.len() && si < cfg.strategies.len(),
+        "workload point ({ti}, {si}) outside the {}x{} sweep",
+        cfg.tiles.len(),
+        cfg.strategies.len()
+    );
+    let desc = crate::models::model_by_name(&cfg.model)?;
+    let tile = cfg.tiles[ti];
+    let strategy = &cfg.strategies[si];
+    let geometry = TileGeometry::new(tile, tile, cfg.k_bits)?;
+    let chip_model = chip::ChipModel { geometry, ..cfg.chip };
+    let pipeline = Pipeline::new(geometry).strategy(strategy)?.estimator(&cfg.estimator)?;
+    let mut rng =
+        Xoshiro256::seeded(cfg.seed ^ ((ti as u64) << 8) ^ ((si as u64) << 16) ^ 0xC41F);
+    let mut workload = chip::ChipWorkload::new(chip_model)?;
+    let mut stage = 0usize;
+    for (li, layer) in desc.layers.iter().enumerate() {
+        let w = crate::models::generate_layer_weights(
+            layer.fan_in,
+            layer.fan_out,
+            &desc.profile,
+            cfg.seed ^ ((li as u64) << 24),
+        )?;
+        let (nf_sum, n) = pipeline.sampled_nf(&w, cfg.nf_tiles, &mut rng)?;
+        let nf_weight = nf_sum / n.max(1) as f64;
+        for rep in 0..layer.count {
+            workload.add_layer(
+                &format!("l{li}r{rep}"),
+                stage,
+                layer.fan_in,
+                layer.fan_out,
+                nf_weight,
+            )?;
+            stage += 1;
+        }
+    }
+    Ok(workload)
+}
+
 /// Chip-placement sweep: for every (tile size, strategy) a placement
-/// workload is built from the model's layer shapes — synthesized weights,
-/// NF sensitivity via [`Pipeline::sampled_nf`] under that strategy — then
-/// every placer places it and the wave scheduler prices the result. The
-/// (tile, strategy, placer) points fan out over the configured pool; all
-/// rng streams are drawn serially during workload construction, so the
+/// workload is built from the model's layer shapes ([`model_workload`]),
+/// then every placer places it and the wave scheduler prices the result.
+/// The (tile, strategy, placer) points fan out over the configured pool;
+/// all rng streams are drawn serially during workload construction, so the
 /// rows are bitwise identical at any thread count.
 pub fn placement_sweep(
     cfg: &PlacementSweepConfig,
@@ -653,40 +702,10 @@ pub fn placement_sweep(
         cfg.placers.len(),
         cfg.strategies.len()
     );
-    let desc = crate::models::model_by_name(&cfg.model)?;
     let mut workloads = Vec::with_capacity(cfg.tiles.len() * cfg.strategies.len());
-    for (ti, &tile) in cfg.tiles.iter().enumerate() {
-        let geometry = TileGeometry::new(tile, tile, cfg.k_bits)?;
-        let chip_model = chip::ChipModel { geometry, ..cfg.chip };
-        for (si, strategy) in cfg.strategies.iter().enumerate() {
-            let pipeline =
-                Pipeline::new(geometry).strategy(strategy)?.estimator(&cfg.estimator)?;
-            let mut rng = Xoshiro256::seeded(
-                cfg.seed ^ ((ti as u64) << 8) ^ ((si as u64) << 16) ^ 0xC41F,
-            );
-            let mut workload = chip::ChipWorkload::new(chip_model)?;
-            let mut stage = 0usize;
-            for (li, layer) in desc.layers.iter().enumerate() {
-                let w = crate::models::generate_layer_weights(
-                    layer.fan_in,
-                    layer.fan_out,
-                    &desc.profile,
-                    cfg.seed ^ ((li as u64) << 24),
-                )?;
-                let (nf_sum, n) = pipeline.sampled_nf(&w, cfg.nf_tiles, &mut rng)?;
-                let nf_weight = nf_sum / n.max(1) as f64;
-                for rep in 0..layer.count {
-                    workload.add_layer(
-                        &format!("l{li}r{rep}"),
-                        stage,
-                        layer.fan_in,
-                        layer.fan_out,
-                        nf_weight,
-                    )?;
-                    stage += 1;
-                }
-            }
-            workloads.push(workload);
+    for ti in 0..cfg.tiles.len() {
+        for si in 0..cfg.strategies.len() {
+            workloads.push(model_workload(cfg, ti, si)?);
         }
     }
 
@@ -881,6 +900,10 @@ mod tests {
             get("nf_aware").nf_weighted_cost,
             get("firstfit").nf_weighted_cost
         );
+        // The annealer weakly dominates its nf_aware seed on both axes by
+        // construction.
+        assert!(get("anneal").nf_weighted_cost <= get("nf_aware").nf_weighted_cost);
+        assert!(get("anneal").latency_ns <= get("nf_aware").latency_ns);
         for r in &rows {
             assert!(r.blocks > 0 && r.regions > 0, "{r:?}");
             assert!(r.utilization > 0.0 && r.utilization <= 1.0, "{r:?}");

@@ -353,12 +353,19 @@ commands (paper experiment in brackets):
                  BENCH_artifacts.json; with --obs-overhead: gate span
                  instrumentation cost on the packed-NF workload (raw vs
                  disabled vs enabled; disabled/raw <= 1.03) ->
-                 BENCH_obs_overhead.json
+                 BENCH_obs_overhead.json; with --place-search: the anytime
+                 annealing placer vs its nf_aware seed on one model
+                 workload, gating strictly-better NF cost AND latency,
+                 O(delta) re-scoring >= 10x full rescheduling, and
+                 bitwise-identical placements at 1/2/4/8 threads ->
+                 BENCH_chip_place.json (--model NAME --tile N
+                 --budget-ms N --moves N)
   place          chip placement sweep: tile sizes x placers x strategies
                  -> BENCH_chip_place.json (--tiles 32,64 --placer
-                 firstfit,skyline,maxrects,nf_aware --strategies a,b
-                 --model NAME --chip-rows N --chip-cols N --adc-group N
-                 --spill chips|reuse, also `[chip]` in a config file)
+                 firstfit,skyline,maxrects,nf_aware,atlas,anneal[:MS]
+                 --strategies a,b --model NAME --chip-rows N --chip-cols N
+                 --adc-group N --spill chips|reuse --budget-ms N for the
+                 bare `anneal` placer, also `[chip]` in a config file)
   strategies     list the registered mapping strategies
   estimators     list the registered NF-estimation backends
   obs            observability admin: `dump` prints (or --out writes) a
@@ -376,7 +383,8 @@ commands (paper experiment in brackets):
 
 common flags: --config f.toml --results DIR --artifacts DIR --seed N
               --eta X --tile N --models a,b,c --strategy NAME
-              (swap-search takes a budget: swap-search:MS or --budget-ms N)
+              (swap-search and the anneal placer take budgets:
+              swap-search:MS / anneal:MS or --budget-ms N)
               --estimator NAME (NF backend: analytic|packed|incremental|
               circuit|circuit_cg|sampled[:N]|cached:<inner>, also
               `[nf] estimator`)
@@ -1253,8 +1261,8 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
 }
 
 /// Resolve the `[chip]` settings (config file + `--chip-rows`,
-/// `--chip-cols`, `--adc-group`, `--pr-gradient`, `--spill`, `--placer`
-/// flag overrides).
+/// `--chip-cols`, `--adc-group`, `--pr-gradient`, `--spill`, `--placer`,
+/// `--budget-ms` flag overrides).
 fn chip_settings(args: &Args) -> Result<ChipSettings> {
     let mut s = if let Some(path) = args.flags.get("config") {
         ChipSettings::from_config(&Config::load(path)?)
@@ -1279,6 +1287,9 @@ fn chip_settings(args: &Args) -> Result<ChipSettings> {
     if let Some(v) = args.flags.get("placer") {
         s.placer = v.clone();
     }
+    if let Some(v) = args.flags.get("budget-ms") {
+        s.budget_ms = v.parse().context("--budget-ms")?;
+    }
     Ok(s)
 }
 
@@ -1298,7 +1309,9 @@ fn chip_settings(args: &Args) -> Result<ChipSettings> {
 /// `--bitplane`: the packed-kernel / incremental-delta microbench
 /// ([`cmd_bench_bitplane`]) emitting `BENCH_bitplane.json`. With
 /// `--warm-start`: the compile-artifact warm-start bench
-/// ([`cmd_bench_artifacts`]) emitting `BENCH_artifacts.json`. (The
+/// ([`cmd_bench_artifacts`]) emitting `BENCH_artifacts.json`. With
+/// `--place-search`: the anytime-annealer placement bench
+/// ([`cmd_bench_place_search`]) emitting `BENCH_chip_place.json`. (The
 /// `[nf] estimator` config key configures other commands' backends but
 /// deliberately does not switch bench modes — `mdm bench --config f.toml`
 /// keeps benchmarking the parallel sweep.)
@@ -1308,6 +1321,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use mdm_cim::report::Json;
 
     let cfg = experiment_config(args)?;
+    if args.flags.contains_key("place-search") {
+        return cmd_bench_place_search(args, &cfg);
+    }
     if args.flags.contains_key("bitplane") {
         return cmd_bench_bitplane(args, &cfg);
     }
@@ -2197,6 +2213,228 @@ fn cmd_bench_artifacts(args: &Args, cfg: &mdm_cim::config::ExperimentConfig) -> 
     Ok(())
 }
 
+/// `mdm bench --place-search` — the anytime-annealer placement bench.
+///
+/// Builds one model workload (default: miniresnet at tile 32 on the
+/// configured chip), places it with the `nf_aware` seed and with the
+/// annealer at `--budget-ms`, and gates three hard properties:
+///
+/// 1. the annealed placement is strictly better than its seed on BOTH the
+///    NF-weighted objective and the scheduled end-to-end latency;
+/// 2. [`DeltaCost`](mdm_cim::chip::DeltaCost) per-move re-scoring is
+///    >= 10x faster than a full [`Scheduler`](mdm_cim::chip::Scheduler)
+///    pass while staying bitwise identical on every step of a random
+///    same-shape swap trace;
+/// 3. the annealer returns a bitwise-identical placement at 1, 2, 4, and
+///    8 worker threads.
+///
+/// Emits `BENCH_chip_place.json` (the perf-trajectory snapshot committed
+/// at the repo root).
+fn cmd_bench_place_search(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    use anyhow::ensure;
+    use mdm_cim::chip::{placer_by_name, Annealer, ChipModel, DeltaCost, Placer, Scheduler};
+    use mdm_cim::eval::ablations::{model_workload, PlacementSweepConfig};
+    use mdm_cim::report::Json;
+    use mdm_cim::rng::Xoshiro256;
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    let tile = args.usize_or("tile", 32);
+    let model = args.str_or("model", "miniresnet");
+    let strategy = args.str_or("strategy", "mdm");
+    let moves = args.usize_or("moves", 512).max(1);
+    let out_path = args.str_or("out", "BENCH_chip_place.json");
+    let settings = chip_settings(args)?;
+    let budget_ms = settings.budget_ms.max(1);
+    let sweep_cfg = PlacementSweepConfig {
+        model: model.clone(),
+        tiles: vec![tile],
+        placers: Vec::new(),
+        strategies: vec![strategy.clone()],
+        estimator: cfg.estimator.clone(),
+        chip: ChipModel::from_settings(&settings)?,
+        k_bits: cfg.k_bits,
+        nf_tiles: args.usize_or("nf-tiles", 4),
+        batch: 1,
+        seed: cfg.seed,
+        parallel: mdm_cim::parallel::ParallelConfig::default(),
+    };
+    let workload = model_workload(&sweep_cfg, 0, 0)?;
+    println!(
+        "bench --place-search: anneal:{budget_ms} vs nf_aware on {model} (tile {tile}, \
+         {} fragments, {}x{} slot chips)",
+        workload.blocks.len(),
+        settings.rows,
+        settings.cols
+    );
+
+    // ---- Gate 1: the annealer strictly beats its nf_aware seed on both
+    // the NF-weighted objective and the scheduled latency.
+    let scheduler = Scheduler::default();
+    let seed_placement = placer_by_name("nf_aware")?.place(&workload)?;
+    let seed_report = scheduler.schedule(&seed_placement, 1)?;
+    let seed_nf = seed_placement.nf_weighted_cost();
+    let annealer = Annealer { budget_ms };
+    let annealed = {
+        let _sp = mdm_cim::span!("bench.place_search.anneal", "budget_ms={budget_ms}");
+        annealer.place(&workload)?
+    };
+    let annealed_report = scheduler.schedule(&annealed, 1)?;
+    let annealed_nf = annealed.nf_weighted_cost();
+    println!(
+        "nf_weighted_cost {seed_nf:.4e} -> {annealed_nf:.4e} ({:+.2}%), latency {:.3e} -> \
+         {:.3e} ns ({:+.2}%)",
+        100.0 * (annealed_nf / seed_nf - 1.0),
+        seed_report.total.latency_ns,
+        annealed_report.total.latency_ns,
+        100.0 * (annealed_report.total.latency_ns / seed_report.total.latency_ns - 1.0),
+    );
+    ensure!(
+        annealed_nf < seed_nf,
+        "annealed NF-weighted cost {annealed_nf:.6e} did not beat the nf_aware seed \
+         {seed_nf:.6e} (budget {budget_ms} ms)"
+    );
+    ensure!(
+        annealed_report.total.latency_ns < seed_report.total.latency_ns,
+        "annealed latency {:.6e} ns did not beat the nf_aware seed {:.6e} ns (budget \
+         {budget_ms} ms)",
+        annealed_report.total.latency_ns,
+        seed_report.total.latency_ns
+    );
+
+    // ---- Gate 2: DeltaCost re-scores a move >= 10x faster than a full
+    // Scheduler pass, bitwise identical on every step of a random trace.
+    // Same-shape swaps drive the trace: always legal without occupancy
+    // bookkeeping, and they dirty the same waves the annealer's moves do.
+    let mut buckets: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    for (i, p) in seed_placement.placed.iter().enumerate() {
+        let b = &seed_placement.blocks[p.block];
+        buckets.entry((b.rows, b.cols)).or_default().push(i);
+    }
+    let swappable: Vec<Vec<usize>> = buckets.into_values().filter(|v| v.len() >= 2).collect();
+    ensure!(
+        !swappable.is_empty(),
+        "{model} at tile {tile} has no same-shape fragment pair to drive the move trace"
+    );
+    let mut dc = DeltaCost::new(&seed_placement, scheduler.cost, 1)?;
+    let mut full = seed_placement.clone();
+    let mut rng = Xoshiro256::seeded(cfg.seed ^ 0xD017A);
+    let (mut delta_s, mut full_s) = (0.0f64, 0.0f64);
+    let mut pinned = true;
+    for _ in 0..moves {
+        let bucket = &swappable[rng.below(swappable.len() as u64) as usize];
+        let ai = rng.below(bucket.len() as u64) as usize;
+        let mut bi = rng.below(bucket.len() as u64 - 1) as usize;
+        if bi >= ai {
+            bi += 1;
+        }
+        let (a, b) = (bucket[ai], bucket[bi]);
+
+        let t0 = Instant::now();
+        dc.swap(a, b)?;
+        let ds = dc.score();
+        delta_s += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let (pa, pb) = (full.placed[a], full.placed[b]);
+        full.placed[a] = mdm_cim::chip::PlacedBlock { block: pa.block, ..pb };
+        full.placed[b] = mdm_cim::chip::PlacedBlock { block: pb.block, ..pa };
+        let rep = scheduler.schedule(&full, 1)?;
+        let full_nf = full.nf_weighted_cost();
+        full_s += t1.elapsed().as_secs_f64();
+
+        pinned = pinned
+            && ds.nf_weighted_cost.to_bits() == full_nf.to_bits()
+            && ds.latency_ns.to_bits() == rep.total.latency_ns.to_bits()
+            && ds.energy_pj.to_bits() == rep.total.energy_pj.to_bits();
+    }
+    ensure!(pinned, "DeltaCost diverged from full Scheduler re-scoring on the move trace");
+    let speedup = full_s / delta_s.max(f64::MIN_POSITIVE);
+    println!(
+        "delta re-score {:.2} us/move vs full reschedule {:.2} us/move over {moves} moves: \
+         {speedup:.1}x",
+        1e6 * delta_s / moves as f64,
+        1e6 * full_s / moves as f64,
+    );
+    ensure!(
+        speedup >= 10.0,
+        "DeltaCost re-scoring speedup {speedup:.2}x is below the 10x gate ({moves} moves: \
+         delta {:.3} ms, full {:.3} ms)",
+        1e3 * delta_s,
+        1e3 * full_s
+    );
+
+    // ---- Gate 3: the annealed placement is bitwise identical at any
+    // worker-thread count (chains are seed-split, reduction is ordered).
+    let prior_threads = mdm_cim::parallel::ParallelConfig::default().threads;
+    let thread_counts = [1usize, 2, 4, 8];
+    let key = |p: &mdm_cim::chip::Placement| -> Vec<(usize, usize, usize, usize)> {
+        p.placed.iter().map(|q| (q.block, q.region, q.row, q.col)).collect()
+    };
+    let mut per_thread: Vec<Vec<(usize, usize, usize, usize)>> = Vec::new();
+    for &threads in &thread_counts {
+        mdm_cim::parallel::install_global(threads);
+        let placed = annealer.place(&workload);
+        mdm_cim::parallel::install_global(prior_threads);
+        per_thread.push(key(&placed?));
+    }
+    let thread_identical = per_thread.iter().all(|p| p == &per_thread[0]);
+    ensure!(
+        thread_identical,
+        "annealed placement differs across worker-thread counts {thread_counts:?}"
+    );
+    println!("annealed placement bitwise identical at {thread_counts:?} threads");
+
+    report::write_json_object(
+        &out_path,
+        &[
+            ("benchmark", Json::Str("chip_place_search".into())),
+            ("model", Json::Str(model)),
+            ("strategy", Json::Str(strategy)),
+            ("tile", Json::Int(tile as i64)),
+            ("seed", Json::Int(cfg.seed as i64)),
+            ("budget_ms", Json::Int(budget_ms as i64)),
+            ("chip_rows", Json::Int(settings.rows as i64)),
+            ("chip_cols", Json::Int(settings.cols as i64)),
+            ("fragments", Json::Int(workload.blocks.len() as i64)),
+            ("regions", Json::Int(annealed.regions as i64)),
+            (
+                "nf_aware",
+                Json::obj(vec![
+                    ("nf_weighted_cost", Json::Num(seed_nf)),
+                    ("latency_ns", Json::Num(seed_report.total.latency_ns)),
+                    ("energy_pj", Json::Num(seed_report.total.energy_pj)),
+                ]),
+            ),
+            (
+                "anneal",
+                Json::obj(vec![
+                    ("nf_weighted_cost", Json::Num(annealed_nf)),
+                    ("latency_ns", Json::Num(annealed_report.total.latency_ns)),
+                    ("energy_pj", Json::Num(annealed_report.total.energy_pj)),
+                ]),
+            ),
+            ("nf_improvement", Json::Num(1.0 - annealed_nf / seed_nf)),
+            (
+                "latency_improvement",
+                Json::Num(1.0 - annealed_report.total.latency_ns / seed_report.total.latency_ns),
+            ),
+            ("moves", Json::Int(moves as i64)),
+            ("delta_us_per_move", Json::Num(1e6 * delta_s / moves as f64)),
+            ("full_us_per_move", Json::Num(1e6 * full_s / moves as f64)),
+            ("delta_speedup", Json::Num(speedup)),
+            ("delta_bitwise_identical", Json::Bool(pinned)),
+            (
+                "thread_counts",
+                Json::Arr(thread_counts.iter().map(|&t| Json::Int(t as i64)).collect()),
+            ),
+            ("thread_identical", Json::Bool(thread_identical)),
+        ],
+    )?;
+    println!("json: {out_path}");
+    Ok(())
+}
+
 /// `mdm place` — the chip-level placement sweep: tile sizes × placers ×
 /// mapping strategies on a synthetic model workload (default: ResNet-18
 /// shaped layers), each point placed, validated, and rolled through the
@@ -2222,10 +2460,18 @@ fn cmd_place(args: &Args) -> Result<()> {
         .iter()
         .map(|t| t.parse::<usize>().with_context(|| format!("--tiles entry {t:?}")))
         .collect::<Result<_>>()?;
-    let placers = list("placer", "firstfit,maxrects,nf_aware");
     let strategies = list("strategies", "conventional,mdm");
     let settings = chip_settings(args)?;
     let chip = mdm_cim::chip::ChipModel::from_settings(&settings)?;
+    // A bare `anneal` entry inherits the resolved budget (flag > config >
+    // default) so `--placer anneal --budget-ms 500` means `anneal:500`.
+    let placers: Vec<String> = list("placer", "firstfit,maxrects,nf_aware,atlas,anneal")
+        .into_iter()
+        .map(|p| match p.as_str() {
+            "anneal" | "anneal_search" => format!("{p}:{}", settings.budget_ms),
+            _ => p,
+        })
+        .collect();
 
     let sweep_cfg = PlacementSweepConfig {
         model: args.str_or("model", "resnet18"),

@@ -732,6 +732,19 @@ impl ProgrammedModel {
         Ok(workload)
     }
 
+    /// Place the whole model on a chip under the given placer (the
+    /// placement half of [`Self::chip_report`]; the annealing search bench
+    /// re-scores placements from here without scheduling them through the
+    /// report path).
+    pub fn placement(
+        &self,
+        chip: &crate::chip::ChipModel,
+        placer: &dyn crate::chip::Placer,
+    ) -> Result<crate::chip::Placement> {
+        let _sp = crate::span!("place.pack", "placer={}", placer.name());
+        placer.place(&self.workload(chip)?)
+    }
+
     /// Place the model on a chip and price one batch through the wave
     /// [`crate::chip::Scheduler`] — the serving tier's cost oracle for
     /// ADC/energy per request.
@@ -741,10 +754,7 @@ impl ProgrammedModel {
         placer: &dyn crate::chip::Placer,
         batch: usize,
     ) -> Result<crate::chip::ChipReport> {
-        let placement = {
-            let _sp = crate::span!("place.pack", "placer={}", placer.name());
-            placer.place(&self.workload(chip)?)?
-        };
+        let placement = self.placement(chip, placer)?;
         crate::chip::Scheduler::default().schedule(&placement, batch)
     }
 }

@@ -1,0 +1,237 @@
+//! Integration tests of the anytime annealing placer and the `DeltaCost`
+//! incremental re-scorer: bitwise-identical results at any worker-thread
+//! count, exact degradation to the `nf_aware` seed at zero budget,
+//! `DeltaCost` pinned against full `Scheduler` re-scoring over random move
+//! traces under both spill policies, and context-rich errors (no panics)
+//! on degenerate workloads. No artifacts are required.
+
+use mdm_cim::chip::{
+    placer_by_name, placer_names, Annealer, ChipModel, ChipWorkload, DeltaCost, PlacedBlock,
+    Placer, Scheduler, SpillPolicy,
+};
+use mdm_cim::crossbar::{CostModel, TileGeometry};
+use mdm_cim::parallel::{install_global, ParallelConfig};
+use mdm_cim::rng::Xoshiro256;
+
+/// A three-layer ragged workload that overflows one 8x8 chip (96 slots on
+/// 64), so every placement exercises spill regions.
+fn workload(chip: ChipModel) -> ChipWorkload {
+    let mut wl = ChipWorkload::new(chip).unwrap();
+    wl.add_layer("stem", 0, 96, 24, 2.0).unwrap(); // 6x6 grid per part
+    wl.add_layer("mid", 1, 48, 12, 1.5).unwrap(); // 3x3 grid per part
+    wl.add_layer("head", 2, 48, 4, 0.5).unwrap(); // 3x1 grid per part
+    wl
+}
+
+fn chip_8x8(spill: SpillPolicy) -> ChipModel {
+    ChipModel {
+        slot_rows: 8,
+        slot_cols: 8,
+        geometry: TileGeometry::new(16, 32, 8).unwrap(),
+        spill,
+        ..ChipModel::default()
+    }
+}
+
+/// The annealer's chains are seed-split and its reduction is ordered, so
+/// the best placement must be bitwise identical at 1, 2, 4, and 8 worker
+/// threads.
+#[test]
+fn annealed_placement_bitwise_identical_across_thread_counts() {
+    let wl = workload(chip_8x8(SpillPolicy::MoreChips));
+    let annealer = Annealer { budget_ms: 3 };
+    let prior = ParallelConfig::default().threads;
+    let key = |p: &mdm_cim::chip::Placement| -> Vec<(usize, usize, usize, usize)> {
+        p.placed.iter().map(|q| (q.block, q.region, q.row, q.col)).collect()
+    };
+    let mut results: Vec<Vec<(usize, usize, usize, usize)>> = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        install_global(threads);
+        let placed = annealer.place(&wl);
+        install_global(prior);
+        let placement = placed.unwrap();
+        placement.validate().unwrap();
+        results.push(key(&placement));
+    }
+    for (i, r) in results.iter().enumerate().skip(1) {
+        assert_eq!(r, &results[0], "thread count #{i} diverged from serial");
+    }
+}
+
+/// `anneal:0` (and an empty budget) must return the `nf_aware` seed
+/// placement verbatim, rebadged under the `anneal` registry name.
+#[test]
+fn zero_budget_anneal_degrades_to_the_nf_aware_seed() {
+    let wl = workload(chip_8x8(SpillPolicy::MoreChips));
+    let seed = placer_by_name("nf_aware").unwrap().place(&wl).unwrap();
+    let zero = placer_by_name("anneal:0").unwrap().place(&wl).unwrap();
+    assert_eq!(zero.placer, "anneal");
+    assert_eq!(zero.regions, seed.regions);
+    assert_eq!(zero.placed.len(), seed.placed.len());
+    for (a, b) in zero.placed.iter().zip(&seed.placed) {
+        assert_eq!(
+            (a.block, a.region, a.row, a.col),
+            (b.block, b.region, b.row, b.col),
+            "zero-budget anneal must not move any fragment"
+        );
+    }
+}
+
+/// Replay a random trace of same-shape swaps and free-spot relocations,
+/// asserting after every move that `DeltaCost::score` is bitwise identical
+/// to a full `Scheduler::schedule` pass plus NF rescan on the mirrored
+/// placement.
+fn pin_delta_cost_against_full_rescoring(spill: SpillPolicy, batch: usize, steps: usize) {
+    let chip = chip_8x8(spill);
+    let wl = workload(chip);
+    let seed = placer_by_name("nf_aware").unwrap().place(&wl).unwrap();
+    let cost = CostModel::default();
+    let scheduler = Scheduler { cost };
+    let mut dc = DeltaCost::new(&seed, cost, batch).unwrap();
+    let mut full = seed.clone();
+    let (rows, cols) = (chip.slot_rows, chip.slot_cols);
+
+    // Local occupancy mirror so relocations only target free rectangles.
+    let mut occ = vec![vec![false; rows * cols]; full.regions];
+    for p in &full.placed {
+        let b = &full.blocks[p.block];
+        for r in p.row..p.row + b.rows {
+            for c in p.col..p.col + b.cols {
+                occ[p.region][r * cols + c] = true;
+            }
+        }
+    }
+    let free = |occ: &[Vec<bool>], g: usize, r: usize, c: usize, h: usize, w: usize| {
+        (r..r + h).all(|i| (c..c + w).all(|j| !occ[g][i * cols + j]))
+    };
+    let set = |occ: &mut [Vec<bool>], p: &PlacedBlock, h: usize, w: usize, v: bool| {
+        for i in p.row..p.row + h {
+            for j in p.col..p.col + w {
+                occ[p.region][i * cols + j] = v;
+            }
+        }
+    };
+
+    // Same-shape swap partners, fixed for the whole trace.
+    let mut buckets: std::collections::BTreeMap<(usize, usize), Vec<usize>> = Default::default();
+    for (i, p) in full.placed.iter().enumerate() {
+        let b = &full.blocks[p.block];
+        buckets.entry((b.rows, b.cols)).or_default().push(i);
+    }
+    let swappable: Vec<Vec<usize>> = buckets.into_values().filter(|v| v.len() >= 2).collect();
+    assert!(!swappable.is_empty(), "trace workload needs a same-shape pair");
+
+    let mut rng = Xoshiro256::seeded(0xBEEF ^ batch as u64);
+    let mut relocated = 0usize;
+    for step in 0..steps {
+        if rng.below(2) == 0 {
+            let bucket = &swappable[rng.below(swappable.len() as u64) as usize];
+            let ai = rng.below(bucket.len() as u64) as usize;
+            let mut bi = rng.below(bucket.len() as u64 - 1) as usize;
+            if bi >= ai {
+                bi += 1;
+            }
+            let (a, b) = (bucket[ai], bucket[bi]);
+            dc.swap(a, b).unwrap();
+            let (pa, pb) = (full.placed[a], full.placed[b]);
+            full.placed[a] = PlacedBlock { block: pa.block, ..pb };
+            full.placed[b] = PlacedBlock { block: pb.block, ..pa };
+            // Occupancy is unchanged: two equal-shape rectangles traded.
+        } else {
+            let pi = rng.below(full.placed.len() as u64) as usize;
+            let p = full.placed[pi];
+            let b = &full.blocks[p.block];
+            let (h, w) = (b.rows, b.cols);
+            set(&mut occ, &p, h, w, false);
+            let mut dest = None;
+            for _ in 0..20 {
+                let g = rng.below(full.regions as u64) as usize;
+                let r = rng.below((rows - h + 1) as u64) as usize;
+                let c = rng.below((cols - w + 1) as u64) as usize;
+                if free(&occ, g, r, c, h, w) {
+                    dest = Some((g, r, c));
+                    break;
+                }
+            }
+            match dest {
+                Some((g, r, c)) => {
+                    dc.relocate(pi, g, r, c).unwrap();
+                    full.placed[pi] = PlacedBlock { block: p.block, region: g, row: r, col: c };
+                    set(&mut occ, &full.placed[pi], h, w, true);
+                    relocated += 1;
+                }
+                None => set(&mut occ, &p, h, w, true),
+            }
+        }
+        let ds = dc.score();
+        let report = scheduler.schedule(&full, batch).unwrap();
+        assert_eq!(
+            ds.nf_weighted_cost.to_bits(),
+            full.nf_weighted_cost().to_bits(),
+            "NF diverged at step {step} ({spill:?})"
+        );
+        assert_eq!(
+            ds.latency_ns.to_bits(),
+            report.total.latency_ns.to_bits(),
+            "latency diverged at step {step} ({spill:?})"
+        );
+        assert_eq!(
+            ds.energy_pj.to_bits(),
+            report.total.energy_pj.to_bits(),
+            "energy diverged at step {step} ({spill:?})"
+        );
+    }
+    assert!(relocated > 0, "the trace never exercised a relocation");
+}
+
+/// `DeltaCost` vs full re-scoring under parallel spill (one region per
+/// chip).
+#[test]
+fn delta_cost_pinned_against_full_rescoring_more_chips() {
+    pin_delta_cost_against_full_rescoring(SpillPolicy::MoreChips, 3, 160);
+}
+
+/// `DeltaCost` vs full re-scoring under reuse spill, where round switches
+/// pay reprogramming cost and moves can change the round structure.
+#[test]
+fn delta_cost_pinned_against_full_rescoring_reuse() {
+    pin_delta_cost_against_full_rescoring(SpillPolicy::Reuse, 2, 160);
+}
+
+/// Degenerate workloads come back as context-rich errors, not panics:
+/// zero-tile layers are rejected at construction, batch 0 is rejected by
+/// both the scheduler and the re-scorer.
+#[test]
+fn degenerate_inputs_error_with_context_instead_of_panicking() {
+    let mut wl = ChipWorkload::new(ChipModel::default()).unwrap();
+    assert!(wl.add_layer("z", 0, 0, 4, 1.0).is_err(), "zero fan-in must be rejected");
+    assert!(wl.add_layer("z", 0, 16, 0, 1.0).is_err(), "zero fan-out must be rejected");
+    wl.add_layer("ok", 0, 16, 4, 1.0).unwrap();
+    let placement = placer_by_name("firstfit").unwrap().place(&wl).unwrap();
+    let err = Scheduler::default().schedule(&placement, 0).unwrap_err();
+    assert!(err.to_string().contains("batch"), "{err:#}");
+    assert!(DeltaCost::new(&placement, CostModel::default(), 0).is_err());
+}
+
+/// A 1x1-slot chip is a legal degenerate target: every registered placer
+/// places a two-fragment workload onto it (one region per fragment) and the
+/// schedule prices it end to end.
+#[test]
+fn single_slot_chip_places_and_schedules_end_to_end() {
+    let chip = ChipModel {
+        slot_rows: 1,
+        slot_cols: 1,
+        geometry: TileGeometry::new(16, 32, 8).unwrap(),
+        ..ChipModel::default()
+    };
+    let mut wl = ChipWorkload::new(chip).unwrap();
+    wl.add_layer("tiny", 0, 16, 4, 1.0).unwrap(); // 1x1 grid per part
+    for (name, _) in placer_names() {
+        let placer = placer_by_name(name).unwrap();
+        let placement = placer.place(&wl).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        placement.validate().unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(placement.regions, 2, "{name}: one slot per region");
+        let report = Scheduler::default().schedule(&placement, 2).unwrap();
+        assert!(report.total.latency_ns > 0.0, "{name}");
+    }
+}
